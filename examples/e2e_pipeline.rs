@@ -1,0 +1,142 @@
+//! End-to-end driver: the full three-layer system on a realistic small
+//! workload (EXPERIMENTS.md §E2E records a run of this binary).
+//!
+//! 1. Generate the trackers-like heavy-tail workload (tr-m preset,
+//!    ~200k edges) — the scaled analog of the paper's headline dataset.
+//! 2. Cross-validate the AOT path: the PJRT-executed XLA artifact
+//!    (jax→Pallas→HLO text→rust) against sparse counting on a dense
+//!    region of the graph.
+//! 3. Run the full algorithm matrix on the small tier (tr-s): BUP, ParB,
+//!    BE_Batch, BE_PC, PBNG — asserting identical outputs and printing a
+//!    Table-3-shaped comparison (time / updates / ρ).
+//! 4. Run PBNG vs the strongest baseline (BE_Batch) on the medium tier,
+//!    plus tip decomposition of both sides, and extract the hierarchy.
+//!
+//! Run: `cargo run --release --example e2e_pipeline`
+
+use pbng::count::dense::DenseCounter;
+use pbng::graph::{gen, Side};
+use pbng::metrics::human;
+use pbng::peel::Decomposition;
+use pbng::tip::{tip_pbng, TipConfig};
+use pbng::wing::{wing_be_batch, wing_be_pc, wing_pbng, PbngConfig};
+
+fn row(name: &str, d: &Decomposition) {
+    println!(
+        "  {:<10} {:>10.3}s {:>12} {:>12} {:>8}",
+        name,
+        d.stats.total.as_secs_f64(),
+        human(d.stats.updates),
+        human(d.stats.wedges),
+        if d.stats.rho > 0 { d.stats.rho.to_string() } else { "-".into() }
+    );
+}
+
+fn main() {
+    let threads = pbng::par::default_threads().max(2);
+    println!("=== PBNG end-to-end driver (threads = {threads}) ===\n");
+
+    // ---- 1. workloads ---------------------------------------------------
+    let small = gen::Preset::TrS.build();
+    let medium = gen::Preset::TrM.build();
+    let total_small = pbng::count::total_butterflies(&small, threads);
+    let total_medium = pbng::count::total_butterflies(&medium, threads);
+    println!("workload small  (tr-s): |U|={} |V|={} |E|={} butterflies={}",
+        small.nu(), small.nv(), small.m(), human(total_small));
+    println!("workload medium (tr-m): |U|={} |V|={} |E|={} butterflies={}",
+        medium.nu(), medium.nv(), medium.m(), human(total_medium));
+
+    // ---- 2. AOT artifact cross-check ------------------------------------
+    println!("\n--- layer check: PJRT artifact vs sparse counting ---");
+    let dc = DenseCounter::new();
+    if dc.has_accelerator() {
+        // densest region: top-degree vertices of the medium graph
+        let mut us: Vec<u32> = (0..medium.nu() as u32).collect();
+        us.sort_by_key(|&u| std::cmp::Reverse(medium.deg_u(u)));
+        us.truncate(48);
+        let mut vs: Vec<u32> = (0..medium.nv() as u32).collect();
+        vs.sort_by_key(|&v| std::cmp::Reverse(medium.deg_v(v)));
+        vs.truncate(48);
+        let t0 = std::time::Instant::now();
+        let accel = dc.count_block(&medium, &us, &vs);
+        let t_accel = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        let cpu = DenseCounter::cpu_only().count_block(&medium, &us, &vs);
+        let t_cpu = t1.elapsed();
+        assert_eq!(accel, cpu, "XLA artifact must match the rust mirror");
+        println!(
+            "  hot 48×48 block: {} butterflies — XLA(PJRT) {:?} vs rust {:?}  [outputs identical]",
+            human(accel.total),
+            t_accel,
+            t_cpu
+        );
+    } else {
+        println!("  (artifacts missing — run `make artifacts`; skipping accel check)");
+    }
+
+    // ---- 3. full algorithm matrix, small tier ----------------------------
+    println!("\n--- wing decomposition, small tier (all algorithms) ---");
+    println!(
+        "  {:<10} {:>11} {:>12} {:>12} {:>8}",
+        "algo", "time", "updates", "wedges/links", "rho"
+    );
+    let bup = pbng::peel::bup::wing_bup(&small);
+    row("BUP", &bup);
+    let parb = pbng::peel::parb::wing_parb(&small);
+    row("ParB", &parb);
+    let beb = wing_be_batch(&small, threads);
+    row("BE_Batch", &beb);
+    let pc = wing_be_pc(&small, 0.02);
+    row("BE_PC", &pc);
+    let pb = wing_pbng(&small, PbngConfig { p: 32, threads, ..Default::default() });
+    row("PBNG", &pb);
+    assert_eq!(pb.theta, bup.theta, "PBNG must equal BUP");
+    assert_eq!(parb.theta, bup.theta);
+    assert_eq!(beb.theta, bup.theta);
+    assert_eq!(pc.theta, bup.theta);
+    println!(
+        "  => outputs identical; PBNG rho reduction vs ParB: {:.0}×",
+        parb.stats.rho as f64 / pb.stats.rho.max(1) as f64
+    );
+
+    // ---- 4. medium tier: PBNG vs strongest baseline + tip + hierarchy ----
+    println!("\n--- wing decomposition, medium tier (PBNG vs BE_Batch) ---");
+    println!(
+        "  {:<10} {:>11} {:>12} {:>12} {:>8}",
+        "algo", "time", "updates", "wedges/links", "rho"
+    );
+    let beb_m = wing_be_batch(&medium, threads);
+    row("BE_Batch", &beb_m);
+    let pb_m = wing_pbng(&medium, PbngConfig { p: 64, threads, ..Default::default() });
+    row("PBNG", &pb_m);
+    assert_eq!(pb_m.theta, beb_m.theta);
+    println!(
+        "  => identical outputs; rho {}× lower, updates {:.2}× lower",
+        beb_m.stats.rho / pb_m.stats.rho.max(1),
+        beb_m.stats.updates as f64 / pb_m.stats.updates.max(1) as f64
+    );
+
+    println!("\n--- tip decomposition, medium tier (both sides) ---");
+    for side in [Side::U, Side::V] {
+        let t = tip_pbng(&medium, side, TipConfig { p: 32, threads, ..Default::default() });
+        println!(
+            "  side {:?}: time={:?} wedges={} rho={} θ_max={}",
+            side,
+            t.stats.total,
+            human(t.stats.wedges),
+            t.stats.rho,
+            t.theta.iter().max().unwrap()
+        );
+    }
+
+    println!("\n--- hierarchy (medium tier) ---");
+    let (idx, _) = pbng::beindex::BeIndex::build(&medium, threads);
+    let summary = pbng::hierarchy::wing_hierarchy_summary(&idx, &pb_m.theta);
+    println!(
+        "  {} non-trivial k-wing levels; θ_E^max = {}; densest level: {} edges",
+        summary.len(),
+        summary.last().map(|l| l.k).unwrap_or(0),
+        summary.last().map(|l| l.entities).unwrap_or(0)
+    );
+    println!("\n=== e2e pipeline complete — all cross-checks passed ===");
+}

@@ -1,0 +1,58 @@
+//! Quickstart: decompose the paper's Fig. 1 running example.
+//!
+//! Builds the small 1-wing graph, runs PBNG wing and tip decomposition,
+//! and prints the dense-subgraph hierarchy (Fig. 1b: wing numbers 1–4).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use pbng::beindex::BeIndex;
+use pbng::graph::{gen, Side};
+use pbng::hierarchy;
+use pbng::tip::{tip_pbng, TipConfig};
+use pbng::wing::{wing_pbng, PbngConfig};
+
+fn main() {
+    let g = gen::paper_fig1();
+    println!(
+        "graph (paper Fig. 1 analog): |U|={} |V|={} |E|={}",
+        g.nu(),
+        g.nv(),
+        g.m()
+    );
+
+    // --- wing decomposition -------------------------------------------
+    let cfg = PbngConfig {
+        p: 4,
+        threads: 2,
+        ..Default::default()
+    };
+    let wing = wing_pbng(&g, cfg);
+    println!("\nwing numbers (θ_e):");
+    for e in 0..g.m() as u32 {
+        let (u, v) = g.edge(e);
+        println!("  (u{u:<2} v{v:<2}) θ = {}", wing.theta[e as usize]);
+    }
+
+    // --- the hierarchy (Fig. 1b) ---------------------------------------
+    let (idx, _) = BeIndex::build(&g, 1);
+    println!("\nk-wing hierarchy:");
+    println!("{:>4} {:>7} {:>12} {:>9}", "k", "edges", "components", "largest");
+    for l in hierarchy::wing_hierarchy_summary(&idx, &wing.theta) {
+        println!(
+            "{:>4} {:>7} {:>12} {:>9}",
+            l.k, l.entities, l.components, l.largest
+        );
+    }
+
+    // --- tip decomposition ----------------------------------------------
+    let tip = tip_pbng(&g, Side::U, TipConfig { p: 3, threads: 2, ..Default::default() });
+    println!("\ntip numbers (θ_u, peeling U):");
+    for u in 0..g.nu() {
+        println!("  u{u:<2} θ = {}", tip.theta[u]);
+    }
+
+    println!(
+        "\nmetrics: wing updates={} rho={} | tip wedges={} rho={}",
+        wing.stats.updates, wing.stats.rho, tip.stats.wedges, tip.stats.rho
+    );
+}

@@ -1,0 +1,64 @@
+"""AOT lowering: butterfly_block → HLO text artifacts for the rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--sizes 64,128]
+
+Writes ``butterfly_block_<n>.hlo.txt`` per size plus a manifest.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import butterfly_block
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_block(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    lowered = jax.jit(butterfly_block).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="64,128")
+    # kept for Makefile compatibility: --out <file> writes the first size
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for n in sizes:
+        text = lower_block(n)
+        path = os.path.join(args.out_dir, f"butterfly_block_{n}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"butterfly_block_{n}.hlo.txt {n} {n}")
+        print(f"wrote {path} ({len(text)} chars)")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(lower_block(sizes[0]))
+        print(f"wrote {args.out}")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Layer-1 Pallas kernels for dense-block butterfly counting.
+
+The paper's hot spot is butterfly discovery. On a dense biadjacency block
+A (f32[M, N], entries in {0,1}) the whole counting pipeline is matmul
+shaped — ideal MXU work on TPU:
+
+    Wu = A · Aᵀ          (U-side wedge counts)
+    Wv = Aᵀ · A          (V-side wedge counts)
+    b_u[i] = Σ_{j≠i} C(Wu[i,j], 2)          per-vertex butterflies
+    S = A ⊙ (Wu·A − d_u − d_v + 1)          per-edge butterflies
+
+All kernels are written for TPU-style tiling (BlockSpec over VMEM-sized
+tiles, f32 accumulation) but are executed with ``interpret=True`` in this
+environment: the CPU PJRT plugin cannot run Mosaic custom-calls, so
+interpret mode is the correctness path and the TPU mapping is documented
+in DESIGN.md §Hardware-Adaptation.
+
+Counts are integers; f32 is exact up to 2^24, far beyond any value a
+block of side ≤ 2048 can produce (max wedge count = N ≤ 2048, max C(w,2)
+≈ 2M, max per-vertex sum < 2^24 for the block sizes we AOT).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: (128, 128) f32 tiles are 64 KiB — three live tiles per
+# kernel instance stay far below the ~16 MiB VMEM budget of a TPU core.
+DEFAULT_TILE = 64
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile: full-K contraction.
+
+    x block: (bm, K); y block: (K, bn). K is kept whole per tile — for
+    the block sizes this library AOT-compiles (≤ 512) the three tiles fit
+    VMEM comfortably; the grid walks output tiles only.
+    """
+    o_ref[...] = jnp.dot(x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul(x: jax.Array, y: jax.Array, *, tile: int = DEFAULT_TILE) -> jax.Array:
+    """Tiled Pallas matmul ``x @ y`` (f32), grid over output tiles."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm = min(tile, m)
+    bn = min(tile, n)
+    assert m % bm == 0 and n % bn == 0, "matmul: shape must divide tile"
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _choose2_offdiag_kernel(w_ref, o_ref, *, bm: int, n: int):
+    """Row-block reduction: o[i] = Σ_{j≠i} C(w[i,j], 2)."""
+    i0 = pl.program_id(0) * bm
+    w = w_ref[...]
+    c2 = w * (w - 1.0) * 0.5
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, n), 0) + i0
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, n), 1)
+    c2 = jnp.where(rows == cols, 0.0, c2)
+    o_ref[...] = jnp.sum(c2, axis=1)
+
+
+def choose2_offdiag_rowsum(w: jax.Array, *, tile: int = DEFAULT_TILE) -> jax.Array:
+    """Per-vertex butterfly counts from a wedge matrix: Σ_{j≠i} C(w_ij, 2).
+
+    The C(·,2) map and the row reduction are fused into the tile visit so
+    the wedge matrix is read exactly once.
+    """
+    m, n = w.shape
+    assert m == n, "wedge matrix must be square"
+    bm = min(tile, m)
+    assert m % bm == 0
+    return pl.pallas_call(
+        partial(_choose2_offdiag_kernel, bm=bm, n=n),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(w)
+
+
+def _edge_support_kernel(a_ref, wa_ref, du_ref, dv_ref, o_ref):
+    """S = A ⊙ (WA − d_u − d_v + 1), one (bm, bn) tile."""
+    a = a_ref[...]
+    s = wa_ref[...] - du_ref[...][:, None] - dv_ref[...][None, :] + 1.0
+    o_ref[...] = jnp.where(a > 0.0, s, 0.0)
+
+
+def edge_support(
+    a: jax.Array,
+    wa: jax.Array,
+    du: jax.Array,
+    dv: jax.Array,
+    *,
+    tile: int = DEFAULT_TILE,
+) -> jax.Array:
+    """Per-edge butterfly counts: S[u,v] = (Wu·A)[u,v] − d_u − d_v + 1 on
+    edges, 0 elsewhere. Elementwise tile kernel fused with the mask."""
+    m, n = a.shape
+    bm = min(tile, m)
+    bn = min(tile, n)
+    assert m % bm == 0 and n % bn == 0
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _edge_support_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, wa, du, dv)

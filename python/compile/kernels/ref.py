@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for the butterfly-block kernels.
+
+The CORE correctness signal: every Pallas kernel and the assembled model
+are asserted allclose (exactly equal — counts are integers in f32)
+against these definitions, and these in turn are checked against a naive
+O(M²N²) butterfly enumeration in the tests.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def choose2(w):
+    return w * (w - 1.0) * 0.5
+
+
+def wedge_matrices(a):
+    """(Wu, Wv): pairwise common-neighbor counts, diagonal = degrees."""
+    wu = a @ a.T
+    wv = a.T @ a
+    return wu, wv
+
+
+def per_vertex_ref(a):
+    """(b_u, b_v): per-vertex butterfly counts of a dense block."""
+    wu, wv = wedge_matrices(a)
+    bu = choose2(wu).sum(axis=1) - choose2(jnp.diagonal(wu))
+    bv = choose2(wv).sum(axis=1) - choose2(jnp.diagonal(wv))
+    return bu, bv
+
+
+def per_edge_ref(a):
+    """S[u,v] = #butterflies containing edge (u,v); 0 on non-edges."""
+    wu, _ = wedge_matrices(a)
+    du = a.sum(axis=1)
+    dv = a.sum(axis=0)
+    s = wu @ a - du[:, None] - dv[None, :] + 1.0
+    return jnp.where(a > 0.0, s, 0.0)
+
+
+def total_ref(a):
+    """Total butterflies in the block: Σ_{i<j} C(Wu[i,j], 2)."""
+    bu, _ = per_vertex_ref(a)
+    return bu.sum() * 0.5
+
+
+def butterfly_block_ref(a):
+    """Full reference output: (b_u, b_v, S, total)."""
+    bu, bv = per_vertex_ref(a)
+    return bu, bv, per_edge_ref(a), bu.sum() * 0.5
+
+
+def enumerate_butterflies(a):
+    """O(M²N²) literal enumeration — the oracle's oracle (tiny blocks).
+
+    Returns (b_u, b_v, S, total) as numpy arrays.
+    """
+    import numpy as np
+
+    a = np.asarray(a)
+    m, n = a.shape
+    bu = np.zeros(m)
+    bv = np.zeros(n)
+    s = np.zeros((m, n))
+    total = 0
+    for i in range(m):
+        for j in range(i + 1, m):
+            for p in range(n):
+                for q in range(p + 1, n):
+                    if a[i, p] and a[i, q] and a[j, p] and a[j, q]:
+                        total += 1
+                        bu[i] += 1
+                        bu[j] += 1
+                        bv[p] += 1
+                        bv[q] += 1
+                        for (x, y) in ((i, p), (i, q), (j, p), (j, q)):
+                            s[x, y] += 1
+    return bu, bv, s, float(total)

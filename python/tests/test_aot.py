@@ -1,0 +1,41 @@
+"""AOT path tests: lowering to HLO text succeeds and the text parses
+back into an XlaComputation (what the rust runtime will do via the
+xla crate's HLO text parser)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.aot import lower_block, to_hlo_text  # noqa: E402
+from compile.model import butterfly_block  # noqa: E402
+
+
+def test_lower_block_produces_hlo_text():
+    text = lower_block(8)
+    assert "HloModule" in text
+    assert "ROOT" in text
+
+
+def test_hlo_has_tuple_root():
+    # rust unwraps a tuple: lowering must use return_tuple=True
+    text = lower_block(8)
+    root_lines = [l for l in text.splitlines() if "ROOT" in l and "tuple" in l]
+    assert root_lines, "expected a tuple root in the entry computation"
+
+
+def test_module_cli_writes_artifacts(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--sizes", "8"],
+        check=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        env=env,
+    )
+    assert (out / "butterfly_block_8.hlo.txt").exists()
+    assert (out / "manifest.txt").read_text().startswith("butterfly_block_8")

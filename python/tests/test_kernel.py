@@ -1,0 +1,119 @@
+"""Layer-1 kernel tests: Pallas vs pure-jnp oracle (exact — counts are
+integers in f32), plus hypothesis sweeps over shapes and densities."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import butterfly as K
+from compile.kernels import ref
+
+
+def rand_block(m, n, density, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.random((m, n)) < density).astype(np.float32))
+
+
+# ---------- matmul kernel ----------
+
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (16, 32, 8), (64, 64, 64), (128, 64, 128)])
+def test_matmul_matches_ref(m, k, n):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 3, (m, k)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 3, (k, n)).astype(np.float32))
+    got = K.matmul(x, y, tile=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.matmul_ref(x, y)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 24, 32]),
+    k=st.sampled_from([8, 16, 40]),
+    n=st.sampled_from([8, 16, 24]),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 4, (m, k)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 4, (k, n)).astype(np.float32))
+    got = K.matmul(x, y, tile=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.matmul_ref(x, y)))
+
+
+def test_matmul_rejects_ragged_tiles():
+    x = jnp.ones((10, 8), jnp.float32)
+    y = jnp.ones((8, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        K.matmul(x, y, tile=8)
+
+
+# ---------- choose2 off-diagonal row-sum ----------
+
+@pytest.mark.parametrize("n", [8, 16, 64])
+def test_choose2_matches_ref(n):
+    a = rand_block(n, n, 0.4, 7)
+    wu, _ = ref.wedge_matrices(a)
+    got = K.choose2_offdiag_rowsum(wu, tile=8)
+    want = ref.choose2(wu).sum(axis=1) - ref.choose2(jnp.diagonal(wu))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([8, 16, 32]), density=st.floats(0.1, 0.9), seed=st.integers(0, 2**31))
+def test_choose2_hypothesis(n, density, seed):
+    a = rand_block(n, n, density, seed)
+    wu, _ = ref.wedge_matrices(a)
+    got = K.choose2_offdiag_rowsum(wu, tile=8)
+    want = ref.choose2(wu).sum(axis=1) - ref.choose2(jnp.diagonal(wu))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+# ---------- edge support ----------
+
+@pytest.mark.parametrize("m,n", [(8, 8), (16, 8), (64, 32)])
+def test_edge_support_matches_ref(m, n):
+    a = rand_block(m, n, 0.5, 3)
+    wu, wv = ref.wedge_matrices(a)
+    wa = ref.matmul_ref(wu, a)
+    got = K.edge_support(a, wa, jnp.diagonal(wu), jnp.diagonal(wv), tile=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.per_edge_ref(a)))
+
+
+def test_edge_support_zero_on_non_edges():
+    a = rand_block(16, 16, 0.3, 9)
+    wu, wv = ref.wedge_matrices(a)
+    wa = ref.matmul_ref(wu, a)
+    s = np.asarray(K.edge_support(a, wa, jnp.diagonal(wu), jnp.diagonal(wv), tile=8))
+    np.testing.assert_array_equal(s[np.asarray(a) == 0], 0.0)
+
+
+# ---------- oracle's oracle: ref vs literal enumeration ----------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(2, 7),
+    n=st.integers(2, 7),
+    density=st.floats(0.2, 0.9),
+    seed=st.integers(0, 2**31),
+)
+def test_ref_matches_enumeration(m, n, density, seed):
+    a = rand_block(m, n, density, seed)
+    bu, bv, s, total = ref.butterfly_block_ref(a)
+    ebu, ebv, es, etotal = ref.enumerate_butterflies(a)
+    np.testing.assert_array_equal(np.asarray(bu), ebu)
+    np.testing.assert_array_equal(np.asarray(bv), ebv)
+    np.testing.assert_array_equal(np.asarray(s), es)
+    assert float(total) == etotal
+
+
+def test_ref_biclique_closed_form():
+    # K_{a,b}: total = C(a,2)C(b,2); per-edge = (a-1)(b-1)
+    a_, b_ = 4, 5
+    a = jnp.ones((a_, b_), jnp.float32)
+    bu, bv, s, total = ref.butterfly_block_ref(a)
+    assert float(total) == 6 * 10
+    np.testing.assert_array_equal(np.asarray(s), np.full((a_, b_), (a_ - 1) * (b_ - 1), np.float32))
+    np.testing.assert_array_equal(np.asarray(bu), np.full(a_, 10 * (a_ - 1), np.float32))
+    np.testing.assert_array_equal(np.asarray(bv), np.full(b_, 6 * (b_ - 1), np.float32))

@@ -1,0 +1,63 @@
+"""Layer-2 model tests: assembled butterfly_block vs oracle, shape/dtype
+contracts, and consistency identities (Σb_u = Σb_v = 4·total... etc.)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.model import butterfly_block
+
+
+def rand_block(m, n, density, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.random((m, n)) < density).astype(np.float32))
+
+
+@pytest.mark.parametrize("n", [8, 16, 64])
+def test_model_matches_ref(n):
+    a = rand_block(n, n, 0.4, 11)
+    bu, bv, s, total = butterfly_block(a)
+    rbu, rbv, rs, rtotal = ref.butterfly_block_ref(a)
+    np.testing.assert_array_equal(np.asarray(bu), np.asarray(rbu))
+    np.testing.assert_array_equal(np.asarray(bv), np.asarray(rbv))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(rs))
+    assert float(total) == float(rtotal)
+
+
+@settings(max_examples=10, deadline=None)
+@given(density=st.floats(0.05, 0.95), seed=st.integers(0, 2**31))
+def test_model_identities(density, seed):
+    a = rand_block(16, 16, density, seed)
+    bu, bv, s, total = butterfly_block(a)
+    # every butterfly has 2 U vertices, 2 V vertices, 4 edges
+    assert float(bu.sum()) == 2 * float(total)
+    assert float(bv.sum()) == 2 * float(total)
+    assert float(s.sum()) == 4 * float(total)
+
+
+def test_model_under_jit_and_counts_are_integral():
+    a = rand_block(64, 64, 0.3, 5)
+    bu, bv, s, total = jax.jit(butterfly_block)(a)
+    for arr in (bu, bv, s):
+        x = np.asarray(arr)
+        np.testing.assert_array_equal(x, np.round(x))
+    assert float(total) == round(float(total))
+
+
+def test_model_empty_block():
+    a = jnp.zeros((8, 8), jnp.float32)
+    bu, bv, s, total = butterfly_block(a)
+    assert float(total) == 0
+    assert float(np.asarray(s).sum()) == 0
+
+
+def test_model_shapes():
+    a = rand_block(64, 128, 0.2, 3)
+    bu, bv, s, total = butterfly_block(a)
+    assert bu.shape == (64,)
+    assert bv.shape == (128,)
+    assert s.shape == (64, 128)
+    assert total.shape == ()

@@ -1,0 +1,46 @@
+//! Fig. 10 — contribution of each step to tip decomposition: initial
+//! counting, PBNG CD peeling, PBNG FD peeling — as % of wedge traversal
+//! and of execution time.
+//!
+//! Shape to reproduce: FD contributes <15% of wedge traversal (it runs
+//! on induced subgraphs that preserve few wedges); when peeling the
+//! heavy side, CD holds >70–80% of both wedges and time.
+
+use pbng::graph::{gen, Side};
+use pbng::metrics::Phase;
+use pbng::tip::{tip_pbng, TipConfig};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let threads = pbng::par::default_threads();
+    let mut presets: Vec<gen::Preset> = gen::Preset::all_small().to_vec();
+    if full {
+        presets.extend(gen::Preset::all_medium());
+    }
+    println!("Fig. 10 — phase breakdown of PBNG tip decomposition (% of total)");
+    println!(
+        "{:<14} | {:>8} {:>8} {:>8} | {:>8} {:>8} {:>8}",
+        "dataset", "t:count", "t:CD", "t:FD", "w:count", "w:CD", "w:FD"
+    );
+    for p in presets {
+        let g = p.build();
+        for side in [Side::U, Side::V] {
+            let name = format!("{}{}", p.name(), if side == Side::U { "U" } else { "V" });
+            let d = tip_pbng(&g, side, TipConfig { p: 32, threads, ..Default::default() });
+            let tt = d.stats.total.as_secs_f64().max(1e-12);
+            let tw = (d.stats.wedges as f64).max(1.0);
+            let tp = |ph: Phase| 100.0 * d.stats.phase_time(ph).as_secs_f64() / tt;
+            let wp = |ph: Phase| 100.0 * d.stats.phase_wedges(ph) as f64 / tw;
+            println!(
+                "{:<14} | {:>7.1}% {:>7.1}% {:>7.1}% | {:>7.1}% {:>7.1}% {:>7.1}%",
+                name,
+                tp(Phase::Count),
+                tp(Phase::Coarse),
+                tp(Phase::Fine),
+                wp(Phase::Count),
+                wp(Phase::Coarse),
+                wp(Phase::Fine),
+            );
+        }
+    }
+}

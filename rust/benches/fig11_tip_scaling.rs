@@ -1,0 +1,47 @@
+//! Fig. 11 — strong scaling of PBNG tip decomposition vs thread count.
+//!
+//! Same single-core caveat as Fig. 8 (see DESIGN.md §Substitutions): we
+//! report wall time (≈flat when oversubscribed), ρ (constant in T), and
+//! assert output equality across T. On real multicore hardware this
+//! harness reproduces the paper's speedup curve.
+
+use pbng::graph::{gen, Side};
+use pbng::tip::{tip_pbng, TipConfig};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let presets: &[gen::Preset] = if full {
+        &[gen::Preset::TrS, gen::Preset::OrS, gen::Preset::TrM, gen::Preset::OrM]
+    } else {
+        &[gen::Preset::TrS, gen::Preset::OrS]
+    };
+    println!("Fig. 11 — tip strong scaling (1-core container: see note in source)");
+    println!(
+        "{:<12} {:>8} {:>10} {:>10} {:>8} {:>10}",
+        "dataset", "threads", "time(s)", "speedup", "ρ", "wedges"
+    );
+    for p in presets {
+        let g = p.build();
+        let mut t1 = None;
+        let mut base_theta: Option<Vec<u64>> = None;
+        for threads in [1usize, 2, 4, 8] {
+            let d = tip_pbng(&g, Side::U, TipConfig { p: 32, threads, ..Default::default() });
+            let t = d.stats.total.as_secs_f64();
+            let t1v = *t1.get_or_insert(t);
+            if let Some(bt) = &base_theta {
+                assert_eq!(&d.theta, bt, "outputs must not depend on T");
+            } else {
+                base_theta = Some(d.theta.clone());
+            }
+            println!(
+                "{:<12} {:>8} {:>10.3} {:>10.2} {:>8} {:>10}",
+                p.name(),
+                threads,
+                t,
+                t1v / t,
+                d.stats.rho,
+                pbng::metrics::human(d.stats.wedges)
+            );
+        }
+    }
+}

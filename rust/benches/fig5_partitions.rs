@@ -1,0 +1,40 @@
+//! Fig. 5 — PBNG wing decomposition time vs number of partitions P.
+//!
+//! Shape to reproduce: CD time decreases with smaller P (fewer, larger
+//! batches); FD workload/parallelism favors larger P; total is robust
+//! (within ~2× of optimum) over a wide P range.
+
+use pbng::graph::gen;
+use pbng::metrics::Phase;
+use pbng::wing::{wing_pbng, PbngConfig};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let threads = pbng::par::default_threads();
+    let presets: &[gen::Preset] = if full {
+        &[gen::Preset::TrS, gen::Preset::OrS, gen::Preset::TrM]
+    } else {
+        &[gen::Preset::TrS, gen::Preset::OrS]
+    };
+    println!("Fig. 5 — execution time vs #partitions P (wing, PBNG)");
+    println!(
+        "{:<10} {:>6} {:>10} {:>10} {:>10} {:>8} {:>12}",
+        "dataset", "P", "total(s)", "CD(s)", "FD(s)", "ρ", "updates"
+    );
+    for p in presets {
+        let g = p.build();
+        for parts in [2usize, 4, 8, 16, 32, 64, 128, 256] {
+            let d = wing_pbng(&g, PbngConfig { p: parts, threads, ..Default::default() });
+            println!(
+                "{:<10} {:>6} {:>10.3} {:>10.3} {:>10.3} {:>8} {:>12}",
+                p.name(),
+                parts,
+                d.stats.total.as_secs_f64(),
+                d.stats.phase_time(Phase::Coarse).as_secs_f64(),
+                d.stats.phase_time(Phase::Fine).as_secs_f64(),
+                d.stats.rho,
+                pbng::metrics::human(d.stats.updates),
+            );
+        }
+    }
+}

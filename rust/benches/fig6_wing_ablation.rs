@@ -1,0 +1,53 @@
+//! Fig. 6 — effect of the §5 optimizations on wing decomposition:
+//! PBNG (all), PBNG− (no dynamic BE-Index deletes), PBNG−− (additionally
+//! no batch processing). Reports time, support updates, and bloom-edge
+//! links traversed, normalized to full PBNG — the paper's Fig. 6 layout.
+//!
+//! Shape to reproduce: deletes cut traversal (~1.4× avg in the paper);
+//! batching cuts updates and time dramatically (9.1× / 21× avg).
+
+use pbng::graph::gen;
+use pbng::metrics::human;
+use pbng::wing::{wing_pbng, PbngConfig};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let threads = pbng::par::default_threads();
+    let mut presets: Vec<gen::Preset> = gen::Preset::all_small().to_vec();
+    if full {
+        presets.extend(gen::Preset::all_medium());
+    }
+    println!("Fig. 6 — wing optimization ablation (normalized to PBNG = 1.0)");
+    println!(
+        "{:<12} {:>22} {:>22} {:>22}",
+        "dataset", "time (−/−−)", "updates (−/−−)", "links (−/−−)"
+    );
+    for p in presets {
+        let g = p.build();
+        let base = wing_pbng(&g, PbngConfig { p: 64, threads, ..Default::default() });
+        let minus = wing_pbng(
+            &g,
+            PbngConfig { p: 64, threads, dynamic_deletes: false, ..Default::default() },
+        );
+        let minus2 = wing_pbng(
+            &g,
+            PbngConfig { p: 64, threads, batch: false, dynamic_deletes: false, ..Default::default() },
+        );
+        assert_eq!(base.theta, minus.theta);
+        assert_eq!(base.theta, minus2.theta);
+        let r = |a: f64, b: f64| if b > 0.0 { a / b } else { f64::NAN };
+        println!(
+            "{:<12} {:>10.2}/{:<10.2} {:>10.2}/{:<10.2} {:>10.2}/{:<10.2}   [PBNG: {:.2}s {} {}]",
+            p.name(),
+            r(minus.stats.total.as_secs_f64(), base.stats.total.as_secs_f64()),
+            r(minus2.stats.total.as_secs_f64(), base.stats.total.as_secs_f64()),
+            r(minus.stats.updates as f64, base.stats.updates as f64),
+            r(minus2.stats.updates as f64, base.stats.updates as f64),
+            r(minus.stats.wedges as f64, base.stats.wedges as f64),
+            r(minus2.stats.wedges as f64, base.stats.wedges as f64),
+            base.stats.total.as_secs_f64(),
+            human(base.stats.updates),
+            human(base.stats.wedges),
+        );
+    }
+}

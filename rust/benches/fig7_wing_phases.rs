@@ -1,0 +1,49 @@
+//! Fig. 7 — contribution of each step to wing decomposition: counting +
+//! BE-Index construction, PBNG CD peeling, BE-Index partitioning, and
+//! PBNG FD peeling — as % of support updates and of execution time.
+//!
+//! Shape to reproduce: CD dominates updates (>60% on most datasets); FD's
+//! time share slightly exceeds its update share; count/partition are
+//! cheap relative to peeling.
+
+use pbng::graph::gen;
+use pbng::metrics::Phase;
+use pbng::wing::{wing_pbng, PbngConfig};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let threads = pbng::par::default_threads();
+    let mut presets: Vec<gen::Preset> = gen::Preset::all_small().to_vec();
+    if full {
+        presets.extend(gen::Preset::all_medium());
+    }
+    println!("Fig. 7 — phase breakdown of PBNG wing decomposition (% of total)");
+    println!(
+        "{:<12} | {:>8} {:>8} {:>8} {:>8} | {:>8} {:>8} {:>8} {:>8}",
+        "", "time%", "", "", "", "updates%", "", "", ""
+    );
+    println!(
+        "{:<12} | {:>8} {:>8} {:>8} {:>8} | {:>8} {:>8} {:>8} {:>8}",
+        "dataset", "count", "CD", "part", "FD", "count", "CD", "part", "FD"
+    );
+    for p in presets {
+        let g = p.build();
+        let d = wing_pbng(&g, PbngConfig { p: 64, threads, ..Default::default() });
+        let tt = d.stats.total.as_secs_f64().max(1e-12);
+        let tu = (d.stats.updates as f64).max(1.0);
+        let tp = |ph: Phase| 100.0 * d.stats.phase_time(ph).as_secs_f64() / tt;
+        let up = |ph: Phase| 100.0 * d.stats.phase_updates(ph) as f64 / tu;
+        println!(
+            "{:<12} | {:>7.1}% {:>7.1}% {:>7.1}% {:>7.1}% | {:>7.1}% {:>7.1}% {:>7.1}% {:>7.1}%",
+            p.name(),
+            tp(Phase::Count),
+            tp(Phase::Coarse),
+            tp(Phase::Partition),
+            tp(Phase::Fine),
+            up(Phase::Count),
+            up(Phase::Coarse),
+            up(Phase::Partition),
+            up(Phase::Fine),
+        );
+    }
+}

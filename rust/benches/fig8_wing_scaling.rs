@@ -1,0 +1,49 @@
+//! Fig. 8 — strong scaling of PBNG wing decomposition vs thread count.
+//!
+//! NOTE (DESIGN.md §Substitutions): this container exposes a single CPU
+//! core, so wall-clock speedup is not observable — threads beyond 1 are
+//! oversubscribed. We report wall time (expect ≈flat), plus the
+//! machine-independent witnesses of parallel structure: ρ (constant in T)
+//! and output equality across T. On a real multicore this harness
+//! reproduces the paper's speedup curve directly.
+
+use pbng::graph::gen;
+use pbng::wing::{wing_pbng, PbngConfig};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let presets: &[gen::Preset] = if full {
+        &[gen::Preset::TrS, gen::Preset::OrS, gen::Preset::TrM]
+    } else {
+        &[gen::Preset::TrS, gen::Preset::OrS]
+    };
+    println!("Fig. 8 — wing strong scaling (1-core container: see note in source)");
+    println!(
+        "{:<10} {:>8} {:>10} {:>10} {:>8} {:>10}",
+        "dataset", "threads", "time(s)", "speedup", "ρ", "updates"
+    );
+    for p in presets {
+        let g = p.build();
+        let mut t1 = None;
+        let mut base_theta = None;
+        for threads in [1usize, 2, 4, 8] {
+            let d = wing_pbng(&g, PbngConfig { p: 64, threads, ..Default::default() });
+            let t = d.stats.total.as_secs_f64();
+            let t1v = *t1.get_or_insert(t);
+            if let Some(bt) = &base_theta {
+                assert_eq!(&d.theta, bt, "outputs must not depend on T");
+            } else {
+                base_theta = Some(d.theta.clone());
+            }
+            println!(
+                "{:<10} {:>8} {:>10.3} {:>10.2} {:>8} {:>10}",
+                p.name(),
+                threads,
+                t,
+                t1v / t,
+                d.stats.rho,
+                pbng::metrics::human(d.stats.updates)
+            );
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Table 2 — dataset statistics: |U|, |V|, |E|, total butterflies ⋈_G,
+//! max tip numbers θ_U^max / θ_V^max, and max wing number θ_E^max.
+//!
+//! Paper's Table 2 lists the 12 KONECT datasets; this regenerates the
+//! same columns for the synthetic stand-in suite (DESIGN.md
+//! §Substitutions). `--full` adds the medium tier.
+
+use pbng::graph::{gen, Side};
+use pbng::metrics::human;
+use pbng::tip::{tip_pbng, TipConfig};
+use pbng::wing::{wing_pbng, PbngConfig};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let threads = pbng::par::default_threads();
+    println!("Table 2 — dataset statistics (synthetic stand-ins; see DESIGN.md)");
+    println!(
+        "{:<12} {:>8} {:>8} {:>9} {:>12} {:>10} {:>10} {:>9}",
+        "dataset", "|U|", "|V|", "|E|", "butterflies", "θ_U^max", "θ_V^max", "θ_E^max"
+    );
+    let mut presets: Vec<gen::Preset> = gen::Preset::all_small().to_vec();
+    if full {
+        presets.extend(gen::Preset::all_medium());
+    }
+    for p in presets {
+        let g = p.build();
+        let total = pbng::count::total_butterflies(&g, threads);
+        let tu = tip_pbng(&g, Side::U, TipConfig { threads, ..Default::default() });
+        let tv = tip_pbng(&g, Side::V, TipConfig { threads, ..Default::default() });
+        let w = wing_pbng(&g, PbngConfig { threads, ..Default::default() });
+        println!(
+            "{:<12} {:>8} {:>8} {:>9} {:>12} {:>10} {:>10} {:>9}",
+            p.name(),
+            g.nu(),
+            g.nv(),
+            g.m(),
+            human(total),
+            tu.theta.iter().max().copied().unwrap_or(0),
+            tv.theta.iter().max().copied().unwrap_or(0),
+            w.theta.iter().max().copied().unwrap_or(0),
+        );
+    }
+}

@@ -1,0 +1,64 @@
+//! Table 3 — wing decomposition comparison: execution time, support
+//! updates, and synchronization rounds ρ for BUP / ParB / BE_Batch /
+//! BE_PC / PBNG on every dataset.
+//!
+//! Shape to reproduce from the paper: PBNG lowest time; PBNG ρ orders of
+//! magnitude below ParB/BE_Batch; PBNG updates at par with BE_PC and far
+//! below BUP/ParB. Index-free baselines (BUP/ParB) are skipped above an
+//! edge budget — the paper's own Table 3 has the same "-" entries where
+//! baselines did not finish in 2 days. `--full` adds the medium tier and
+//! lifts the budget.
+
+use pbng::graph::gen;
+use pbng::metrics::human;
+use pbng::peel::Decomposition;
+use pbng::wing::{wing_be_batch, wing_be_pc, wing_pbng, PbngConfig};
+
+fn cell(d: &Decomposition, rho: bool) -> String {
+    if rho {
+        if d.stats.rho > 0 { d.stats.rho.to_string() } else { "-".into() }
+    } else {
+        format!("{:.2}s/{}", d.stats.total.as_secs_f64(), human(d.stats.updates))
+    }
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let threads = pbng::par::default_threads();
+    let budget = if full { usize::MAX } else { 40_000 };
+    let mut presets: Vec<gen::Preset> = gen::Preset::all_small().to_vec();
+    if full {
+        presets.extend(gen::Preset::all_medium());
+    }
+    println!("Table 3 — wing decomposition: time / updates (t/upd) and ρ");
+    println!(
+        "{:<12} {:>18} {:>18} {:>18} {:>18} {:>18} | {:>9} {:>9}",
+        "dataset", "BUP", "ParB", "BE_Batch", "BE_PC", "PBNG", "ρ ParB", "ρ PBNG"
+    );
+    for p in presets {
+        let g = p.build();
+        let skip_slow = g.m() > budget;
+        let bup = (!skip_slow).then(|| pbng::peel::bup::wing_bup(&g));
+        let parb = (!skip_slow).then(|| pbng::peel::parb::wing_parb(&g));
+        let beb = wing_be_batch(&g, threads);
+        let pc = wing_be_pc(&g, 0.02);
+        let pbng_d = wing_pbng(&g, PbngConfig { p: 64, threads, ..Default::default() });
+        // cross-check outputs
+        assert_eq!(pbng_d.theta, beb.theta, "{}: PBNG != BE_Batch", p.name());
+        assert_eq!(pbng_d.theta, pc.theta, "{}: PBNG != BE_PC", p.name());
+        if let Some(b) = &bup {
+            assert_eq!(pbng_d.theta, b.theta, "{}: PBNG != BUP", p.name());
+        }
+        println!(
+            "{:<12} {:>18} {:>18} {:>18} {:>18} {:>18} | {:>9} {:>9}",
+            p.name(),
+            bup.as_ref().map(|d| cell(d, false)).unwrap_or_else(|| "-".into()),
+            parb.as_ref().map(|d| cell(d, false)).unwrap_or_else(|| "-".into()),
+            cell(&beb, false),
+            cell(&pc, false),
+            cell(&pbng_d, false),
+            parb.as_ref().map(|d| cell(d, true)).unwrap_or_else(|| "-".into()),
+            cell(&pbng_d, true),
+        );
+    }
+}

@@ -1,0 +1,49 @@
+//! Table 4 — tip decomposition comparison: execution time, wedges
+//! traversed, and synchronization rounds ρ for BUP / ParB / PBNG, both
+//! vertex sets of each dataset (U = higher-workload side by paper
+//! convention; we report both).
+//!
+//! Shape to reproduce: PBNG fastest on every dataset; PBNG wedge counts
+//! below BUP/ParB (batch re-counting + induced subgraphs); ρ reduced by
+//! orders of magnitude.
+
+use pbng::graph::{gen, Side};
+use pbng::metrics::human;
+use pbng::tip::{tip_bup, tip_parb, tip_pbng, TipConfig};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let threads = pbng::par::default_threads();
+    let mut presets: Vec<gen::Preset> = gen::Preset::all_small().to_vec();
+    if full {
+        presets.extend(gen::Preset::all_medium());
+    }
+    println!("Table 4 — tip decomposition: t(s), wedges, ρ");
+    println!(
+        "{:<14} {:>10} {:>10} {:>10} | {:>10} {:>10} {:>10} | {:>8} {:>8}",
+        "dataset", "t BUP", "t ParB", "t PBNG", "wdg BUP", "wdg ParB", "wdg PBNG", "ρ ParB", "ρ PBNG"
+    );
+    for p in presets {
+        let g = p.build();
+        for side in [Side::U, Side::V] {
+            let name = format!("{}{}", p.name(), if side == Side::U { "U" } else { "V" });
+            let bup = tip_bup(&g, side);
+            let parb = tip_parb(&g, side);
+            let pbng_d = tip_pbng(&g, side, TipConfig { p: 32, threads, ..Default::default() });
+            assert_eq!(pbng_d.theta, bup.theta, "{name}: PBNG != BUP");
+            assert_eq!(parb.theta, bup.theta, "{name}: ParB != BUP");
+            println!(
+                "{:<14} {:>10.3} {:>10.3} {:>10.3} | {:>10} {:>10} {:>10} | {:>8} {:>8}",
+                name,
+                bup.stats.total.as_secs_f64(),
+                parb.stats.total.as_secs_f64(),
+                pbng_d.stats.total.as_secs_f64(),
+                human(bup.stats.wedges),
+                human(parb.stats.wedges),
+                human(pbng_d.stats.wedges),
+                parb.stats.rho,
+                pbng_d.stats.rho,
+            );
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! BE-Index: the Bloom-Edge index of Wang et al. [67] (§2.3).
+//!
+//! A *maximal priority bloom* is a (2,k)-biclique whose dominant vertex
+//! pair contains the bloom's highest-priority vertex; every butterfly of G
+//! lives in exactly one bloom (Property 2), and an edge `e` of a k-bloom
+//! shares all `k−1` of its in-bloom butterflies with its *twin*
+//! `twin(e, B)` and exactly one with every other edge of the bloom
+//! (Property 1). The index is bipartite: blooms on one side, edges on the
+//! other, each link labeled with the twin.
+//!
+//! Peeling state lives here too: `bloom_k` (current bloom numbers) and an
+//! active-length per bloom for the dynamic link-deletion optimization
+//! (§5.2). Edge-side lists are immutable; staleness is detected through
+//! the peel-epoch array owned by the peeling algorithms.
+
+pub mod partition;
+
+use crate::count::RawBlooms;
+use crate::graph::BipartiteGraph;
+use crate::par::parallel_for;
+
+/// Immutable topology + mutable peeling state of the BE-Index.
+#[derive(Debug)]
+pub struct BeIndex {
+    /// CSR offsets into `bloom_entries`, length `nb + 1`.
+    pub bloom_offs: Vec<usize>,
+    /// `(edge, twin)` — 2k entries per k-bloom (both orientations of each
+    /// twin pair).
+    pub bloom_entries: Vec<(u32, u32)>,
+    /// Active prefix length of each bloom's entry slice (compaction for
+    /// dynamic deletes, §5.2). Initially `2k`.
+    pub bloom_len: Vec<u32>,
+    /// Current bloom number `k_B` (active wedges). Initially `k`.
+    pub bloom_k: Vec<u32>,
+    /// CSR offsets into `edge_blooms`, length `m + 1`.
+    pub edge_offs: Vec<usize>,
+    /// `(bloom, twin_edge)` links of each edge.
+    pub edge_blooms: Vec<(u32, u32)>,
+}
+
+impl BeIndex {
+    pub fn n_blooms(&self) -> usize {
+        self.bloom_k.len()
+    }
+
+    /// Total bloom-edge links `|E(I)|`.
+    pub fn n_links(&self) -> usize {
+        self.bloom_entries.len()
+    }
+
+    /// Build from counting harvest. `O(α·m)` space and time.
+    pub fn from_raw(g: &BipartiteGraph, raw: &RawBlooms) -> BeIndex {
+        let nb = raw.n_blooms();
+        let m = g.m();
+        let mut bloom_offs = Vec::with_capacity(nb + 1);
+        let mut bloom_entries = Vec::with_capacity(raw.pairs.len() * 2);
+        let mut bloom_k = Vec::with_capacity(nb);
+        bloom_offs.push(0usize);
+        for b in 0..nb {
+            let s = raw.offs[b];
+            let e = raw.offs[b + 1];
+            for &(e1, e2) in &raw.pairs[s..e] {
+                bloom_entries.push((e1, e2));
+                bloom_entries.push((e2, e1));
+            }
+            bloom_k.push((e - s) as u32);
+            bloom_offs.push(bloom_entries.len());
+        }
+        let bloom_len: Vec<u32> = (0..nb)
+            .map(|b| (bloom_offs[b + 1] - bloom_offs[b]) as u32)
+            .collect();
+        // edge-side CSR
+        let mut deg = vec![0usize; m];
+        for &(e, _) in &bloom_entries {
+            deg[e as usize] += 1;
+        }
+        let mut edge_offs = vec![0usize; m + 1];
+        for i in 0..m {
+            edge_offs[i + 1] = edge_offs[i] + deg[i];
+        }
+        let mut edge_blooms = vec![(0u32, 0u32); bloom_entries.len()];
+        let mut cur = edge_offs.clone();
+        for b in 0..nb {
+            for i in bloom_offs[b]..bloom_offs[b + 1] {
+                let (e, t) = bloom_entries[i];
+                edge_blooms[cur[e as usize]] = (b as u32, t);
+                cur[e as usize] += 1;
+            }
+        }
+        BeIndex {
+            bloom_offs,
+            bloom_entries,
+            bloom_len,
+            bloom_k,
+            edge_offs,
+            edge_blooms,
+        }
+    }
+
+    /// Build directly from a graph (counting pass included).
+    pub fn build(g: &BipartiteGraph, threads: usize) -> (BeIndex, Vec<u64>) {
+        let (counts, raw) = crate::count::pve_bcnt(
+            g,
+            crate::count::CountOptions {
+                per_edge: true,
+                build_blooms: true,
+                threads,
+            },
+            None,
+        );
+        (BeIndex::from_raw(g, &raw), counts.per_edge)
+    }
+
+    /// Active `(edge, twin)` entries of bloom `b`.
+    #[inline]
+    pub fn entries(&self, b: u32) -> &[(u32, u32)] {
+        let s = self.bloom_offs[b as usize];
+        &self.bloom_entries[s..s + self.bloom_len[b as usize] as usize]
+    }
+
+    /// All `(bloom, twin)` links of edge `e` (may contain stale links —
+    /// callers must check the twin's peel state).
+    #[inline]
+    pub fn links_of(&self, e: u32) -> &[(u32, u32)] {
+        &self.edge_blooms[self.edge_offs[e as usize]..self.edge_offs[e as usize + 1]]
+    }
+
+    /// Per-edge butterfly count recomputed from the index:
+    /// `⋈_e = Σ_{B ∋ e} (k_B − 1)` (Property 1). Used to validate the
+    /// index against per-edge counting.
+    pub fn edge_counts_from_index(&self, m: usize, threads: usize) -> Vec<u64> {
+        let out: Vec<crate::par::SupportCell> =
+            (0..m).map(|_| crate::par::SupportCell::new(0)).collect();
+        parallel_for(m, threads, |_, e| {
+            let mut s = 0u64;
+            for &(b, _) in self.links_of(e as u32) {
+                s += (self.bloom_k[b as usize] - 1) as u64;
+            }
+            out[e].set(s);
+        });
+        out.iter().map(|c| c.get()).collect()
+    }
+
+    /// Checks structural invariants (tests / debug only).
+    pub fn validate(&self, g: &BipartiteGraph) -> Result<(), String> {
+        for b in 0..self.n_blooms() as u32 {
+            let k = self.bloom_k[b as usize] as usize;
+            let ents = self.entries(b);
+            if ents.len() != 2 * k {
+                return Err(format!("bloom {b}: {} entries for k={k}", ents.len()));
+            }
+            for &(e, t) in ents {
+                if e as usize >= g.m() || t as usize >= g.m() {
+                    return Err(format!("bloom {b}: edge id out of range"));
+                }
+                // twin symmetry
+                if !ents.contains(&(t, e)) {
+                    return Err(format!("bloom {b}: twin pair ({e},{t}) not symmetric"));
+                }
+                // e and t must share exactly one vertex on the non-dominant
+                // side: they form a wedge.
+                let (u1, v1) = g.edge(e);
+                let (u2, v2) = g.edge(t);
+                if u1 != u2 && v1 != v2 {
+                    return Err(format!("bloom {b}: twins ({e},{t}) do not share a vertex"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::count::{pve_bcnt, CountOptions};
+    use crate::graph::gen;
+
+    fn build(g: &BipartiteGraph) -> (BeIndex, Vec<u64>) {
+        BeIndex::build(g, 2)
+    }
+
+    #[test]
+    fn biclique_has_one_bloom() {
+        // K_{2,3}: dominant pair = the two U vertices (deg 3 each);
+        // one bloom with k = 3.
+        let g = gen::biclique(2, 3);
+        let (idx, _) = build(&g);
+        assert_eq!(idx.n_blooms(), 1);
+        assert_eq!(idx.bloom_k[0], 3);
+        assert_eq!(idx.entries(0).len(), 6);
+        idx.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn k33_bloom_structure() {
+        let g = gen::biclique(3, 3);
+        let (idx, per_edge) = build(&g);
+        idx.validate(&g).unwrap();
+        // Σ C(k,2) over blooms = total butterflies = 9
+        let total: u64 = idx
+            .bloom_k
+            .iter()
+            .map(|&k| (k as u64) * (k as u64 - 1) / 2)
+            .sum();
+        assert_eq!(total, 9);
+        // per-edge counts from index must match counting
+        let from_idx = idx.edge_counts_from_index(g.m(), 2);
+        assert_eq!(from_idx, per_edge);
+    }
+
+    #[test]
+    fn index_counts_match_on_random_graphs() {
+        crate::testkit::check_property("beindex-counts", 0xBE1, 10, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let nu = 5 + rng.usize_below(25);
+            let nv = 5 + rng.usize_below(25);
+            let m = 20 + rng.usize_below(150);
+            let g = gen::erdos(nu, nv, m, seed);
+            let (idx, per_edge) = build(&g);
+            if let Err(e) = idx.validate(&g) {
+                return Err(e);
+            }
+            let from_idx = idx.edge_counts_from_index(g.m(), 1);
+            if from_idx != per_edge {
+                return Err("per-edge counts via index mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn edge_side_links_are_consistent() {
+        let g = gen::zipf(30, 30, 150, 1.2, 1.2, 13);
+        let (idx, _) = build(&g);
+        for e in 0..g.m() as u32 {
+            for &(b, t) in idx.links_of(e) {
+                assert!(idx.entries(b).contains(&(e, t)));
+            }
+        }
+    }
+
+    #[test]
+    fn bloom_count_parallel_matches_serial() {
+        let g = gen::zipf(50, 50, 300, 1.2, 1.2, 21);
+        let (c1, r1) = pve_bcnt(
+            &g,
+            CountOptions {
+                per_edge: true,
+                build_blooms: true,
+                threads: 1,
+            },
+            None,
+        );
+        let (c4, r4) = pve_bcnt(
+            &g,
+            CountOptions {
+                per_edge: true,
+                build_blooms: true,
+                threads: 4,
+            },
+            None,
+        );
+        assert_eq!(c1.total, c4.total);
+        // bloom sets may be ordered differently across thread counts but
+        // the multiset of bloom sizes must match
+        let mut k1: Vec<usize> = (0..r1.n_blooms()).map(|b| r1.offs[b + 1] - r1.offs[b]).collect();
+        let mut k4: Vec<usize> = (0..r4.n_blooms()).map(|b| r4.offs[b + 1] - r4.offs[b]).collect();
+        k1.sort_unstable();
+        k4.sort_unstable();
+        assert_eq!(k1, k4);
+    }
+
+    #[test]
+    fn empty_graph_index() {
+        let g = crate::graph::GraphBuilder::new().nu(3).nv(3).build();
+        let (idx, _) = build(&g);
+        assert_eq!(idx.n_blooms(), 0);
+        assert_eq!(idx.n_links(), 0);
+    }
+}

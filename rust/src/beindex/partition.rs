@@ -1,0 +1,271 @@
+//! BE-Index partitioning for PBNG FD (Alg. 5, lines 12–25).
+//!
+//! For partition `E_i`, a link `(e, B)` is preserved iff `e ∈ E_i` and
+//! `p(twin(e,B)) ≥ i`; the local bloom number `k_B(I_i)` is the number of
+//! wedges of `B` whose *both* edges lie in `E_{≥i}` (computed as a suffix
+//! sum of per-partition wedge counts). This makes each `I_i` a standalone
+//! index over the "universe ≥ i": peeling `E_i` with `I_i` produces
+//! exactly the same support updates BUP would (Theorem 2), and each link
+//! of `I` lands in at most one `I_i`, so collective space is `O(α·m)`
+//! (Theorem 5).
+
+use super::BeIndex;
+use crate::par::RacyCell;
+
+/// Per-partition BE-Index with global edge ids and local bloom ids.
+#[derive(Debug, Default)]
+pub struct PartIndex {
+    /// Adjusted bloom numbers for this partition's universe.
+    pub bloom_k: Vec<u32>,
+    /// CSR offsets into `bloom_entries`.
+    pub bloom_offs: Vec<usize>,
+    /// `(edge, twin)` links preserved for this partition (global edge ids).
+    pub bloom_entries: Vec<(u32, u32)>,
+    /// CSR offsets into `edge_links`, indexed by *local* edge id.
+    pub edge_offs: Vec<usize>,
+    /// `(local_bloom, twin_edge)` links of each local edge.
+    pub edge_links: Vec<(u32, u32)>,
+}
+
+/// Output of [`partition_be_index`]: partition indices plus the global
+/// edge→local-id map (each edge belongs to exactly one partition).
+pub struct Partitioned {
+    pub parts: Vec<PartIndex>,
+    /// `edges_of[i]` = global edge ids of `E_i` (ascending).
+    pub edges_of: Vec<Vec<u32>>,
+    /// `local_of[e]` = index of `e` within its partition's `edges_of`.
+    pub local_of: Vec<u32>,
+}
+
+/// Partition the original BE-Index given the CD partition assignment
+/// `part_of[e] ∈ [0, p)`.
+pub fn partition_be_index(idx: &BeIndex, part_of: &[u32], p: usize) -> Partitioned {
+    let m = part_of.len();
+    // edge lists + local ids
+    let mut edges_of: Vec<Vec<u32>> = vec![Vec::new(); p];
+    for e in 0..m as u32 {
+        edges_of[part_of[e as usize] as usize].push(e);
+    }
+    let mut local_of = vec![0u32; m];
+    for es in &edges_of {
+        for (i, &e) in es.iter().enumerate() {
+            local_of[e as usize] = i as u32;
+        }
+    }
+
+    // Pass over blooms, bucketing kept links per partition.
+    // Parallelizable (disjoint per-thread builders); sequential sweep with
+    // a small per-bloom scratch is fast enough and deterministic.
+    struct Builder {
+        bloom_k: Vec<u32>,
+        bloom_offs: Vec<usize>,
+        bloom_entries: Vec<(u32, u32)>,
+    }
+    let mut builders: Vec<Builder> = (0..p)
+        .map(|_| Builder {
+            bloom_k: Vec::new(),
+            bloom_offs: vec![0],
+            bloom_entries: Vec::new(),
+        })
+        .collect();
+
+    // scratch: per-partition wedge counts and kept links for one bloom
+    let mut touched: Vec<u32> = Vec::new(); // partition ids touched
+    let mut wedge_cnt: Vec<u32> = vec![0; p];
+    let mut kept: Vec<Vec<(u32, u32)>> = vec![Vec::new(); p];
+
+    for b in 0..idx.n_blooms() as u32 {
+        let ents = idx.entries(b);
+        for &(e, t) in ents {
+            let pe = part_of[e as usize];
+            let pt = part_of[t as usize];
+            // link (e,B) kept in partition pe iff p(t) >= p(e)
+            if pt >= pe {
+                if kept[pe as usize].is_empty() && wedge_cnt[pe as usize] == 0 {
+                    touched.push(pe);
+                }
+                kept[pe as usize].push((e, t));
+                // wedge counted once at its min partition
+                if pt > pe || (pt == pe && t < e) {
+                    wedge_cnt[pe as usize] += 1;
+                }
+            } else {
+                // wedge's min partition is pt; counted from t's orientation
+                // (p(e) > p(t) there). Nothing kept for e.
+            }
+        }
+        if touched.is_empty() {
+            continue;
+        }
+        touched.sort_unstable();
+        // suffix-sum bloom numbers: k_B(I_i) = Σ_{j >= i} wedge_cnt[j].
+        // Only partitions with kept links get a local bloom.
+        let mut suffix = 0u32;
+        // iterate descending
+        for idx_t in (0..touched.len()).rev() {
+            let i = touched[idx_t] as usize;
+            suffix += wedge_cnt[i];
+            if !kept[i].is_empty() {
+                let bld = &mut builders[i];
+                bld.bloom_k.push(suffix);
+                bld.bloom_entries.extend_from_slice(&kept[i]);
+                bld.bloom_offs.push(bld.bloom_entries.len());
+            }
+        }
+        for &i in &touched {
+            wedge_cnt[i as usize] = 0;
+            kept[i as usize].clear();
+        }
+        touched.clear();
+    }
+
+    // Build per-partition edge-side CSR in parallel (disjoint partitions).
+    let parts_cell = RacyCell::new((0..p).map(|_| PartIndex::default()).collect::<Vec<_>>());
+    let builders_ref = &builders;
+    let edges_ref = &edges_of;
+    let local_ref = &local_of;
+    crate::par::parallel_for(p, 1, |_, i| {
+        // SAFETY: each index i is visited exactly once; parts are disjoint.
+        let parts = unsafe { parts_cell.get_mut() };
+        let bld = &builders_ref[i];
+        let n_local = edges_ref[i].len();
+        let mut deg = vec![0usize; n_local];
+        for &(e, _) in &bld.bloom_entries {
+            deg[local_ref[e as usize] as usize] += 1;
+        }
+        let mut edge_offs = vec![0usize; n_local + 1];
+        for j in 0..n_local {
+            edge_offs[j + 1] = edge_offs[j] + deg[j];
+        }
+        let mut edge_links = vec![(0u32, 0u32); bld.bloom_entries.len()];
+        let mut cur = edge_offs.clone();
+        for lb in 0..bld.bloom_k.len() {
+            for k in bld.bloom_offs[lb]..bld.bloom_offs[lb + 1] {
+                let (e, t) = bld.bloom_entries[k];
+                let le = local_ref[e as usize] as usize;
+                edge_links[cur[le]] = (lb as u32, t);
+                cur[le] += 1;
+            }
+        }
+        parts[i] = PartIndex {
+            bloom_k: bld.bloom_k.clone(),
+            bloom_offs: bld.bloom_offs.clone(),
+            bloom_entries: bld.bloom_entries.clone(),
+            edge_offs,
+            edge_links,
+        };
+    });
+    let parts = parts_cell.into_inner();
+
+    Partitioned {
+        parts,
+        edges_of,
+        local_of,
+    }
+}
+
+impl PartIndex {
+    pub fn n_blooms(&self) -> usize {
+        self.bloom_k.len()
+    }
+    #[inline]
+    pub fn links_of(&self, local_e: usize) -> &[(u32, u32)] {
+        &self.edge_links[self.edge_offs[local_e]..self.edge_offs[local_e + 1]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    /// With a single partition, the partitioned index must be equivalent
+    /// to the original: same bloom multiset, same k values.
+    #[test]
+    fn single_partition_is_identity() {
+        let g = gen::zipf(40, 40, 250, 1.2, 1.2, 31);
+        let (idx, _) = BeIndex::build(&g, 1);
+        let part_of = vec![0u32; g.m()];
+        let pt = partition_be_index(&idx, &part_of, 1);
+        assert_eq!(pt.parts.len(), 1);
+        let p0 = &pt.parts[0];
+        let mut orig: Vec<(u32, usize)> = (0..idx.n_blooms())
+            .map(|b| (idx.bloom_k[b], idx.entries(b as u32).len()))
+            .collect();
+        let mut new: Vec<(u32, usize)> = (0..p0.n_blooms())
+            .map(|b| {
+                (
+                    p0.bloom_k[b],
+                    p0.bloom_offs[b + 1] - p0.bloom_offs[b],
+                )
+            })
+            .collect();
+        orig.sort_unstable();
+        new.sort_unstable();
+        assert_eq!(orig, new);
+        // every link preserved
+        assert_eq!(p0.bloom_entries.len(), idx.n_links());
+    }
+
+    /// Each original link appears in at most one partition (Theorem 5).
+    #[test]
+    fn links_land_in_at_most_one_partition() {
+        let g = gen::zipf(40, 40, 250, 1.2, 1.2, 32);
+        let (idx, _) = BeIndex::build(&g, 1);
+        let part_of: Vec<u32> = (0..g.m() as u32).map(|e| e % 3).collect();
+        let pt = partition_be_index(&idx, &part_of, 3);
+        let total: usize = pt.parts.iter().map(|p| p.bloom_entries.len()).sum();
+        assert!(total <= idx.n_links());
+        // kept link (e,t): p(t) >= p(e) — verify
+        for (i, p) in pt.parts.iter().enumerate() {
+            for &(e, t) in &p.bloom_entries {
+                assert_eq!(part_of[e as usize] as usize, i);
+                assert!(part_of[t as usize] as usize >= i);
+            }
+        }
+    }
+
+    /// Bloom number of a local bloom counts wedges fully inside the >= i
+    /// universe.
+    #[test]
+    fn bloom_numbers_are_suffix_counts() {
+        let g = gen::biclique(2, 5); // one bloom, k = 5
+        let (idx, _) = BeIndex::build(&g, 1);
+        assert_eq!(idx.n_blooms(), 1);
+        // Edges: (u0,v),(u1,v) pairs are twins. Assign one twin pair to
+        // partition 0 and the rest to partition 1.
+        let ents = idx.entries(0);
+        let (e0, t0) = ents[0];
+        let mut part_of = vec![1u32; g.m()];
+        part_of[e0 as usize] = 0;
+        part_of[t0 as usize] = 0;
+        let pt = partition_be_index(&idx, &part_of, 2);
+        // partition 1 sees k = 4 wedges (one wedge dropped to partition 0)
+        let p1 = &pt.parts[1];
+        assert_eq!(p1.n_blooms(), 1);
+        assert_eq!(p1.bloom_k[0], 4);
+        // partition 0 sees all 5 wedges in its universe (0 ∪ 1)
+        let p0 = &pt.parts[0];
+        assert_eq!(p0.n_blooms(), 1);
+        assert_eq!(p0.bloom_k[0], 5);
+        // but partition 0 keeps only its own edges' links
+        assert_eq!(p0.bloom_entries.len(), 2);
+    }
+
+    #[test]
+    fn edge_links_consistent_with_bloom_entries() {
+        let g = gen::zipf(30, 30, 200, 1.1, 1.1, 33);
+        let (idx, _) = BeIndex::build(&g, 1);
+        let part_of: Vec<u32> = (0..g.m() as u32).map(|e| e % 4).collect();
+        let pt = partition_be_index(&idx, &part_of, 4);
+        for (i, p) in pt.parts.iter().enumerate() {
+            for (le, &e) in pt.edges_of[i].iter().enumerate() {
+                for &(lb, t) in p.links_of(le) {
+                    let s = p.bloom_offs[lb as usize];
+                    let eend = p.bloom_offs[lb as usize + 1];
+                    assert!(p.bloom_entries[s..eend].contains(&(e, t)));
+                }
+            }
+        }
+    }
+}

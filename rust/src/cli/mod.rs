@@ -1,0 +1,144 @@
+//! Minimal CLI argument parsing (the offline registry has no clap).
+//!
+//! Supports `--flag`, `--key value`, `-k value`, and positionals, with
+//! typed getters and an unknown-argument check.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    seen: std::cell::RefCell<std::collections::HashSet<String>>,
+}
+
+/// Flags that take no value.
+const BOOL_FLAGS: &[&str] = &[
+    "no-batch",
+    "no-deletes",
+    "full",
+    "help",
+    "levels",
+    "quiet",
+];
+
+impl Args {
+    pub fn parse<I: Iterator<Item = String>>(mut it: I) -> Result<Args> {
+        let mut args = Args::default();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--").or_else(|| tok.strip_prefix('-')) {
+                let key = key.to_string();
+                if BOOL_FLAGS.contains(&key.as_str()) {
+                    args.flags.insert(key, "true".to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| anyhow!("flag --{key} expects a value"))?;
+                    args.flags.insert(key, val);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.seen.borrow_mut().insert(key.to_string());
+        self.flags.get(key).is_some()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.seen.borrow_mut().insert(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects a float, got '{v}'")),
+        }
+    }
+
+    /// Error out on flags that no getter consulted (typo protection).
+    pub fn check_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.flags.keys() {
+            if !seen.contains(k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_positionals_and_flags() {
+        let a = parse(&["wing", "g.tsv", "--threads", "4", "--no-batch"]);
+        assert_eq!(a.positional, vec!["wing", "g.tsv"]);
+        assert_eq!(a.get_usize("threads", 1).unwrap(), 4);
+        assert!(a.flag("no-batch"));
+        assert!(!a.flag("no-deletes"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["--threads"].iter().map(|s| s.to_string())).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse(&["--bogus", "1"]);
+        assert!(a.check_unknown().is_err());
+        let b = parse(&["--threads", "2"]);
+        let _ = b.get_usize("threads", 1);
+        assert!(b.check_unknown().is_ok());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--tau", "0.02", "--p", "64"]);
+        assert_eq!(a.get_f64("tau", 1.0).unwrap(), 0.02);
+        assert_eq!(a.get_usize("p", 1).unwrap(), 64);
+        assert!(a.get_usize("absent", 7).unwrap() == 7);
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = parse(&["--threads", "x"]);
+        assert!(a.get_usize("threads", 1).is_err());
+    }
+}

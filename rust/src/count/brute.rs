@@ -1,0 +1,261 @@
+//! Brute-force butterfly counting and decomposition oracles.
+//!
+//! Quadratic/cubic reference implementations used only in tests and in
+//! the property harness: they follow the definitions directly (no
+//! priority tricks, no BE-Index), so any agreement bug in the fast paths
+//! shows up against these.
+
+use super::Counts;
+use crate::graph::{BipartiteGraph, Side};
+
+/// Common-neighbor count between two U vertices.
+fn common_u(g: &BipartiteGraph, a: u32, b: u32) -> u64 {
+    let (na, nb) = (g.nbrs_u(a), g.nbrs_u(b));
+    let (mut i, mut j, mut c) = (0usize, 0usize, 0u64);
+    while i < na.len() && j < nb.len() {
+        match na[i].0.cmp(&nb[j].0) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                c += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    c
+}
+
+fn choose2(c: u64) -> u64 {
+    c * c.saturating_sub(1) / 2
+}
+
+/// O(n²·d) reference counts (per-vertex, per-edge, total).
+pub fn brute_counts(g: &BipartiteGraph) -> Counts {
+    let nu = g.nu();
+    let nv = g.nv();
+    let mut per_u = vec![0u64; nu];
+    let mut per_v = vec![0u64; nv];
+    let mut per_edge = vec![0u64; g.m()];
+    let mut total = 0u64;
+    for a in 0..nu as u32 {
+        for b in (a + 1)..nu as u32 {
+            let c = common_u(g, a, b);
+            let bf = choose2(c);
+            total += bf;
+            per_u[a as usize] += bf;
+            per_u[b as usize] += bf;
+        }
+    }
+    let t = g.transposed();
+    for a in 0..nv as u32 {
+        for b in (a + 1)..nv as u32 {
+            let c = common_u(&t, a, b);
+            per_v[a as usize] += choose2(c);
+            per_v[b as usize] += choose2(c);
+        }
+    }
+    for e in 0..g.m() as u32 {
+        let (u, v) = g.edge(e);
+        let mut s = 0u64;
+        for &(u2, _) in g.nbrs_v(v) {
+            if u2 == u {
+                continue;
+            }
+            let c = common_u(g, u, u2);
+            s += c.saturating_sub(1);
+        }
+        per_edge[e as usize] = s;
+    }
+    Counts {
+        per_u,
+        per_v,
+        per_edge,
+        total,
+    }
+}
+
+/// Brute-force wing decomposition: literal bottom-up peeling with
+/// recount-from-scratch after every single peel. O(m² · count) — tiny
+/// graphs only. This is the *definitionally correct* oracle.
+pub fn brute_wing_numbers(g: &BipartiteGraph) -> Vec<u64> {
+    let m = g.m();
+    let mut alive = vec![true; m];
+    let mut theta = vec![0u64; m];
+    let mut remaining = m;
+    let mut level = 0u64;
+    while remaining > 0 {
+        let sup = edge_support_restricted(g, &alive);
+        let min = (0..m)
+            .filter(|&e| alive[e])
+            .map(|e| sup[e])
+            .min()
+            .unwrap();
+        level = level.max(min);
+        // peel ONE minimum edge (definition order); ties by id
+        let e = (0..m)
+            .filter(|&e| alive[e] && sup[e] == min)
+            .next()
+            .unwrap();
+        theta[e] = level;
+        alive[e] = false;
+        remaining -= 1;
+    }
+    theta
+}
+
+/// Brute-force tip decomposition of side U (peel one vertex at a time,
+/// recount from scratch).
+pub fn brute_tip_numbers(g: &BipartiteGraph, side: Side) -> Vec<u64> {
+    let g = match side {
+        Side::U => g.clone(),
+        Side::V => g.transposed(),
+    };
+    let n = g.nu();
+    let mut alive = vec![true; n];
+    let mut theta = vec![0u64; n];
+    let mut remaining = n;
+    let mut level = 0u64;
+    while remaining > 0 {
+        let sup = vertex_support_restricted(&g, &alive);
+        let min = (0..n).filter(|&u| alive[u]).map(|u| sup[u]).min().unwrap();
+        level = level.max(min);
+        let u = (0..n)
+            .filter(|&u| alive[u] && sup[u] == min)
+            .next()
+            .unwrap();
+        theta[u] = level;
+        alive[u] = false;
+        remaining -= 1;
+    }
+    theta
+}
+
+/// Per-edge butterfly counts restricted to alive edges.
+pub fn edge_support_restricted(g: &BipartiteGraph, alive: &[bool]) -> Vec<u64> {
+    let m = g.m();
+    let mut sup = vec![0u64; m];
+    // enumerate butterflies (u<u', v<v') where all 4 edges alive
+    for u in 0..g.nu() as u32 {
+        for &(v, e_uv) in g.nbrs_u(u) {
+            if !alive[e_uv as usize] {
+                continue;
+            }
+            for &(v2, e_uv2) in g.nbrs_u(u) {
+                if v2 <= v || !alive[e_uv2 as usize] {
+                    continue;
+                }
+                for &(u2, e_u2v) in g.nbrs_v(v) {
+                    if u2 <= u || !alive[e_u2v as usize] {
+                        continue;
+                    }
+                    if let Some(e_u2v2) = g.edge_id(u2, v2) {
+                        if alive[e_u2v2 as usize] {
+                            sup[e_uv as usize] += 1;
+                            sup[e_uv2 as usize] += 1;
+                            sup[e_u2v as usize] += 1;
+                            sup[e_u2v2 as usize] += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    sup
+}
+
+/// Per-U-vertex butterfly counts restricted to alive U vertices
+/// (V is never peeled in tip decomposition).
+pub fn vertex_support_restricted(g: &BipartiteGraph, alive: &[bool]) -> Vec<u64> {
+    let n = g.nu();
+    let mut sup = vec![0u64; n];
+    for a in 0..n as u32 {
+        if !alive[a as usize] {
+            continue;
+        }
+        for b in (a + 1)..n as u32 {
+            if !alive[b as usize] {
+                continue;
+            }
+            let c = common_u(g, a, b);
+            let bf = choose2(c);
+            sup[a as usize] += bf;
+            sup[b as usize] += bf;
+        }
+    }
+    sup
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn brute_total_biclique() {
+        let g = gen::biclique(3, 3);
+        let c = brute_counts(&g);
+        assert_eq!(c.total, 3 * 3 * 1 * 1); // C(3,2)^2 = 9
+    }
+
+    #[test]
+    fn brute_wing_biclique_uniform() {
+        // In K_{3,3} every edge has support 4; peeling is uniform so all
+        // wing numbers equal... peel one edge: others drop; final θ must be
+        // the degeneracy level. Check all equal and consistent.
+        let g = gen::biclique(3, 3);
+        let th = brute_wing_numbers(&g);
+        assert!(th.iter().all(|&t| t == th[0]));
+        assert!(th[0] >= 1);
+    }
+
+    #[test]
+    fn brute_wing_single_butterfly() {
+        let g = gen::biclique(2, 2);
+        assert_eq!(brute_wing_numbers(&g), vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn brute_tip_single_butterfly() {
+        let g = gen::biclique(2, 2);
+        assert_eq!(brute_tip_numbers(&g, Side::U), vec![1, 1]);
+        assert_eq!(brute_tip_numbers(&g, Side::V), vec![1, 1]);
+    }
+
+    #[test]
+    fn restricted_support_equals_full_when_all_alive() {
+        let g = gen::erdos(12, 12, 50, 4);
+        let alive = vec![true; g.m()];
+        let sup = edge_support_restricted(&g, &alive);
+        let c = brute_counts(&g);
+        assert_eq!(sup, c.per_edge);
+    }
+
+    #[test]
+    fn wing_numbers_monotone_under_edge_removal() {
+        // removing an edge can only lower (or keep) other edges' θ
+        let g = gen::erdos(8, 8, 30, 11);
+        let th = brute_wing_numbers(&g);
+        let edges: Vec<(u32, u32)> = g
+            .edges()
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != 0)
+            .map(|(_, &e)| e)
+            .collect();
+        let g2 = crate::graph::GraphBuilder::new()
+            .nu(g.nu())
+            .nv(g.nv())
+            .edges(&edges)
+            .build();
+        let th2 = brute_wing_numbers(&g2);
+        for e2 in 0..g2.m() as u32 {
+            let (u, v) = g2.edge(e2);
+            let e1 = g.edge_id(u, v).unwrap();
+            assert!(
+                th2[e2 as usize] <= th[e1 as usize],
+                "θ increased after removal"
+            );
+        }
+    }
+}

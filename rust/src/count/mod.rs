@@ -1,0 +1,542 @@
+//! Vertex-priority butterfly counting (Alg. 1, Chiba–Nishizeki [7] /
+//! Wang et al. [66] / Shi–Shun [54]) with optional embedded bloom
+//! discovery for the BE-Index (§2.3).
+//!
+//! Vertices are relabeled in decreasing order of degree (label 0 = highest
+//! priority); adjacency is sorted by increasing label; a wedge
+//! `start → mid → last` is traversed iff `label(last) < label(mid)` and
+//! `label(last) < label(start)`. Wedges sharing endpoints `(start, last)`
+//! combine into `C(c, 2)` butterflies, and each such endpoint pair with
+//! `c ≥ 2` is exactly one *maximal priority bloom*.
+//!
+//! Complexity: `O(Σ_{(u,v)∈E} min(du, dv)) = O(α·m)` wedges.
+
+pub mod brute;
+pub mod dense;
+
+use crate::graph::BipartiteGraph;
+use crate::metrics::Meters;
+use crate::par::{parallel_for_chunked, SupportCell};
+
+/// Butterfly counts produced by [`pve_bcnt`].
+#[derive(Clone, Debug)]
+pub struct Counts {
+    /// Per-U-vertex butterfly count.
+    pub per_u: Vec<u64>,
+    /// Per-V-vertex butterfly count.
+    pub per_v: Vec<u64>,
+    /// Per-edge butterfly count (empty unless requested).
+    pub per_edge: Vec<u64>,
+    /// Total butterflies in G.
+    pub total: u64,
+}
+
+/// Bloom data harvested during counting, consumed by
+/// [`crate::beindex::BeIndex::from_raw`].
+///
+/// Bloom `b` covers twin-edge pairs `pairs[offs[b]..offs[b+1]]`; its bloom
+/// number is `offs[b+1] - offs[b]` (= the wedge count `k ≥ 2`).
+#[derive(Clone, Debug, Default)]
+pub struct RawBlooms {
+    pub offs: Vec<usize>,
+    /// `(e1, e2)`: the two twin edges of one wedge of the bloom.
+    pub pairs: Vec<(u32, u32)>,
+}
+
+impl RawBlooms {
+    pub fn n_blooms(&self) -> usize {
+        self.offs.len().saturating_sub(1)
+    }
+}
+
+/// Options for a counting pass.
+#[derive(Clone, Copy, Debug)]
+pub struct CountOptions {
+    pub per_edge: bool,
+    pub build_blooms: bool,
+    pub threads: usize,
+}
+
+impl Default for CountOptions {
+    fn default() -> Self {
+        CountOptions {
+            per_edge: true,
+            build_blooms: false,
+            threads: 1,
+        }
+    }
+}
+
+/// Relabeled view used by the wedge traversal: vertex id == priority rank.
+struct Relabeled {
+    /// CSR offsets per label.
+    offs: Vec<usize>,
+    /// `(nbr_label, edge_id)`, ascending by label.
+    adj: Vec<(u32, u32)>,
+    /// label -> wid (to map counts back).
+    unlab: Vec<u32>,
+}
+
+fn relabel(g: &BipartiteGraph) -> Relabeled {
+    let nw = g.nw();
+    let lab = g.priority_labels();
+    let mut unlab = vec![0u32; nw];
+    for (w, &l) in lab.iter().enumerate() {
+        unlab[l as usize] = w as u32;
+    }
+    let mut offs = vec![0usize; nw + 1];
+    for l in 0..nw {
+        offs[l + 1] = offs[l] + g.deg_w(unlab[l] as usize);
+    }
+    let mut adj = vec![(0u32, 0u32); g.m() * 2];
+    for l in 0..nw {
+        let w = unlab[l] as usize;
+        let (nbrs, wid_base) = g.nbrs_w(w);
+        let dst = &mut adj[offs[l]..offs[l + 1]];
+        for (i, &(n, e)) in nbrs.iter().enumerate() {
+            dst[i] = (lab[wid_base + n as usize], e);
+        }
+        dst.sort_unstable();
+    }
+    Relabeled { offs, adj, unlab }
+}
+
+/// Per-vertex (and optionally per-edge) butterfly counting; optionally
+/// harvests blooms for the BE-Index in the same pass.
+pub fn pve_bcnt(
+    g: &BipartiteGraph,
+    opts: CountOptions,
+    meters: Option<&Meters>,
+) -> (Counts, RawBlooms) {
+    let nw = g.nw();
+    let r = relabel(g);
+    let per_w: Vec<SupportCell> = (0..nw).map(|_| SupportCell::new(0)).collect();
+    let per_edge: Vec<SupportCell> = if opts.per_edge {
+        (0..g.m()).map(|_| SupportCell::new(0)).collect()
+    } else {
+        Vec::new()
+    };
+    let total = crate::par::Counter::new();
+
+    let threads = opts.threads.max(1);
+    // Per-thread bloom harvests, merged afterwards.
+    let harvests: Vec<std::sync::Mutex<RawBloomsLocal>> = (0..threads)
+        .map(|_| std::sync::Mutex::new(RawBloomsLocal::default()))
+        .collect();
+    // Per-thread scratch (wedge counts indexed by label).
+    let scratch: Vec<std::sync::Mutex<Scratch>> = (0..threads)
+        .map(|_| std::sync::Mutex::new(Scratch::new(nw)))
+        .collect();
+
+    parallel_for_chunked(nw, threads, 64, |t, lo, hi| {
+        let mut sc = scratch[t].lock().unwrap();
+        let mut hv = harvests[t].lock().unwrap();
+        let mut local_total = 0u64;
+        let mut local_wedges = 0u64;
+        for start in lo..hi {
+            process_start(
+                start as u32,
+                &r,
+                &per_w,
+                &per_edge,
+                opts,
+                &mut sc,
+                &mut hv,
+                &mut local_total,
+                &mut local_wedges,
+            );
+        }
+        total.add(local_total);
+        if let Some(m) = meters {
+            m.wedges.add(local_wedges);
+        }
+    });
+
+    // Gather per-vertex counts back to U/V order.
+    let mut per_u = vec![0u64; g.nu()];
+    let mut per_v = vec![0u64; g.nv()];
+    for l in 0..nw {
+        let w = r.unlab[l] as usize;
+        let c = per_w[l].get();
+        if w < g.nu() {
+            per_u[w] = c;
+        } else {
+            per_v[w - g.nu()] = c;
+        }
+    }
+    let per_edge: Vec<u64> = per_edge.iter().map(|c| c.get()).collect();
+
+    // Merge bloom harvests.
+    let mut raw = RawBlooms {
+        offs: vec![0],
+        pairs: Vec::new(),
+    };
+    if opts.build_blooms {
+        for h in &harvests {
+            let h = h.lock().unwrap();
+            for b in 0..h.ks.len() {
+                let s = h.offs[b];
+                let e = h.offs[b + 1];
+                raw.pairs.extend_from_slice(&h.pairs[s..e]);
+                raw.offs.push(raw.pairs.len());
+            }
+        }
+    }
+
+    (
+        Counts {
+            per_u,
+            per_v,
+            per_edge,
+            total: total.get(),
+        },
+        raw,
+    )
+}
+
+#[derive(Default)]
+struct RawBloomsLocal {
+    ks: Vec<u32>,
+    offs: Vec<usize>,
+    pairs: Vec<(u32, u32)>,
+}
+
+impl RawBloomsLocal {
+    fn ensure_init(&mut self) {
+        if self.offs.is_empty() {
+            self.offs.push(0);
+        }
+    }
+}
+
+struct Scratch {
+    wedge_count: Vec<u32>,
+    /// distinct `last` labels touched for the current start
+    touched: Vec<u32>,
+    /// wedge list: (mid, last, e1, e2)
+    nzw: Vec<(u32, u32, u32, u32)>,
+    /// per-last local bloom slot (index into this start's bloom list)
+    bloom_slot: Vec<u32>,
+}
+
+impl Scratch {
+    fn new(nw: usize) -> Self {
+        Scratch {
+            wedge_count: vec![0; nw],
+            touched: Vec::new(),
+            nzw: Vec::new(),
+            bloom_slot: vec![u32::MAX; nw],
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn process_start(
+    start: u32,
+    r: &Relabeled,
+    per_w: &[SupportCell],
+    per_edge: &[SupportCell],
+    opts: CountOptions,
+    sc: &mut Scratch,
+    hv: &mut RawBloomsLocal,
+    local_total: &mut u64,
+    local_wedges: &mut u64,
+) {
+    sc.touched.clear();
+    sc.nzw.clear();
+    let s = start as usize;
+    for &(mid, e1) in &r.adj[r.offs[s]..r.offs[s + 1]] {
+        let m = mid as usize;
+        for &(last, e2) in &r.adj[r.offs[m]..r.offs[m + 1]] {
+            *local_wedges += 1;
+            // adjacency ascends by label: once last >= min(mid, start),
+            // every further neighbor fails the priority test too.
+            if last >= mid || last >= start {
+                break;
+            }
+            let l = last as usize;
+            if sc.wedge_count[l] == 0 {
+                sc.touched.push(last);
+            }
+            sc.wedge_count[l] += 1;
+            sc.nzw.push((mid, last, e1, e2));
+        }
+    }
+    // per-vertex endpoint contributions + total + bloom allocation
+    for (ti, &last) in sc.touched.iter().enumerate() {
+        let c = sc.wedge_count[last as usize] as u64;
+        if c >= 2 {
+            let bcnt = c * (c - 1) / 2;
+            *local_total += bcnt;
+            per_w[s].add(bcnt);
+            per_w[last as usize].add(bcnt);
+            if opts.build_blooms {
+                hv.ensure_init();
+                sc.bloom_slot[last as usize] = hv.ks.len() as u32;
+                hv.ks.push(c as u32);
+                // reserve: pairs appended in the nzw sweep below
+                let _ = ti;
+            }
+        }
+    }
+    // mid + edge contributions; bloom pair harvest
+    if opts.build_blooms {
+        // two-pass: group pairs per bloom. Count first (already have c),
+        // then append in bloom order using cursors.
+        // Simpler: append into per-bloom Vecs is costly; instead sort-free
+        // approach: iterate touched lasts in order, scan nzw once per
+        // start collecting into a staging buffer bucketed by last.
+        // nzw is small (bounded by wedges of this start), so an extra
+        // pass is fine.
+    }
+    for &(mid, last, e1, e2) in &sc.nzw {
+        let c = sc.wedge_count[last as usize] as u64;
+        if c >= 2 {
+            per_w[mid as usize].add(c - 1);
+            if opts.per_edge {
+                per_edge[e1 as usize].add(c - 1);
+                per_edge[e2 as usize].add(c - 1);
+            }
+        }
+    }
+    if opts.build_blooms && !sc.nzw.is_empty() {
+        hv.ensure_init();
+        // Stable bucket append: blooms for this start were allocated in
+        // `touched` order; nzw pairs are appended per bloom via slots.
+        // We need contiguous pairs per bloom in hv.pairs; collect counts
+        // then place with cursors.
+        let base_pairs = hv.pairs.len();
+        let first_new_bloom = hv.offs.len() - 1;
+        let mut new_pairs = 0usize;
+        for &last in &sc.touched {
+            let c = sc.wedge_count[last as usize] as usize;
+            if c >= 2 {
+                new_pairs += c;
+            }
+        }
+        hv.pairs
+            .resize(base_pairs + new_pairs, (u32::MAX, u32::MAX));
+        // cursor per bloom: reuse bloom_slot -> running index
+        let mut cursors: Vec<usize> = Vec::new();
+        {
+            let mut acc = base_pairs;
+            for &last in &sc.touched {
+                let c = sc.wedge_count[last as usize] as usize;
+                if c >= 2 {
+                    cursors.push(acc);
+                    acc += c;
+                }
+            }
+        }
+        // map bloom slot -> cursor index: slots were assigned in touched
+        // order counting only c>=2 blooms, so the k-th qualifying touched
+        // last has slot (first_new_bloom + k).
+        for &(_, last, e1, e2) in &sc.nzw {
+            let slot = sc.bloom_slot[last as usize];
+            if slot == u32::MAX {
+                continue; // c < 2, no bloom
+            }
+            let k = slot as usize - first_new_bloom;
+            hv.pairs[cursors[k]] = (e1, e2);
+            cursors[k] += 1;
+        }
+        // close offsets
+        let mut acc = base_pairs;
+        for &last in &sc.touched {
+            let c = sc.wedge_count[last as usize] as usize;
+            if c >= 2 {
+                acc += c;
+                hv.offs.push(acc);
+            }
+        }
+        debug_assert_eq!(acc, hv.pairs.len());
+    }
+    // reset scratch
+    for &last in &sc.touched {
+        sc.wedge_count[last as usize] = 0;
+        sc.bloom_slot[last as usize] = u32::MAX;
+    }
+}
+
+/// Convenience: total butterflies only.
+pub fn total_butterflies(g: &BipartiteGraph, threads: usize) -> u64 {
+    pve_bcnt(
+        g,
+        CountOptions {
+            per_edge: false,
+            build_blooms: false,
+            threads,
+        },
+        None,
+    )
+    .0
+    .total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::testkit::check_property;
+
+    fn assert_counts_match_brute(g: &BipartiteGraph) {
+        let (c, _) = pve_bcnt(
+            g,
+            CountOptions {
+                per_edge: true,
+                build_blooms: false,
+                threads: 2,
+            },
+            None,
+        );
+        let b = brute::brute_counts(g);
+        assert_eq!(c.total, b.total, "total mismatch");
+        assert_eq!(c.per_u, b.per_u, "per-u mismatch");
+        assert_eq!(c.per_v, b.per_v, "per-v mismatch");
+        assert_eq!(c.per_edge, b.per_edge, "per-edge mismatch");
+    }
+
+    #[test]
+    fn biclique_counts() {
+        // K_{a,b}: total = C(a,2)*C(b,2); per edge = (a-1)(b-1)
+        let g = gen::biclique(4, 5);
+        let (c, _) = pve_bcnt(&g, CountOptions::default(), None);
+        assert_eq!(c.total, 6 * 10);
+        assert!(c.per_edge.iter().all(|&x| x == 12));
+        // per u vertex: C(b,2)*(a-1) = 10*3 = 30
+        assert!(c.per_u.iter().all(|&x| x == 30));
+        // per v vertex: C(a,2)*(b-1) = 6*4 = 24
+        assert!(c.per_v.iter().all(|&x| x == 24));
+    }
+
+    #[test]
+    fn single_butterfly() {
+        let g = gen::biclique(2, 2);
+        let (c, _) = pve_bcnt(&g, CountOptions::default(), None);
+        assert_eq!(c.total, 1);
+        assert_eq!(c.per_u, vec![1, 1]);
+        assert_eq!(c.per_v, vec![1, 1]);
+        assert_eq!(c.per_edge, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn no_butterflies_in_tree() {
+        let g = crate::graph::GraphBuilder::new()
+            .edges(&[(0, 0), (0, 1), (1, 1), (2, 1)])
+            .build();
+        let (c, _) = pve_bcnt(&g, CountOptions::default(), None);
+        assert_eq!(c.total, 0);
+        assert!(c.per_edge.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn matches_brute_on_random_graphs() {
+        check_property("count-vs-brute", 0xC0047, 12, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let nu = 4 + rng.usize_below(20);
+            let nv = 4 + rng.usize_below(20);
+            let m = 10 + rng.usize_below(120);
+            let g = gen::erdos(nu, nv, m, seed);
+            let (c, _) = pve_bcnt(
+                &g,
+                CountOptions {
+                    per_edge: true,
+                    build_blooms: false,
+                    threads: 2,
+                },
+                None,
+            );
+            let b = brute::brute_counts(&g);
+            if c.total != b.total || c.per_u != b.per_u || c.per_v != b.per_v || c.per_edge != b.per_edge
+            {
+                return Err(format!("mismatch on graph m={}", g.m()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matches_brute_on_skewed_graph() {
+        let g = gen::zipf(40, 40, 220, 1.3, 1.3, 77);
+        assert_counts_match_brute(&g);
+    }
+
+    #[test]
+    fn matches_brute_on_fig1() {
+        let g = gen::paper_fig1();
+        assert_counts_match_brute(&g);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let g = gen::zipf(100, 100, 800, 1.2, 1.2, 5);
+        let (c1, _) = pve_bcnt(
+            &g,
+            CountOptions {
+                per_edge: true,
+                build_blooms: false,
+                threads: 1,
+            },
+            None,
+        );
+        let (c4, _) = pve_bcnt(
+            &g,
+            CountOptions {
+                per_edge: true,
+                build_blooms: false,
+                threads: 4,
+            },
+            None,
+        );
+        assert_eq!(c1.total, c4.total);
+        assert_eq!(c1.per_edge, c4.per_edge);
+        assert_eq!(c1.per_u, c4.per_u);
+    }
+
+    #[test]
+    fn wedge_meter_is_bounded_by_alpha_m() {
+        let g = gen::zipf(60, 60, 400, 1.2, 1.2, 6);
+        let meters = Meters::new();
+        pve_bcnt(
+            &g,
+            CountOptions {
+                per_edge: false,
+                build_blooms: false,
+                threads: 1,
+            },
+            Some(&meters),
+        );
+        // traversed wedges <= Σ_e min(du,dv) + m (one break-probe per list)
+        let bound = g.count_workload_bound() + 2 * g.m() as u64;
+        assert!(
+            meters.wedges.get() <= bound,
+            "wedges {} > bound {}",
+            meters.wedges.get(),
+            bound
+        );
+    }
+
+    #[test]
+    fn raw_blooms_sum_matches_total() {
+        let g = gen::zipf(50, 50, 300, 1.2, 1.2, 8);
+        let (c, raw) = pve_bcnt(
+            &g,
+            CountOptions {
+                per_edge: true,
+                build_blooms: true,
+                threads: 2,
+            },
+            None,
+        );
+        // Σ_blooms C(k,2) == total butterflies (Property 1 + 2)
+        let total: u64 = (0..raw.n_blooms())
+            .map(|b| {
+                let k = (raw.offs[b + 1] - raw.offs[b]) as u64;
+                k * (k - 1) / 2
+            })
+            .sum();
+        assert_eq!(total, c.total);
+        // no pair slot left unfilled
+        assert!(raw.pairs.iter().all(|&(a, b)| a != u32::MAX && b != u32::MAX));
+    }
+}

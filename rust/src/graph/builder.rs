@@ -1,0 +1,96 @@
+//! Edge-list ingestion: dedup, vertex-count inference, validation.
+
+use super::BipartiteGraph;
+
+/// Builder for [`BipartiteGraph`] from raw `(u, v)` pairs.
+///
+/// Duplicate edges are removed (the decomposition definitions assume a
+/// simple graph); vertex counts default to `max id + 1` but can be forced
+/// larger to keep isolated vertices.
+#[derive(Default)]
+pub struct GraphBuilder {
+    edges: Vec<(u32, u32)>,
+    nu: Option<usize>,
+    nv: Option<usize>,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn nu(mut self, nu: usize) -> Self {
+        self.nu = Some(nu);
+        self
+    }
+
+    pub fn nv(mut self, nv: usize) -> Self {
+        self.nv = Some(nv);
+        self
+    }
+
+    pub fn edge(mut self, u: u32, v: u32) -> Self {
+        self.edges.push((u, v));
+        self
+    }
+
+    pub fn edges(mut self, es: &[(u32, u32)]) -> Self {
+        self.edges.extend_from_slice(es);
+        self
+    }
+
+    pub fn build(self) -> BipartiteGraph {
+        let mut edges = self.edges;
+        edges.sort_unstable();
+        edges.dedup();
+        let nu = self
+            .nu
+            .unwrap_or_else(|| edges.iter().map(|&(u, _)| u as usize + 1).max().unwrap_or(0));
+        let nv = self
+            .nv
+            .unwrap_or_else(|| edges.iter().map(|&(_, v)| v as usize + 1).max().unwrap_or(0));
+        assert!(
+            edges.iter().all(|&(u, v)| (u as usize) < nu && (v as usize) < nv),
+            "edge endpoint out of declared vertex range"
+        );
+        BipartiteGraph::from_clean_edges(nu, nv, edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedups_edges() {
+        let g = GraphBuilder::new().edges(&[(0, 0), (0, 0), (1, 1)]).build();
+        assert_eq!(g.m(), 2);
+    }
+
+    #[test]
+    fn infers_sizes() {
+        let g = GraphBuilder::new().edges(&[(3, 5)]).build();
+        assert_eq!(g.nu(), 4);
+        assert_eq!(g.nv(), 6);
+    }
+
+    #[test]
+    fn keeps_isolated_vertices() {
+        let g = GraphBuilder::new().nu(10).nv(10).edges(&[(0, 0)]).build();
+        assert_eq!(g.nu(), 10);
+        assert_eq!(g.deg_u(9), 0);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new().build();
+        assert_eq!(g.m(), 0);
+        assert_eq!(g.nw(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of declared vertex range")]
+    fn rejects_out_of_range() {
+        GraphBuilder::new().nu(1).nv(1).edges(&[(2, 0)]).build();
+    }
+}

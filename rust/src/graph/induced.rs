@@ -1,0 +1,179 @@
+//! Induced subgraphs for PBNG tip fine-grained decomposition (§3.2).
+//!
+//! A tip partition `U_i` induces `G_i` on `(U_i, V)`. Because U partitions
+//! are disjoint, every edge of `G` lands in exactly one `G_i`, so the
+//! collective storage is `O(m)` (Theorem 6). Vertices are renumbered to
+//! compact local ids so each partition peels over dense arrays.
+
+use super::BipartiteGraph;
+
+/// Compact edge-induced subgraph for one tip partition.
+#[derive(Debug)]
+pub struct InducedSubgraph {
+    /// Global U ids; local u id = position.
+    pub users: Vec<u32>,
+    /// Global V ids of touched V vertices; local v id = position.
+    pub items: Vec<u32>,
+    /// CSR u(local) -> v(local).
+    pub offs_u: Vec<usize>,
+    pub adj_u: Vec<u32>,
+    /// CSR v(local) -> u(local).
+    pub offs_v: Vec<usize>,
+    pub adj_v: Vec<u32>,
+}
+
+impl InducedSubgraph {
+    pub fn n_users(&self) -> usize {
+        self.users.len()
+    }
+    pub fn n_items(&self) -> usize {
+        self.items.len()
+    }
+    pub fn m(&self) -> usize {
+        self.adj_u.len()
+    }
+
+    #[inline]
+    pub fn nbrs_u(&self, lu: usize) -> &[u32] {
+        &self.adj_u[self.offs_u[lu]..self.offs_u[lu + 1]]
+    }
+    #[inline]
+    pub fn nbrs_v(&self, lv: usize) -> &[u32] {
+        &self.adj_v[self.offs_v[lv]..self.offs_v[lv + 1]]
+    }
+
+    /// Wedges with both endpoints in this partition: Σ_v C(d_v, 2).
+    /// This is the FD workload indicator used for LPT scheduling (§3.2).
+    pub fn wedge_workload(&self) -> u64 {
+        (0..self.n_items())
+            .map(|lv| {
+                let d = (self.offs_v[lv + 1] - self.offs_v[lv]) as u64;
+                d * d.saturating_sub(1) / 2
+            })
+            .sum()
+    }
+}
+
+/// Build all partition subgraphs in one sweep.
+///
+/// `part_of[u]` gives the partition index of U vertex `u` (must be `< p`).
+pub fn build_partitions(g: &BipartiteGraph, part_of: &[u32], p: usize) -> Vec<InducedSubgraph> {
+    assert_eq!(part_of.len(), g.nu());
+    // users per partition
+    let mut users: Vec<Vec<u32>> = vec![Vec::new(); p];
+    for u in 0..g.nu() as u32 {
+        let pi = part_of[u as usize];
+        assert!((pi as usize) < p, "partition index out of range");
+        users[pi as usize].push(u);
+    }
+    users
+        .into_iter()
+        .map(|us| build_one(g, us))
+        .collect()
+}
+
+fn build_one(g: &BipartiteGraph, users: Vec<u32>) -> InducedSubgraph {
+    let mut local_u = std::collections::HashMap::with_capacity(users.len());
+    for (i, &u) in users.iter().enumerate() {
+        local_u.insert(u, i as u32);
+    }
+    // collect touched items
+    let mut items: Vec<u32> = users
+        .iter()
+        .flat_map(|&u| g.nbrs_u(u).iter().map(|&(v, _)| v))
+        .collect();
+    items.sort_unstable();
+    items.dedup();
+    let mut local_v = std::collections::HashMap::with_capacity(items.len());
+    for (i, &v) in items.iter().enumerate() {
+        local_v.insert(v, i as u32);
+    }
+    // u-side CSR
+    let mut offs_u = Vec::with_capacity(users.len() + 1);
+    offs_u.push(0usize);
+    let mut adj_u = Vec::new();
+    for &u in &users {
+        for &(v, _) in g.nbrs_u(u) {
+            adj_u.push(local_v[&v]);
+        }
+        offs_u.push(adj_u.len());
+    }
+    // v-side CSR (restricted to partition users)
+    let mut deg_v = vec![0usize; items.len()];
+    for &lv in &adj_u {
+        deg_v[lv as usize] += 1;
+    }
+    let mut offs_v = vec![0usize; items.len() + 1];
+    for i in 0..items.len() {
+        offs_v[i + 1] = offs_v[i] + deg_v[i];
+    }
+    let mut adj_v = vec![0u32; adj_u.len()];
+    let mut cur = offs_v.clone();
+    for (lu, &u) in users.iter().enumerate() {
+        let _ = u;
+        for &lv in &adj_u[offs_u[lu]..offs_u[lu + 1]] {
+            adj_v[cur[lv as usize]] = lu as u32;
+            cur[lv as usize] += 1;
+        }
+    }
+    InducedSubgraph {
+        users,
+        items,
+        offs_u,
+        adj_u,
+        offs_v,
+        adj_v,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn partitions_cover_all_edges_once() {
+        let g = gen::erdos(50, 40, 300, 2);
+        // assign u to partition u % 3
+        let part: Vec<u32> = (0..g.nu() as u32).map(|u| u % 3).collect();
+        let subs = build_partitions(&g, &part, 3);
+        let total: usize = subs.iter().map(|s| s.m()).sum();
+        assert_eq!(total, g.m());
+    }
+
+    #[test]
+    fn adjacency_is_consistent() {
+        let g = gen::erdos(30, 30, 150, 3);
+        let part: Vec<u32> = (0..g.nu() as u32).map(|u| u % 2).collect();
+        let subs = build_partitions(&g, &part, 2);
+        for s in &subs {
+            for lu in 0..s.n_users() {
+                let gu = s.users[lu];
+                for &lv in s.nbrs_u(lu) {
+                    let gv = s.items[lv as usize];
+                    assert!(g.has_edge(gu, gv));
+                    // reverse direction contains lu
+                    assert!(s.nbrs_v(lv as usize).contains(&(lu as u32)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wedge_workload_matches_manual() {
+        // biclique 3x3, single partition: Σ_v C(3,2) = 9
+        let g = gen::biclique(3, 3);
+        let part = vec![0u32; 3];
+        let subs = build_partitions(&g, &part, 1);
+        assert_eq!(subs[0].wedge_workload(), 9);
+    }
+
+    #[test]
+    fn empty_partition_is_ok() {
+        let g = gen::biclique(2, 2);
+        let part = vec![1u32; 2]; // partition 0 empty
+        let subs = build_partitions(&g, &part, 2);
+        assert_eq!(subs[0].m(), 0);
+        assert_eq!(subs[1].m(), 4);
+    }
+}

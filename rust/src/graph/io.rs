@@ -1,0 +1,118 @@
+//! Text I/O for bipartite graphs.
+//!
+//! Format: KONECT-style whitespace-separated `u v` pairs, one edge per
+//! line; `%`- or `#`-prefixed comment lines are skipped. An optional
+//! header comment `% bip <nu> <nv>` pins vertex counts (otherwise they are
+//! inferred from max ids).
+
+use super::{BipartiteGraph, GraphBuilder};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+pub fn load(path: &Path) -> Result<BipartiteGraph> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening graph file {}", path.display()))?;
+    let reader = std::io::BufReader::new(f);
+    parse(reader)
+}
+
+pub fn parse<R: BufRead>(reader: R) -> Result<BipartiteGraph> {
+    let mut b = GraphBuilder::new();
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix('%') {
+            let toks: Vec<&str> = rest.split_whitespace().collect();
+            if toks.len() == 3 && toks[0] == "bip" {
+                let nu: usize = toks[1].parse().context("bad nu in header")?;
+                let nv: usize = toks[2].parse().context("bad nv in header")?;
+                b = b.nu(nu).nv(nv);
+            }
+            continue;
+        }
+        if t.starts_with('#') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let u: u32 = it
+            .next()
+            .with_context(|| format!("line {}: missing u", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad u", lineno + 1))?;
+        let v: u32 = it
+            .next()
+            .with_context(|| format!("line {}: missing v", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad v", lineno + 1))?;
+        edges.push((u, v));
+    }
+    Ok(b.edges(&edges).build())
+}
+
+pub fn save(g: &BipartiteGraph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating graph file {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "% bip {} {}", g.nu(), g.nv())?;
+    for &(u, v) in g.edges() {
+        writeln!(w, "{} {}", u, v)?;
+    }
+    Ok(())
+}
+
+/// Write per-entity decomposition output: `id value` per line.
+pub fn save_numbers(nums: &[u64], path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating output file {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for (i, x) in nums.iter().enumerate() {
+        writeln!(w, "{} {}", i, x)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_basic() {
+        let g = parse(Cursor::new("0 1\n1 0\n")).unwrap();
+        assert_eq!(g.m(), 2);
+        assert_eq!(g.nu(), 2);
+        assert_eq!(g.nv(), 2);
+    }
+
+    #[test]
+    fn parse_header_and_comments() {
+        let g = parse(Cursor::new("% bip 5 7\n# c\n0 1\n\n%x\n2 3\n")).unwrap();
+        assert_eq!(g.nu(), 5);
+        assert_eq!(g.nv(), 7);
+        assert_eq!(g.m(), 2);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse(Cursor::new("0 x\n")).is_err());
+        assert!(parse(Cursor::new("0\n")).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let g = crate::graph::gen::erdos(30, 40, 100, 1);
+        let dir = std::env::temp_dir().join("pbng_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.tsv");
+        save(&g, &p).unwrap();
+        let g2 = load(&p).unwrap();
+        assert_eq!(g.nu(), g2.nu());
+        assert_eq!(g.nv(), g2.nv());
+        assert_eq!(g.edges(), g2.edges());
+    }
+}

@@ -1,0 +1,325 @@
+//! Bipartite graph substrate: CSR in both directions with edge ids, plus
+//! the degree-priority relabeling the counting algorithm (Alg. 1) needs.
+//!
+//! Vertices are split into `U` (ids `0..nu`) and `V` (ids `0..nv`); a
+//! *wid* ("whole-graph id") addresses the union: `wid(u) = u`,
+//! `wid(v) = nu + v`. Edges carry stable ids `0..m` so that edge-indexed
+//! state (supports, wing numbers, partitions) is a flat vector.
+
+pub mod builder;
+pub mod gen;
+pub mod induced;
+pub mod io;
+
+pub use builder::GraphBuilder;
+
+/// Which side of the bipartition a vertex set refers to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Side {
+    U,
+    V,
+}
+
+impl Side {
+    pub fn other(self) -> Side {
+        match self {
+            Side::U => Side::V,
+            Side::V => Side::U,
+        }
+    }
+}
+
+/// Immutable bipartite graph in CSR form (both directions).
+#[derive(Clone, Debug)]
+pub struct BipartiteGraph {
+    nu: usize,
+    nv: usize,
+    /// CSR offsets for U-side adjacency, length `nu + 1`.
+    offs_u: Vec<usize>,
+    /// `(v, edge_id)` slots, sorted by `v` within each `u`.
+    adj_u: Vec<(u32, u32)>,
+    /// CSR offsets for V-side adjacency, length `nv + 1`.
+    offs_v: Vec<usize>,
+    /// `(u, edge_id)` slots, sorted by `u` within each `v`.
+    adj_v: Vec<(u32, u32)>,
+    /// `edge_id -> (u, v)`.
+    edges: Vec<(u32, u32)>,
+}
+
+impl BipartiteGraph {
+    /// Construct from a deduplicated edge list. Prefer [`GraphBuilder`].
+    pub(crate) fn from_clean_edges(nu: usize, nv: usize, edges: Vec<(u32, u32)>) -> Self {
+        let m = edges.len();
+        let mut deg_u = vec![0usize; nu];
+        let mut deg_v = vec![0usize; nv];
+        for &(u, v) in &edges {
+            deg_u[u as usize] += 1;
+            deg_v[v as usize] += 1;
+        }
+        let mut offs_u = vec![0usize; nu + 1];
+        for i in 0..nu {
+            offs_u[i + 1] = offs_u[i] + deg_u[i];
+        }
+        let mut offs_v = vec![0usize; nv + 1];
+        for i in 0..nv {
+            offs_v[i + 1] = offs_v[i] + deg_v[i];
+        }
+        let mut adj_u = vec![(0u32, 0u32); m];
+        let mut adj_v = vec![(0u32, 0u32); m];
+        let mut cur_u = offs_u.clone();
+        let mut cur_v = offs_v.clone();
+        for (eid, &(u, v)) in edges.iter().enumerate() {
+            adj_u[cur_u[u as usize]] = (v, eid as u32);
+            cur_u[u as usize] += 1;
+            adj_v[cur_v[v as usize]] = (u, eid as u32);
+            cur_v[v as usize] += 1;
+        }
+        // sort neighbor slots by neighbor id for binary-search edge lookup
+        for u in 0..nu {
+            adj_u[offs_u[u]..offs_u[u + 1]].sort_unstable();
+        }
+        for v in 0..nv {
+            adj_v[offs_v[v]..offs_v[v + 1]].sort_unstable();
+        }
+        BipartiteGraph {
+            nu,
+            nv,
+            offs_u,
+            adj_u,
+            offs_v,
+            adj_v,
+            edges,
+        }
+    }
+
+    pub fn nu(&self) -> usize {
+        self.nu
+    }
+    pub fn nv(&self) -> usize {
+        self.nv
+    }
+    /// Total vertex count `|W| = |U| + |V|`.
+    pub fn nw(&self) -> usize {
+        self.nu + self.nv
+    }
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    #[inline]
+    pub fn deg_u(&self, u: u32) -> usize {
+        self.offs_u[u as usize + 1] - self.offs_u[u as usize]
+    }
+    #[inline]
+    pub fn deg_v(&self, v: u32) -> usize {
+        self.offs_v[v as usize + 1] - self.offs_v[v as usize]
+    }
+
+    /// Degree of a vertex addressed by wid.
+    #[inline]
+    pub fn deg_w(&self, w: usize) -> usize {
+        if w < self.nu {
+            self.deg_u(w as u32)
+        } else {
+            self.deg_v((w - self.nu) as u32)
+        }
+    }
+
+    /// `(neighbor, edge_id)` slots of `u`, sorted by neighbor.
+    #[inline]
+    pub fn nbrs_u(&self, u: u32) -> &[(u32, u32)] {
+        &self.adj_u[self.offs_u[u as usize]..self.offs_u[u as usize + 1]]
+    }
+    /// `(neighbor, edge_id)` slots of `v`, sorted by neighbor.
+    #[inline]
+    pub fn nbrs_v(&self, v: u32) -> &[(u32, u32)] {
+        &self.adj_v[self.offs_v[v as usize]..self.offs_v[v as usize + 1]]
+    }
+
+    /// Neighbors of a wid, as `(neighbor_wid, edge_id)` iterator data.
+    /// U vertices' neighbors are V vertices and vice versa.
+    #[inline]
+    pub fn nbrs_w(&self, w: usize) -> (&[(u32, u32)], usize) {
+        if w < self.nu {
+            // neighbors are V side: wid = nu + v
+            (self.nbrs_u(w as u32), self.nu)
+        } else {
+            (self.nbrs_v((w - self.nu) as u32), 0)
+        }
+    }
+
+    #[inline]
+    pub fn edge(&self, e: u32) -> (u32, u32) {
+        self.edges[e as usize]
+    }
+
+    pub fn edges(&self) -> &[(u32, u32)] {
+        &self.edges
+    }
+
+    /// Edge id of `(u, v)` if present (binary search on the smaller list).
+    pub fn edge_id(&self, u: u32, v: u32) -> Option<u32> {
+        let (list, key) = if self.deg_u(u) <= self.deg_v(v) {
+            (self.nbrs_u(u), v)
+        } else {
+            (self.nbrs_v(v), u)
+        };
+        list.binary_search_by_key(&key, |&(x, _)| x)
+            .ok()
+            .map(|i| list[i].1)
+    }
+
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.edge_id(u, v).is_some()
+    }
+
+    /// Degree-priority labels over the whole vertex set `W` (Alg. 1 line 2):
+    /// label 0 = highest degree. Returns `label[wid]`.
+    ///
+    /// Ties are broken by wid for determinism.
+    pub fn priority_labels(&self) -> Vec<u32> {
+        let nw = self.nw();
+        let mut order: Vec<u32> = (0..nw as u32).collect();
+        order.sort_unstable_by(|&a, &b| {
+            self.deg_w(b as usize)
+                .cmp(&self.deg_w(a as usize))
+                .then(a.cmp(&b))
+        });
+        let mut label = vec![0u32; nw];
+        for (rank, &w) in order.iter().enumerate() {
+            label[w as usize] = rank as u32;
+        }
+        label
+    }
+
+    /// Sum over edges of `min(du, dv)` — the Chiba–Nishizeki wedge bound
+    /// `O(α·m)` used as the re-counting workload estimate Λ_cnt (§5.1).
+    pub fn count_workload_bound(&self) -> u64 {
+        self.edges
+            .iter()
+            .map(|&(u, v)| self.deg_u(u).min(self.deg_v(v)) as u64)
+            .sum()
+    }
+
+    /// Total wedges with both endpoints in U: Σ_v C(d_v, 2) — tip-peeling
+    /// workload for side U; and symmetric for V.
+    pub fn wedge_count(&self, endpoints: Side) -> u64 {
+        match endpoints {
+            Side::U => (0..self.nv as u32)
+                .map(|v| {
+                    let d = self.deg_v(v) as u64;
+                    d * (d.saturating_sub(1)) / 2
+                })
+                .sum(),
+            Side::V => (0..self.nu as u32)
+                .map(|u| {
+                    let d = self.deg_u(u) as u64;
+                    d * (d.saturating_sub(1)) / 2
+                })
+                .sum(),
+        }
+    }
+
+    /// Peeling-side vertex count.
+    pub fn n_side(&self, side: Side) -> usize {
+        match side {
+            Side::U => self.nu,
+            Side::V => self.nv,
+        }
+    }
+
+    /// Swap the roles of U and V (used to peel the other side in tip
+    /// decomposition without duplicating code).
+    pub fn transposed(&self) -> BipartiteGraph {
+        BipartiteGraph {
+            nu: self.nv,
+            nv: self.nu,
+            offs_u: self.offs_v.clone(),
+            adj_u: self.adj_v.clone(),
+            offs_v: self.offs_u.clone(),
+            adj_v: self.adj_u.clone(),
+            edges: self.edges.iter().map(|&(u, v)| (v, u)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> BipartiteGraph {
+        // 2x2 biclique plus a pendant edge (u2, v0)
+        GraphBuilder::new()
+            .edges(&[(0, 0), (0, 1), (1, 0), (1, 1), (2, 0)])
+            .build()
+    }
+
+    #[test]
+    fn csr_shapes() {
+        let g = toy();
+        assert_eq!(g.nu(), 3);
+        assert_eq!(g.nv(), 2);
+        assert_eq!(g.m(), 5);
+        assert_eq!(g.deg_u(0), 2);
+        assert_eq!(g.deg_v(0), 3);
+        assert_eq!(g.deg_u(2), 1);
+    }
+
+    #[test]
+    fn edge_lookup() {
+        let g = toy();
+        assert!(g.has_edge(0, 0));
+        assert!(g.has_edge(2, 0));
+        assert!(!g.has_edge(2, 1));
+        let e = g.edge_id(1, 1).unwrap();
+        assert_eq!(g.edge(e), (1, 1));
+    }
+
+    #[test]
+    fn adjacency_is_sorted() {
+        let g = toy();
+        for u in 0..g.nu() as u32 {
+            let ns = g.nbrs_u(u);
+            assert!(ns.windows(2).all(|w| w[0].0 < w[1].0));
+        }
+        for v in 0..g.nv() as u32 {
+            let ns = g.nbrs_v(v);
+            assert!(ns.windows(2).all(|w| w[0].0 < w[1].0));
+        }
+    }
+
+    #[test]
+    fn priority_labels_rank_by_degree() {
+        let g = toy();
+        let label = g.priority_labels();
+        // v0 (wid 3) has degree 3 — the unique max — so label 0.
+        assert_eq!(label[3], 0);
+        // pendant u2 (wid 2, degree 1) has the largest label.
+        assert_eq!(label[2] as usize, g.nw() - 1);
+    }
+
+    #[test]
+    fn wedge_counts() {
+        let g = toy();
+        // side U endpoints: Σ_v C(dv,2) = C(3,2) + C(2,2) = 3 + 1 = 4
+        assert_eq!(g.wedge_count(Side::U), 4);
+        // side V endpoints: Σ_u C(du,2) = 1 + 1 + 0 = 2
+        assert_eq!(g.wedge_count(Side::V), 2);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let g = toy();
+        let t = g.transposed();
+        assert_eq!(t.nu(), g.nv());
+        assert_eq!(t.nv(), g.nu());
+        assert_eq!(t.m(), g.m());
+        assert!(t.has_edge(0, 2));
+        assert_eq!(t.wedge_count(Side::U), g.wedge_count(Side::V));
+        // edge ids preserved under transpose
+        for e in 0..g.m() as u32 {
+            let (u, v) = g.edge(e);
+            assert_eq!(t.edge(e), (v, u));
+        }
+    }
+}

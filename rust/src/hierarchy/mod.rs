@@ -1,0 +1,249 @@
+//! Hierarchy extraction: materialize k-wings / k-tips from wing / tip
+//! numbers (the space-efficient index the decomposition outputs, §2.2).
+//!
+//! A k-wing is a maximal *butterfly-connected* subgraph of the edges with
+//! `θ_e ≥ k`. Butterfly connectivity is computed through blooms: inside
+//! one bloom, a wedge is "active at level k" iff both its (twin) edges
+//! have `θ ≥ k`, and all edges of ≥ 2 active wedges of a bloom are
+//! pairwise butterfly-connected (Property 1).
+
+use crate::beindex::BeIndex;
+use crate::graph::{BipartiteGraph, Side};
+
+/// Union-find with path halving.
+pub struct UnionFind {
+    parent: Vec<u32>,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        UnionFind {
+            parent: (0..n as u32).collect(),
+        }
+    }
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let gp = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+        x
+    }
+    pub fn union(&mut self, a: u32, b: u32) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[ra as usize] = rb;
+        }
+    }
+}
+
+/// Edges of the k-wing level: `θ_e ≥ k`.
+pub fn kwing_edges(theta: &[u64], k: u64) -> Vec<u32> {
+    (0..theta.len() as u32)
+        .filter(|&e| theta[e as usize] >= k)
+        .collect()
+}
+
+/// Butterfly-connected components of the k-wing level. Returns edge-id
+/// groups (components with ≥ 1 butterfly; isolated qualifying edges that
+/// share no butterfly at level k are omitted — they belong to no k-wing
+/// for k ≥ 1).
+pub fn kwing_components(idx: &BeIndex, theta: &[u64], k: u64) -> Vec<Vec<u32>> {
+    let m = theta.len();
+    let mut uf = UnionFind::new(m);
+    let mut in_wing = vec![false; m];
+    for b in 0..idx.n_blooms() as u32 {
+        // active wedges: both twins at level >= k
+        let ents = idx.entries(b);
+        let mut first: Option<u32> = None;
+        let mut actives = 0usize;
+        for &(e, t) in ents {
+            if e < t {
+                continue; // count each wedge once
+            }
+            if theta[e as usize] >= k && theta[t as usize] >= k {
+                actives += 1;
+                if first.is_none() {
+                    first = Some(e);
+                }
+            }
+        }
+        if actives >= 2 {
+            let f = first.unwrap();
+            for &(e, t) in ents {
+                if theta[e as usize] >= k && theta[t as usize] >= k {
+                    uf.union(e, f);
+                    in_wing[e as usize] = true;
+                    in_wing[t as usize] = true;
+                }
+            }
+        }
+    }
+    let mut groups: std::collections::HashMap<u32, Vec<u32>> = std::collections::HashMap::new();
+    for e in 0..m as u32 {
+        if in_wing[e as usize] {
+            groups.entry(uf.find(e)).or_default().push(e);
+        }
+    }
+    let mut out: Vec<Vec<u32>> = groups.into_values().collect();
+    out.sort_by_key(|g| g.first().copied());
+    out
+}
+
+/// Vertices of the k-tip level of `side`: `θ_u ≥ k`.
+pub fn ktip_vertices(theta: &[u64], k: u64) -> Vec<u32> {
+    (0..theta.len() as u32)
+        .filter(|&u| theta[u as usize] >= k)
+        .collect()
+}
+
+/// Summary of one hierarchy level for reporting.
+#[derive(Clone, Debug)]
+pub struct LevelSummary {
+    pub k: u64,
+    pub entities: usize,
+    pub components: usize,
+    pub largest: usize,
+}
+
+/// Summaries for every distinct wing-number level (Fig. 1b style).
+pub fn wing_hierarchy_summary(idx: &BeIndex, theta: &[u64]) -> Vec<LevelSummary> {
+    let mut levels: Vec<u64> = theta.iter().copied().filter(|&t| t > 0).collect();
+    levels.sort_unstable();
+    levels.dedup();
+    levels
+        .into_iter()
+        .map(|k| {
+            let comps = kwing_components(idx, theta, k);
+            LevelSummary {
+                k,
+                entities: kwing_edges(theta, k).len(),
+                components: comps.len(),
+                largest: comps.iter().map(|c| c.len()).max().unwrap_or(0),
+            }
+        })
+        .collect()
+}
+
+/// Check the nesting property: the (k+1)-level is contained in the
+/// k-level (both edge sets and component containment). Used by tests and
+/// the verify CLI.
+pub fn check_wing_nesting(g: &BipartiteGraph, idx: &BeIndex, theta: &[u64]) -> Result<(), String> {
+    let _ = g;
+    let mut levels: Vec<u64> = theta.iter().copied().filter(|&t| t > 0).collect();
+    levels.sort_unstable();
+    levels.dedup();
+    for w in levels.windows(2) {
+        let (lo, hi) = (w[0], w[1]);
+        let lo_comps = kwing_components(idx, theta, lo);
+        let hi_comps = kwing_components(idx, theta, hi);
+        // every hi component must be fully inside one lo component
+        for hc in &hi_comps {
+            let mut found = false;
+            for lc in &lo_comps {
+                if hc.iter().all(|e| lc.contains(e)) {
+                    found = true;
+                    break;
+                }
+            }
+            if !found {
+                return Err(format!(
+                    "level {hi} component not nested in any level {lo} component"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::peel::bup::wing_bup;
+
+    #[test]
+    fn union_find_basics() {
+        let mut uf = UnionFind::new(5);
+        uf.union(0, 1);
+        uf.union(3, 4);
+        assert_eq!(uf.find(0), uf.find(1));
+        assert_ne!(uf.find(0), uf.find(3));
+        uf.union(1, 3);
+        assert_eq!(uf.find(0), uf.find(4));
+    }
+
+    #[test]
+    fn biclique_is_single_component() {
+        let g = gen::biclique(3, 3);
+        let (idx, _) = crate::beindex::BeIndex::build(&g, 1);
+        let theta = wing_bup(&g).theta;
+        let comps = kwing_components(&idx, &theta, 1);
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].len(), 9);
+    }
+
+    #[test]
+    fn disjoint_blocks_are_separate_components() {
+        // two disjoint K_{2,2}s
+        let g = crate::graph::GraphBuilder::new()
+            .edges(&[(0, 0), (0, 1), (1, 0), (1, 1), (2, 2), (2, 3), (3, 2), (3, 3)])
+            .build();
+        let (idx, _) = crate::beindex::BeIndex::build(&g, 1);
+        let theta = wing_bup(&g).theta;
+        let comps = kwing_components(&idx, &theta, 1);
+        assert_eq!(comps.len(), 2);
+        assert!(comps.iter().all(|c| c.len() == 4));
+    }
+
+    #[test]
+    fn fig1_hierarchy_nests() {
+        let g = gen::paper_fig1();
+        let (idx, _) = crate::beindex::BeIndex::build(&g, 1);
+        let theta = wing_bup(&g).theta;
+        check_wing_nesting(&g, &idx, &theta).unwrap();
+        let summary = wing_hierarchy_summary(&idx, &theta);
+        // levels 1..4 present
+        let ks: Vec<u64> = summary.iter().map(|l| l.k).collect();
+        assert_eq!(ks, vec![1, 2, 3, 4]);
+        // entity counts strictly shrink up the hierarchy
+        for w in summary.windows(2) {
+            assert!(w[1].entities < w[0].entities);
+        }
+    }
+
+    #[test]
+    fn nesting_holds_on_random_graphs() {
+        crate::testkit::check_property("wing-nesting", 0x4E57, 6, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(
+                6 + rng.usize_below(10),
+                6 + rng.usize_below(10),
+                20 + rng.usize_below(50),
+                seed,
+            );
+            let (idx, _) = crate::beindex::BeIndex::build(&g, 1);
+            let theta = wing_bup(&g).theta;
+            check_wing_nesting(&g, &idx, &theta)
+        });
+    }
+
+    #[test]
+    fn ktip_levels_shrink() {
+        let g = gen::paper_fig1();
+        let theta = crate::count::brute::brute_tip_numbers(&g, crate::graph::Side::U);
+        let max = *theta.iter().max().unwrap();
+        let mut last = usize::MAX;
+        for k in 1..=max {
+            let n = ktip_vertices(&theta, k).len();
+            assert!(n <= last);
+            last = n;
+        }
+    }
+
+    #[test]
+    fn side_enum_is_used() {
+        // silence Side import: hierarchy functions are side-agnostic
+        let _ = Side::U;
+    }
+}

@@ -1,0 +1,33 @@
+//! # PBNG — Parallel Bipartite Network peelinG
+//!
+//! A reproduction of *"Parallel Peeling of Bipartite Networks for
+//! Hierarchical Dense Subgraph Discovery"* (Lakhotia, Kannan, Prasanna,
+//! 2021): two-phased parallel **tip** (vertex) and **wing** (edge)
+//! decomposition of bipartite graphs, with every baseline the paper
+//! evaluates against (BUP, ParB, BE_Batch, BE_PC), the BE-Index
+//! substrate, workload metrics (support updates, wedges, synchronization
+//! rounds ρ), and an AOT-compiled XLA dense-counting offload.
+//!
+//! Quick start:
+//!
+//! ```
+//! use pbng::graph::gen;
+//! use pbng::wing::{wing_pbng, PbngConfig};
+//!
+//! let g = gen::paper_fig1();
+//! let d = wing_pbng(&g, PbngConfig { p: 4, threads: 2, ..Default::default() });
+//! assert_eq!(d.theta.len(), g.m());
+//! ```
+
+pub mod beindex;
+pub mod cli;
+pub mod count;
+pub mod graph;
+pub mod metrics;
+pub mod par;
+pub mod hierarchy;
+pub mod peel;
+pub mod runtime;
+pub mod testkit;
+pub mod tip;
+pub mod wing;

@@ -1,0 +1,282 @@
+//! `pbng` — CLI launcher for the PBNG framework.
+//!
+//! Subcommands:
+//!   gen        generate a synthetic bipartite graph (presets or custom)
+//!   count      butterfly counting (per-vertex / per-edge / total)
+//!   wing       wing (edge) decomposition — pbng | bup | parb | be-batch | be-pc
+//!   tip        tip (vertex) decomposition — pbng | bup | parb
+//!   hierarchy  materialize the k-wing hierarchy levels
+//!   verify     run all algorithms and assert they agree
+//!   info       runtime / artifact status
+
+use anyhow::{bail, Context, Result};
+use pbng::cli::Args;
+use pbng::graph::{gen, io, BipartiteGraph, Side};
+use pbng::metrics::human;
+use std::path::Path;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        usage();
+        return;
+    }
+    if let Err(e) = run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "pbng — Parallel Bipartite Network peelinG
+
+USAGE: pbng <command> [args]
+
+  gen --preset <name> --out <file>
+  gen --kind zipf|erdos --nu N --nv N --m M [--alpha-u A --alpha-v A] --seed S --out <file>
+  count <graph.tsv> [--threads T]
+  wing <graph.tsv> [--algo pbng|bup|parb|be-batch|be-pc] [--p P] [--threads T]
+                   [--tau F] [--no-batch] [--no-deletes] [--out numbers.txt]
+  tip <graph.tsv> [--side u|v] [--algo pbng|bup|parb] [--p P] [--threads T]
+                  [--no-batch] [--no-deletes] [--out numbers.txt]
+  hierarchy <graph.tsv> [--p P] [--threads T]
+  verify <graph.tsv> [--p P] [--threads T]
+  info
+
+<graph.tsv> may also be a preset name.
+Presets: {}",
+        gen::Preset::all_small()
+            .iter()
+            .chain(gen::Preset::all_medium())
+            .map(|p| p.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let cmd = argv[0].clone();
+    let args = Args::parse(argv.into_iter().skip(1))?;
+    match cmd.as_str() {
+        "gen" => cmd_gen(&args),
+        "count" => cmd_count(&args),
+        "wing" => cmd_wing(&args),
+        "tip" => cmd_tip(&args),
+        "hierarchy" => cmd_hierarchy(&args),
+        "verify" => cmd_verify(&args),
+        "info" => cmd_info(&args),
+        other => bail!("unknown command '{other}' (try --help)"),
+    }
+}
+
+fn load_graph(args: &Args) -> Result<BipartiteGraph> {
+    let path = args
+        .positional
+        .first()
+        .context("expected a graph file (or preset name) argument")?;
+    if let Some(p) = gen::Preset::from_name(path) {
+        return Ok(p.build());
+    }
+    io::load(Path::new(path))
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let out = args.get("out").context("--out is required")?.to_string();
+    let g = if let Some(name) = args.get("preset") {
+        gen::Preset::from_name(name)
+            .with_context(|| format!("unknown preset '{name}'"))?
+            .build()
+    } else {
+        let nu = args.get_usize("nu", 1000)?;
+        let nv = args.get_usize("nv", 1000)?;
+        let m = args.get_usize("m", 10_000)?;
+        let seed = args.get_u64("seed", 42)?;
+        match args.get_or("kind", "zipf") {
+            "zipf" => {
+                let au = args.get_f64("alpha-u", 1.2)?;
+                let av = args.get_f64("alpha-v", 1.2)?;
+                gen::zipf(nu, nv, m, au, av, seed)
+            }
+            "erdos" => gen::erdos(nu, nv, m, seed),
+            k => bail!("unknown --kind '{k}'"),
+        }
+    };
+    args.check_unknown()?;
+    io::save(&g, Path::new(&out))?;
+    println!(
+        "wrote {} (|U|={} |V|={} |E|={})",
+        out,
+        g.nu(),
+        g.nv(),
+        g.m()
+    );
+    Ok(())
+}
+
+fn cmd_count(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let threads = args.get_usize("threads", pbng::par::default_threads())?;
+    args.check_unknown()?;
+    let t0 = std::time::Instant::now();
+    let (c, _) = pbng::count::pve_bcnt(
+        &g,
+        pbng::count::CountOptions {
+            per_edge: true,
+            build_blooms: false,
+            threads,
+        },
+        None,
+    );
+    println!("graph: |U|={} |V|={} |E|={}", g.nu(), g.nv(), g.m());
+    println!("butterflies: {} ({})", c.total, human(c.total));
+    println!(
+        "max per-edge: {}   max per-U: {}   max per-V: {}",
+        c.per_edge.iter().max().copied().unwrap_or(0),
+        c.per_u.iter().max().copied().unwrap_or(0),
+        c.per_v.iter().max().copied().unwrap_or(0),
+    );
+    println!("time: {:?} ({} threads)", t0.elapsed(), threads);
+    Ok(())
+}
+
+fn wing_cfg(args: &Args) -> Result<pbng::wing::PbngConfig> {
+    Ok(pbng::wing::PbngConfig {
+        p: args.get_usize("p", 64)?,
+        threads: args.get_usize("threads", pbng::par::default_threads())?,
+        batch: !args.flag("no-batch"),
+        dynamic_deletes: !args.flag("no-deletes"),
+    })
+}
+
+fn report(name: &str, d: &pbng::peel::Decomposition) {
+    println!(
+        "{name}: time={:?} updates={} wedges={} rho={}",
+        d.stats.total,
+        human(d.stats.updates),
+        human(d.stats.wedges),
+        d.stats.rho
+    );
+    for (ph, t, upd, wdg) in &d.stats.phases {
+        println!(
+            "  {:<12} {:>10?}  updates={:<10} wedges={}",
+            ph.name(),
+            t,
+            human(*upd),
+            human(*wdg)
+        );
+    }
+    let max = d.theta.iter().max().copied().unwrap_or(0);
+    println!("  θ_max = {max}");
+}
+
+fn cmd_wing(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let cfg = wing_cfg(args)?;
+    let algo = args.get_or("algo", "pbng").to_string();
+    let tau = args.get_f64("tau", 0.02)?;
+    let out = args.get("out").map(|s| s.to_string());
+    args.check_unknown()?;
+    let d = match algo.as_str() {
+        "pbng" => pbng::wing::wing_pbng(&g, cfg),
+        "bup" => pbng::peel::bup::wing_bup(&g),
+        "parb" => pbng::peel::parb::wing_parb(&g),
+        "be-batch" => pbng::wing::wing_be_batch(&g, cfg.threads),
+        "be-pc" => pbng::wing::wing_be_pc(&g, tau),
+        a => bail!("unknown wing algo '{a}'"),
+    };
+    report(&format!("wing[{algo}]"), &d);
+    if let Some(out) = out {
+        io::save_numbers(&d.theta, Path::new(&out))?;
+        println!("wrote wing numbers to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_tip(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let side = match args.get_or("side", "u") {
+        "u" | "U" => Side::U,
+        "v" | "V" => Side::V,
+        s => bail!("--side must be u or v, got '{s}'"),
+    };
+    let cfg = pbng::tip::TipConfig {
+        p: args.get_usize("p", 32)?,
+        threads: args.get_usize("threads", pbng::par::default_threads())?,
+        batch: !args.flag("no-batch"),
+        dynamic_deletes: !args.flag("no-deletes"),
+    };
+    let algo = args.get_or("algo", "pbng").to_string();
+    let out = args.get("out").map(|s| s.to_string());
+    args.check_unknown()?;
+    let d = match algo.as_str() {
+        "pbng" => pbng::tip::tip_pbng(&g, side, cfg),
+        "bup" => pbng::tip::tip_bup(&g, side),
+        "parb" => pbng::tip::tip_parb(&g, side),
+        a => bail!("unknown tip algo '{a}'"),
+    };
+    report(&format!("tip[{algo}]{side:?}"), &d);
+    if let Some(out) = out {
+        io::save_numbers(&d.theta, Path::new(&out))?;
+        println!("wrote tip numbers to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_hierarchy(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let cfg = wing_cfg(args)?;
+    args.check_unknown()?;
+    let (idx, _) = pbng::beindex::BeIndex::build(&g, cfg.threads);
+    let d = pbng::wing::wing_pbng(&g, cfg);
+    let summary = pbng::hierarchy::wing_hierarchy_summary(&idx, &d.theta);
+    println!("{:>8} {:>10} {:>12} {:>10}", "k", "edges", "components", "largest");
+    for l in summary {
+        println!(
+            "{:>8} {:>10} {:>12} {:>10}",
+            l.k, l.entities, l.components, l.largest
+        );
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let cfg = wing_cfg(args)?;
+    args.check_unknown()?;
+    println!("verifying on |E|={} ...", g.m());
+    let bup = pbng::peel::bup::wing_bup(&g).theta;
+    let pbng_d = pbng::wing::wing_pbng(&g, cfg).theta;
+    let beb = pbng::wing::wing_be_batch(&g, cfg.threads).theta;
+    anyhow::ensure!(pbng_d == bup, "wing: PBNG != BUP");
+    anyhow::ensure!(beb == bup, "wing: BE_Batch != BUP");
+    for side in [Side::U, Side::V] {
+        let b = pbng::tip::tip_bup(&g, side).theta;
+        let p = pbng::tip::tip_pbng(
+            &g,
+            side,
+            pbng::tip::TipConfig {
+                threads: cfg.threads,
+                ..Default::default()
+            },
+        )
+        .theta;
+        anyhow::ensure!(p == b, "tip {side:?}: PBNG != BUP");
+    }
+    println!("OK: all algorithms agree (wing ×3, tip ×2 sides)");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.check_unknown()?;
+    println!("pbng {} — PBNG reproduction", env!("CARGO_PKG_VERSION"));
+    println!("threads default: {}", pbng::par::default_threads());
+    match pbng::runtime::Runtime::new(pbng::runtime::Runtime::default_dir()) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifact block sizes: {:?}", rt.available_sizes());
+        }
+        Err(e) => println!("PJRT runtime unavailable: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,211 @@
+//! Workload metrics — the paper's comparison currency.
+//!
+//! Table 3/4 compare algorithms on execution time, **support updates**
+//! (wing), **wedges traversed** (tip), and **ρ** — the number of parallel
+//! peeling iterations, which equals the number of thread synchronizations.
+//! Every peeling algorithm in this crate reports a [`PeelStats`].
+
+use crate::par::Counter;
+use std::time::{Duration, Instant};
+
+/// Pipeline phases (Fig. 7 / Fig. 10 breakdowns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Butterfly counting for support initialization (+ BE-Index build).
+    Count,
+    /// Coarse-grained decomposition (PBNG CD).
+    Coarse,
+    /// BE-Index / induced-subgraph partitioning.
+    Partition,
+    /// Fine-grained decomposition (PBNG FD).
+    Fine,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 4] = [Phase::Count, Phase::Coarse, Phase::Partition, Phase::Fine];
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Count => "count+index",
+            Phase::Coarse => "coarse(CD)",
+            Phase::Partition => "partition",
+            Phase::Fine => "fine(FD)",
+        }
+    }
+}
+
+/// Live counters, shared across threads during a run.
+#[derive(Default)]
+pub struct Meters {
+    /// Support-update operations applied (wing currency).
+    pub updates: Counter,
+    /// Wedge / bloom-edge-link traversal steps (tip currency; also used to
+    /// measure BE-Index traversal for the Fig. 6 ablation).
+    pub wedges: Counter,
+    /// Parallel peeling iterations == thread synchronizations (ρ).
+    pub rho: Counter,
+}
+
+impl Meters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Final, immutable result of one decomposition run.
+#[derive(Clone, Debug, Default)]
+pub struct PeelStats {
+    pub updates: u64,
+    pub wedges: u64,
+    pub rho: u64,
+    pub total: Duration,
+    /// (phase, duration, phase-local updates, phase-local wedges)
+    pub phases: Vec<(Phase, Duration, u64, u64)>,
+}
+
+impl PeelStats {
+    pub fn phase_time(&self, p: Phase) -> Duration {
+        self.phases
+            .iter()
+            .filter(|(ph, ..)| *ph == p)
+            .map(|(_, d, ..)| *d)
+            .sum()
+    }
+    pub fn phase_updates(&self, p: Phase) -> u64 {
+        self.phases
+            .iter()
+            .filter(|(ph, ..)| *ph == p)
+            .map(|(_, _, u, _)| *u)
+            .sum()
+    }
+    pub fn phase_wedges(&self, p: Phase) -> u64 {
+        self.phases
+            .iter()
+            .filter(|(ph, ..)| *ph == p)
+            .map(|(.., w)| *w)
+            .sum()
+    }
+}
+
+/// Records phase boundaries against a [`Meters`], producing [`PeelStats`].
+pub struct Recorder<'a> {
+    meters: &'a Meters,
+    start: Instant,
+    phase_start: Instant,
+    phase_updates0: u64,
+    phase_wedges0: u64,
+    current: Option<Phase>,
+    phases: Vec<(Phase, Duration, u64, u64)>,
+}
+
+impl<'a> Recorder<'a> {
+    pub fn new(meters: &'a Meters) -> Self {
+        let now = Instant::now();
+        Recorder {
+            meters,
+            start: now,
+            phase_start: now,
+            phase_updates0: 0,
+            phase_wedges0: 0,
+            current: None,
+            phases: Vec::new(),
+        }
+    }
+
+    pub fn enter(&mut self, p: Phase) {
+        self.close_phase();
+        self.current = Some(p);
+        self.phase_start = Instant::now();
+        self.phase_updates0 = self.meters.updates.get();
+        self.phase_wedges0 = self.meters.wedges.get();
+    }
+
+    fn close_phase(&mut self) {
+        if let Some(p) = self.current.take() {
+            self.phases.push((
+                p,
+                self.phase_start.elapsed(),
+                self.meters.updates.get() - self.phase_updates0,
+                self.meters.wedges.get() - self.phase_wedges0,
+            ));
+        }
+    }
+
+    pub fn finish(mut self) -> PeelStats {
+        self.close_phase();
+        PeelStats {
+            updates: self.meters.updates.get(),
+            wedges: self.meters.wedges.get(),
+            rho: self.meters.rho.get(),
+            total: self.start.elapsed(),
+            phases: self.phases,
+        }
+    }
+}
+
+/// Human-size formatting for counters (paper prints billions).
+pub fn human(x: u64) -> String {
+    let f = x as f64;
+    if f >= 1e12 {
+        format!("{:.2}T", f / 1e12)
+    } else if f >= 1e9 {
+        format!("{:.2}B", f / 1e9)
+    } else if f >= 1e6 {
+        format!("{:.2}M", f / 1e6)
+    } else if f >= 1e3 {
+        format!("{:.2}K", f / 1e3)
+    } else {
+        format!("{}", x)
+    }
+}
+
+/// Fixed-width row printer shared by the bench mains.
+pub fn print_row(cols: &[String], widths: &[usize]) {
+    let mut line = String::new();
+    for (i, c) in cols.iter().enumerate() {
+        let w = widths.get(i).copied().unwrap_or(12);
+        line.push_str(&format!("{:>w$} ", c, w = w));
+    }
+    println!("{}", line.trim_end());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_tracks_phases() {
+        let m = Meters::new();
+        let mut r = Recorder::new(&m);
+        r.enter(Phase::Count);
+        m.updates.add(5);
+        r.enter(Phase::Coarse);
+        m.updates.add(7);
+        m.rho.add(2);
+        let s = r.finish();
+        assert_eq!(s.updates, 12);
+        assert_eq!(s.rho, 2);
+        assert_eq!(s.phase_updates(Phase::Count), 5);
+        assert_eq!(s.phase_updates(Phase::Coarse), 7);
+        assert_eq!(s.phases.len(), 2);
+    }
+
+    #[test]
+    fn human_formatting() {
+        assert_eq!(human(12), "12");
+        assert_eq!(human(1_500), "1.50K");
+        assert_eq!(human(2_000_000), "2.00M");
+        assert_eq!(human(3_300_000_000), "3.30B");
+        assert_eq!(human(20_068_000_000_000), "20.07T");
+    }
+
+    #[test]
+    fn phase_time_sums_duplicates() {
+        let m = Meters::new();
+        let mut r = Recorder::new(&m);
+        r.enter(Phase::Fine);
+        r.enter(Phase::Fine);
+        let s = r.finish();
+        assert_eq!(s.phases.len(), 2);
+        let _ = s.phase_time(Phase::Fine);
+    }
+}

@@ -1,0 +1,105 @@
+//! Atomic support cells with the paper's floor-clamped decrement.
+//!
+//! Every peeling algorithm in the paper updates supports as
+//! `⋈ ← max(θ, ⋈ − x)` (Alg. 3 line 4, Alg. 4 line 27, Alg. 6 lines 7/12):
+//! the support never drops below the level `θ` currently being peeled, so
+//! entities already scheduled keep a consistent value. Under concurrent
+//! peeling these must be atomic read-modify-write ops.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A single entity's support (running butterfly count).
+#[derive(Debug)]
+pub struct SupportCell(AtomicU64);
+
+impl SupportCell {
+    pub fn new(v: u64) -> Self {
+        SupportCell(AtomicU64::new(v))
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// `⋈ ← max(floor, ⋈ − x)`, atomically. Returns the new value.
+    #[inline]
+    pub fn sub_clamped(&self, x: u64, floor: u64) -> u64 {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let new = cur.saturating_sub(x).max(floor);
+            match self
+                .0
+                .compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return new,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Plain atomic add (used when re-aggregating counts).
+    #[inline]
+    pub fn add(&self, x: u64) {
+        self.0.fetch_add(x, Ordering::Relaxed);
+    }
+}
+
+/// Allocate a support vector from plain counts.
+pub fn support_vec(init: &[u64]) -> Vec<SupportCell> {
+    init.iter().map(|&v| SupportCell::new(v)).collect()
+}
+
+/// Snapshot a support vector into plain u64s.
+pub fn snapshot(cells: &[SupportCell]) -> Vec<u64> {
+    cells.iter().map(|c| c.get()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::parallel_for;
+
+    #[test]
+    fn sub_clamped_basics() {
+        let c = SupportCell::new(10);
+        assert_eq!(c.sub_clamped(3, 0), 7);
+        assert_eq!(c.sub_clamped(100, 5), 5);
+        assert_eq!(c.sub_clamped(1, 5), 5);
+    }
+
+    #[test]
+    fn sub_clamped_saturates_at_zero() {
+        let c = SupportCell::new(2);
+        assert_eq!(c.sub_clamped(5, 0), 0);
+    }
+
+    #[test]
+    fn concurrent_decrements_are_exact_above_floor() {
+        let c = SupportCell::new(100_000);
+        parallel_for(50_000, 4, |_, _| {
+            c.sub_clamped(1, 0);
+        });
+        assert_eq!(c.get(), 50_000);
+    }
+
+    #[test]
+    fn concurrent_decrements_respect_floor() {
+        let c = SupportCell::new(1_000);
+        parallel_for(50_000, 4, |_, _| {
+            c.sub_clamped(1, 900);
+        });
+        assert_eq!(c.get(), 900);
+    }
+
+    #[test]
+    fn support_vec_roundtrip() {
+        let v = support_vec(&[1, 2, 3]);
+        assert_eq!(snapshot(&v), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,242 @@
+//! Shared-memory fork-join parallelism built on `std::thread::scope`.
+//!
+//! The paper's reference implementation uses OpenMP `parallel for`; this
+//! module provides the equivalent primitives: a chunked `parallel_for`,
+//! a reduce variant, and saturating atomic support cells implementing the
+//! paper's `⋈ ← max(θ, ⋈ − x)` update (Alg. 3/4/6).
+//!
+//! The cargo registry available in this environment does not carry rayon,
+//! so the pool is hand-rolled. Threads are spawned per parallel region
+//! (scoped), which matches OpenMP's fork-join semantics and keeps the
+//! region composable with borrowed data.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+pub mod atomics;
+pub use atomics::SupportCell;
+
+/// Number of worker threads for a parallel region.
+///
+/// Defaults to the machine's available parallelism; override with
+/// `PBNG_THREADS` or per-call sites that take an explicit `threads`.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PBNG_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `body(thread_id, start, end)` over `0..n` split into contiguous
+/// chunks, one chunk stream per thread, work-stealing by grabbing the next
+/// chunk index from a shared atomic (guided scheduling, like OpenMP
+/// `schedule(dynamic)` with a fixed grain).
+pub fn parallel_for_chunked<F>(n: usize, threads: usize, grain: usize, body: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 || n <= grain {
+        body(0, 0, n);
+        return;
+    }
+    let grain = grain.max(1);
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let next = &next;
+            let body = &body;
+            s.spawn(move || loop {
+                let start = next.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + grain).min(n);
+                body(t, start, end);
+            });
+        }
+    });
+}
+
+/// Element-wise parallel for: `body(thread_id, i)` for `i in 0..n`.
+pub fn parallel_for<F>(n: usize, threads: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let grain = (n / (threads.max(1) * 8)).max(256);
+    parallel_for_chunked(n, threads, grain, |t, lo, hi| {
+        for i in lo..hi {
+            body(t, i);
+        }
+    });
+}
+
+/// Parallel map-reduce over `0..n`: each thread folds chunks with `fold`,
+/// results combined with `combine`.
+pub fn parallel_reduce<A, F, C>(n: usize, threads: usize, init: A, fold: F, combine: C) -> A
+where
+    A: Send + Clone,
+    F: Fn(A, usize) -> A + Sync,
+    C: Fn(A, A) -> A,
+{
+    let threads = threads.max(1);
+    if threads == 1 || n < 1024 {
+        let mut acc = init;
+        for i in 0..n {
+            acc = fold(acc, i);
+        }
+        return acc;
+    }
+    let grain = (n / (threads * 8)).max(256);
+    let next = AtomicUsize::new(0);
+    let partials: Vec<A> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let next = &next;
+            let fold = &fold;
+            let init = init.clone();
+            handles.push(s.spawn(move || {
+                let mut acc = init;
+                loop {
+                    let start = next.fetch_add(grain, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + grain).min(n);
+                    for i in start..end {
+                        acc = fold(acc, i);
+                    }
+                }
+                acc
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    partials.into_iter().fold(init, combine)
+}
+
+/// Run one closure per thread id (SPMD region), like `omp parallel`.
+pub fn spmd<F>(threads: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 {
+        body(0);
+        return;
+    }
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let body = &body;
+            s.spawn(move || body(t));
+        }
+    });
+}
+
+/// Shared mutable cell for provably disjoint parallel writes.
+///
+/// Graph peeling mutates per-bloom / per-vertex slices that a parallel
+/// loop partitions disjointly (each bloom is owned by exactly one task in
+/// a phase). Rust cannot see that disjointness, so this cell provides the
+/// escape hatch; every use site documents its disjointness argument.
+pub struct RacyCell<T: ?Sized>(std::cell::UnsafeCell<T>);
+
+unsafe impl<T: ?Sized + Send> Sync for RacyCell<T> {}
+
+impl<T> RacyCell<T> {
+    pub fn new(v: T) -> Self {
+        RacyCell(std::cell::UnsafeCell::new(v))
+    }
+    /// # Safety
+    /// Caller must guarantee no concurrent aliasing access to the parts
+    /// of `T` it mutates.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self) -> &mut T {
+        &mut *self.0.get()
+    }
+    pub fn into_inner(self) -> T {
+        self.0.into_inner()
+    }
+}
+
+/// A relaxed global counter for workload metrics (updates, wedges, ...).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+    #[inline]
+    pub fn add(&self, x: u64) {
+        self.0.fetch_add(x, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let hits: Vec<AtomicU64> = (0..10_000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(hits.len(), 4, |_, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_single_thread() {
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(hits.len(), 1, |_, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_reduce_sums() {
+        let n = 100_000usize;
+        let s = parallel_reduce(n, 4, 0u64, |acc, i| acc + i as u64, |a, b| a + b);
+        assert_eq!(s, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn chunked_is_disjoint_and_complete() {
+        let n = 5_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_chunked(n, 3, 17, |_, lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn spmd_runs_each_thread() {
+        let hits: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        spmd(4, |t| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        parallel_for(1000, 4, |_, _| c.add(2));
+        assert_eq!(c.get(), 2000);
+    }
+}

@@ -1,0 +1,245 @@
+//! PJRT runtime: load AOT-compiled XLA artifacts and execute them from
+//! the rust hot path.
+//!
+//! `python/compile/aot.py` lowers the L2 `butterfly_block` model (which
+//! calls the L1 Pallas kernels) to **HLO text** in `artifacts/`; this
+//! module parses the text (`HloModuleProto::from_text_file` — the text
+//! parser reassigns instruction ids, avoiding the 64-bit-id proto
+//! incompatibility), compiles once per block size on the PJRT CPU
+//! client, and exposes a typed `butterfly_block` entry point. Python is
+//! never on the request path.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Counts returned by one dense-block execution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockCounts {
+    /// Per-row (U) butterfly counts.
+    pub per_u: Vec<u64>,
+    /// Per-column (V) butterfly counts.
+    pub per_v: Vec<u64>,
+    /// Per-edge supports, row-major `[m × n]`; 0 on non-edges.
+    pub per_edge: Vec<u64>,
+    pub total: u64,
+}
+
+/// A compiled-artifact cache over the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    execs: Mutex<HashMap<usize, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a runtime rooted at an artifacts directory.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            execs: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts directory: `$PBNG_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PBNG_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Block sizes with a compiled artifact available on disk.
+    pub fn available_sizes(&self) -> Vec<usize> {
+        let mut sizes = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for entry in rd.flatten() {
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if let Some(rest) = name
+                    .strip_prefix("butterfly_block_")
+                    .and_then(|r| r.strip_suffix(".hlo.txt"))
+                {
+                    if let Ok(n) = rest.parse::<usize>() {
+                        sizes.push(n);
+                    }
+                }
+            }
+        }
+        sizes.sort_unstable();
+        sizes
+    }
+
+    /// Smallest available block size that fits `need` rows/cols.
+    pub fn pick_size(&self, need: usize) -> Option<usize> {
+        self.available_sizes().into_iter().find(|&n| n >= need)
+    }
+
+    fn executable(&self, n: usize) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let mut cache = self.execs.lock().unwrap();
+        if let Some(e) = cache.get(&n) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("butterfly_block_{n}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {}", path.display()))?;
+        let exe = std::sync::Arc::new(exe);
+        cache.insert(n, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute the butterfly_block artifact of size `n` on a row-major
+    /// dense biadjacency block (`block.len() == n*n`, entries 0.0/1.0).
+    pub fn butterfly_block(&self, block: &[f32], n: usize) -> Result<BlockCounts> {
+        anyhow::ensure!(block.len() == n * n, "block must be n*n");
+        let exe = self.executable(n)?;
+        let a = xla::Literal::vec1(block).reshape(&[n as i64, n as i64])?;
+        let result = exe.execute::<xla::Literal>(&[a])?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let (bu, bv, s, total) = result.to_tuple4().context("unpacking 4-tuple")?;
+        let to_u64 = |l: &xla::Literal| -> Result<Vec<u64>> {
+            Ok(l.to_vec::<f32>()?.into_iter().map(|x| x as u64).collect())
+        };
+        Ok(BlockCounts {
+            per_u: to_u64(&bu)?,
+            per_v: to_u64(&bv)?,
+            per_edge: to_u64(&s)?,
+            total: total.to_vec::<f32>()?[0] as u64,
+        })
+    }
+}
+
+/// Pure-rust fallback mirroring the artifact's math — used when no
+/// artifact covers the block size, and as a cross-check in tests.
+pub fn butterfly_block_cpu(block: &[f32], m: usize, n: usize) -> BlockCounts {
+    assert_eq!(block.len(), m * n);
+    let a = |i: usize, j: usize| block[i * n + j] as u64;
+    // Wu = A Aᵀ
+    let mut wu = vec![0u64; m * m];
+    for i in 0..m {
+        for j in 0..m {
+            let mut s = 0;
+            for p in 0..n {
+                s += a(i, p) * a(j, p);
+            }
+            wu[i * m + j] = s;
+        }
+    }
+    let mut wv = vec![0u64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0;
+            for p in 0..m {
+                s += a(p, i) * a(p, j);
+            }
+            wv[i * n + j] = s;
+        }
+    }
+    let c2 = |w: u64| w * w.saturating_sub(1) / 2;
+    let per_u: Vec<u64> = (0..m)
+        .map(|i| (0..m).filter(|&j| j != i).map(|j| c2(wu[i * m + j])).sum())
+        .collect();
+    let per_v: Vec<u64> = (0..n)
+        .map(|i| (0..n).filter(|&j| j != i).map(|j| c2(wv[i * n + j])).sum())
+        .collect();
+    let du: Vec<u64> = (0..m).map(|i| (0..n).map(|p| a(i, p)).sum()).collect();
+    let dv: Vec<u64> = (0..n).map(|j| (0..m).map(|p| a(p, j)).sum()).collect();
+    let mut per_edge = vec![0u64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            if a(i, j) == 1 {
+                let wa: u64 = (0..m).map(|t| wu[i * m + t] * a(t, j)).sum();
+                per_edge[i * n + j] = wa - du[i] - dv[j] + 1;
+            }
+        }
+    }
+    let total = per_u.iter().sum::<u64>() / 2;
+    BlockCounts {
+        per_u,
+        per_v,
+        per_edge,
+        total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_fallback_biclique_closed_form() {
+        // K_{3,3}: total 9, per-edge 4, per-vertex 6
+        let block = vec![1f32; 9];
+        let c = butterfly_block_cpu(&block, 3, 3);
+        assert_eq!(c.total, 9);
+        assert!(c.per_edge.iter().all(|&x| x == 4));
+        assert!(c.per_u.iter().all(|&x| x == 6));
+        assert!(c.per_v.iter().all(|&x| x == 6));
+    }
+
+    #[test]
+    fn cpu_fallback_matches_graph_counting() {
+        crate::testkit::check_property("dense-cpu-vs-count", 0xD3, 8, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let m = 3 + rng.usize_below(8);
+            let n = 3 + rng.usize_below(8);
+            let mut block = vec![0f32; m * n];
+            let mut edges = Vec::new();
+            for i in 0..m {
+                for j in 0..n {
+                    if rng.chance(0.5) {
+                        block[i * n + j] = 1.0;
+                        edges.push((i as u32, j as u32));
+                    }
+                }
+            }
+            let g = crate::graph::GraphBuilder::new()
+                .nu(m)
+                .nv(n)
+                .edges(&edges)
+                .build();
+            let (counts, _) = crate::count::pve_bcnt(
+                &g,
+                crate::count::CountOptions {
+                    per_edge: true,
+                    build_blooms: false,
+                    threads: 1,
+                },
+                None,
+            );
+            let dense = butterfly_block_cpu(&block, m, n);
+            if dense.total != counts.total || dense.per_u != counts.per_u || dense.per_v != counts.per_v {
+                return Err("dense vs sparse counting mismatch".into());
+            }
+            // per-edge: map edge ids to matrix slots
+            for e in 0..g.m() as u32 {
+                let (u, v) = g.edge(e);
+                if dense.per_edge[u as usize * n + v as usize] != counts.per_edge[e as usize] {
+                    return Err(format!("edge ({u},{v}) support mismatch"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_block_has_zero_counts() {
+        let c = butterfly_block_cpu(&vec![0f32; 16], 4, 4);
+        assert_eq!(c.total, 0);
+        assert!(c.per_edge.iter().all(|&x| x == 0));
+    }
+}

@@ -1,0 +1,193 @@
+//! Deterministic RNG + randomized-property harness.
+//!
+//! The offline registry has neither `rand` nor `proptest`, so this module
+//! supplies (a) a splitmix64 PRNG (Steele et al., public domain algorithm)
+//! and (b) a tiny property-test runner that sweeps seeds and reports the
+//! failing seed so any counterexample is reproducible with
+//! `Rng::new(seed)`.
+
+/// SplitMix64: tiny, fast, statistically solid for test-data generation.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng {
+            state: seed.wrapping_add(0x9E3779B97F4A7C15),
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`. `n` must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's multiply-shift rejection-free approximation is fine for
+        // tests, but keep it exact with rejection sampling.
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform float in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Inclusive range.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Zipf-ish rank sampling: returns rank in [0, n) with P(r) ∝ (r+1)^-s
+    /// via inverse-CDF over a precomputed table — callers should prefer
+    /// `ZipfSampler` for repeated draws.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Precomputed Zipf(α) sampler over ranks [0, n).
+pub struct ZipfSampler {
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    pub fn new(n: usize, alpha: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for r in 0..n {
+            acc += 1.0 / ((r + 1) as f64).powf(alpha);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        ZipfSampler { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let x = rng.f64();
+        // binary search for first cdf >= x
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&x).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+/// Run `prop(seed)` for `cases` seeds derived from `base_seed`; panic with
+/// the reproducing seed on the first failure (returned as Err(msg)).
+pub fn check_property<F>(name: &str, base_seed: u64, cases: u64, prop: F)
+where
+    F: Fn(u64) -> Result<(), String>,
+{
+    let mut meta = Rng::new(base_seed);
+    for case in 0..cases {
+        let seed = meta.next_u64();
+        if let Err(msg) = prop(seed) {
+            panic!(
+                "property '{name}' failed on case {case} (reproduce with seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let z = ZipfSampler::new(1000, 1.5);
+        let mut r = Rng::new(11);
+        let mut head = 0;
+        let n = 20_000;
+        for _ in 0..n {
+            if z.sample(&mut r) < 10 {
+                head += 1;
+            }
+        }
+        // top-10 ranks should absorb a large fraction of mass at alpha=1.5
+        assert!(head > n / 4, "zipf head mass too small: {head}/{n}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut xs: Vec<u32> = (0..100).collect();
+        let mut r = Rng::new(5);
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn check_property_passes() {
+        check_property("trivial", 1, 16, |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_property_reports_seed() {
+        check_property("always-fails", 1, 4, |_| Err("boom".into()));
+    }
+}

@@ -1,0 +1,264 @@
+//! PBNG Coarse-grained Decomposition for tip decomposition (§3.2).
+//!
+//! Partitions the peel side's vertex set into `P` ranges of tip numbers.
+//! Range determination uses each vertex's wedge count Σ_{v∈N_u} d_v as
+//! the workload proxy. Iterations peel every vertex with support in the
+//! current range; when the estimated peel traversal Λ(activeSet) exceeds
+//! the counting bound Λ_cnt, the batch optimization (§5.1) re-counts all
+//! remaining supports from scratch instead.
+
+use super::peel::{peel_batch_tip, peel_workload, recount, VAdj, ALIVE};
+use crate::graph::BipartiteGraph;
+use crate::metrics::Meters;
+use crate::par::SupportCell;
+use crate::wing::range::{find_range, AdaptiveTarget};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+#[derive(Clone, Copy, Debug)]
+pub struct TipCdConfig {
+    pub p: usize,
+    pub threads: usize,
+    /// §5.1 re-counting batch optimization; off = PBNG−−.
+    pub batch: bool,
+    /// §5.2 dynamic adjacency deletes; off = PBNG−.
+    pub dynamic_deletes: bool,
+}
+
+impl Default for TipCdConfig {
+    fn default() -> Self {
+        TipCdConfig {
+            p: 32,
+            threads: crate::par::default_threads(),
+            batch: true,
+            dynamic_deletes: true,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct TipCdOutput {
+    /// Partition per U vertex.
+    pub part_of: Vec<u32>,
+    /// ⋈init per U vertex.
+    pub sup_init: Vec<u64>,
+    /// θ(i) lower bound per partition.
+    pub lowers: Vec<u64>,
+    pub n_parts: usize,
+}
+
+/// Coarse decomposition of side U of `g` (callers transpose for side V).
+pub fn coarse_decompose_tip(
+    g: &BipartiteGraph,
+    per_u: &[u64],
+    cfg: TipCdConfig,
+    meters: &Meters,
+) -> TipCdOutput {
+    let nu = g.nu();
+    let sup: Vec<SupportCell> = per_u.iter().map(|&s| SupportCell::new(s)).collect();
+    let epoch: Vec<AtomicU32> = (0..nu).map(|_| AtomicU32::new(ALIVE)).collect();
+    let mut vadj = VAdj::from_graph(g);
+    // static workload proxy: wedge count of u in G
+    let wedge_proxy: Vec<u64> = (0..nu as u32)
+        .map(|u| {
+            g.nbrs_u(u)
+                .iter()
+                .map(|&(v, _)| g.deg_v(v) as u64)
+                .sum()
+        })
+        .collect();
+    let lambda_cnt = g.count_workload_bound();
+
+    let mut part_of = vec![u32::MAX; nu];
+    let mut sup_init = vec![0u64; nu];
+    let mut lowers = Vec::new();
+    let mut remaining = nu;
+    let mut cur_epoch = 0u32;
+    let mut lower = 0u64;
+    let mut adaptive = AdaptiveTarget::new(cfg.p);
+    let mut i = 0usize;
+
+    while remaining > 0 {
+        let mut remaining_work = 0u64;
+        for u in 0..nu {
+            if epoch[u].load(Ordering::Relaxed) == ALIVE {
+                sup_init[u] = sup[u].get();
+                remaining_work += wedge_proxy[u];
+            }
+        }
+        let is_last = i + 1 >= cfg.p;
+        let (upper, initial_estimate) = if is_last {
+            (u64::MAX, remaining_work)
+        } else {
+            let tgt = adaptive.target(remaining_work);
+            let r = find_range(
+                (0..nu as u32)
+                    .filter(|&u| epoch[u as usize].load(Ordering::Relaxed) == ALIVE)
+                    .map(|u| (sup[u as usize].get(), wedge_proxy[u as usize].max(1))),
+                tgt.max(1),
+            );
+            (r.upper.max(lower + 1), r.initial_estimate)
+        };
+        lowers.push(lower);
+
+        let mut active: Vec<u32> = (0..nu as u32)
+            .filter(|&u| {
+                epoch[u as usize].load(Ordering::Relaxed) == ALIVE
+                    && sup[u as usize].get() < upper
+            })
+            .collect();
+        let mut partition_work = 0u64;
+
+        while !active.is_empty() {
+            meters.rho.add(1);
+            cur_epoch += 1;
+            for &u in &active {
+                part_of[u as usize] = i as u32;
+                partition_work += wedge_proxy[u as usize];
+                epoch[u as usize].store(cur_epoch, Ordering::Relaxed);
+            }
+            remaining -= active.len();
+            // §5.1: re-count instead of peeling when cheaper
+            let use_recount =
+                cfg.batch && peel_workload(g, &vadj, &active) > lambda_cnt && remaining > 0;
+            if use_recount {
+                vadj = recount(g, &epoch, &sup, cfg.threads, meters);
+                active = (0..nu as u32)
+                    .filter(|&u| {
+                        epoch[u as usize].load(Ordering::Relaxed) == ALIVE
+                            && sup[u as usize].get() < upper
+                    })
+                    .collect();
+            } else {
+                let mut touched = peel_batch_tip(
+                    g,
+                    &mut vadj,
+                    &active,
+                    lower,
+                    &epoch,
+                    &sup,
+                    cfg.threads,
+                    cfg.dynamic_deletes,
+                    meters,
+                );
+                touched.sort_unstable();
+                touched.dedup();
+                touched.retain(|&u| {
+                    epoch[u as usize].load(Ordering::Relaxed) == ALIVE
+                        && sup[u as usize].get() < upper
+                });
+                active = touched;
+            }
+        }
+        adaptive.record(initial_estimate, partition_work.max(1));
+        lower = upper;
+        i += 1;
+        if is_last {
+            break;
+        }
+    }
+    TipCdOutput {
+        part_of,
+        sup_init,
+        lowers,
+        n_parts: i,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::count::brute;
+    use crate::graph::gen;
+
+    fn counts_u(g: &BipartiteGraph) -> Vec<u64> {
+        crate::count::pve_bcnt(
+            g,
+            crate::count::CountOptions {
+                per_edge: false,
+                build_blooms: false,
+                threads: 1,
+            },
+            None,
+        )
+        .0
+        .per_u
+    }
+
+    #[test]
+    fn partitions_bracket_tip_numbers() {
+        crate::testkit::check_property("tipcd-brackets", 0x71CD, 8, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(
+                5 + rng.usize_below(10),
+                5 + rng.usize_below(10),
+                15 + rng.usize_below(50),
+                seed,
+            );
+            let theta = brute::brute_tip_numbers(&g, crate::graph::Side::U);
+            let per_u = counts_u(&g);
+            let meters = Meters::new();
+            let p = 1 + rng.usize_below(4);
+            let out = coarse_decompose_tip(
+                &g,
+                &per_u,
+                TipCdConfig { p, threads: 2, batch: true, dynamic_deletes: true },
+                &meters,
+            );
+            for u in 0..g.nu() {
+                let i = out.part_of[u] as usize;
+                let lo = out.lowers[i];
+                let hi = out.lowers.get(i + 1).copied().unwrap_or(u64::MAX);
+                if theta[u] < lo || theta[u] >= hi {
+                    return Err(format!(
+                        "u{u}: θ={} outside partition {i} [{lo},{hi})",
+                        theta[u]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sup_init_counts_higher_universe() {
+        let g = gen::zipf(25, 25, 150, 1.2, 1.2, 3);
+        let per_u = counts_u(&g);
+        let meters = Meters::new();
+        let out = coarse_decompose_tip(
+            &g,
+            &per_u,
+            TipCdConfig { p: 3, threads: 1, batch: false, dynamic_deletes: true },
+            &meters,
+        );
+        for i in 0..out.n_parts as u32 {
+            let alive: Vec<bool> = (0..g.nu()).map(|u| out.part_of[u] >= i).collect();
+            let oracle = brute::vertex_support_restricted(&g, &alive);
+            for u in 0..g.nu() {
+                if out.part_of[u] == i {
+                    assert_eq!(out.sup_init[u], oracle[u], "u{u} part {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recount_and_peel_paths_agree() {
+        let g = gen::zipf(40, 20, 300, 1.3, 1.1, 5);
+        let per_u = counts_u(&g);
+        let meters = Meters::new();
+        let a = coarse_decompose_tip(
+            &g,
+            &per_u,
+            TipCdConfig { p: 4, threads: 2, batch: true, dynamic_deletes: true },
+            &meters,
+        );
+        let b = coarse_decompose_tip(
+            &g,
+            &per_u,
+            TipCdConfig { p: 4, threads: 1, batch: false, dynamic_deletes: false },
+            &meters,
+        );
+        assert_eq!(a.part_of, b.part_of);
+        assert_eq!(a.sup_init, b.sup_init);
+    }
+}

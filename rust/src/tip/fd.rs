@@ -1,0 +1,244 @@
+//! PBNG Fine-grained Decomposition for tip decomposition (§3.2).
+//!
+//! Each partition `U_i` is peeled on its *induced subgraph*
+//! `G_i = G[(U_i, V)]` — a butterfly has exactly two U-vertices, so `G_i`
+//! preserves precisely the butterflies with both U-endpoints in `U_i`;
+//! everything else is already baked into ⋈init. Partitions are pulled
+//! from an LPT-ordered dynamic task queue and peeled sequentially with a
+//! range-clamped bucket queue; no global synchronization.
+
+use crate::graph::induced::{build_partitions, InducedSubgraph};
+use crate::metrics::Meters;
+use crate::par::{spmd, RacyCell};
+use crate::peel::BucketQueue;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+#[derive(Clone, Copy, Debug)]
+pub struct TipFdConfig {
+    pub threads: usize,
+    /// §5.2 dynamic adjacency deletes in the induced subgraphs.
+    pub dynamic_deletes: bool,
+}
+
+/// Peel all partitions; returns θ per U vertex.
+pub fn fine_decompose_tip(
+    g: &crate::graph::BipartiteGraph,
+    part_of: &[u32],
+    sup_init: &[u64],
+    lowers: &[u64],
+    n_parts: usize,
+    cfg: TipFdConfig,
+    meters: &Meters,
+) -> Vec<u64> {
+    let subs = build_partitions(g, part_of, n_parts);
+    // LPT: workload = wedges with both endpoints in the partition (§3.2)
+    let mut order: Vec<usize> = (0..n_parts).collect();
+    let work: Vec<u64> = subs.iter().map(|s| s.wedge_workload()).collect();
+    order.sort_unstable_by(|&a, &b| work[b].cmp(&work[a]));
+
+    let theta_cell = RacyCell::new(vec![0u64; g.nu()]);
+    let next = AtomicUsize::new(0);
+    let subs_ref = &subs;
+    spmd(cfg.threads.max(1), |_| loop {
+        let t = next.fetch_add(1, Ordering::Relaxed);
+        if t >= n_parts {
+            break;
+        }
+        let i = order[t];
+        // SAFETY: partitions own disjoint U vertices.
+        let theta = unsafe { theta_cell.get_mut() };
+        let lo = lowers.get(i).copied().unwrap_or(0);
+        let hi = lowers.get(i + 1).copied().unwrap_or(u64::MAX);
+        peel_induced(&subs_ref[i], sup_init, (lo, hi), theta, cfg.dynamic_deletes, meters);
+    });
+    theta_cell.into_inner()
+}
+
+/// Sequential bottom-up tip peel of one induced subgraph.
+fn peel_induced(
+    s: &InducedSubgraph,
+    sup_init: &[u64],
+    (range_lo, range_hi): (u64, u64),
+    theta: &mut [u64],
+    dynamic_deletes: bool,
+    meters: &Meters,
+) {
+    let n = s.n_users();
+    if n == 0 {
+        return;
+    }
+    let mut sup: Vec<u64> = s.users.iter().map(|&u| sup_init[u as usize]).collect();
+    let mut peeled = vec![false; n];
+    // local mutable v-side adjacency (lists of local u ids)
+    let mut adj_v: Vec<u32> = s.adj_v.clone();
+    let mut len_v: Vec<u32> = (0..s.n_items())
+        .map(|v| (s.offs_v[v + 1] - s.offs_v[v]) as u32)
+        .collect();
+    let hi = if range_hi == u64::MAX {
+        sup.iter().copied().max().unwrap_or(range_lo) + 1
+    } else {
+        range_hi
+    };
+    let mut heap = BucketQueue::new(range_lo, hi);
+    for (lu, &su) in sup.iter().enumerate() {
+        heap.push(su, lu as u32);
+    }
+    let mut cnt = vec![0u32; n];
+    let mut touched: Vec<u32> = Vec::new();
+    let mut level = 0u64;
+    let mut remaining = n;
+    let mut wedges = 0u64;
+    let mut updates = 0u64;
+    while remaining > 0 {
+        let (su, lu) = heap
+            .pop_live(|i| (!peeled[i as usize]).then(|| sup[i as usize]))
+            .expect("induced heap exhausted early");
+        let lu = lu as usize;
+        level = level.max(su);
+        theta[s.users[lu] as usize] = level;
+        peeled[lu] = true;
+        remaining -= 1;
+        // wedge traversal within the induced subgraph
+        for &lv in s.nbrs_u(lu) {
+            let base = s.offs_v[lv as usize];
+            let llen = len_v[lv as usize] as usize;
+            let mut w = 0usize;
+            for r in 0..llen {
+                let u2 = adj_v[base + r];
+                wedges += 1;
+                if peeled[u2 as usize] {
+                    if !dynamic_deletes {
+                        adj_v[base + w] = adj_v[base + r];
+                        w += 1;
+                    }
+                    continue;
+                }
+                if cnt[u2 as usize] == 0 {
+                    touched.push(u2);
+                }
+                cnt[u2 as usize] += 1;
+                adj_v[base + w] = adj_v[base + r];
+                w += 1;
+            }
+            if dynamic_deletes {
+                len_v[lv as usize] = w as u32;
+            }
+        }
+        for &u2 in &touched {
+            let c = cnt[u2 as usize] as u64;
+            cnt[u2 as usize] = 0;
+            if c >= 2 {
+                let ns = sup[u2 as usize].saturating_sub(c * (c - 1) / 2).max(level);
+                if ns != sup[u2 as usize] {
+                    sup[u2 as usize] = ns;
+                    heap.push(ns, u2);
+                }
+                updates += 1;
+            }
+        }
+        touched.clear();
+    }
+    meters.wedges.add(wedges);
+    meters.updates.add(updates);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::count::brute;
+    use crate::graph::gen;
+    use crate::graph::Side;
+    use crate::tip::cd::{coarse_decompose_tip, TipCdConfig};
+
+    fn pbng_tip_theta(g: &crate::graph::BipartiteGraph, p: usize, threads: usize) -> Vec<u64> {
+        let per_u = crate::count::pve_bcnt(
+            g,
+            crate::count::CountOptions {
+                per_edge: false,
+                build_blooms: false,
+                threads,
+            },
+            None,
+        )
+        .0
+        .per_u;
+        let meters = Meters::new();
+        let cd = coarse_decompose_tip(
+            g,
+            &per_u,
+            TipCdConfig { p, threads, batch: true, dynamic_deletes: true },
+            &meters,
+        );
+        fine_decompose_tip(
+            g,
+            &cd.part_of,
+            &cd.sup_init,
+            &cd.lowers,
+            cd.n_parts,
+            TipFdConfig { threads, dynamic_deletes: true },
+            &meters,
+        )
+    }
+
+    #[test]
+    fn matches_brute_on_biclique() {
+        let g = gen::biclique(4, 3);
+        assert_eq!(pbng_tip_theta(&g, 2, 2), brute::brute_tip_numbers(&g, Side::U));
+    }
+
+    #[test]
+    fn matches_brute_on_random_graphs() {
+        crate::testkit::check_property("tip-fd-vs-brute", 0x71FD, 8, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(
+                5 + rng.usize_below(10),
+                5 + rng.usize_below(10),
+                15 + rng.usize_below(50),
+                seed,
+            );
+            let p = 1 + rng.usize_below(4);
+            let threads = 1 + rng.usize_below(3);
+            let got = pbng_tip_theta(&g, p, threads);
+            let want = brute::brute_tip_numbers(&g, Side::U);
+            if got != want {
+                return Err(format!("P={p} T={threads}: got={got:?} want={want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matches_brute_on_fig1() {
+        let g = gen::paper_fig1();
+        assert_eq!(pbng_tip_theta(&g, 3, 2), brute::brute_tip_numbers(&g, Side::U));
+    }
+
+    #[test]
+    fn deletes_off_same_output() {
+        let g = gen::zipf(30, 30, 200, 1.2, 1.2, 9);
+        let per_u = crate::count::pve_bcnt(
+            &g,
+            crate::count::CountOptions { per_edge: false, build_blooms: false, threads: 1 },
+            None,
+        )
+        .0
+        .per_u;
+        let meters = Meters::new();
+        let cd = coarse_decompose_tip(
+            &g,
+            &per_u,
+            TipCdConfig { p: 4, threads: 1, batch: true, dynamic_deletes: false },
+            &meters,
+        );
+        let theta = fine_decompose_tip(
+            &g,
+            &cd.part_of,
+            &cd.sup_init,
+            &cd.lowers,
+            cd.n_parts,
+            TipFdConfig { threads: 1, dynamic_deletes: false },
+            &meters,
+        );
+        assert_eq!(theta, brute::brute_tip_numbers(&g, Side::U));
+    }
+}

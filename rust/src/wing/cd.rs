@@ -1,0 +1,289 @@
+//! PBNG Coarse-grained Decomposition for wing decomposition (Alg. 4).
+//!
+//! Divides `E(G)` into `P` partitions by iteratively peeling, in
+//! parallel, *every* edge whose support falls in the current range
+//! `[θ(i), θ(i+1))`. Each parallel iteration peels a large set (little
+//! synchronization — the ρ reduction that is the paper's core claim) and
+//! uses the Alg. 6 batch engine with twin conflict resolution.
+//!
+//! Outputs per-edge partition assignments, the support-initialization
+//! vector ⋈init (supports snapshotted when each partition starts — i.e.
+//! the cumulative effect of peeling all lower partitions), and the range
+//! bounds.
+
+use super::range::{find_range, AdaptiveTarget};
+use super::state::{peel_set_batch, peel_set_single, WingState};
+use crate::beindex::BeIndex;
+use crate::metrics::Meters;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CdConfig {
+    /// Number of partitions P.
+    pub p: usize,
+    pub threads: usize,
+    /// Batch optimization (§5.1); off = PBNG−− ablation.
+    pub batch: bool,
+    /// Dynamic BE-Index updates (§5.2); off = PBNG− ablation.
+    pub dynamic_deletes: bool,
+}
+
+impl Default for CdConfig {
+    fn default() -> Self {
+        CdConfig {
+            p: 64,
+            threads: crate::par::default_threads(),
+            batch: true,
+            dynamic_deletes: true,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct CdOutput {
+    /// Partition index per edge.
+    pub part_of: Vec<u32>,
+    /// ⋈init per edge: support after all lower partitions were peeled.
+    pub sup_init: Vec<u64>,
+    /// Lower bound θ(i) per partition (`lowers[i] ≤ θ_e < lowers[i+1]`
+    /// for e ∈ E_i; the last upper bound is implicit/unbounded).
+    pub lowers: Vec<u64>,
+    /// Number of partitions actually created.
+    pub n_parts: usize,
+}
+
+pub fn coarse_decompose(
+    idx: &BeIndex,
+    per_edge: &[u64],
+    cfg: CdConfig,
+    meters: &Meters,
+) -> CdOutput {
+    let m = per_edge.len();
+    let st = WingState::new(idx, per_edge, cfg.dynamic_deletes);
+    let mut part_of = vec![u32::MAX; m];
+    let mut sup_init = vec![0u64; m];
+    let mut lowers = Vec::new();
+    let mut remaining = m;
+    let mut epoch = 0u32;
+    let mut lower = 0u64;
+    let mut adaptive = AdaptiveTarget::new(cfg.p);
+    let mut i = 0usize;
+
+    while remaining > 0 {
+        // Snapshot ⋈init for alive edges (Alg. 4 lines 6–7).
+        // (Also used for FD workload estimation.)
+        let mut remaining_work = 0u64;
+        for e in 0..m {
+            if st.is_alive(e as u32) {
+                let s = st.sup[e].get();
+                sup_init[e] = s;
+                remaining_work += s;
+            }
+        }
+        // Range upper bound.
+        let is_last = i + 1 >= cfg.p;
+        let (upper, initial_estimate) = if is_last {
+            (u64::MAX, remaining_work)
+        } else {
+            let tgt = adaptive.target(remaining_work);
+            let r = find_range(
+                (0..m as u32)
+                    .filter(|&e| st.is_alive(e))
+                    .map(|e| {
+                        let s = st.sup[e as usize].get();
+                        (s, s.max(1))
+                    }),
+                tgt.max(1),
+            );
+            (r.upper.max(lower + 1), r.initial_estimate)
+        };
+        lowers.push(lower);
+
+        // Initial active set: all alive edges with support < upper.
+        let mut active: Vec<u32> = (0..m as u32)
+            .filter(|&e| st.is_alive(e) && st.sup[e as usize].get() < upper)
+            .collect();
+        let mut partition_work = 0u64;
+
+        while !active.is_empty() {
+            meters.rho.add(1);
+            epoch += 1;
+            for &e in &active {
+                part_of[e as usize] = i as u32;
+                partition_work += sup_init[e as usize];
+            }
+            remaining -= active.len();
+            let touched = if cfg.batch {
+                st.mark_peeled(&active, epoch, cfg.threads);
+                peel_set_batch(&st, &active, lower, epoch, cfg.threads, meters)
+            } else {
+                peel_set_single(&st, &active, lower, epoch, meters)
+            };
+            // next frontier: live edges that dropped under the bound
+            let mut next = touched;
+            next.sort_unstable();
+            next.dedup();
+            next.retain(|&e| st.is_alive(e) && st.sup[e as usize].get() < upper);
+            active = next;
+        }
+
+        adaptive.record(initial_estimate, partition_work.max(1));
+        lower = upper;
+        i += 1;
+        if is_last {
+            break;
+        }
+    }
+    debug_assert_eq!(remaining, 0, "all edges must be assigned");
+    CdOutput {
+        part_of,
+        sup_init,
+        lowers,
+        n_parts: i,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::peel::bup::wing_bup;
+
+    fn run_cd(g: &crate::graph::BipartiteGraph, p: usize) -> (CdOutput, Vec<u64>) {
+        let (idx, per_edge) = BeIndex::build(g, 1);
+        let meters = Meters::new();
+        let out = coarse_decompose(
+            &idx,
+            &per_edge,
+            CdConfig {
+                p,
+                threads: 2,
+                batch: true,
+                dynamic_deletes: true,
+            },
+            &meters,
+        );
+        (out, per_edge)
+    }
+
+    /// Theorem 1: partitions bracket the true wing numbers.
+    #[test]
+    fn partitions_bracket_wing_numbers() {
+        crate::testkit::check_property("cd-brackets-theta", 0xCD1, 8, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(
+                6 + rng.usize_below(12),
+                6 + rng.usize_below(12),
+                20 + rng.usize_below(60),
+                seed,
+            );
+            if g.m() == 0 {
+                return Ok(());
+            }
+            let theta = wing_bup(&g).theta;
+            let p = 1 + rng.usize_below(5);
+            let (out, _) = run_cd(&g, p);
+            for e in 0..g.m() {
+                let i = out.part_of[e] as usize;
+                let lo = out.lowers[i];
+                let hi = out
+                    .lowers
+                    .get(i + 1)
+                    .copied()
+                    .unwrap_or(u64::MAX);
+                if theta[e] < lo || theta[e] >= hi {
+                    return Err(format!(
+                        "edge {e}: θ={} outside partition {i} range [{lo},{hi})",
+                        theta[e]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// ⋈init must equal the butterfly count of e restricted to its own and
+    /// higher partitions (§3.1.1).
+    #[test]
+    fn sup_init_counts_higher_universe() {
+        crate::testkit::check_property("cd-supinit", 0xCD2, 6, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(
+                6 + rng.usize_below(10),
+                6 + rng.usize_below(10),
+                20 + rng.usize_below(50),
+                seed,
+            );
+            if g.m() == 0 {
+                return Ok(());
+            }
+            let (out, _) = run_cd(&g, 3);
+            for i in 0..out.n_parts as u32 {
+                // alive = edges in partitions >= i
+                let alive: Vec<bool> = (0..g.m())
+                    .map(|e| out.part_of[e] >= i)
+                    .collect();
+                let oracle = crate::count::brute::edge_support_restricted(&g, &alive);
+                for e in 0..g.m() {
+                    if out.part_of[e] == i && out.sup_init[e] != oracle[e] {
+                        return Err(format!(
+                            "edge {e} (part {i}): sup_init={} oracle={}",
+                            out.sup_init[e], oracle[e]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_partition_assigns_everything_to_zero() {
+        let g = gen::biclique(3, 3);
+        let (out, _) = run_cd(&g, 1);
+        assert!(out.part_of.iter().all(|&p| p == 0));
+        assert_eq!(out.n_parts, 1);
+    }
+
+    #[test]
+    fn respects_partition_budget() {
+        let g = gen::zipf(60, 60, 400, 1.2, 1.2, 5);
+        let (out, _) = run_cd(&g, 8);
+        assert!(out.n_parts <= 8);
+        assert!(out.part_of.iter().all(|&p| (p as usize) < out.n_parts));
+    }
+
+    #[test]
+    fn batch_and_single_produce_same_partitions() {
+        let g = gen::zipf(40, 40, 250, 1.2, 1.2, 9);
+        let (idx, per_edge) = BeIndex::build(&g, 1);
+        let meters = Meters::new();
+        let a = coarse_decompose(
+            &idx,
+            &per_edge,
+            CdConfig { p: 4, threads: 2, batch: true, dynamic_deletes: true },
+            &meters,
+        );
+        let b = coarse_decompose(
+            &idx,
+            &per_edge,
+            CdConfig { p: 4, threads: 1, batch: false, dynamic_deletes: false },
+            &meters,
+        );
+        assert_eq!(a.part_of, b.part_of);
+        assert_eq!(a.sup_init, b.sup_init);
+    }
+
+    #[test]
+    fn rho_is_much_less_than_m_with_wide_ranges() {
+        let g = gen::zipf(80, 80, 600, 1.2, 1.2, 11);
+        let (idx, per_edge) = BeIndex::build(&g, 1);
+        let meters = Meters::new();
+        coarse_decompose(&idx, &per_edge, CdConfig { p: 4, ..Default::default() }, &meters);
+        assert!(
+            meters.rho.get() < g.m() as u64 / 4,
+            "rho {} not << m {}",
+            meters.rho.get(),
+            g.m()
+        );
+    }
+}

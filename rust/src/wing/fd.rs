@@ -1,0 +1,291 @@
+//! PBNG Fine-grained Decomposition for wing decomposition (Alg. 5).
+//!
+//! Each partition `E_i`, together with its partitioned BE-Index `I_i`
+//! (bloom numbers adjusted to the `≥ i` universe), is peeled by
+//! sequential bottom-up peeling *independently* of all other partitions —
+//! supports are initialized from ⋈init, so no cross-partition updates are
+//! needed and **no global synchronization** happens: partitions are
+//! dynamically pulled off a workload-sorted task queue (LPT, §3.1.4).
+
+use crate::beindex::partition::{PartIndex, Partitioned};
+use crate::metrics::Meters;
+use crate::par::{spmd, RacyCell};
+use crate::peel::BucketQueue;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+#[derive(Clone, Copy, Debug)]
+pub struct FdConfig {
+    pub threads: usize,
+    /// Dynamic link deletion (§5.2); off = PBNG− ablation.
+    pub dynamic_deletes: bool,
+}
+
+/// Peel all partitions; returns θ per (global) edge.
+pub fn fine_decompose(
+    pt: &mut Partitioned,
+    part_of: &[u32],
+    sup_init: &[u64],
+    lowers: &[u64],
+    cfg: FdConfig,
+    meters: &Meters,
+) -> Vec<u64> {
+    let m = part_of.len();
+    let p = pt.parts.len();
+
+    // LPT order: workload indicator = Σ ⋈init over the partition's edges
+    // (Alg. 5 line 4).
+    let mut order: Vec<usize> = (0..p).collect();
+    let work: Vec<u64> = (0..p)
+        .map(|i| pt.edges_of[i].iter().map(|&e| sup_init[e as usize]).sum())
+        .collect();
+    order.sort_unstable_by(|&a, &b| work[b].cmp(&work[a]));
+
+    // Wrap each partition for exclusive hand-off to one worker.
+    let parts: Vec<Mutex<&mut PartIndex>> = pt.parts.iter_mut().map(Mutex::new).collect();
+    let theta_cell = RacyCell::new(vec![0u64; m]);
+    let next_task = AtomicUsize::new(0);
+
+    spmd(cfg.threads.max(1), |_| loop {
+        let t = next_task.fetch_add(1, Ordering::Relaxed);
+        if t >= p {
+            break;
+        }
+        let i = order[t];
+        let mut part = parts[i].lock().unwrap();
+        // SAFETY: partitions are disjoint edge sets; each θ slot is
+        // written only by this partition's owner.
+        let theta = unsafe { theta_cell.get_mut() };
+        let lo = lowers.get(i).copied().unwrap_or(0);
+        let hi = lowers.get(i + 1).copied().unwrap_or(u64::MAX);
+        peel_partition(
+            i as u32,
+            &mut part,
+            &pt.edges_of[i],
+            &pt.local_of,
+            part_of,
+            sup_init,
+            (lo, hi),
+            theta,
+            cfg.dynamic_deletes,
+            meters,
+        );
+    });
+    theta_cell.into_inner()
+}
+
+/// Sequential bottom-up peel of one partition over its own BE-Index.
+#[allow(clippy::too_many_arguments)]
+fn peel_partition(
+    part_id: u32,
+    idx: &mut PartIndex,
+    edges: &[u32],
+    local_of: &[u32],
+    part_of: &[u32],
+    sup_init: &[u64],
+    (range_lo, range_hi): (u64, u64),
+    theta: &mut [u64],
+    dynamic_deletes: bool,
+    meters: &Meters,
+) {
+    let n = edges.len();
+    if n == 0 {
+        return;
+    }
+    let mut sup: Vec<u64> = edges.iter().map(|&e| sup_init[e as usize]).collect();
+    let mut peeled = vec![false; n];
+    let mut bloom_len: Vec<u32> = (0..idx.n_blooms())
+        .map(|b| (idx.bloom_offs[b + 1] - idx.bloom_offs[b]) as u32)
+        .collect();
+    // Clamped bucket queue over the partition's range (Theorem 1): θs
+    // assigned here fall in [range_lo, range_hi), so exact ordering is
+    // only needed below range_hi. For the last (unbounded) partition the
+    // width is capped by the max initial support.
+    let hi = if range_hi == u64::MAX {
+        sup.iter().copied().max().unwrap_or(range_lo) + 1
+    } else {
+        range_hi
+    };
+    let mut heap = BucketQueue::new(range_lo, hi);
+    for (le, &s) in sup.iter().enumerate() {
+        heap.push(s, le as u32);
+    }
+    let mut level = 0u64;
+    let mut remaining = n;
+    let mut wedges = 0u64;
+    let mut updates = 0u64;
+    while remaining > 0 {
+        let (s, le) = heap
+            .pop_live(|i| (!peeled[i as usize]).then(|| sup[i as usize]))
+            .expect("partition heap exhausted early");
+        let le = le as usize;
+        level = level.max(s);
+        let e_glob = edges[le];
+        theta[e_glob as usize] = level;
+        peeled[le] = true;
+        remaining -= 1;
+        // Alg. 3 over the partitioned index.
+        let links_start = idx.edge_offs[le];
+        let links_end = idx.edge_offs[le + 1];
+        for li in links_start..links_end {
+            let (lb, tw) = idx.edge_links[li];
+            wedges += 1;
+            // twin peeled already (same partition only — higher-partition
+            // twins are never peeled during this run)?
+            let tw_same_part = part_of[tw as usize] == part_id;
+            if tw_same_part && peeled[local_of[tw as usize] as usize] {
+                continue; // wedge already removed
+            }
+            let lbu = lb as usize;
+            let k = idx.bloom_k[lbu];
+            debug_assert!(k >= 1, "live wedge implies k >= 1 (bloom {lb})");
+            if tw_same_part {
+                let lt = local_of[tw as usize] as usize;
+                let ns = sup[lt].saturating_sub(k as u64 - 1).max(level);
+                if ns != sup[lt] {
+                    sup[lt] = ns;
+                    heap.push(ns, lt as u32);
+                }
+                updates += 1;
+            }
+            idx.bloom_k[lbu] = k - 1;
+            // neighborhood sweep: −1 to live edges with live wedges
+            let bs = idx.bloom_offs[lbu];
+            let blen = bloom_len[lbu] as usize;
+            let mut w = 0usize;
+            for r in 0..blen {
+                wedges += 1;
+                let (e2, t2) = idx.bloom_entries[bs + r];
+                // e2 ∈ E_i by link preservation
+                let l2 = local_of[e2 as usize] as usize;
+                let e2_dead = peeled[l2] || e2 == e_glob;
+                let t2_dead = t2 == e_glob
+                    || (part_of[t2 as usize] == part_id
+                        && peeled[local_of[t2 as usize] as usize]);
+                if e2_dead || t2_dead {
+                    if !dynamic_deletes {
+                        idx.bloom_entries[bs + w] = idx.bloom_entries[bs + r];
+                        w += 1;
+                    }
+                    continue;
+                }
+                let ns = sup[l2].saturating_sub(1).max(level);
+                if ns != sup[l2] {
+                    sup[l2] = ns;
+                    heap.push(ns, l2 as u32);
+                }
+                updates += 1;
+                idx.bloom_entries[bs + w] = idx.bloom_entries[bs + r];
+                w += 1;
+            }
+            if dynamic_deletes {
+                bloom_len[lbu] = w as u32;
+            }
+        }
+    }
+    meters.wedges.add(wedges);
+    meters.updates.add(updates);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::beindex::partition::partition_be_index;
+    use crate::beindex::BeIndex;
+    use crate::graph::gen;
+    use crate::peel::bup::wing_bup;
+    use crate::wing::cd::{coarse_decompose, CdConfig};
+
+    fn pbng_theta(g: &crate::graph::BipartiteGraph, p: usize, threads: usize) -> Vec<u64> {
+        let (idx, per_edge) = BeIndex::build(g, 1);
+        let meters = Meters::new();
+        let cd = coarse_decompose(
+            &idx,
+            &per_edge,
+            CdConfig {
+                p,
+                threads,
+                batch: true,
+                dynamic_deletes: true,
+            },
+            &meters,
+        );
+        let mut pt = partition_be_index(&idx, &cd.part_of, cd.n_parts);
+        fine_decompose(
+            &mut pt,
+            &cd.part_of,
+            &cd.sup_init,
+            &cd.lowers,
+            FdConfig {
+                threads,
+                dynamic_deletes: true,
+            },
+            &meters,
+        )
+    }
+
+    #[test]
+    fn matches_bup_single_partition() {
+        let g = gen::biclique(3, 4);
+        assert_eq!(pbng_theta(&g, 1, 1), wing_bup(&g).theta);
+    }
+
+    #[test]
+    fn matches_bup_multi_partition() {
+        let g = gen::paper_fig1();
+        assert_eq!(pbng_theta(&g, 3, 2), wing_bup(&g).theta);
+    }
+
+    #[test]
+    fn matches_bup_on_random_graphs_theorem2() {
+        crate::testkit::check_property("pbng-fd-vs-bup", 0xFD1, 10, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(
+                6 + rng.usize_below(14),
+                6 + rng.usize_below(14),
+                20 + rng.usize_below(80),
+                seed,
+            );
+            if g.m() == 0 {
+                return Ok(());
+            }
+            let p = 1 + rng.usize_below(6);
+            let threads = 1 + rng.usize_below(4);
+            let a = pbng_theta(&g, p, threads);
+            let b = wing_bup(&g).theta;
+            if a != b {
+                return Err(format!("P={p} T={threads}: pbng={a:?} bup={b:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matches_bup_on_skewed_graph() {
+        let g = gen::zipf(50, 50, 350, 1.3, 1.3, 42);
+        assert_eq!(pbng_theta(&g, 8, 3), wing_bup(&g).theta);
+    }
+
+    #[test]
+    fn deletes_off_gives_same_output() {
+        let g = gen::zipf(30, 30, 180, 1.2, 1.2, 43);
+        let (idx, per_edge) = BeIndex::build(&g, 1);
+        let meters = Meters::new();
+        let cd = coarse_decompose(
+            &idx,
+            &per_edge,
+            CdConfig { p: 4, threads: 1, batch: true, dynamic_deletes: false },
+            &meters,
+        );
+        let mut pt = partition_be_index(&idx, &cd.part_of, cd.n_parts);
+        let theta = fine_decompose(
+            &mut pt,
+            &cd.part_of,
+            &cd.sup_init,
+            &cd.lowers,
+            FdConfig { threads: 1, dynamic_deletes: false },
+            &meters,
+        );
+        assert_eq!(theta, wing_bup(&g).theta);
+    }
+}

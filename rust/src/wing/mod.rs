@@ -1,0 +1,267 @@
+//! Wing decomposition (bitruss decomposition): the full PBNG pipeline and
+//! the BE-Index based baselines.
+//!
+//! * [`wing_pbng`] — counting + BE-Index → PBNG CD (Alg. 4) → index
+//!   partitioning (Alg. 5) → PBNG FD: the paper's contribution.
+//! * [`wing_be_batch`] — BE_Batch baseline [67]: bottom-up level peeling
+//!   with batched BE-Index updates and dynamic deletes.
+//! * [`wing_be_pc`] — BE_PC-style baseline [67]: sequential
+//!   progressive-compression peeling; here realized as a sequential
+//!   range-partitioned two-phase peel with geometric candidate ranges
+//!   controlled by τ (see DESIGN.md §Substitutions).
+//! * Index-free baselines BUP and ParB live in [`crate::peel`].
+
+pub mod cd;
+pub mod fd;
+pub mod range;
+pub mod state;
+
+use crate::beindex::{partition::partition_be_index, BeIndex};
+use crate::graph::BipartiteGraph;
+use crate::metrics::{Meters, Phase, Recorder};
+use crate::peel::{Decomposition, LazyHeap};
+use cd::{coarse_decompose, CdConfig};
+use fd::{fine_decompose, FdConfig};
+use state::{peel_set_batch, WingState};
+
+/// Configuration for the PBNG wing pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct PbngConfig {
+    /// Number of CD partitions P. Paper: 400 (<100M edges) / 1000; scaled
+    /// presets here default to 64 (see DESIGN.md §6).
+    pub p: usize,
+    pub threads: usize,
+    /// Batch optimization (§5.1). Off = PBNG−−.
+    pub batch: bool,
+    /// Dynamic BE-Index updates (§5.2). Off = PBNG−.
+    pub dynamic_deletes: bool,
+}
+
+impl Default for PbngConfig {
+    fn default() -> Self {
+        PbngConfig {
+            p: 64,
+            threads: crate::par::default_threads(),
+            batch: true,
+            dynamic_deletes: true,
+        }
+    }
+}
+
+/// PBNG wing decomposition (two-phased peeling).
+pub fn wing_pbng(g: &BipartiteGraph, cfg: PbngConfig) -> Decomposition {
+    let meters = Meters::new();
+    let mut rec = Recorder::new(&meters);
+    rec.enter(Phase::Count);
+    let (idx, per_edge) = BeIndex::build(g, cfg.threads);
+    rec.enter(Phase::Coarse);
+    let cd_out = coarse_decompose(
+        &idx,
+        &per_edge,
+        CdConfig {
+            p: cfg.p,
+            threads: cfg.threads,
+            batch: cfg.batch,
+            dynamic_deletes: cfg.dynamic_deletes,
+        },
+        &meters,
+    );
+    rec.enter(Phase::Partition);
+    let mut pt = partition_be_index(&idx, &cd_out.part_of, cd_out.n_parts);
+    rec.enter(Phase::Fine);
+    let theta = fine_decompose(
+        &mut pt,
+        &cd_out.part_of,
+        &cd_out.sup_init,
+        &cd_out.lowers,
+        FdConfig {
+            threads: cfg.threads,
+            dynamic_deletes: cfg.dynamic_deletes,
+        },
+        &meters,
+    );
+    Decomposition {
+        theta,
+        stats: rec.finish(),
+    }
+}
+
+/// BE_Batch baseline: bottom-up peeling of minimum-support levels with
+/// the Alg. 6 batch engine and dynamic deletes [67].
+pub fn wing_be_batch(g: &BipartiteGraph, threads: usize) -> Decomposition {
+    let meters = Meters::new();
+    let mut rec = Recorder::new(&meters);
+    rec.enter(Phase::Count);
+    let (idx, per_edge) = BeIndex::build(g, threads);
+    rec.enter(Phase::Fine);
+    let m = g.m();
+    let st = WingState::new(&idx, &per_edge, true);
+    let mut theta = vec![0u64; m];
+    let mut heap = LazyHeap::new();
+    for (e, &s) in per_edge.iter().enumerate() {
+        heap.push(s, e as u32);
+    }
+    let mut remaining = m;
+    let mut epoch = 0u32;
+    while remaining > 0 {
+        let (k, first) = heap
+            .pop_live(|e| st.is_alive(e).then(|| st.sup[e as usize].get()))
+            .expect("heap exhausted");
+        let mut active = vec![first];
+        while let Some((s, e)) = heap.pop_live(|e| st.is_alive(e).then(|| st.sup[e as usize].get()))
+        {
+            if s > k {
+                heap.push(s, e);
+                break;
+            }
+            active.push(e);
+        }
+        active.sort_unstable();
+        active.dedup();
+        while !active.is_empty() {
+            meters.rho.add(1);
+            epoch += 1;
+            for &e in &active {
+                theta[e as usize] = k;
+            }
+            remaining -= active.len();
+            st.mark_peeled(&active, epoch, threads);
+            let mut touched = peel_set_batch(&st, &active, k, epoch, threads, &meters);
+            touched.sort_unstable();
+            touched.dedup();
+            let mut next = Vec::new();
+            for &e in &touched {
+                if st.is_alive(e) {
+                    let s = st.sup[e as usize].get();
+                    if s <= k {
+                        next.push(e);
+                    } else {
+                        heap.push(s, e);
+                    }
+                }
+            }
+            active = next;
+        }
+    }
+    Decomposition {
+        theta,
+        stats: rec.finish(),
+    }
+}
+
+/// BE_PC-style baseline: sequential two-phase peel with τ-spaced
+/// candidate ranges (P = ⌈1/τ⌉), avoiding support updates from lower to
+/// higher candidate subgraphs via the partitioned index — the
+/// progressive-compression idea of [67] realized with this crate's
+/// machinery. τ = 0.02 as in the paper's experiments.
+pub fn wing_be_pc(g: &BipartiteGraph, tau: f64) -> Decomposition {
+    let p = (1.0 / tau).ceil() as usize;
+    wing_pbng(
+        g,
+        PbngConfig {
+            p,
+            threads: 1,
+            batch: true,
+            dynamic_deletes: true,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::peel::bup::wing_bup;
+    use crate::peel::parb::wing_parb;
+
+    #[test]
+    fn all_algorithms_agree() {
+        crate::testkit::check_property("wing-all-agree", 0xA11, 6, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(
+                8 + rng.usize_below(12),
+                8 + rng.usize_below(12),
+                25 + rng.usize_below(70),
+                seed,
+            );
+            if g.m() == 0 {
+                return Ok(());
+            }
+            let bup = wing_bup(&g).theta;
+            let pbng = wing_pbng(&g, PbngConfig { p: 4, threads: 2, ..Default::default() }).theta;
+            let beb = wing_be_batch(&g, 2).theta;
+            let pc = wing_be_pc(&g, 0.25).theta;
+            let parb = wing_parb(&g).theta;
+            if pbng != bup {
+                return Err(format!("pbng != bup: {pbng:?} vs {bup:?}"));
+            }
+            if beb != bup {
+                return Err(format!("be_batch != bup: {beb:?} vs {bup:?}"));
+            }
+            if pc != bup {
+                return Err(format!("be_pc != bup: {pc:?} vs {bup:?}"));
+            }
+            if parb != bup {
+                return Err(format!("parb != bup: {parb:?} vs {bup:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pbng_rho_beats_be_batch_rho() {
+        let g = gen::zipf(70, 70, 500, 1.2, 1.2, 61);
+        let pbng = wing_pbng(&g, PbngConfig { p: 4, threads: 2, ..Default::default() });
+        let beb = wing_be_batch(&g, 2);
+        assert!(
+            pbng.stats.rho <= beb.stats.rho,
+            "pbng rho {} > be_batch rho {}",
+            pbng.stats.rho,
+            beb.stats.rho
+        );
+    }
+
+    #[test]
+    fn ablations_preserve_output() {
+        let g = gen::zipf(40, 40, 250, 1.2, 1.2, 62);
+        let base = wing_pbng(&g, PbngConfig { p: 4, threads: 2, ..Default::default() }).theta;
+        let minus = wing_pbng(
+            &g,
+            PbngConfig { p: 4, threads: 2, dynamic_deletes: false, ..Default::default() },
+        )
+        .theta;
+        let minus2 = wing_pbng(
+            &g,
+            PbngConfig { p: 4, threads: 2, batch: false, dynamic_deletes: false, ..Default::default() },
+        )
+        .theta;
+        assert_eq!(base, minus);
+        assert_eq!(base, minus2);
+    }
+
+    #[test]
+    fn phases_are_recorded() {
+        let g = gen::biclique(4, 4);
+        let d = wing_pbng(&g, PbngConfig { p: 2, threads: 1, ..Default::default() });
+        assert_eq!(d.stats.phases.len(), 4);
+        assert!(d.stats.updates > 0);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_output() {
+        let g = gen::zipf(60, 60, 400, 1.3, 1.3, 63);
+        let t1 = wing_pbng(&g, PbngConfig { p: 6, threads: 1, ..Default::default() }).theta;
+        let t4 = wing_pbng(&g, PbngConfig { p: 6, threads: 4, ..Default::default() }).theta;
+        assert_eq!(t1, t4);
+    }
+
+    #[test]
+    fn partition_count_does_not_change_output() {
+        let g = gen::zipf(50, 50, 300, 1.2, 1.2, 64);
+        let base = wing_bup(&g).theta;
+        for p in [1, 2, 5, 9, 33] {
+            let th = wing_pbng(&g, PbngConfig { p, threads: 2, ..Default::default() }).theta;
+            assert_eq!(th, base, "P={p} diverged");
+        }
+    }
+}

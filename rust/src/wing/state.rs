@@ -1,0 +1,409 @@
+//! Mutable wing-peeling state over the BE-Index, with the two update
+//! engines:
+//!
+//! * [`peel_set_batch`] — Alg. 6: support updates from a whole peeled set
+//!   are aggregated per bloom (`count[B]`) and applied in one traversal
+//!   of each dirty bloom's neighborhood, with the twin-edge conflict
+//!   resolution of Alg. 4 (lines 26–31).
+//! * [`peel_set_single`] — Alg. 3 repeated per edge: the PBNG−− ablation
+//!   (batch optimization disabled).
+//!
+//! Twin semantics (Property 1): when edge `e` is peeled from bloom `B`
+//! with current bloom number `k`, its twin loses all its `k − 1`
+//! butterflies in `B`; every other live edge of `B` loses exactly one
+//! butterfly per wedge removed. A link `(e, B)` is *dead* once `e`'s twin
+//! is peeled; dead links are detected through the peel-epoch array and —
+//! with the §5.2 dynamic-deletes optimization — compacted out of the
+//! bloom's entry list.
+//!
+//! The original [`BeIndex`] stays immutable (FD re-partitions it); this
+//! state owns working copies of the bloom numbers and entry lists.
+
+use crate::beindex::BeIndex;
+use crate::metrics::Meters;
+use crate::par::{parallel_for_chunked, RacyCell, SupportCell};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Epoch value meaning "not peeled".
+pub const ALIVE: u32 = u32::MAX;
+
+pub struct WingState<'a> {
+    pub idx: &'a BeIndex,
+    /// Current edge supports.
+    pub sup: Vec<SupportCell>,
+    /// Peel epoch per edge (`ALIVE` = not peeled). Epochs strictly
+    /// increase across peeling iterations.
+    pub epoch: Vec<AtomicU32>,
+    /// Working copy of bloom numbers.
+    bloom_k: Vec<AtomicU32>,
+    /// Working copy of bloom entry lists (compacted under dynamic deletes).
+    entries: RacyCell<Vec<(u32, u32)>>,
+    /// Active length per bloom.
+    bloom_len: RacyCell<Vec<u32>>,
+    /// Per-bloom batch counters (zeroed between iterations).
+    count: Vec<AtomicU32>,
+    /// §5.2 optimization toggle.
+    pub dynamic_deletes: bool,
+}
+
+impl<'a> WingState<'a> {
+    pub fn new(idx: &'a BeIndex, per_edge: &[u64], dynamic_deletes: bool) -> Self {
+        WingState {
+            idx,
+            sup: per_edge.iter().map(|&s| SupportCell::new(s)).collect(),
+            epoch: (0..per_edge.len()).map(|_| AtomicU32::new(ALIVE)).collect(),
+            bloom_k: idx.bloom_k.iter().map(|&k| AtomicU32::new(k)).collect(),
+            entries: RacyCell::new(idx.bloom_entries.clone()),
+            bloom_len: RacyCell::new(idx.bloom_len.clone()),
+            count: (0..idx.n_blooms()).map(|_| AtomicU32::new(0)).collect(),
+            dynamic_deletes,
+        }
+    }
+
+    #[inline]
+    pub fn is_alive(&self, e: u32) -> bool {
+        self.epoch[e as usize].load(Ordering::Relaxed) == ALIVE
+    }
+
+    /// Mark a set as peeled at `epoch` (must be called before the peel).
+    pub fn mark_peeled(&self, active: &[u32], epoch: u32, threads: usize) {
+        crate::par::parallel_for(active.len(), threads, |_, i| {
+            self.epoch[active[i] as usize].store(epoch, Ordering::Relaxed);
+        });
+    }
+
+    pub fn support_snapshot(&self) -> Vec<u64> {
+        self.sup.iter().map(|c| c.get()).collect()
+    }
+}
+
+/// Batch peel (Alg. 6). `active` must already be marked at `epoch`
+/// via [`WingState::mark_peeled`]. Returns live edges whose support
+/// changed (with duplicates; callers dedup).
+pub fn peel_set_batch(
+    st: &WingState,
+    active: &[u32],
+    floor: u64,
+    epoch: u32,
+    threads: usize,
+    meters: &Meters,
+) -> Vec<u32> {
+    let threads = threads.max(1);
+    let n_threads = threads;
+    let dirty_lists: Vec<std::sync::Mutex<Vec<u32>>> =
+        (0..n_threads).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    let touched_lists: Vec<std::sync::Mutex<Vec<u32>>> =
+        (0..n_threads).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+
+    // Phase 1: per peeled edge, resolve twins and aggregate wedge-removal
+    // counts at blooms. bloom_k reads are stable (only phase 2 writes).
+    parallel_for_chunked(active.len(), threads, 64, |t, lo, hi| {
+        let mut dirty = dirty_lists[t].lock().unwrap();
+        let mut touched = touched_lists[t].lock().unwrap();
+        let mut wedges = 0u64;
+        let mut updates = 0u64;
+        for &e in &active[lo..hi] {
+            for &(b, tw) in st.idx.links_of(e) {
+                wedges += 1;
+                let te = st.epoch[tw as usize].load(Ordering::Relaxed);
+                if te < epoch {
+                    continue; // wedge already removed in an earlier iteration
+                }
+                if te == epoch {
+                    // both twins peeled this iteration: the higher-id edge
+                    // is the representative that counts the wedge removal
+                    if e < tw {
+                        continue;
+                    }
+                } else {
+                    // twin is live: it loses all its k−1 butterflies in B
+                    let k = st.bloom_k[b as usize].load(Ordering::Relaxed) as u64;
+                    if k >= 1 {
+                        st.sup[tw as usize].sub_clamped(k - 1, floor);
+                        updates += 1;
+                        touched.push(tw);
+                    }
+                }
+                if st.count[b as usize].fetch_add(1, Ordering::Relaxed) == 0 {
+                    dirty.push(b);
+                }
+            }
+        }
+        meters.wedges.add(wedges);
+        meters.updates.add(updates);
+    });
+
+    let dirty: Vec<u32> = dirty_lists
+        .into_iter()
+        .flat_map(|m| m.into_inner().unwrap())
+        .collect();
+    let mut touched: Vec<u32> = touched_lists
+        .into_iter()
+        .flat_map(|m| m.into_inner().unwrap())
+        .collect();
+
+    // Phase 2: per dirty bloom, decrement the bloom number and apply the
+    // aggregated −count[B] to live edges with live twins. Disjoint blooms
+    // → RacyCell writes are race-free.
+    let touched2: Vec<std::sync::Mutex<Vec<u32>>> =
+        (0..n_threads).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    parallel_for_chunked(dirty.len(), threads, 16, |t, lo, hi| {
+        let mut touched = touched2[t].lock().unwrap();
+        let mut wedges = 0u64;
+        let mut updates = 0u64;
+        for &b in &dirty[lo..hi] {
+            let c = st.count[b as usize].swap(0, Ordering::Relaxed);
+            debug_assert!(c > 0);
+            let k = st.bloom_k[b as usize].load(Ordering::Relaxed);
+            debug_assert!(k >= c, "bloom {b}: k={k} < c={c}");
+            st.bloom_k[b as usize].store(k - c, Ordering::Relaxed);
+            // SAFETY: each dirty bloom appears exactly once in `dirty`
+            // (guarded by the fetch_add(0→1) push) and slices per bloom
+            // are disjoint.
+            let entries = unsafe { st.entries.get_mut() };
+            let bloom_len = unsafe { st.bloom_len.get_mut() };
+            let s = st.idx.bloom_offs[b as usize];
+            let len = bloom_len[b as usize] as usize;
+            let slice = &mut entries[s..s + len];
+            let mut w = 0usize; // compaction write cursor
+            for r in 0..len {
+                wedges += 1;
+                let (e2, t2) = slice[r];
+                let e2_dead = st.epoch[e2 as usize].load(Ordering::Relaxed) <= epoch;
+                let t2_dead = st.epoch[t2 as usize].load(Ordering::Relaxed) <= epoch;
+                if e2_dead || t2_dead {
+                    // dead link: compact out under the §5.2 optimization
+                    if !st.dynamic_deletes {
+                        slice[w] = slice[r];
+                        w += 1;
+                    }
+                    continue;
+                }
+                st.sup[e2 as usize].sub_clamped(c as u64, floor);
+                updates += 1;
+                touched.push(e2);
+                slice[w] = slice[r];
+                w += 1;
+            }
+            if st.dynamic_deletes {
+                bloom_len[b as usize] = w as u32;
+            }
+        }
+        meters.wedges.add(wedges);
+        meters.updates.add(updates);
+    });
+    touched.extend(touched2.into_iter().flat_map(|m| m.into_inner().unwrap()));
+    touched
+}
+
+/// Per-edge peel (Alg. 3 in a loop) — the PBNG−− ablation: no batch
+/// aggregation, every peeled edge traverses its blooms' neighborhoods
+/// itself. Sequential over the set.
+///
+/// Unlike [`peel_set_batch`], the set must **not** be pre-marked: this
+/// engine marks each edge right before processing it, so that Alg. 3's
+/// one-at-a-time twin semantics hold exactly (a twin later in the set is
+/// still "in the graph" when an earlier edge is peeled).
+pub fn peel_set_single(
+    st: &WingState,
+    active: &[u32],
+    floor: u64,
+    epoch: u32,
+    meters: &Meters,
+) -> Vec<u32> {
+    let mut touched = Vec::new();
+    let mut wedges = 0u64;
+    let mut updates = 0u64;
+    for &e in active {
+        st.epoch[e as usize].store(epoch, Ordering::Relaxed);
+        for &(b, tw) in st.idx.links_of(e) {
+            wedges += 1;
+            if st.epoch[tw as usize].load(Ordering::Relaxed) != ALIVE {
+                continue; // wedge already removed when the twin was peeled
+            }
+            let kb = &st.bloom_k[b as usize];
+            let k = kb.load(Ordering::Relaxed);
+            debug_assert!(k >= 1, "live wedge implies k >= 1");
+            // twin loses all its k−1 butterflies in B (Alg. 3 line 4)
+            st.sup[tw as usize].sub_clamped(k as u64 - 1, floor);
+            updates += 1;
+            touched.push(tw);
+            kb.store(k - 1, Ordering::Relaxed);
+            // one traversal of the bloom per peeled edge (no aggregation)
+            // SAFETY: sequential loop — exclusive access.
+            let entries = unsafe { st.entries.get_mut() };
+            let bloom_len = unsafe { st.bloom_len.get_mut() };
+            let s = st.idx.bloom_offs[b as usize];
+            let len = bloom_len[b as usize] as usize;
+            let slice = &mut entries[s..s + len];
+            let mut w = 0usize;
+            for r in 0..len {
+                wedges += 1;
+                let (e2, t2) = slice[r];
+                let e2_dead = st.epoch[e2 as usize].load(Ordering::Relaxed) != ALIVE;
+                let t2_dead = st.epoch[t2 as usize].load(Ordering::Relaxed) != ALIVE;
+                if e2_dead || t2_dead {
+                    if !st.dynamic_deletes {
+                        slice[w] = slice[r];
+                        w += 1;
+                    }
+                    continue;
+                }
+                st.sup[e2 as usize].sub_clamped(1, floor);
+                updates += 1;
+                touched.push(e2);
+                slice[w] = slice[r];
+                w += 1;
+            }
+            if st.dynamic_deletes {
+                bloom_len[b as usize] = w as u32;
+            }
+        }
+    }
+    meters.wedges.add(wedges);
+    meters.updates.add(updates);
+    touched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn setup(g: &crate::graph::BipartiteGraph) -> (BeIndex, Vec<u64>) {
+        BeIndex::build(g, 1)
+    }
+
+    #[test]
+    fn batch_peel_single_butterfly() {
+        let g = gen::biclique(2, 2);
+        let (idx, per_edge) = setup(&g);
+        let st = WingState::new(&idx, &per_edge, true);
+        let m = Meters::new();
+        // peel edge 0: the other three edges' support must drop to 0
+        st.mark_peeled(&[0], 1, 1);
+        peel_set_batch(&st, &[0], 0, 1, 1, &m);
+        let sup = st.support_snapshot();
+        assert_eq!(sup[0], 1); // peeled edge keeps its value
+        assert_eq!(&sup[1..], &[0, 0, 0]);
+    }
+
+    #[test]
+    fn batch_peel_twin_pair_together() {
+        let g = gen::biclique(2, 2);
+        let (idx, per_edge) = setup(&g);
+        let st = WingState::new(&idx, &per_edge, true);
+        let m = Meters::new();
+        // the bloom's entries tell us the twin pairing
+        let (e, t) = idx.entries(0)[0];
+        st.mark_peeled(&[e, t], 1, 1);
+        peel_set_batch(&st, &[e, t], 0, 1, 1, &m);
+        let sup = st.support_snapshot();
+        for x in 0..4u32 {
+            if x != e && x != t {
+                assert_eq!(sup[x as usize], 0, "edge {x} should have lost its butterfly");
+            }
+        }
+    }
+
+    /// Supports of *live* edges must agree between engines (peeled edges'
+    /// values are dead state and may differ).
+    fn live_supports(st: &WingState, m: usize) -> Vec<Option<u64>> {
+        (0..m as u32)
+            .map(|e| st.is_alive(e).then(|| st.sup[e as usize].get()))
+            .collect()
+    }
+
+    #[test]
+    fn batch_matches_single_on_k35() {
+        let g = gen::biclique(3, 5);
+        let (idx, per_edge) = setup(&g);
+        let stb = WingState::new(&idx, &per_edge, true);
+        let sts = WingState::new(&idx, &per_edge, true);
+        let m = Meters::new();
+        let active = vec![0u32, 3, 7];
+        stb.mark_peeled(&active, 1, 1);
+        peel_set_batch(&stb, &active, 0, 1, 2, &m);
+        peel_set_single(&sts, &active, 0, 1, &m);
+        assert_eq!(live_supports(&stb, g.m()), live_supports(&sts, g.m()));
+    }
+
+    #[test]
+    fn batch_engines_agree_on_random_sets() {
+        crate::testkit::check_property("batch-vs-single", 0xBA7C4, 10, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(10 + rng.usize_below(15), 10 + rng.usize_below(15), 40 + rng.usize_below(80), seed);
+            if g.m() == 0 {
+                return Ok(());
+            }
+            let (idx, per_edge) = setup(&g);
+            // random subset of edges
+            let active: Vec<u32> = (0..g.m() as u32).filter(|_| rng.chance(0.3)).collect();
+            if active.is_empty() {
+                return Ok(());
+            }
+            let m = Meters::new();
+            let stb = WingState::new(&idx, &per_edge, true);
+            let sts = WingState::new(&idx, &per_edge, false);
+            stb.mark_peeled(&active, 1, 1);
+            peel_set_batch(&stb, &active, 0, 1, 3, &m);
+            peel_set_single(&sts, &active, 0, 1, &m);
+            if live_supports(&stb, g.m()) != live_supports(&sts, g.m()) {
+                return Err("batch vs single support divergence".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_result_matches_brute_force_removal() {
+        crate::testkit::check_property("batch-vs-brute-removal", 0xBB, 10, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(8 + rng.usize_below(10), 8 + rng.usize_below(10), 25 + rng.usize_below(60), seed);
+            if g.m() == 0 {
+                return Ok(());
+            }
+            let (idx, per_edge) = setup(&g);
+            let active: Vec<u32> = (0..g.m() as u32).filter(|_| rng.chance(0.25)).collect();
+            if active.is_empty() {
+                return Ok(());
+            }
+            let m = Meters::new();
+            let st = WingState::new(&idx, &per_edge, true);
+            st.mark_peeled(&active, 1, 1);
+            peel_set_batch(&st, &active, 0, 1, 2, &m);
+            // oracle: recount supports on the graph minus active edges
+            let mut alive = vec![true; g.m()];
+            for &e in &active {
+                alive[e as usize] = false;
+            }
+            let oracle = crate::count::brute::edge_support_restricted(&g, &alive);
+            let got = st.support_snapshot();
+            for e in 0..g.m() {
+                if alive[e] && got[e] != oracle[e] {
+                    return Err(format!(
+                        "edge {e}: batch={} oracle={} (m={}, active={:?})",
+                        got[e],
+                        oracle[e],
+                        g.m(),
+                        active
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dynamic_deletes_compact_entries() {
+        let g = gen::biclique(2, 4);
+        let (idx, per_edge) = setup(&g);
+        let st = WingState::new(&idx, &per_edge, true);
+        let m = Meters::new();
+        st.mark_peeled(&[0], 1, 1);
+        peel_set_batch(&st, &[0], 0, 1, 1, &m);
+        // bloom 0 lost edge 0's wedge: entries shrink by 2 (both orientations)
+        let len = unsafe { st.bloom_len.get_mut() }[0];
+        assert_eq!(len as usize, idx.entries(0).len() - 2);
+    }
+}

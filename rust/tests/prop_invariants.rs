@@ -1,0 +1,177 @@
+//! Randomized property tests over decomposition invariants — the
+//! definitional checks, run against the *fast* pipeline (not just the
+//! oracles): k-wing/k-tip membership conditions, monotonicity, and
+//! counting identities.
+
+use pbng::count::{brute, pve_bcnt, CountOptions};
+use pbng::graph::{gen, GraphBuilder, Side};
+use pbng::testkit::{check_property, Rng};
+use pbng::tip::{tip_pbng, TipConfig};
+use pbng::wing::{wing_pbng, PbngConfig};
+
+fn random_graph(seed: u64) -> pbng::graph::BipartiteGraph {
+    let mut rng = Rng::new(seed);
+    match rng.usize_below(3) {
+        0 => gen::erdos(5 + rng.usize_below(20), 5 + rng.usize_below(20), 20 + rng.usize_below(100), seed),
+        1 => gen::zipf(8 + rng.usize_below(25), 8 + rng.usize_below(25), 30 + rng.usize_below(150), 1.0 + rng.f64(), 1.0 + rng.f64(), seed),
+        _ => gen::planted_blocks(
+            40,
+            40,
+            20 + rng.usize_below(60),
+            &[gen::Block { rows: 3 + rng.usize_below(5), cols: 3 + rng.usize_below(5), density: 0.8 }],
+            seed,
+        ),
+    }
+}
+
+/// Defn. 1 half: every edge with θ_e = k participates in ≥ k butterflies
+/// within the subgraph of edges with θ ≥ k.
+#[test]
+fn wing_numbers_satisfy_min_support_in_level() {
+    check_property("wing-level-support", 0x1001, 10, |seed| {
+        let g = random_graph(seed);
+        if g.m() == 0 {
+            return Ok(());
+        }
+        let theta = wing_pbng(&g, PbngConfig { p: 4, threads: 2, ..Default::default() }).theta;
+        for k in theta.iter().copied().collect::<std::collections::BTreeSet<_>>() {
+            if k == 0 {
+                continue;
+            }
+            let alive: Vec<bool> = theta.iter().map(|&t| t >= k).collect();
+            let sup = brute::edge_support_restricted(&g, &alive);
+            for e in 0..g.m() {
+                if theta[e] == k && sup[e] < k {
+                    return Err(format!("edge {e}: θ={k} but only {} butterflies in level", sup[e]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Maximality half: an edge's support in the (θ_e + 1)-level must be
+/// below θ_e + 1 (otherwise its wing number would be higher).
+#[test]
+fn wing_numbers_are_maximal() {
+    check_property("wing-maximality", 0x1002, 8, |seed| {
+        let g = random_graph(seed);
+        if g.m() == 0 {
+            return Ok(());
+        }
+        let theta = wing_pbng(&g, PbngConfig { p: 3, threads: 2, ..Default::default() }).theta;
+        let brute_theta = brute::brute_wing_numbers(&g);
+        if theta != brute_theta {
+            return Err("pipeline disagrees with definitional oracle".into());
+        }
+        Ok(())
+    });
+}
+
+/// Tip numbers: same definitional bracket on the vertex side.
+#[test]
+fn tip_numbers_satisfy_min_support_in_level() {
+    check_property("tip-level-support", 0x1003, 10, |seed| {
+        let g = random_graph(seed);
+        let theta = tip_pbng(&g, Side::U, TipConfig { p: 3, threads: 2, ..Default::default() }).theta;
+        for k in theta.iter().copied().collect::<std::collections::BTreeSet<_>>() {
+            if k == 0 {
+                continue;
+            }
+            let alive: Vec<bool> = theta.iter().map(|&t| t >= k).collect();
+            let sup = brute::vertex_support_restricted(&g, &alive);
+            for u in 0..g.nu() {
+                if theta[u] == k && sup[u] < k {
+                    return Err(format!("u{u}: θ={k} but {} butterflies in level", sup[u]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Adding an edge can only raise (or keep) wing numbers of existing edges.
+#[test]
+fn wing_numbers_monotone_under_edge_addition() {
+    check_property("wing-monotone-add", 0x1004, 8, |seed| {
+        let mut rng = Rng::new(seed);
+        let g = gen::erdos(8, 8, 25, seed);
+        if g.m() == 0 {
+            return Ok(());
+        }
+        let t1 = brute::brute_wing_numbers(&g);
+        // add one random absent edge
+        let mut extra = None;
+        for _ in 0..100 {
+            let u = rng.below(8) as u32;
+            let v = rng.below(8) as u32;
+            if !g.has_edge(u, v) {
+                extra = Some((u, v));
+                break;
+            }
+        }
+        let Some(extra) = extra else { return Ok(()) };
+        let mut edges: Vec<(u32, u32)> = g.edges().to_vec();
+        edges.push(extra);
+        let g2 = GraphBuilder::new().nu(8).nv(8).edges(&edges).build();
+        let t2 = brute::brute_wing_numbers(&g2);
+        for e2 in 0..g2.m() as u32 {
+            let (u, v) = g2.edge(e2);
+            if (u, v) == extra {
+                continue;
+            }
+            let e1 = g.edge_id(u, v).unwrap();
+            if t2[e2 as usize] < t1[e1 as usize] {
+                return Err(format!("θ({u},{v}) dropped after adding {extra:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Counting identities on the fast counter: Σ per-edge = 4·total,
+/// Σ per-u = Σ per-v = 2·total.
+#[test]
+fn counting_identities() {
+    check_property("count-identities", 0x1005, 12, |seed| {
+        let g = random_graph(seed);
+        let (c, _) = pve_bcnt(
+            &g,
+            CountOptions { per_edge: true, build_blooms: false, threads: 2 },
+            None,
+        );
+        let su: u64 = c.per_u.iter().sum();
+        let sv: u64 = c.per_v.iter().sum();
+        let se: u64 = c.per_edge.iter().sum();
+        if su != 2 * c.total || sv != 2 * c.total || se != 4 * c.total {
+            return Err(format!(
+                "identities broken: total={} Σu={su} Σv={sv} Σe={se}",
+                c.total
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Isolated vertices and empty graphs don't break any pipeline.
+#[test]
+fn degenerate_inputs() {
+    // empty graph
+    let g = GraphBuilder::new().nu(5).nv(5).build();
+    let d = wing_pbng(&g, PbngConfig::default());
+    assert!(d.theta.is_empty());
+    let t = tip_pbng(&g, Side::U, TipConfig::default());
+    assert!(t.theta.iter().all(|&x| x == 0));
+    // single edge
+    let g = GraphBuilder::new().edges(&[(0, 0)]).build();
+    let d = wing_pbng(&g, PbngConfig::default());
+    assert_eq!(d.theta, vec![0]);
+    // star (no butterflies)
+    let g = GraphBuilder::new()
+        .edges(&[(0, 0), (1, 0), (2, 0), (3, 0)])
+        .build();
+    let d = wing_pbng(&g, PbngConfig { p: 3, ..Default::default() });
+    assert!(d.theta.iter().all(|&x| x == 0));
+    let t = tip_pbng(&g, Side::V, TipConfig { p: 2, ..Default::default() });
+    assert_eq!(t.theta, vec![0]);
+}

@@ -1,0 +1,74 @@
+//! Cross-module integration: full decomposition pipelines on preset
+//! workloads, algorithm agreement at moderate scale, hierarchy
+//! extraction on decomposition output.
+
+use pbng::graph::{gen, Side};
+use pbng::peel::bup::wing_bup;
+use pbng::tip::{tip_bup, tip_pbng, TipConfig};
+use pbng::wing::{wing_be_batch, wing_pbng, PbngConfig};
+
+#[test]
+fn wing_pipeline_on_presets() {
+    for preset in [gen::Preset::PlantedS, gen::Preset::NestedS] {
+        let g = preset.build();
+        let pbng = wing_pbng(&g, PbngConfig { p: 16, threads: 4, ..Default::default() });
+        let beb = wing_be_batch(&g, 4);
+        assert_eq!(pbng.theta, beb.theta, "preset {}", preset.name());
+        assert!(pbng.stats.rho > 0);
+        assert!(pbng.stats.rho <= beb.stats.rho);
+    }
+}
+
+#[test]
+fn wing_pbng_equals_bup_on_medium_zipf() {
+    let g = gen::zipf(300, 300, 2500, 1.2, 1.2, 1234);
+    let a = wing_pbng(&g, PbngConfig { p: 12, threads: 4, ..Default::default() });
+    let b = wing_bup(&g);
+    assert_eq!(a.theta, b.theta);
+    // two-phase pays at most ~2x the updates of sequential BUP w/ BE-index,
+    // and usually far less thanks to batching
+    assert!(a.stats.rho < g.m() as u64 / 4);
+}
+
+#[test]
+fn tip_pipeline_both_sides_on_preset() {
+    let g = gen::Preset::DiAfS.build();
+    for side in [Side::U, Side::V] {
+        let pbng = tip_pbng(&g, side, TipConfig { p: 8, threads: 4, ..Default::default() });
+        let bup = tip_bup(&g, side);
+        assert_eq!(pbng.theta, bup.theta, "side {side:?}");
+    }
+}
+
+#[test]
+fn hierarchy_from_pipeline_output_nests() {
+    let g = gen::Preset::PlantedS.build();
+    let (idx, _) = pbng::beindex::BeIndex::build(&g, 2);
+    let d = wing_pbng(&g, PbngConfig { p: 8, threads: 2, ..Default::default() });
+    pbng::hierarchy::check_wing_nesting(&g, &idx, &d.theta).unwrap();
+    let summary = pbng::hierarchy::wing_hierarchy_summary(&idx, &d.theta);
+    assert!(!summary.is_empty());
+    // planted dense blocks must produce a non-trivial hierarchy
+    assert!(summary.len() >= 3, "levels: {}", summary.len());
+}
+
+#[test]
+fn tip_and_wing_agree_on_max_levels() {
+    // θ_E^max-level edges must connect vertices with high tip numbers
+    let g = gen::Preset::PlantedS.build();
+    let w = wing_pbng(&g, PbngConfig { p: 8, threads: 2, ..Default::default() });
+    let t = tip_pbng(&g, Side::U, TipConfig { p: 8, threads: 2, ..Default::default() });
+    let max_w = *w.theta.iter().max().unwrap();
+    for e in 0..g.m() as u32 {
+        if w.theta[e as usize] == max_w && max_w > 0 {
+            let (u, _) = g.edge(e);
+            assert!(
+                t.theta[u as usize] >= max_w,
+                "u{} tip {} < wing level {}",
+                u,
+                t.theta[u as usize],
+                max_w
+            );
+        }
+    }
+}

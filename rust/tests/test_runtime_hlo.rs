@@ -1,0 +1,89 @@
+//! Integration: the AOT bridge end to end — rust loads the HLO text that
+//! python/compile/aot.py lowered from the L2 jax model (with L1 Pallas
+//! kernels inside), compiles it on the PJRT CPU client, executes it, and
+//! cross-checks the numbers against (a) the pure-rust mirror of the math
+//! and (b) the sparse-graph counting algorithm.
+//!
+//! Requires `make artifacts` (skips with a notice when missing).
+
+use pbng::count::dense::DenseCounter;
+use pbng::graph::gen;
+use pbng::runtime::{butterfly_block_cpu, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new(&dir).ok()?;
+    if rt.available_sizes().is_empty() {
+        eprintln!("SKIP: no artifacts in {}; run `make artifacts`", dir.display());
+        return None;
+    }
+    Some(rt)
+}
+
+#[test]
+fn artifact_matches_cpu_mirror_on_random_blocks() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.available_sizes()[0];
+    let mut rng = pbng::testkit::Rng::new(0xA07);
+    for _ in 0..3 {
+        let block: Vec<f32> = (0..n * n)
+            .map(|_| if rng.chance(0.2) { 1.0 } else { 0.0 })
+            .collect();
+        let got = rt.butterfly_block(&block, n).expect("execute artifact");
+        let want = butterfly_block_cpu(&block, n, n);
+        assert_eq!(got, want);
+    }
+}
+
+#[test]
+fn artifact_matches_sparse_counting_via_dense_counter() {
+    let Some(rt) = runtime() else { return };
+    let g = gen::planted_blocks(
+        100,
+        100,
+        150,
+        &[gen::Block { rows: 12, cols: 12, density: 0.9 }],
+        7,
+    );
+    let dc = DenseCounter::with_runtime(rt);
+    assert!(dc.has_accelerator());
+    let us: Vec<u32> = (0..12).collect();
+    let vs: Vec<u32> = (0..12).collect();
+    let accel = dc.count_block(&g, &us, &vs);
+    let cpu = DenseCounter::cpu_only().count_block(&g, &us, &vs);
+    assert_eq!(accel, cpu);
+}
+
+#[test]
+fn artifact_biclique_closed_form() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.available_sizes()[0];
+    // top-left 4x5 biclique inside the padded block
+    let mut block = vec![0f32; n * n];
+    for i in 0..4 {
+        for j in 0..5 {
+            block[i * n + j] = 1.0;
+        }
+    }
+    let c = rt.butterfly_block(&block, n).unwrap();
+    assert_eq!(c.total, 6 * 10);
+    assert_eq!(c.per_u[0], 10 * 3);
+    assert_eq!(c.per_edge[0], 3 * 4);
+}
+
+#[test]
+fn compiled_executable_is_cached_and_reusable() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.available_sizes()[0];
+    let block = vec![0f32; n * n];
+    let t0 = std::time::Instant::now();
+    rt.butterfly_block(&block, n).unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    for _ in 0..3 {
+        rt.butterfly_block(&block, n).unwrap();
+    }
+    let rest = t1.elapsed() / 3;
+    eprintln!("first call {first:?} (compile), warm call {rest:?}");
+    assert!(rest <= first, "warm calls should not be slower than compile+run");
+}
