@@ -29,7 +29,7 @@ fn main() {
     let (idx, _) = BeIndex::build(&g, 1);
     hierarchy::check_wing_nesting(&g, &idx, &d.theta).expect("hierarchy must nest");
 
-    let summary = hierarchy::wing_hierarchy_summary(&idx, &d.theta);
+    let summary = hierarchy::wing_hierarchy_summary(&g, &idx, &d.theta);
     println!("\nfull k-wing hierarchy has {} levels; selected levels:", summary.len());
     println!("{:>8} {:>8} {:>12} {:>9}", "k", "edges", "components", "largest");
     // print ~10 evenly spaced levels

@@ -131,7 +131,7 @@ fn main() {
 
     println!("\n--- hierarchy (medium tier) ---");
     let (idx, _) = pbng::beindex::BeIndex::build(&medium, threads);
-    let summary = pbng::hierarchy::wing_hierarchy_summary(&idx, &pb_m.theta);
+    let summary = pbng::hierarchy::wing_hierarchy_summary(&medium, &idx, &pb_m.theta);
     println!(
         "  {} non-trivial k-wing levels; θ_E^max = {}; densest level: {} edges",
         summary.len(),

@@ -1,0 +1,99 @@
+//! Hierarchy serving end to end: decompose once, persist the
+//! nested-component forest, reload it, and answer queries — first through
+//! the in-process engine, then over a real TCP session speaking the
+//! `pbng serve` line protocol.
+//!
+//! This is the ROADMAP "serve hierarchy queries, don't recompute them"
+//! workload: the decomposition runs once at build time; every query after
+//! that is a forest cut or a path walk over flat arrays.
+//!
+//! Run: `cargo run --release --example hierarchy_server`
+
+use pbng::beindex::BeIndex;
+use pbng::graph::gen;
+use pbng::index::{build_wing_forest, codec, query::QueryEngine, server};
+use pbng::wing::{wing_pbng, PbngConfig};
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
+
+fn main() {
+    // --- build: decompose + forest ------------------------------------
+    let g = gen::Preset::PlantedS.build();
+    println!(
+        "graph: |U|={} |V|={} |E|={} (planted dense blocks preset)",
+        g.nu(),
+        g.nv(),
+        g.m()
+    );
+    let t0 = std::time::Instant::now();
+    let d = wing_pbng(&g, PbngConfig { p: 16, threads: 2, ..Default::default() });
+    let (idx, _) = BeIndex::build(&g, 2);
+    let forest = build_wing_forest(&g, &idx, &d.theta, 2);
+    println!(
+        "forest built in {:?}: {} nodes over {} levels, {} member edges",
+        t0.elapsed(),
+        forest.n_nodes(),
+        forest.levels.len(),
+        forest.n_members()
+    );
+
+    // --- persist + reload ----------------------------------------------
+    let dir = std::env::temp_dir().join("pbng_hierarchy_server_example");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("planted.idx");
+    let bytes = codec::save(&forest, &path).unwrap();
+    let reloaded = codec::load(&path).unwrap();
+    assert_eq!(forest, reloaded, "save/load must be lossless");
+    println!("persisted to {} ({} bytes), reloaded identically", path.display(), bytes);
+
+    // --- in-process queries --------------------------------------------
+    let engine = Arc::new(QueryEngine::new(reloaded));
+    let deepest = *engine.forest().levels.last().unwrap();
+    println!("\nin-process session:");
+    for cmd in [
+        "stats".to_string(),
+        "summary".to_string(),
+        format!("kwing {deepest}"),
+        format!("kwing {deepest}"), // repeat: served from the LRU cache
+        "top 3".to_string(),
+        "densest 0".to_string(),
+    ] {
+        match server::handle_command(&engine, &cmd) {
+            server::Reply::Body(b) => {
+                let first = b.lines().next().unwrap_or("");
+                println!("  > {cmd}\n    {first}{}", if b.lines().count() > 1 { " …" } else { "" });
+            }
+            server::Reply::Quit => unreachable!(),
+        }
+    }
+    println!(
+        "cache: {} hits / {} misses over {} queries",
+        engine.meters.cache_hits.get(),
+        engine.meters.cache_misses.get(),
+        engine.meters.queries.get()
+    );
+
+    // --- the same over TCP ---------------------------------------------
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let srv = {
+        let engine = engine.clone();
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            server::handle_connection(&engine, stream).unwrap();
+        })
+    };
+    println!("\nTCP session against {addr}:");
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    writeln!(stream, "membership 0\nkwing {deepest}\nquit").unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    for line in reader.lines() {
+        let line = line.unwrap();
+        if line.starts_with("READY") || line == "END" || line == "BYE" || line.starts_with("components")
+        {
+            println!("  < {line}");
+        }
+    }
+    srv.join().unwrap();
+    println!("\ndone: one decomposition, arbitrarily many queries.");
+}

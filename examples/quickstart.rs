@@ -37,7 +37,7 @@ fn main() {
     let (idx, _) = BeIndex::build(&g, 1);
     println!("\nk-wing hierarchy:");
     println!("{:>4} {:>7} {:>12} {:>9}", "k", "edges", "components", "largest");
-    for l in hierarchy::wing_hierarchy_summary(&idx, &wing.theta) {
+    for l in hierarchy::wing_hierarchy_summary(&g, &idx, &wing.theta) {
         println!(
             "{:>4} {:>7} {:>12} {:>9}",
             l.k, l.entities, l.components, l.largest

@@ -76,6 +76,43 @@ pub fn save_numbers(nums: &[u64], path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Read decomposition output written by [`save_numbers`]: `id value` per
+/// line, ids contiguous from 0 (so precomputed θ files can seed the
+/// hierarchy index without re-peeling).
+pub fn load_numbers(path: &Path) -> Result<Vec<u64>> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening numbers file {}", path.display()))?;
+    let reader = std::io::BufReader::new(f);
+    let mut out = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let id: usize = it
+            .next()
+            .with_context(|| format!("line {}: missing id", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad id", lineno + 1))?;
+        let val: u64 = it
+            .next()
+            .with_context(|| format!("line {}: missing value", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        if id != out.len() {
+            anyhow::bail!(
+                "line {}: ids must be contiguous from 0 (got {id}, expected {})",
+                lineno + 1,
+                out.len()
+            );
+        }
+        out.push(val);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +138,20 @@ mod tests {
     fn parse_rejects_garbage() {
         assert!(parse(Cursor::new("0 x\n")).is_err());
         assert!(parse(Cursor::new("0\n")).is_err());
+    }
+
+    #[test]
+    fn numbers_roundtrip_and_validation() {
+        let dir = std::env::temp_dir().join("pbng_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("nums.txt");
+        let nums = vec![4u64, 0, 17, 3];
+        save_numbers(&nums, &p).unwrap();
+        assert_eq!(load_numbers(&p).unwrap(), nums);
+        std::fs::write(&p, "0 1\n2 5\n").unwrap(); // gap in ids
+        assert!(load_numbers(&p).is_err());
+        std::fs::write(&p, "0 x\n").unwrap();
+        assert!(load_numbers(&p).is_err());
     }
 
     #[test]

@@ -10,15 +10,20 @@
 use crate::beindex::BeIndex;
 use crate::graph::{BipartiteGraph, Side};
 
-/// Union-find with path halving.
+/// Union-find with path halving and union by size (near-inverse-Ackermann
+/// amortized finds even on adversarial union orders). Shared by the level
+/// materialization here and the incremental forest builder in
+/// [`crate::index`].
 pub struct UnionFind {
     parent: Vec<u32>,
+    size: Vec<u32>,
 }
 
 impl UnionFind {
     pub fn new(n: usize) -> Self {
         UnionFind {
             parent: (0..n as u32).collect(),
+            size: vec![1; n],
         }
     }
     pub fn find(&mut self, mut x: u32) -> u32 {
@@ -29,11 +34,32 @@ impl UnionFind {
         }
         x
     }
-    pub fn union(&mut self, a: u32, b: u32) {
+    /// Merge the sets of `a` and `b`; returns whether a merge happened.
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        self.union_roots(a, b).is_some()
+    }
+    /// Merge by size, returning `(winner_root, loser_root)` when the two
+    /// were in different sets. The winner remains a valid root; the loser
+    /// root's satellite data can be folded into the winner's (the forest
+    /// builder relies on this).
+    pub fn union_roots(&mut self, a: u32, b: u32) -> Option<(u32, u32)> {
         let (ra, rb) = (self.find(a), self.find(b));
-        if ra != rb {
-            self.parent[ra as usize] = rb;
+        if ra == rb {
+            return None;
         }
+        let (w, l) = if self.size[ra as usize] >= self.size[rb as usize] {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        };
+        self.parent[l as usize] = w;
+        self.size[w as usize] += self.size[l as usize];
+        Some((w, l))
+    }
+    /// Size of the set containing `x`.
+    pub fn size_of(&mut self, x: u32) -> u32 {
+        let r = self.find(x);
+        self.size[r as usize]
     }
 }
 
@@ -98,7 +124,7 @@ pub fn ktip_vertices(theta: &[u64], k: u64) -> Vec<u32> {
 }
 
 /// Summary of one hierarchy level for reporting.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LevelSummary {
     pub k: u64,
     pub entities: usize,
@@ -107,46 +133,56 @@ pub struct LevelSummary {
 }
 
 /// Summaries for every distinct wing-number level (Fig. 1b style).
-pub fn wing_hierarchy_summary(idx: &BeIndex, theta: &[u64]) -> Vec<LevelSummary> {
-    let mut levels: Vec<u64> = theta.iter().copied().filter(|&t| t > 0).collect();
-    levels.sort_unstable();
-    levels.dedup();
-    levels
-        .into_iter()
-        .map(|k| {
-            let comps = kwing_components(idx, theta, k);
-            LevelSummary {
-                k,
-                entities: kwing_edges(theta, k).len(),
-                components: comps.len(),
-                largest: comps.iter().map(|c| c.len()).max().unwrap_or(0),
-            }
-        })
-        .collect()
+///
+/// Builds the nested-component forest once (`O(m α)` sweep over all
+/// levels, [`crate::index::build_wing_forest`]) and reads every level off
+/// it, instead of re-running union-find over all blooms per level.
+pub fn wing_hierarchy_summary(
+    g: &BipartiteGraph,
+    idx: &BeIndex,
+    theta: &[u64],
+) -> Vec<LevelSummary> {
+    // summaries never read the per-node density stats — skip that pass
+    let forest = crate::index::build_wing_forest_opts(
+        g,
+        idx,
+        theta,
+        crate::par::default_threads(),
+        false,
+    );
+    crate::index::forest_level_summaries(&forest)
 }
 
 /// Check the nesting property: the (k+1)-level is contained in the
 /// k-level (both edge sets and component containment). Used by tests and
 /// the verify CLI.
+///
+/// Containment is verified through an edge → component-id map of the
+/// lower level, so one level pair costs `O(m)` instead of the old
+/// `O(|hc| · |lc|)` scan per component pair.
 pub fn check_wing_nesting(g: &BipartiteGraph, idx: &BeIndex, theta: &[u64]) -> Result<(), String> {
     let _ = g;
+    let m = theta.len();
     let mut levels: Vec<u64> = theta.iter().copied().filter(|&t| t > 0).collect();
     levels.sort_unstable();
     levels.dedup();
+    let mut comp_of = vec![u32::MAX; m];
     for w in levels.windows(2) {
         let (lo, hi) = (w[0], w[1]);
         let lo_comps = kwing_components(idx, theta, lo);
         let hi_comps = kwing_components(idx, theta, hi);
+        for e in comp_of.iter_mut() {
+            *e = u32::MAX;
+        }
+        for (ci, lc) in lo_comps.iter().enumerate() {
+            for &e in lc {
+                comp_of[e as usize] = ci as u32;
+            }
+        }
         // every hi component must be fully inside one lo component
         for hc in &hi_comps {
-            let mut found = false;
-            for lc in &lo_comps {
-                if hc.iter().all(|e| lc.contains(e)) {
-                    found = true;
-                    break;
-                }
-            }
-            if !found {
+            let c0 = hc.first().map(|&e| comp_of[e as usize]).unwrap_or(u32::MAX);
+            if c0 == u32::MAX || hc.iter().any(|&e| comp_of[e as usize] != c0) {
                 return Err(format!(
                     "level {hi} component not nested in any level {lo} component"
                 ));
@@ -171,6 +207,19 @@ mod tests {
         assert_ne!(uf.find(0), uf.find(3));
         uf.union(1, 3);
         assert_eq!(uf.find(0), uf.find(4));
+    }
+
+    #[test]
+    fn union_by_size_reports_winner_and_loser() {
+        let mut uf = UnionFind::new(6);
+        assert!(uf.union(0, 1));
+        assert!(!uf.union(0, 1), "second union of same pair is a no-op");
+        // {0,1} has size 2; merging in singleton 2 must keep the big root
+        let (w, l) = uf.union_roots(2, 0).unwrap();
+        assert_eq!(w, uf.find(0));
+        assert_eq!(uf.find(l), w);
+        assert_eq!(uf.size_of(2), 3);
+        assert_eq!(uf.size_of(5), 1);
     }
 
     #[test]
@@ -202,7 +251,7 @@ mod tests {
         let (idx, _) = crate::beindex::BeIndex::build(&g, 1);
         let theta = wing_bup(&g).theta;
         check_wing_nesting(&g, &idx, &theta).unwrap();
-        let summary = wing_hierarchy_summary(&idx, &theta);
+        let summary = wing_hierarchy_summary(&g, &idx, &theta);
         // levels 1..4 present
         let ks: Vec<u64> = summary.iter().map(|l| l.k).collect();
         assert_eq!(ks, vec![1, 2, 3, 4]);

@@ -1,0 +1,305 @@
+//! Versioned binary on-disk format for [`Forest`].
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! header    48 bytes: magic "PBNGIDX1", version u32, kind u8 (+3 pad),
+//!           4 × u64 counts (n_entities, n_levels, n_nodes, n_members)
+//! hdrsum    u64 fnv64(header) — a kind/count flip cannot decode quietly
+//! sections  9 × { len: u64, payload: len bytes, fnv64(payload): u64 }
+//!           in fixed order: theta, levels, node_level, parent,
+//!           subtree_end, member_off, members, sub_nu, sub_nv
+//! ```
+//!
+//! Every section is a flat array dump (mmap-friendly: fixed offsets are
+//! computable from the header counts alone), guarded by an FNV-1a 64
+//! checksum so bit rot or truncation is rejected at load instead of
+//! surfacing as wrong query answers. [`load`] additionally runs
+//! [`Forest::validate`], so a file that checksums correctly but encodes
+//! an inconsistent forest (hand-crafted or version-skewed) is rejected
+//! too.
+
+use super::{Forest, ForestKind};
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+pub const MAGIC: &[u8; 8] = b"PBNGIDX1";
+pub const VERSION: u32 = 1;
+
+/// FNV-1a 64-bit — dependency-free integrity hash for sections.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn u32s_to_bytes(xs: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn u64s_to_bytes(xs: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn write_section<W: Write>(w: &mut W, payload: &[u8]) -> Result<u64> {
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.write_all(&fnv64(payload).to_le_bytes())?;
+    Ok(16 + payload.len() as u64)
+}
+
+/// Serialize `forest` to `path`. Returns the total bytes written.
+pub fn save(forest: &Forest, path: &Path) -> Result<u64> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating index file {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    let mut header = Vec::with_capacity(48);
+    header.extend_from_slice(MAGIC);
+    header.extend_from_slice(&VERSION.to_le_bytes());
+    header.extend_from_slice(&[forest.kind.tag(), 0, 0, 0]);
+    for count in [
+        forest.n_entities() as u64,
+        forest.levels.len() as u64,
+        forest.n_nodes() as u64,
+        forest.n_members() as u64,
+    ] {
+        header.extend_from_slice(&count.to_le_bytes());
+    }
+    w.write_all(&header)?;
+    w.write_all(&fnv64(&header).to_le_bytes())?;
+    let mut bytes = header.len() as u64 + 8;
+    bytes += write_section(&mut w, &u64s_to_bytes(&forest.theta))?;
+    bytes += write_section(&mut w, &u64s_to_bytes(&forest.levels))?;
+    bytes += write_section(&mut w, &u64s_to_bytes(&forest.node_level))?;
+    bytes += write_section(&mut w, &u32s_to_bytes(&forest.parent))?;
+    bytes += write_section(&mut w, &u32s_to_bytes(&forest.subtree_end))?;
+    bytes += write_section(&mut w, &u32s_to_bytes(&forest.member_off))?;
+    bytes += write_section(&mut w, &u32s_to_bytes(&forest.members))?;
+    bytes += write_section(&mut w, &u32s_to_bytes(&forest.sub_nu))?;
+    bytes += write_section(&mut w, &u32s_to_bytes(&forest.sub_nv))?;
+    w.flush()?;
+    Ok(bytes)
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.buf.len() {
+            bail!(
+                "truncated index file: wanted {} bytes at offset {}, have {}",
+                n,
+                self.off,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    /// Read one checksummed section, expecting exactly `expect` bytes.
+    fn section(&mut self, name: &str, expect: usize) -> Result<&'a [u8]> {
+        let len = self.u64()? as usize;
+        if len != expect {
+            bail!("section {name}: length {len} != expected {expect}");
+        }
+        let payload = self.take(len)?;
+        let sum = self.u64()?;
+        if sum != fnv64(payload) {
+            bail!("section {name}: checksum mismatch (corrupt index file)");
+        }
+        Ok(payload)
+    }
+    fn section_u32s(&mut self, name: &str, count: usize) -> Result<Vec<u32>> {
+        let b = self.section(name, count * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn section_u64s(&mut self, name: &str, count: usize) -> Result<Vec<u64>> {
+        let b = self.section(name, count * 8)?;
+        Ok(b.chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Deserialize a [`Forest`] from `path`, verifying magic, version,
+/// per-section checksums, and structural invariants.
+pub fn load(path: &Path) -> Result<Forest> {
+    let buf = std::fs::read(path)
+        .with_context(|| format!("reading index file {}", path.display()))?;
+    let mut c = Cursor { buf: &buf, off: 0 };
+    let header = c.take(48)?;
+    if &header[0..8] != MAGIC {
+        bail!("not a pbng index file (bad magic)");
+    }
+    let version = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported index version {version} (this build reads {VERSION})");
+    }
+    let hdrsum = c.u64()?;
+    if hdrsum != fnv64(header) {
+        bail!("header checksum mismatch (corrupt index file)");
+    }
+    let kind_tag = header[12];
+    let kind = ForestKind::from_tag(kind_tag)
+        .with_context(|| format!("unknown forest kind tag {kind_tag}"))?;
+    let n_entities = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
+    let n_levels = u64::from_le_bytes(header[24..32].try_into().unwrap()) as usize;
+    let n_nodes = u64::from_le_bytes(header[32..40].try_into().unwrap()) as usize;
+    let n_members = u64::from_le_bytes(header[40..48].try_into().unwrap()) as usize;
+    if n_members > n_entities {
+        bail!("header: more members ({n_members}) than entities ({n_entities})");
+    }
+    let forest = Forest {
+        kind,
+        theta: c.section_u64s("theta", n_entities)?,
+        levels: c.section_u64s("levels", n_levels)?,
+        node_level: c.section_u64s("node_level", n_nodes)?,
+        parent: c.section_u32s("parent", n_nodes)?,
+        subtree_end: c.section_u32s("subtree_end", n_nodes)?,
+        member_off: c.section_u32s("member_off", n_nodes + 1)?,
+        members: c.section_u32s("members", n_members)?,
+        sub_nu: c.section_u32s("sub_nu", n_nodes)?,
+        sub_nv: c.section_u32s("sub_nv", n_nodes)?,
+    };
+    if c.off != buf.len() {
+        bail!("trailing garbage after last section");
+    }
+    forest
+        .validate()
+        .map_err(|e| anyhow::anyhow!("index file fails structural validation: {e}"))?;
+    Ok(forest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::beindex::BeIndex;
+    use crate::graph::gen;
+    use crate::index::build_wing_forest;
+    use crate::peel::bup::wing_bup;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("pbng_codec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample_forest() -> Forest {
+        let g = gen::paper_fig1();
+        let (idx, _) = BeIndex::build(&g, 1);
+        let theta = wing_bup(&g).theta;
+        build_wing_forest(&g, &idx, &theta, 1)
+    }
+
+    #[test]
+    fn fnv64_is_stable() {
+        // reference values of FNV-1a 64
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv64(b"ab"), fnv64(b"ba"));
+    }
+
+    #[test]
+    fn roundtrip_preserves_forest_exactly() {
+        let f = sample_forest();
+        let p = tmp("roundtrip.idx");
+        let bytes = save(&f, &p).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&p).unwrap().len());
+        let g = load(&p).unwrap();
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let f = sample_forest();
+        let p = tmp("magic.idx");
+        save(&f, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).unwrap_err().to_string().contains("bad magic"));
+        bytes[0] ^= 0xFF;
+        bytes[8] = 0xEE; // version
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).unwrap_err().to_string().contains("version"));
+    }
+
+    #[test]
+    fn rejects_payload_corruption_and_truncation() {
+        let f = sample_forest();
+        let p = tmp("corrupt.idx");
+        save(&f, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // flip one byte in the middle of some section payload
+        let mut flipped = bytes.clone();
+        let mid = bytes.len() / 2;
+        flipped[mid] ^= 0x01;
+        std::fs::write(&p, &flipped).unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(
+            err.contains("checksum") || err.contains("length") || err.contains("validation"),
+            "unexpected error: {err}"
+        );
+        // truncate
+        std::fs::write(&p, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_kind_tag_and_checksummed_header() {
+        let f = sample_forest();
+        let p = tmp("kind.idx");
+        save(&f, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // a header flip without fixing the header checksum is caught...
+        bytes[12] = 9; // kind byte
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).unwrap_err().to_string().contains("checksum"));
+        // ...and even a "consistent" forgery with an unknown tag is rejected
+        let sum = fnv64(&bytes[0..48]);
+        bytes[48..56].copy_from_slice(&sum.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).unwrap_err().to_string().contains("kind"));
+    }
+
+    #[test]
+    fn empty_forest_roundtrips() {
+        let f = Forest {
+            kind: ForestKind::Wing,
+            theta: vec![0, 0, 0],
+            levels: vec![],
+            node_level: vec![],
+            parent: vec![],
+            subtree_end: vec![],
+            member_off: vec![0],
+            members: vec![],
+            sub_nu: vec![],
+            sub_nv: vec![],
+        };
+        f.validate().unwrap();
+        let p = tmp("empty.idx");
+        save(&f, &p).unwrap();
+        assert_eq!(load(&p).unwrap(), f);
+    }
+}

@@ -1,0 +1,870 @@
+//! Decomposition index: the nested-component forest (merge tree) of the
+//! k-wing / k-tip hierarchy, built once and queried many times.
+//!
+//! The paper frames peeling output as a *space-efficient index* (§2.2):
+//! once θ numbers are known, every k-wing / k-tip is reconstructible on
+//! demand. [`crate::hierarchy::kwing_components`] does that per level with
+//! a fresh union-find over all blooms — `O(levels × (blooms + m))` to walk
+//! the whole hierarchy. This module instead builds the **nested-component
+//! forest** in a *single* sweep over θ levels, descending from the densest
+//! level: entities and bloom wedges activate at their level, an
+//! incremental union-find (union by size + path halving, `O(m α)` total)
+//! merges components, and every time a component's composition changes a
+//! forest node is sealed. Each node records its level `k`, the entities
+//! that first appear in it, its parent (the containing component at the
+//! next lower level), and density stats over its subtree.
+//!
+//! Nodes are laid out in DFS preorder with members grouped per node, so a
+//! node's *subtree* — i.e. the full entity set of the component it roots —
+//! is one contiguous span of the flat `members` array. That makes the
+//! on-disk format ([`codec`]) a handful of flat, mmap-friendly arrays and
+//! makes `kwing(k)` a cut through the forest: the maximal nodes with
+//! `level ≥ k`, each answering with one contiguous span.
+//!
+//! Query serving lives in [`query`] (LRU-cached level materialization) and
+//! [`server`] (line protocol over stdin/TCP); persistence in [`codec`].
+
+pub mod codec;
+pub mod query;
+pub mod server;
+
+use crate::beindex::BeIndex;
+use crate::graph::BipartiteGraph;
+use crate::hierarchy::{LevelSummary, UnionFind};
+use crate::par::{parallel_for_chunked, RacyCell};
+
+/// Sentinel for "no node / no parent".
+pub const NONE: u32 = u32::MAX;
+
+/// What the forest's entities and levels mean.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForestKind {
+    /// Entities are edge ids; levels are wing numbers θ_e.
+    Wing,
+    /// Entities are U-side vertex ids; levels are tip numbers θ_u.
+    TipU,
+    /// Entities are V-side vertex ids; levels are tip numbers θ_v.
+    TipV,
+}
+
+impl ForestKind {
+    pub fn tag(self) -> u8 {
+        match self {
+            ForestKind::Wing => 0,
+            ForestKind::TipU => 1,
+            ForestKind::TipV => 2,
+        }
+    }
+    pub fn from_tag(t: u8) -> Option<ForestKind> {
+        match t {
+            0 => Some(ForestKind::Wing),
+            1 => Some(ForestKind::TipU),
+            2 => Some(ForestKind::TipV),
+            _ => None,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            ForestKind::Wing => "wing",
+            ForestKind::TipU => "tip-u",
+            ForestKind::TipV => "tip-v",
+        }
+    }
+    pub fn entity_name(self) -> &'static str {
+        match self {
+            ForestKind::Wing => "edge",
+            ForestKind::TipU | ForestKind::TipV => "vertex",
+        }
+    }
+}
+
+/// The nested-component forest. Immutable after build; all arrays are
+/// flat and indexed by DFS-preorder node id, so `save`/`load` are
+/// straight section dumps ([`codec`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Forest {
+    pub kind: ForestKind,
+    /// θ per entity (`m` values for wing, side vertex count for tip).
+    pub theta: Vec<u64>,
+    /// Distinct levels at which components form or merge, ascending.
+    pub levels: Vec<u64>,
+    /// Level k of each node (the highest level where this exact
+    /// component exists).
+    pub node_level: Vec<u64>,
+    /// Parent node (containing component at the next lower level where
+    /// composition changes); [`NONE`] for roots.
+    pub parent: Vec<u32>,
+    /// DFS preorder: subtree of `n` is nodes `n..subtree_end[n]`.
+    pub subtree_end: Vec<u32>,
+    /// CSR offsets (`n_nodes + 1`) into `members`: entities *introduced*
+    /// at node `n` (first level at which they join any component).
+    /// Because nodes are in DFS preorder, the full entity set of the
+    /// component rooted at `n` is the contiguous span
+    /// `members[member_off[n] .. member_off[subtree_end[n]]]`.
+    pub member_off: Vec<u32>,
+    pub members: Vec<u32>,
+    /// Distinct U vertices in the subtree (wing) / subtree entity count
+    /// (tip).
+    pub sub_nu: Vec<u32>,
+    /// Distinct V vertices in the subtree (wing) / 0 (tip).
+    pub sub_nv: Vec<u32>,
+}
+
+impl Forest {
+    pub fn n_nodes(&self) -> usize {
+        self.node_level.len()
+    }
+    pub fn n_entities(&self) -> usize {
+        self.theta.len()
+    }
+    pub fn n_members(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Entities introduced at node `n` (not the whole component).
+    pub fn own_members(&self, n: u32) -> &[u32] {
+        &self.members[self.member_off[n as usize] as usize..self.member_off[n as usize + 1] as usize]
+    }
+
+    /// Full entity set of the component rooted at `n`: contiguous span
+    /// covering the subtree (DFS layout invariant).
+    pub fn subtree_members(&self, n: u32) -> &[u32] {
+        let s = self.member_off[n as usize] as usize;
+        let e = self.member_off[self.subtree_end[n as usize] as usize] as usize;
+        &self.members[s..e]
+    }
+
+    /// Component size (entity count) of the component rooted at `n`.
+    pub fn sub_size(&self, n: u32) -> usize {
+        self.subtree_members(n).len()
+    }
+
+    /// Root nodes in DFS order.
+    pub fn roots(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut r = 0u32;
+        while (r as usize) < self.n_nodes() {
+            out.push(r);
+            r = self.subtree_end[r as usize];
+        }
+        out
+    }
+
+    /// Direct children of `n` in DFS order.
+    pub fn children(&self, n: u32) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut c = n + 1;
+        while c < self.subtree_end[n as usize] {
+            out.push(c);
+            c = self.subtree_end[c as usize];
+        }
+        out
+    }
+
+    /// Path from `n` up to its root (inclusive both ends).
+    pub fn path_to_root(&self, n: u32) -> Vec<u32> {
+        let mut out = vec![n];
+        let mut cur = n;
+        while self.parent[cur as usize] != NONE {
+            cur = self.parent[cur as usize];
+            out.push(cur);
+        }
+        out
+    }
+
+    /// Density statistic used for ranking: edges / (|U|·|V|) of the
+    /// component subgraph for wing forests (the biclique fill ratio);
+    /// the level itself for tip forests (deeper ⇒ denser).
+    pub fn density(&self, n: u32) -> f64 {
+        match self.kind {
+            ForestKind::Wing => {
+                let cells = self.sub_nu[n as usize] as f64 * self.sub_nv[n as usize] as f64;
+                if cells == 0.0 {
+                    0.0
+                } else {
+                    self.sub_size(n) as f64 / cells
+                }
+            }
+            ForestKind::TipU | ForestKind::TipV => self.node_level[n as usize] as f64,
+        }
+    }
+
+    /// The forest cut at level `k`: maximal nodes with `level ≥ k`. Each
+    /// is the root of exactly one k-level component.
+    pub fn cut(&self, k: u64) -> Vec<u32> {
+        let mut out = Vec::new();
+        for n in 0..self.n_nodes() as u32 {
+            if self.node_level[n as usize] >= k {
+                let p = self.parent[n as usize];
+                if p == NONE || self.node_level[p as usize] < k {
+                    out.push(n);
+                }
+            }
+        }
+        out
+    }
+
+    /// Materialize the k-level components, in the exact shape
+    /// [`crate::hierarchy::kwing_components`] produces: each component
+    /// sorted ascending, components ordered by first entity.
+    pub fn components(&self, k: u64) -> Vec<Vec<u32>> {
+        let mut out: Vec<Vec<u32>> = self
+            .cut(k)
+            .into_iter()
+            .map(|n| {
+                let mut c = self.subtree_members(n).to_vec();
+                c.sort_unstable();
+                c
+            })
+            .collect();
+        out.sort_by_key(|c| c.first().copied());
+        out
+    }
+
+    /// Inverse member map: entity → node that introduced it ([`NONE`] for
+    /// entities never part of any component, e.g. butterfly-free edges).
+    pub fn entity_nodes(&self) -> Vec<u32> {
+        let mut out = vec![NONE; self.n_entities()];
+        for n in 0..self.n_nodes() as u32 {
+            for &e in self.own_members(n) {
+                out[e as usize] = n;
+            }
+        }
+        out
+    }
+
+    /// Structural invariants; used by tests and by [`codec::load`] to
+    /// reject files that pass checksums but encode nonsense.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n_nodes();
+        if self.parent.len() != n
+            || self.subtree_end.len() != n
+            || self.sub_nu.len() != n
+            || self.sub_nv.len() != n
+        {
+            return Err("node array lengths disagree".into());
+        }
+        if self.member_off.len() != n + 1 {
+            return Err("member_off length must be n_nodes + 1".into());
+        }
+        if self.member_off.first() != Some(&0)
+            || self.member_off.last().copied() != Some(self.members.len() as u32)
+        {
+            return Err("member_off must span the members array".into());
+        }
+        if self.member_off.windows(2).any(|w| w[0] > w[1]) {
+            return Err("member_off not monotone".into());
+        }
+        if self.levels.windows(2).any(|w| w[0] >= w[1]) {
+            return Err("levels not strictly ascending".into());
+        }
+        for i in 0..n {
+            let end = self.subtree_end[i] as usize;
+            if end <= i || end > n {
+                return Err(format!("node {i}: bad subtree_end {end}"));
+            }
+            let p = self.parent[i];
+            if p != NONE {
+                let p = p as usize;
+                if p >= n {
+                    return Err(format!("node {i}: parent out of range"));
+                }
+                // DFS preorder: parent precedes and contains the child
+                if p >= i || self.subtree_end[p] as usize <= i {
+                    return Err(format!("node {i}: not inside parent {p} span"));
+                }
+                if self.node_level[p] >= self.node_level[i] {
+                    return Err(format!("node {i}: level not above parent level"));
+                }
+            }
+        }
+        let ne = self.n_entities() as u32;
+        if self.members.iter().any(|&e| e >= ne) {
+            return Err("member entity id out of range".into());
+        }
+        let mut seen = vec![false; ne as usize];
+        for &e in &self.members {
+            if seen[e as usize] {
+                return Err(format!("entity {e} introduced twice"));
+            }
+            seen[e as usize] = true;
+        }
+        Ok(())
+    }
+}
+
+/// Incremental forest construction. Feed levels strictly descending;
+/// within a level, `activate` entities and `union` connected pairs; the
+/// builder seals changed components into nodes at each level boundary.
+pub struct ForestBuilder {
+    uf: UnionFind,
+    present: Vec<bool>,
+    /// Node currently representing the component; indexed by entity id,
+    /// meaningful only at union-find roots.
+    node_at: Vec<u32>,
+    /// Entities that joined since the component's last node; per root.
+    pending: Vec<Vec<u32>>,
+    /// Nodes of components absorbed since the last seal; per root.
+    children_acc: Vec<Vec<u32>>,
+    touched: Vec<u32>,
+    mark: Vec<bool>,
+    cur_level: Option<u64>,
+    levels_desc: Vec<u64>,
+    tmp_level: Vec<u64>,
+    tmp_children: Vec<Vec<u32>>,
+    tmp_members: Vec<Vec<u32>>,
+}
+
+impl ForestBuilder {
+    pub fn new(n_entities: usize) -> Self {
+        ForestBuilder {
+            uf: UnionFind::new(n_entities),
+            present: vec![false; n_entities],
+            node_at: vec![NONE; n_entities],
+            pending: vec![Vec::new(); n_entities],
+            children_acc: vec![Vec::new(); n_entities],
+            touched: Vec::new(),
+            mark: vec![false; n_entities],
+            cur_level: None,
+            levels_desc: Vec::new(),
+            tmp_level: Vec::new(),
+            tmp_children: Vec::new(),
+            tmp_members: Vec::new(),
+        }
+    }
+
+    /// Start processing level `k`; must be strictly below the previous
+    /// level. Seals the components changed at the previous level.
+    pub fn begin_level(&mut self, k: u64) {
+        if let Some(prev) = self.cur_level {
+            assert!(k < prev, "levels must be fed strictly descending");
+        }
+        self.seal();
+        self.levels_desc.push(k);
+        self.cur_level = Some(k);
+    }
+
+    fn touch(&mut self, e: u32) {
+        if !self.mark[e as usize] {
+            self.mark[e as usize] = true;
+            self.touched.push(e);
+        }
+    }
+
+    /// Entity becomes part of some component at the current level.
+    pub fn activate(&mut self, e: u32) {
+        if !self.present[e as usize] {
+            self.present[e as usize] = true;
+            // a never-present entity is its own union-find root
+            self.pending[e as usize].push(e);
+            self.touch(e);
+        }
+    }
+
+    /// Entities `a` and `b` are connected at the current level
+    /// (activating both if needed).
+    pub fn union(&mut self, a: u32, b: u32) {
+        self.activate(a);
+        self.activate(b);
+        if let Some((w, l)) = self.uf.union_roots(a, b) {
+            if self.node_at[l as usize] != NONE {
+                self.children_acc[w as usize].push(self.node_at[l as usize]);
+                self.node_at[l as usize] = NONE;
+            }
+            let mut p = std::mem::take(&mut self.pending[l as usize]);
+            self.pending[w as usize].append(&mut p);
+            let mut c = std::mem::take(&mut self.children_acc[l as usize]);
+            self.children_acc[w as usize].append(&mut c);
+            self.touch(w);
+        }
+    }
+
+    /// Seal every component changed at the current level into a node.
+    fn seal(&mut self) {
+        let Some(k) = self.cur_level else {
+            return;
+        };
+        let touched = std::mem::take(&mut self.touched);
+        for &t in &touched {
+            self.mark[t as usize] = false;
+        }
+        // distinct roots of the touched entities (post-union)
+        let mut roots = Vec::new();
+        for &t in &touched {
+            let r = self.uf.find(t);
+            if !self.mark[r as usize] {
+                self.mark[r as usize] = true;
+                roots.push(r);
+            }
+        }
+        for &r in &roots {
+            self.mark[r as usize] = false;
+            let mut ch = std::mem::take(&mut self.children_acc[r as usize]);
+            let mut mem = std::mem::take(&mut self.pending[r as usize]);
+            if self.node_at[r as usize] != NONE {
+                ch.push(self.node_at[r as usize]);
+            }
+            if ch.len() == 1 && mem.is_empty() {
+                // composition unchanged — keep the existing node
+                self.node_at[r as usize] = ch[0];
+                continue;
+            }
+            if ch.is_empty() && mem.is_empty() {
+                continue;
+            }
+            mem.sort_unstable();
+            let id = self.tmp_level.len() as u32;
+            self.tmp_level.push(k);
+            self.tmp_children.push(ch);
+            self.tmp_members.push(mem);
+            self.node_at[r as usize] = id;
+        }
+    }
+
+    /// Finish the sweep: seal the last level and lay the forest out in
+    /// DFS preorder with per-node member grouping. `theta` is retained
+    /// for membership queries; density stats start zeroed (see
+    /// [`build_wing_forest`] / [`build_tip_forest`]).
+    pub fn finish(mut self, kind: ForestKind, theta: Vec<u64>) -> Forest {
+        self.seal();
+        let nt = self.tmp_level.len();
+        // parent links from children lists
+        let mut tmp_parent = vec![NONE; nt];
+        for (n, ch) in self.tmp_children.iter().enumerate() {
+            for &c in ch {
+                tmp_parent[c as usize] = n as u32;
+            }
+        }
+        // smallest entity of each subtree: children always have smaller
+        // tmp ids than their parent (created at a higher level), so one
+        // ascending pass suffices; used for deterministic ordering.
+        let mut min_entity = vec![u32::MAX; nt];
+        for n in 0..nt {
+            let own = self.tmp_members[n].first().copied().unwrap_or(u32::MAX);
+            let chmin = self.tmp_children[n]
+                .iter()
+                .map(|&c| min_entity[c as usize])
+                .min()
+                .unwrap_or(u32::MAX);
+            min_entity[n] = own.min(chmin);
+        }
+        for ch in self.tmp_children.iter_mut() {
+            ch.sort_unstable_by_key(|&c| min_entity[c as usize]);
+        }
+        let mut tmp_roots: Vec<u32> = (0..nt as u32)
+            .filter(|&n| tmp_parent[n as usize] == NONE)
+            .collect();
+        tmp_roots.sort_unstable_by_key(|&n| min_entity[n as usize]);
+        // subtree sizes bottom-up (children before parents in tmp order)
+        let mut size = vec![1u32; nt];
+        for n in 0..nt {
+            for &c in &self.tmp_children[n] {
+                let s = size[c as usize];
+                size[n] += s;
+            }
+        }
+        // DFS preorder
+        let mut order = Vec::with_capacity(nt); // preorder list of tmp ids
+        let mut stack: Vec<u32> = tmp_roots.iter().rev().copied().collect();
+        while let Some(n) = stack.pop() {
+            order.push(n);
+            for &c in self.tmp_children[n as usize].iter().rev() {
+                stack.push(c);
+            }
+        }
+        debug_assert_eq!(order.len(), nt);
+        let mut new_id = vec![NONE; nt];
+        for (i, &old) in order.iter().enumerate() {
+            new_id[old as usize] = i as u32;
+        }
+        let mut node_level = Vec::with_capacity(nt);
+        let mut parent = Vec::with_capacity(nt);
+        let mut subtree_end = Vec::with_capacity(nt);
+        let mut member_off = Vec::with_capacity(nt + 1);
+        let mut members = Vec::new();
+        member_off.push(0u32);
+        for (i, &old) in order.iter().enumerate() {
+            node_level.push(self.tmp_level[old as usize]);
+            let p = tmp_parent[old as usize];
+            parent.push(if p == NONE { NONE } else { new_id[p as usize] });
+            subtree_end.push(i as u32 + size[old as usize]);
+            members.extend_from_slice(&self.tmp_members[old as usize]);
+            member_off.push(members.len() as u32);
+        }
+        let mut levels = self.levels_desc;
+        levels.reverse();
+        // drop fed levels at which nothing ever happened
+        let used: std::collections::HashSet<u64> = node_level.iter().copied().collect();
+        levels.retain(|k| used.contains(k));
+        let nt_f = node_level.len();
+        Forest {
+            kind,
+            theta,
+            levels,
+            node_level,
+            parent,
+            subtree_end,
+            member_off,
+            members,
+            sub_nu: vec![0; nt_f],
+            sub_nv: vec![0; nt_f],
+        }
+    }
+}
+
+/// Build the wing forest: one descending sweep over the bloom wedges of
+/// the BE-Index. A wedge (twin-edge pair) of bloom `B` activates at
+/// `min(θ_e, θ_t)`; once `B` has ≥ 2 active wedges, all their edges are
+/// pairwise butterfly-connected (Property 1) and merge. Harvesting the
+/// wedge events is parallel over blooms; the union-find sweep itself is
+/// sequential and `O(W α)` in the number of wedges `W`.
+pub fn build_wing_forest(
+    g: &BipartiteGraph,
+    idx: &BeIndex,
+    theta: &[u64],
+    threads: usize,
+) -> Forest {
+    build_wing_forest_opts(g, idx, theta, threads, true)
+}
+
+/// [`build_wing_forest`] with the subtree density-stats pass optional:
+/// summaries and pure component queries never read `sub_nu`/`sub_nv`, and
+/// the stats pass is the only super-linear step (`O(Σ subtree sizes)`).
+pub fn build_wing_forest_opts(
+    g: &BipartiteGraph,
+    idx: &BeIndex,
+    theta: &[u64],
+    threads: usize,
+    with_stats: bool,
+) -> Forest {
+    assert_eq!(theta.len(), g.m(), "theta must be per-edge wing numbers");
+    let nb = idx.n_blooms();
+    let threads = threads.max(1);
+    // (level, bloom, e, t) wedge-activation events, harvested in parallel
+    let buffers: Vec<std::sync::Mutex<Vec<(u64, u32, u32, u32)>>> =
+        (0..threads).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    parallel_for_chunked(nb, threads, 64, |t, lo, hi| {
+        let mut buf = buffers[t].lock().unwrap();
+        for b in lo..hi {
+            for &(e, tw) in idx.entries(b as u32) {
+                if e < tw {
+                    continue; // count each wedge once
+                }
+                let mw = theta[e as usize].min(theta[tw as usize]);
+                if mw >= 1 {
+                    buf.push((mw, b as u32, e, tw));
+                }
+            }
+        }
+    });
+    let mut events: Vec<(u64, u32, u32, u32)> = Vec::new();
+    for b in &buffers {
+        events.append(&mut b.lock().unwrap());
+    }
+    // full deterministic order: by level descending, then bloom/edge ids
+    events.sort_unstable_by(|a, b| b.0.cmp(&a.0).then_with(|| (a.1, a.2, a.3).cmp(&(b.1, b.2, b.3))));
+
+    let mut fb = ForestBuilder::new(g.m());
+    let mut bloom_active = vec![0u32; nb];
+    let mut bloom_first = vec![(0u32, 0u32); nb];
+    let mut cur: Option<u64> = None;
+    for &(level, b, e, t) in &events {
+        if cur != Some(level) {
+            fb.begin_level(level);
+            cur = Some(level);
+        }
+        let bi = b as usize;
+        bloom_active[bi] += 1;
+        match bloom_active[bi] {
+            1 => bloom_first[bi] = (e, t), // one wedge = no butterfly yet
+            2 => {
+                let (e0, t0) = bloom_first[bi];
+                fb.union(e0, t0);
+                fb.union(e, t);
+                fb.union(e0, e);
+            }
+            _ => {
+                fb.union(e, t);
+                fb.union(bloom_first[bi].0, e);
+            }
+        }
+    }
+    let mut forest = fb.finish(ForestKind::Wing, theta.to_vec());
+    if with_stats {
+        compute_wing_stats(&mut forest, g, threads);
+    }
+    forest
+}
+
+/// Build a tip forest for one side. The repo's tip hierarchy is the
+/// nested vertex-set chain (`ktip_vertices` per level): every vertex with
+/// θ ≥ k belongs to the single k-level set, so the forest is one chain of
+/// nodes, each introducing the vertices of its level.
+pub fn build_tip_forest(theta: &[u64], kind: ForestKind) -> Forest {
+    assert!(matches!(kind, ForestKind::TipU | ForestKind::TipV));
+    let mut order: Vec<u32> = (0..theta.len() as u32)
+        .filter(|&v| theta[v as usize] > 0)
+        .collect();
+    order.sort_unstable_by(|&a, &b| {
+        theta[b as usize]
+            .cmp(&theta[a as usize])
+            .then(a.cmp(&b))
+    });
+    let mut fb = ForestBuilder::new(theta.len());
+    let mut cur: Option<u64> = None;
+    let mut anchor: Option<u32> = None;
+    for &v in &order {
+        let k = theta[v as usize];
+        if cur != Some(k) {
+            fb.begin_level(k);
+            cur = Some(k);
+        }
+        match anchor {
+            None => {
+                fb.activate(v);
+                anchor = Some(v);
+            }
+            Some(a) => fb.union(a, v),
+        }
+    }
+    let mut forest = fb.finish(kind, theta.to_vec());
+    for n in 0..forest.n_nodes() as u32 {
+        forest.sub_nu[n as usize] = forest.sub_size(n) as u32;
+        forest.sub_nv[n as usize] = 0;
+    }
+    forest
+}
+
+/// Fill `sub_nu` / `sub_nv`: distinct U / V endpoints of each node's
+/// subtree edge span. Parallel over nodes with per-thread stamp scratch;
+/// each node index is written by exactly one chunk iteration. Costs
+/// `O(Σ subtree sizes)` ≤ `O(m · depth)` — a one-off build step.
+fn compute_wing_stats(forest: &mut Forest, g: &BipartiteGraph, threads: usize) {
+    let n = forest.n_nodes();
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1);
+    let sub_nu = RacyCell::new(vec![0u32; n]);
+    let sub_nv = RacyCell::new(vec![0u32; n]);
+    let scratch: Vec<std::sync::Mutex<(Vec<u32>, Vec<u32>)>> = (0..threads)
+        .map(|_| std::sync::Mutex::new((vec![NONE; g.nu()], vec![NONE; g.nv()])))
+        .collect();
+    let f: &Forest = forest;
+    parallel_for_chunked(n, threads, 8, |t, lo, hi| {
+        let mut sc = scratch[t].lock().unwrap();
+        let (stamp_u, stamp_v) = &mut *sc;
+        for node in lo..hi {
+            let mut cu = 0u32;
+            let mut cv = 0u32;
+            for &e in f.subtree_members(node as u32) {
+                let (u, v) = g.edge(e);
+                if stamp_u[u as usize] != node as u32 {
+                    stamp_u[u as usize] = node as u32;
+                    cu += 1;
+                }
+                if stamp_v[v as usize] != node as u32 {
+                    stamp_v[v as usize] = node as u32;
+                    cv += 1;
+                }
+            }
+            // SAFETY: each `node` index is visited by exactly one chunk,
+            // so writes to sub_nu[node] / sub_nv[node] are disjoint.
+            unsafe {
+                sub_nu.get_mut()[node] = cu;
+                sub_nv.get_mut()[node] = cv;
+            }
+        }
+    });
+    forest.sub_nu = sub_nu.into_inner();
+    forest.sub_nv = sub_nv.into_inner();
+}
+
+/// Per-level summaries read off the forest: one `O(nodes)` cut per level
+/// instead of a fresh union-find over all blooms.
+pub fn forest_level_summaries(forest: &Forest) -> Vec<LevelSummary> {
+    let mut levels: Vec<u64> = forest.theta.iter().copied().filter(|&t| t > 0).collect();
+    levels.sort_unstable();
+    levels.dedup();
+    let mut sorted_theta: Vec<u64> = forest.theta.clone();
+    sorted_theta.sort_unstable();
+    levels
+        .into_iter()
+        .map(|k| {
+            let cut = forest.cut(k);
+            let entities = sorted_theta.len() - sorted_theta.partition_point(|&t| t < k);
+            LevelSummary {
+                k,
+                entities,
+                components: cut.len(),
+                largest: cut.iter().map(|&n| forest.sub_size(n)).max().unwrap_or(0),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::hierarchy::kwing_components;
+    use crate::peel::bup::wing_bup;
+
+    fn wing_forest(g: &BipartiteGraph, threads: usize) -> (Forest, BeIndex, Vec<u64>) {
+        let (idx, _) = BeIndex::build(g, 1);
+        let theta = wing_bup(g).theta;
+        let f = build_wing_forest(g, &idx, &theta, threads);
+        (f, idx, theta)
+    }
+
+    #[test]
+    fn fig1_forest_matches_direct_components_at_every_level() {
+        let g = gen::paper_fig1();
+        let (f, idx, theta) = wing_forest(&g, 2);
+        f.validate().unwrap();
+        let max = *theta.iter().max().unwrap();
+        for k in 0..=max + 1 {
+            assert_eq!(
+                f.components(k),
+                kwing_components(&idx, &theta, k),
+                "level {k} diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn fig1_forest_shape() {
+        let g = gen::paper_fig1();
+        let (f, _, _) = wing_forest(&g, 1);
+        // four disconnected dense blocks → four leaves; the hierarchy
+        // never merges them (bridges are butterfly-free), so every node
+        // chain is disjoint and there are exactly 4 roots.
+        assert_eq!(f.roots().len(), 4);
+        assert_eq!(f.levels, vec![1, 2, 3, 4]);
+        // each root's component is one block; the θ=4 block has 9 edges
+        let top = f
+            .cut(4)
+            .into_iter()
+            .map(|n| f.sub_size(n))
+            .collect::<Vec<_>>();
+        assert_eq!(top, vec![9]);
+    }
+
+    #[test]
+    fn forest_is_deterministic_across_thread_counts() {
+        let g = gen::zipf(60, 60, 400, 1.2, 1.2, 91);
+        let (f1, _, _) = wing_forest(&g, 1);
+        let (f4, _, _) = wing_forest(&g, 4);
+        assert_eq!(f1, f4);
+    }
+
+    #[test]
+    fn butterfly_free_graph_has_empty_forest() {
+        // a tree: no butterflies, no wings
+        let g = crate::graph::GraphBuilder::new()
+            .edges(&[(0, 0), (0, 1), (1, 1), (2, 1)])
+            .build();
+        let (f, idx, theta) = wing_forest(&g, 1);
+        assert_eq!(f.n_nodes(), 0);
+        assert!(f.components(1).is_empty());
+        assert!(kwing_components(&idx, &theta, 1).is_empty());
+    }
+
+    #[test]
+    fn random_graphs_forest_equals_direct_per_level() {
+        crate::testkit::check_property("forest-vs-direct", 0x1D8, 8, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(
+                6 + rng.usize_below(14),
+                6 + rng.usize_below(14),
+                20 + rng.usize_below(90),
+                seed,
+            );
+            let (idx, _) = BeIndex::build(&g, 1);
+            let theta = wing_bup(&g).theta;
+            let f = build_wing_forest(&g, &idx, &theta, 2);
+            if let Err(e) = f.validate() {
+                return Err(e);
+            }
+            let max = theta.iter().max().copied().unwrap_or(0);
+            for k in 0..=max + 1 {
+                if f.components(k) != kwing_components(&idx, &theta, k) {
+                    return Err(format!("level {k} components diverged"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tip_forest_is_a_chain_matching_ktip_vertices() {
+        let g = gen::paper_fig1();
+        let theta = crate::count::brute::brute_tip_numbers(&g, crate::graph::Side::U);
+        let f = build_tip_forest(&theta, ForestKind::TipU);
+        f.validate().unwrap();
+        assert!(f.roots().len() <= 1);
+        let max = *theta.iter().max().unwrap();
+        for k in 1..=max + 1 {
+            let comps = f.components(k);
+            let want = crate::hierarchy::ktip_vertices(&theta, k);
+            if want.is_empty() {
+                assert!(comps.is_empty(), "level {k}");
+            } else {
+                assert_eq!(comps.len(), 1, "level {k}");
+                assert_eq!(comps[0], want, "level {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn subtree_spans_are_contiguous_and_nested() {
+        let g = gen::zipf(40, 40, 260, 1.3, 1.3, 17);
+        let (f, _, _) = wing_forest(&g, 2);
+        for n in 0..f.n_nodes() as u32 {
+            for c in f.children(n) {
+                assert_eq!(f.parent[c as usize], n);
+                // child span inside parent span
+                let ps = f.member_off[n as usize];
+                let pe = f.member_off[f.subtree_end[n as usize] as usize];
+                let cs = f.member_off[c as usize];
+                let ce = f.member_off[f.subtree_end[c as usize] as usize];
+                assert!(ps <= cs && ce <= pe);
+                assert!(f.node_level[c as usize] > f.node_level[n as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn wing_stats_count_distinct_endpoints() {
+        let g = gen::biclique(3, 4);
+        let (f, _, _) = wing_forest(&g, 1);
+        // single component: the full K_{3,4}
+        assert_eq!(f.roots().len(), 1);
+        let r = f.roots()[0];
+        assert_eq!(f.sub_size(r), 12);
+        assert_eq!(f.sub_nu[r as usize], 3);
+        assert_eq!(f.sub_nv[r as usize], 4);
+        assert!((f.density(r) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summaries_match_legacy_shape() {
+        let g = gen::paper_fig1();
+        let (f, idx, theta) = wing_forest(&g, 1);
+        let s = forest_level_summaries(&f);
+        let ks: Vec<u64> = s.iter().map(|l| l.k).collect();
+        assert_eq!(ks, vec![1, 2, 3, 4]);
+        for l in &s {
+            let direct = kwing_components(&idx, &theta, l.k);
+            assert_eq!(l.components, direct.len());
+            assert_eq!(
+                l.largest,
+                direct.iter().map(|c| c.len()).max().unwrap_or(0)
+            );
+            assert_eq!(
+                l.entities,
+                crate::hierarchy::kwing_edges(&theta, l.k).len()
+            );
+        }
+    }
+}

@@ -1,0 +1,298 @@
+//! Query API over a built [`Forest`]: membership, level materialization
+//! (k-wing / k-tip via forest cuts), density ranking, and traversal —
+//! with an LRU cache of materialized levels so repeated queries for hot
+//! levels (the common serving pattern) cost one clone of an `Arc`.
+
+use super::{Forest, ForestKind, NONE};
+use crate::hierarchy::LevelSummary;
+use crate::metrics::IndexMeters;
+use std::sync::{Arc, Mutex};
+
+/// Denormalized per-node facts for reporting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeInfo {
+    pub id: u32,
+    pub level: u64,
+    /// Entities in the component rooted here (subtree span).
+    pub size: usize,
+    pub nu: u32,
+    pub nv: u32,
+    pub density: f64,
+    pub parent: Option<u32>,
+}
+
+/// Where an entity lives in the hierarchy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Membership {
+    pub entity: u32,
+    pub theta: u64,
+    /// Root-ward path of components containing the entity, deepest
+    /// first; empty when the entity belongs to no component (θ = 0 or a
+    /// butterfly-free edge).
+    pub path: Vec<u32>,
+}
+
+/// Move-to-front LRU over materialized levels. Level counts are small
+/// (distinct θ values), so a vector scan beats hash overhead.
+struct LevelCache {
+    cap: usize,
+    entries: Vec<(u64, Arc<Vec<Vec<u32>>>)>,
+}
+
+impl LevelCache {
+    fn get(&mut self, k: u64) -> Option<Arc<Vec<Vec<u32>>>> {
+        let pos = self.entries.iter().position(|(key, _)| *key == k)?;
+        let hit = self.entries.remove(pos);
+        let out = hit.1.clone();
+        self.entries.insert(0, hit);
+        Some(out)
+    }
+    fn put(&mut self, k: u64, v: Arc<Vec<Vec<u32>>>) {
+        self.entries.insert(0, (k, v));
+        self.entries.truncate(self.cap.max(1));
+    }
+}
+
+/// Thread-safe serving facade over an immutable forest.
+pub struct QueryEngine {
+    forest: Forest,
+    /// entity → node that introduced it ([`NONE`] if never a member).
+    entity_node: Vec<u32>,
+    cache: Mutex<LevelCache>,
+    pub meters: IndexMeters,
+}
+
+impl QueryEngine {
+    pub fn new(forest: Forest) -> Self {
+        Self::with_cache_capacity(forest, 8)
+    }
+
+    pub fn with_cache_capacity(forest: Forest, cap: usize) -> Self {
+        let entity_node = forest.entity_nodes();
+        QueryEngine {
+            forest,
+            entity_node,
+            cache: Mutex::new(LevelCache {
+                cap,
+                entries: Vec::new(),
+            }),
+            meters: IndexMeters::new(),
+        }
+    }
+
+    pub fn forest(&self) -> &Forest {
+        &self.forest
+    }
+
+    pub fn kind(&self) -> ForestKind {
+        self.forest.kind
+    }
+
+    /// The stored level actually answering a query for `k`: the smallest
+    /// level ≥ k (cuts are identical for every k in the gap between two
+    /// stored levels). `None` when k exceeds the deepest level — the
+    /// k-level is empty.
+    pub fn effective_level(&self, k: u64) -> Option<u64> {
+        let i = self.forest.levels.partition_point(|&l| l < k);
+        self.forest.levels.get(i).copied()
+    }
+
+    /// Materialize the k-level components (k-wings for a wing forest,
+    /// the k-tip vertex set for a tip forest), LRU-cached per effective
+    /// level. Matches `hierarchy::kwing_components` byte for byte.
+    pub fn components(&self, k: u64) -> Arc<Vec<Vec<u32>>> {
+        self.meters.queries.add(1);
+        let Some(eff) = self.effective_level(k) else {
+            return Arc::new(Vec::new());
+        };
+        if let Some(hit) = self.cache.lock().unwrap().get(eff) {
+            self.meters.cache_hits.add(1);
+            return hit;
+        }
+        self.meters.cache_misses.add(1);
+        // materialize outside the lock so concurrent hits on other levels
+        // are not serialized behind a slow miss
+        let comps = Arc::new(self.forest.components(eff));
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(raced) = cache.get(eff) {
+            return raced; // another thread materialized it meanwhile
+        }
+        cache.put(eff, comps.clone());
+        comps
+    }
+
+    /// Hierarchy position of one entity.
+    pub fn membership(&self, entity: u32) -> Option<Membership> {
+        if entity as usize >= self.forest.n_entities() {
+            return None;
+        }
+        self.meters.queries.add(1);
+        let node = self.entity_node[entity as usize];
+        let path = if node == NONE {
+            Vec::new()
+        } else {
+            self.forest.path_to_root(node)
+        };
+        Some(Membership {
+            entity,
+            theta: self.forest.theta[entity as usize],
+            path,
+        })
+    }
+
+    /// The densest component containing `entity` (max density along its
+    /// root-ward path; the deepest wins ties).
+    pub fn densest_containing(&self, entity: u32) -> Option<NodeInfo> {
+        let m = self.membership(entity)?;
+        let best = m.path.iter().copied().max_by(|&a, &b| {
+            self.forest
+                .density(a)
+                .total_cmp(&self.forest.density(b))
+                .then(self.forest.node_level[a as usize].cmp(&self.forest.node_level[b as usize]))
+        })?;
+        Some(self.node_info(best))
+    }
+
+    /// The `n` densest components anywhere in the hierarchy.
+    pub fn top_k_densest(&self, n: usize) -> Vec<NodeInfo> {
+        self.meters.queries.add(1);
+        let mut ids: Vec<u32> = (0..self.forest.n_nodes() as u32).collect();
+        ids.sort_by(|&a, &b| {
+            self.forest
+                .density(b)
+                .total_cmp(&self.forest.density(a))
+                .then(a.cmp(&b))
+        });
+        ids.truncate(n);
+        ids.into_iter().map(|i| self.node_info(i)).collect()
+    }
+
+    pub fn node_info(&self, n: u32) -> NodeInfo {
+        let p = self.forest.parent[n as usize];
+        NodeInfo {
+            id: n,
+            level: self.forest.node_level[n as usize],
+            size: self.forest.sub_size(n),
+            nu: self.forest.sub_nu[n as usize],
+            nv: self.forest.sub_nv[n as usize],
+            density: self.forest.density(n),
+            parent: if p == NONE { None } else { Some(p) },
+        }
+    }
+
+    /// Per-level summaries (`hierarchy::wing_hierarchy_summary` shape).
+    pub fn summaries(&self) -> Vec<LevelSummary> {
+        self.meters.queries.add(1);
+        super::forest_level_summaries(&self.forest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::beindex::BeIndex;
+    use crate::graph::gen;
+    use crate::index::build_wing_forest;
+    use crate::peel::bup::wing_bup;
+
+    fn engine() -> QueryEngine {
+        let g = gen::paper_fig1();
+        let (idx, _) = BeIndex::build(&g, 1);
+        let theta = wing_bup(&g).theta;
+        QueryEngine::new(build_wing_forest(&g, &idx, &theta, 1))
+    }
+
+    #[test]
+    fn effective_level_rounds_up() {
+        let e = engine();
+        assert_eq!(e.effective_level(0), Some(1));
+        assert_eq!(e.effective_level(1), Some(1));
+        assert_eq!(e.effective_level(3), Some(3));
+        assert_eq!(e.effective_level(4), Some(4));
+        assert_eq!(e.effective_level(5), None);
+    }
+
+    #[test]
+    fn cache_hits_on_repeat_and_on_gap_levels() {
+        let e = engine();
+        let a = e.components(2);
+        let b = e.components(2);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(e.meters.cache_hits.get(), 1);
+        assert_eq!(e.meters.cache_misses.get(), 1);
+        // k=0 resolves to effective level 1 — a different entry...
+        let _ = e.components(0);
+        assert_eq!(e.meters.cache_misses.get(), 2);
+        // ...and k=1 hits it
+        let _ = e.components(1);
+        assert_eq!(e.meters.cache_hits.get(), 2);
+        // above the max level: served without touching the cache
+        assert!(e.components(99).is_empty());
+        assert_eq!(e.meters.cache_misses.get(), 2);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let g = gen::paper_fig1();
+        let (idx, _) = BeIndex::build(&g, 1);
+        let theta = wing_bup(&g).theta;
+        let e = QueryEngine::with_cache_capacity(build_wing_forest(&g, &idx, &theta, 1), 2);
+        let _ = e.components(1); // miss {1}
+        let _ = e.components(2); // miss {2,1}
+        let _ = e.components(1); // hit  {1,2}
+        let _ = e.components(3); // miss {3,1} — evicts 2
+        let _ = e.components(2); // miss again
+        assert_eq!(e.meters.cache_hits.get(), 1);
+        assert_eq!(e.meters.cache_misses.get(), 4);
+    }
+
+    #[test]
+    fn membership_walks_to_root() {
+        let e = engine();
+        // edge 0 is in the K_{2,2} block: θ = 1, single-node path
+        let m = e.membership(0).unwrap();
+        assert_eq!(m.theta, 1);
+        assert_eq!(m.path.len(), 1);
+        // the K_{3,3} block (θ=4): its edges sit on a leaf of a chain
+        let top_edge = e
+            .forest()
+            .theta
+            .iter()
+            .position(|&t| t == 4)
+            .unwrap() as u32;
+        let m = e.membership(top_edge).unwrap();
+        assert_eq!(m.theta, 4);
+        assert!(!m.path.is_empty());
+        let levels: Vec<u64> = m
+            .path
+            .iter()
+            .map(|&n| e.forest().node_level[n as usize])
+            .collect();
+        // deepest-first, strictly decreasing levels
+        assert!(levels.windows(2).all(|w| w[0] > w[1]));
+        assert_eq!(levels[0], 4);
+        // out-of-range entity
+        assert!(e.membership(10_000).is_none());
+    }
+
+    #[test]
+    fn densest_and_top_k() {
+        let e = engine();
+        // fig1's densest block is the K_{3,3} (fill ratio 1.0, 9 edges)
+        let top = e.top_k_densest(1);
+        assert_eq!(top.len(), 1);
+        assert!((top[0].density - 1.0).abs() < 1e-9);
+        let top_edge = e
+            .forest()
+            .theta
+            .iter()
+            .position(|&t| t == 4)
+            .unwrap() as u32;
+        let d = e.densest_containing(top_edge).unwrap();
+        assert_eq!(d.level, 4);
+        assert_eq!(d.size, 9);
+        // an isolated θ=0 bridge edge belongs nowhere
+        let bridge = e.forest().theta.iter().position(|&t| t == 0).unwrap() as u32;
+        assert!(e.densest_containing(bridge).is_none());
+    }
+}

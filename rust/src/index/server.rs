@@ -1,0 +1,342 @@
+//! Line-protocol serving of hierarchy queries.
+//!
+//! One command per line, one multi-line response terminated by `END`.
+//! The same handler backs three transports: the `pbng query` one-shot
+//! CLI, the `pbng serve` stdin loop, and the `pbng serve --port` TCP
+//! listener (thread per connection over a shared [`QueryEngine`]).
+//!
+//! ```text
+//! components <k>      k-level components (kwing/ktip aliases check kind)
+//! membership <id>     θ + root-ward component path of one entity
+//! densest <id>        densest component containing the entity
+//! top <n>             n densest components overall
+//! summary             per-level table (k, entities, components, largest)
+//! stats               index shape + query/cache counters
+//! help                command list
+//! quit                close the session
+//! ```
+
+use super::query::{NodeInfo, QueryEngine};
+use super::ForestKind;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// Outcome of one command.
+pub enum Reply {
+    Body(String),
+    Quit,
+}
+
+fn node_line(info: &NodeInfo) -> String {
+    format!(
+        "node {} level {} size {} nu {} nv {} density {:.6} parent {}",
+        info.id,
+        info.level,
+        info.size,
+        info.nu,
+        info.nv,
+        info.density,
+        info.parent
+            .map(|p| p.to_string())
+            .unwrap_or_else(|| "-".to_string()),
+    )
+}
+
+fn parse_num<T: std::str::FromStr>(tok: Option<&str>, what: &str) -> Result<T, String> {
+    tok.ok_or_else(|| format!("missing {what}"))?
+        .parse()
+        .map_err(|_| format!("bad {what}: expected a number"))
+}
+
+fn components_reply(engine: &QueryEngine, k: u64) -> String {
+    let comps = engine.components(k);
+    let mut out = match engine.effective_level(k) {
+        Some(eff) => format!("components {} level {} query-k {}", comps.len(), eff, k),
+        None => format!("components 0 query-k {} (above deepest level)", k),
+    };
+    for (i, c) in comps.iter().enumerate() {
+        out.push_str(&format!("\n{} size {}:", i, c.len()));
+        for e in c.iter() {
+            out.push(' ');
+            out.push_str(&e.to_string());
+        }
+    }
+    out
+}
+
+/// Execute one protocol line. Never panics on malformed input; errors
+/// come back as `ERR <reason>` bodies.
+pub fn handle_command(engine: &QueryEngine, line: &str) -> Reply {
+    let mut toks = line.split_whitespace();
+    let verb = match toks.next() {
+        Some(v) => v.to_ascii_lowercase(),
+        None => return Reply::Body("ERR empty command (try: help)".to_string()),
+    };
+    let body = match verb.as_str() {
+        "quit" | "exit" => return Reply::Quit,
+        "help" => Ok(concat!(
+            "commands:\n",
+            "  components <k>   k-level components (aliases: kwing, ktip)\n",
+            "  membership <id>  theta + component path of one entity\n",
+            "  densest <id>     densest component containing the entity\n",
+            "  top <n>          n densest components\n",
+            "  summary          per-level hierarchy table\n",
+            "  stats            index shape + query counters\n",
+            "  quit             close the session"
+        )
+        .to_string()),
+        "components" | "kwing" | "ktip" => {
+            let kind_ok = match verb.as_str() {
+                "kwing" => engine.kind() == ForestKind::Wing,
+                "ktip" => matches!(engine.kind(), ForestKind::TipU | ForestKind::TipV),
+                _ => true,
+            };
+            if !kind_ok {
+                Err(format!(
+                    "this is a {} index; use `components` or the matching verb",
+                    engine.kind().name()
+                ))
+            } else {
+                parse_num::<u64>(toks.next(), "level k").map(|k| components_reply(engine, k))
+            }
+        }
+        "membership" => parse_num::<u32>(toks.next(), "entity id").and_then(|e| {
+            let m = engine
+                .membership(e)
+                .ok_or_else(|| format!("entity {e} out of range"))?;
+            let mut out = format!(
+                "{} {} theta {}",
+                engine.kind().entity_name(),
+                m.entity,
+                m.theta
+            );
+            if m.path.is_empty() {
+                out.push_str("\nno component (not part of any level)");
+            } else {
+                for &n in &m.path {
+                    out.push('\n');
+                    out.push_str(&node_line(&engine.node_info(n)));
+                }
+            }
+            Ok(out)
+        }),
+        "densest" => parse_num::<u32>(toks.next(), "entity id").and_then(|e| {
+            if e as usize >= engine.forest().n_entities() {
+                return Err(format!("entity {e} out of range"));
+            }
+            Ok(match engine.densest_containing(e) {
+                Some(info) => node_line(&info),
+                None => "none".to_string(),
+            })
+        }),
+        "top" => parse_num::<usize>(toks.next(), "count").map(|n| {
+            let infos = engine.top_k_densest(n);
+            if infos.is_empty() {
+                "none".to_string()
+            } else {
+                infos
+                    .iter()
+                    .map(node_line)
+                    .collect::<Vec<_>>()
+                    .join("\n")
+            }
+        }),
+        "summary" => Ok(engine
+            .summaries()
+            .iter()
+            .map(|l| {
+                format!(
+                    "level {} entities {} components {} largest {}",
+                    l.k, l.entities, l.components, l.largest
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")),
+        "stats" => {
+            let f = engine.forest();
+            Ok(format!(
+                "kind {} entities {} nodes {} levels {} members {}\nqueries {} cache-hits {} cache-misses {}",
+                f.kind.name(),
+                f.n_entities(),
+                f.n_nodes(),
+                f.levels.len(),
+                f.n_members(),
+                engine.meters.queries.get(),
+                engine.meters.cache_hits.get(),
+                engine.meters.cache_misses.get(),
+            ))
+        }
+        other => Err(format!("unknown command '{other}' (try: help)")),
+    };
+    Reply::Body(match body {
+        Ok(b) => b,
+        Err(e) => format!("ERR {e}"),
+    })
+}
+
+fn session<R: BufRead, W: Write>(engine: &QueryEngine, reader: R, mut writer: W) -> std::io::Result<()> {
+    writeln!(
+        writer,
+        "READY kind={} entities={} nodes={} levels={}",
+        engine.kind().name(),
+        engine.forest().n_entities(),
+        engine.forest().n_nodes(),
+        engine.forest().levels.len()
+    )?;
+    writer.flush()?;
+    for line in reader.lines() {
+        let line = line?;
+        match handle_command(engine, &line) {
+            Reply::Quit => {
+                writeln!(writer, "BYE")?;
+                writer.flush()?;
+                break;
+            }
+            Reply::Body(b) => {
+                writeln!(writer, "{b}")?;
+                writeln!(writer, "END")?;
+                writer.flush()?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Serve queries over stdin/stdout until EOF or `quit`.
+pub fn serve_stdin(engine: &QueryEngine) -> std::io::Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    session(engine, stdin.lock(), stdout.lock())
+}
+
+/// Serve one accepted TCP connection to completion.
+pub fn handle_connection(engine: &QueryEngine, stream: TcpStream) -> std::io::Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    session(engine, reader, stream)
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:7878`) and serve forever, one thread per
+/// connection.
+pub fn serve_tcp(engine: Arc<QueryEngine>, addr: &str) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("pbng index server listening on {}", listener.local_addr()?);
+    serve_listener(engine, listener)
+}
+
+/// Accept-loop over an already-bound listener (lets callers pick
+/// ephemeral ports; used by the example and tests).
+pub fn serve_listener(engine: Arc<QueryEngine>, listener: TcpListener) -> std::io::Result<()> {
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let engine = engine.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_connection(&engine, stream) {
+                eprintln!("connection error: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::beindex::BeIndex;
+    use crate::graph::gen;
+    use crate::index::{build_tip_forest, build_wing_forest};
+    use crate::peel::bup::wing_bup;
+
+    fn engine() -> QueryEngine {
+        let g = gen::paper_fig1();
+        let (idx, _) = BeIndex::build(&g, 1);
+        let theta = wing_bup(&g).theta;
+        QueryEngine::new(build_wing_forest(&g, &idx, &theta, 1))
+    }
+
+    fn body(engine: &QueryEngine, line: &str) -> String {
+        match handle_command(engine, line) {
+            Reply::Body(b) => b,
+            Reply::Quit => panic!("unexpected quit"),
+        }
+    }
+
+    #[test]
+    fn kwing_reply_lists_components() {
+        let e = engine();
+        let b = body(&e, "kwing 4");
+        assert!(b.starts_with("components 1 level 4"), "{b}");
+        assert!(b.contains("size 9:"), "{b}");
+        let b0 = body(&e, "components 99");
+        assert!(b0.starts_with("components 0"), "{b0}");
+    }
+
+    #[test]
+    fn kind_mismatch_and_errors() {
+        let e = engine();
+        assert!(body(&e, "ktip 1").starts_with("ERR"));
+        assert!(body(&e, "kwing").starts_with("ERR"));
+        assert!(body(&e, "kwing x").starts_with("ERR"));
+        assert!(body(&e, "frobnicate").starts_with("ERR"));
+        assert!(body(&e, "").starts_with("ERR"));
+        assert!(body(&e, "membership 99999").starts_with("ERR"));
+        assert!(matches!(handle_command(&e, "quit"), Reply::Quit));
+    }
+
+    #[test]
+    fn ktip_verb_works_on_tip_index() {
+        let g = gen::paper_fig1();
+        let theta = crate::count::brute::brute_tip_numbers(&g, crate::graph::Side::U);
+        let e = QueryEngine::new(build_tip_forest(&theta, crate::index::ForestKind::TipU));
+        let b = body(&e, "ktip 1");
+        assert!(b.starts_with("components 1"), "{b}");
+        assert!(body(&e, "kwing 1").starts_with("ERR"));
+    }
+
+    #[test]
+    fn stats_and_summary_render() {
+        let e = engine();
+        let s = body(&e, "stats");
+        assert!(s.contains("kind wing"), "{s}");
+        assert!(s.contains("queries"), "{s}");
+        let sm = body(&e, "summary");
+        assert_eq!(sm.lines().count(), 4, "{sm}");
+        assert!(sm.contains("level 4 entities 9 components 1 largest 9"), "{sm}");
+    }
+
+    #[test]
+    fn session_over_in_memory_pipe() {
+        let e = engine();
+        let input = b"stats\nkwing 2\nquit\nnever-reached\n".to_vec();
+        let mut out = Vec::new();
+        session(&e, std::io::Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("READY kind=wing"), "{text}");
+        assert_eq!(text.matches("\nEND\n").count(), 2, "{text}");
+        assert!(text.trim_end().ends_with("BYE"), "{text}");
+        assert!(!text.contains("never-reached"));
+    }
+
+    #[test]
+    fn tcp_round_trip_on_ephemeral_port() {
+        use std::io::Read;
+        let e = Arc::new(engine());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv = {
+            let e = e.clone();
+            std::thread::spawn(move || {
+                let (stream, _) = listener.accept().unwrap();
+                handle_connection(&e, stream).unwrap();
+            })
+        };
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"membership 0\nquit\n").unwrap();
+        let mut text = String::new();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        reader.read_to_string(&mut text).unwrap();
+        assert!(text.contains("theta 1"), "{text}");
+        assert!(text.trim_end().ends_with("BYE"), "{text}");
+        srv.join().unwrap();
+    }
+}

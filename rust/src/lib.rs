@@ -23,6 +23,7 @@ pub mod beindex;
 pub mod cli;
 pub mod count;
 pub mod graph;
+pub mod index;
 pub mod metrics;
 pub mod par;
 pub mod hierarchy;

@@ -6,6 +6,9 @@
 //!   wing       wing (edge) decomposition — pbng | bup | parb | be-batch | be-pc
 //!   tip        tip (vertex) decomposition — pbng | bup | parb
 //!   hierarchy  materialize the k-wing hierarchy levels
+//!   index      build + persist the hierarchy forest index
+//!   query      one-shot query against a persisted index
+//!   serve      serve index queries over stdin or TCP
 //!   verify     run all algorithms and assert they agree
 //!   info       runtime / artifact status
 
@@ -41,8 +44,15 @@ USAGE: pbng <command> [args]
   tip <graph.tsv> [--side u|v] [--algo pbng|bup|parb] [--p P] [--threads T]
                   [--no-batch] [--no-deletes] [--out numbers.txt]
   hierarchy <graph.tsv> [--p P] [--threads T]
+  index <graph.tsv> --out <index.idx> [--kind wing|tip-u|tip-v]
+                    [--theta numbers.txt] [--p P] [--threads T]
+  query <index.idx> <command ...>        (e.g. `query g.idx kwing 3`)
+  serve <index.idx> [--port N]           (stdin line protocol without --port)
   verify <graph.tsv> [--p P] [--threads T]
   info
+
+Index line protocol: components/kwing/ktip <k>, membership <id>,
+densest <id>, top <n>, summary, stats, help, quit.
 
 <graph.tsv> may also be a preset name.
 Presets: {}",
@@ -64,6 +74,9 @@ fn run(argv: Vec<String>) -> Result<()> {
         "wing" => cmd_wing(&args),
         "tip" => cmd_tip(&args),
         "hierarchy" => cmd_hierarchy(&args),
+        "index" => cmd_index(&args),
+        "query" => cmd_query(&args),
+        "serve" => cmd_serve(&args),
         "verify" => cmd_verify(&args),
         "info" => cmd_info(&args),
         other => bail!("unknown command '{other}' (try --help)"),
@@ -229,13 +242,119 @@ fn cmd_hierarchy(args: &Args) -> Result<()> {
     args.check_unknown()?;
     let (idx, _) = pbng::beindex::BeIndex::build(&g, cfg.threads);
     let d = pbng::wing::wing_pbng(&g, cfg);
-    let summary = pbng::hierarchy::wing_hierarchy_summary(&idx, &d.theta);
+    let summary = pbng::hierarchy::wing_hierarchy_summary(&g, &idx, &d.theta);
     println!("{:>8} {:>10} {:>12} {:>10}", "k", "edges", "components", "largest");
     for l in summary {
         println!(
             "{:>8} {:>10} {:>12} {:>10}",
             l.k, l.entities, l.components, l.largest
         );
+    }
+    Ok(())
+}
+
+fn cmd_index(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let out = args.get("out").context("--out is required")?.to_string();
+    let kind = args.get_or("kind", "wing").to_string();
+    let cfg = wing_cfg(args)?;
+    let theta_file = args.get("theta").map(|s| s.to_string());
+    args.check_unknown()?;
+    let t0 = std::time::Instant::now();
+    let load_theta = |expected: usize, what: &str| -> Result<Option<Vec<u64>>> {
+        match &theta_file {
+            None => Ok(None),
+            Some(f) => {
+                let nums = io::load_numbers(Path::new(f))?;
+                anyhow::ensure!(
+                    nums.len() == expected,
+                    "--theta file has {} values, expected one per {what} ({expected})",
+                    nums.len()
+                );
+                Ok(Some(nums))
+            }
+        }
+    };
+    let forest = match kind.as_str() {
+        "wing" => {
+            let theta = match load_theta(g.m(), "edge")? {
+                Some(t) => t,
+                None => pbng::wing::wing_pbng(&g, cfg).theta,
+            };
+            let (idx, _) = pbng::beindex::BeIndex::build(&g, cfg.threads);
+            pbng::index::build_wing_forest(&g, &idx, &theta, cfg.threads)
+        }
+        "tip-u" | "tip-v" => {
+            let (side, fkind) = if kind == "tip-u" {
+                (Side::U, pbng::index::ForestKind::TipU)
+            } else {
+                (Side::V, pbng::index::ForestKind::TipV)
+            };
+            let theta = match load_theta(g.n_side(side), "vertex")? {
+                Some(t) => t,
+                None => {
+                    pbng::tip::tip_pbng(
+                        &g,
+                        side,
+                        pbng::tip::TipConfig {
+                            p: cfg.p,
+                            threads: cfg.threads,
+                            ..Default::default()
+                        },
+                    )
+                    .theta
+                }
+            };
+            pbng::index::build_tip_forest(&theta, fkind)
+        }
+        k => bail!("unknown --kind '{k}' (wing | tip-u | tip-v)"),
+    };
+    let bytes = pbng::index::codec::save(&forest, Path::new(&out))?;
+    println!(
+        "wrote {out}: kind={} entities={} nodes={} levels={} members={} ({} on disk) in {:?}",
+        forest.kind.name(),
+        forest.n_entities(),
+        forest.n_nodes(),
+        forest.levels.len(),
+        forest.n_members(),
+        human(bytes),
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+fn load_engine(args: &Args) -> Result<pbng::index::query::QueryEngine> {
+    let path = args
+        .positional
+        .first()
+        .context("expected an index file argument (built with `pbng index`)")?;
+    let forest = pbng::index::codec::load(Path::new(path))?;
+    Ok(pbng::index::query::QueryEngine::new(forest))
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    args.check_unknown()?;
+    let cmd = args.positional[1..].join(" ");
+    anyhow::ensure!(!cmd.is_empty(), "expected a query command (try `pbng query <idx> help`)");
+    match pbng::index::server::handle_command(&engine, &cmd) {
+        pbng::index::server::Reply::Body(b) => println!("{b}"),
+        pbng::index::server::Reply::Quit => {}
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let port = args.get("port").map(|p| p.parse::<u16>()).transpose()
+        .context("--port expects a TCP port number")?;
+    args.check_unknown()?;
+    match port {
+        Some(p) => {
+            let engine = std::sync::Arc::new(engine);
+            pbng::index::server::serve_tcp(engine, &format!("127.0.0.1:{p}"))?;
+        }
+        None => pbng::index::server::serve_stdin(&engine)?,
     }
     Ok(())
 }

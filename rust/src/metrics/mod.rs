@@ -142,6 +142,25 @@ impl<'a> Recorder<'a> {
     }
 }
 
+/// Live counters of the index/query-serving subsystem
+/// ([`crate::index::query::QueryEngine`]): request volume and level-cache
+/// effectiveness. Shared across serving threads; relaxed atomics.
+#[derive(Default)]
+pub struct IndexMeters {
+    /// Queries answered (all verbs).
+    pub queries: Counter,
+    /// Level materializations answered from the LRU cache.
+    pub cache_hits: Counter,
+    /// Level materializations computed from the forest.
+    pub cache_misses: Counter,
+}
+
+impl IndexMeters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Human-size formatting for counters (paper prints billions).
 pub fn human(x: u64) -> String {
     let f = x as f64;

@@ -8,11 +8,15 @@
 //! incompatibility), compiles once per block size on the PJRT CPU
 //! client, and exposes a typed `butterfly_block` entry point. Python is
 //! never on the request path.
+//!
+//! The `xla` bindings crate is not on crates.io, so the PJRT-backed
+//! [`Runtime`] is gated behind the `xla` cargo feature. Without it a stub
+//! with the same API reports itself unavailable from `new()`, and every
+//! caller ([`crate::count::dense::DenseCounter`], the CLI `info` command,
+//! the HLO integration tests) falls back / skips gracefully.
 
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
+use anyhow::Result;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 /// Counts returned by one dense-block execution.
 #[derive(Clone, Debug, PartialEq)]
@@ -26,29 +30,39 @@ pub struct BlockCounts {
     pub total: u64,
 }
 
+/// Default artifacts directory: `$PBNG_ARTIFACTS` or `./artifacts`.
+fn artifacts_dir() -> PathBuf {
+    std::env::var("PBNG_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
 /// A compiled-artifact cache over the PJRT CPU client.
+#[cfg(feature = "xla")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
-    execs: Mutex<HashMap<usize, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    execs: std::sync::Mutex<
+        std::collections::HashMap<usize, std::sync::Arc<xla::PjRtLoadedExecutable>>,
+    >,
 }
 
+#[cfg(feature = "xla")]
 impl Runtime {
     /// Create a runtime rooted at an artifacts directory.
     pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        use anyhow::Context;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime {
             client,
             dir: dir.as_ref().to_path_buf(),
-            execs: Mutex::new(HashMap::new()),
+            execs: std::sync::Mutex::new(std::collections::HashMap::new()),
         })
     }
 
     /// Default artifacts directory: `$PBNG_ARTIFACTS` or `./artifacts`.
     pub fn default_dir() -> PathBuf {
-        std::env::var("PBNG_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+        artifacts_dir()
     }
 
     pub fn platform(&self) -> String {
@@ -82,6 +96,7 @@ impl Runtime {
     }
 
     fn executable(&self, n: usize) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        use anyhow::{anyhow, Context};
         let mut cache = self.execs.lock().unwrap();
         if let Some(e) = cache.get(&n) {
             return Ok(e.clone());
@@ -104,6 +119,7 @@ impl Runtime {
     /// Execute the butterfly_block artifact of size `n` on a row-major
     /// dense biadjacency block (`block.len() == n*n`, entries 0.0/1.0).
     pub fn butterfly_block(&self, block: &[f32], n: usize) -> Result<BlockCounts> {
+        use anyhow::Context;
         anyhow::ensure!(block.len() == n * n, "block must be n*n");
         let exe = self.executable(n)?;
         let a = xla::Literal::vec1(block).reshape(&[n as i64, n as i64])?;
@@ -120,6 +136,46 @@ impl Runtime {
             per_edge: to_u64(&s)?,
             total: total.to_vec::<f32>()?[0] as u64,
         })
+    }
+}
+
+/// Stub runtime for builds without the `xla` feature: `new()` always
+/// fails, so callers take their documented fallback paths.
+#[cfg(not(feature = "xla"))]
+pub struct Runtime {
+    _private: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl Runtime {
+    /// Always fails: the PJRT client is not compiled in.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = dir.as_ref();
+        Err(anyhow::anyhow!(
+            "pbng was built without the `xla` feature; PJRT runtime unavailable \
+             (rebuild with `--features xla` and a vendored xla bindings crate)"
+        ))
+    }
+
+    /// Default artifacts directory: `$PBNG_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        artifacts_dir()
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn available_sizes(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    pub fn pick_size(&self, _need: usize) -> Option<usize> {
+        None
+    }
+
+    pub fn butterfly_block(&self, _block: &[f32], _n: usize) -> Result<BlockCounts> {
+        Err(anyhow::anyhow!("PJRT runtime unavailable (no `xla` feature)"))
     }
 }
 

@@ -1,0 +1,180 @@
+//! Index subsystem integration: forest ↔ direct-materialization
+//! equivalence on random and preset graphs, codec round trips, corrupt
+//! input rejection, and the serving protocol end to end.
+
+use pbng::beindex::BeIndex;
+use pbng::graph::{gen, Side};
+use pbng::hierarchy::{ktip_vertices, kwing_components};
+use pbng::index::query::QueryEngine;
+use pbng::index::{build_tip_forest, build_wing_forest, codec, server, Forest, ForestKind};
+use pbng::peel::bup::wing_bup;
+use pbng::testkit::{check_property, Rng};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("pbng_index_itest");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn wing_setup(g: &pbng::graph::BipartiteGraph) -> (Forest, BeIndex, Vec<u64>) {
+    let (idx, _) = BeIndex::build(g, 2);
+    let theta = wing_bup(g).theta;
+    let forest = build_wing_forest(g, &idx, &theta, 2);
+    (forest, idx, theta)
+}
+
+/// All distinct θ levels plus the boundaries around them.
+fn probe_levels(theta: &[u64]) -> Vec<u64> {
+    let mut ks: Vec<u64> = theta.iter().copied().collect();
+    ks.push(0);
+    ks.push(theta.iter().max().copied().unwrap_or(0) + 1);
+    ks.sort_unstable();
+    ks.dedup();
+    ks
+}
+
+#[test]
+fn acceptance_preset_forest_matches_direct_at_every_level() {
+    // ISSUE acceptance: on a preset graph, one forest build answers
+    // `kwing k` for every level byte-identically to the per-level
+    // recomputation, and a save/load round trip preserves all answers.
+    let g = gen::Preset::PlantedS.build();
+    let (forest, idx, theta) = wing_setup(&g);
+    forest.validate().unwrap();
+    let path = tmp("planted.idx");
+    codec::save(&forest, &path).unwrap();
+    let engine = QueryEngine::new(codec::load(&path).unwrap());
+    for k in probe_levels(&theta) {
+        let direct = kwing_components(&idx, &theta, k);
+        assert_eq!(forest.components(k), direct, "forest diverged at level {k}");
+        assert_eq!(*engine.components(k), direct, "reloaded index diverged at level {k}");
+    }
+}
+
+#[test]
+fn random_graphs_forest_and_roundtrip_match_direct() {
+    check_property("index-vs-direct", 0x1DE7, 6, |seed| {
+        let mut rng = Rng::new(seed);
+        let g = gen::zipf(
+            10 + rng.usize_below(30),
+            10 + rng.usize_below(30),
+            40 + rng.usize_below(260),
+            1.0 + rng.f64(),
+            1.0 + rng.f64(),
+            seed,
+        );
+        let (forest, idx, theta) = wing_setup(&g);
+        if let Err(e) = forest.validate() {
+            return Err(e);
+        }
+        let path = tmp(&format!("rand_{seed:x}.idx"));
+        codec::save(&forest, &path).map_err(|e| e.to_string())?;
+        let loaded = codec::load(&path).map_err(|e| e.to_string())?;
+        if loaded != forest {
+            return Err("save/load changed the forest".into());
+        }
+        for k in probe_levels(&theta) {
+            if loaded.components(k) != kwing_components(&idx, &theta, k) {
+                return Err(format!("level {k} diverged after round trip"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tip_roundtrip_matches_ktip_vertices_both_sides() {
+    let g = gen::Preset::DiStS.build();
+    for (side, kind) in [(Side::U, ForestKind::TipU), (Side::V, ForestKind::TipV)] {
+        let theta = pbng::tip::tip_bup(&g, side).theta;
+        let forest = build_tip_forest(&theta, kind);
+        forest.validate().unwrap();
+        let path = tmp(&format!("tip_{}.idx", kind.name()));
+        codec::save(&forest, &path).unwrap();
+        let loaded = codec::load(&path).unwrap();
+        assert_eq!(loaded, forest);
+        let max = theta.iter().max().copied().unwrap_or(0);
+        for k in 1..=max + 1 {
+            let comps = loaded.components(k);
+            let want = ktip_vertices(&theta, k);
+            if want.is_empty() {
+                assert!(comps.is_empty(), "side {side:?} level {k}");
+            } else {
+                assert_eq!(comps.len(), 1, "side {side:?} level {k}");
+                assert_eq!(comps[0], want, "side {side:?} level {k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn corrupted_index_files_are_rejected() {
+    let g = gen::paper_fig1();
+    let (forest, _, _) = wing_setup(&g);
+    let path = tmp("corrupt_e2e.idx");
+    codec::save(&forest, &path).unwrap();
+    let pristine = std::fs::read(&path).unwrap();
+    // every single-byte flip anywhere in the file must fail loudly or
+    // decode to the identical forest (flips in dead padding only)
+    let mut rng = Rng::new(0xBAD);
+    for _ in 0..40 {
+        let mut bytes = pristine.clone();
+        let pos = rng.usize_below(bytes.len());
+        bytes[pos] ^= 1 << rng.usize_below(8);
+        std::fs::write(&path, &bytes).unwrap();
+        if let Ok(decoded) = codec::load(&path) {
+            assert_eq!(decoded, forest, "undetected corruption at byte {pos}");
+        }
+    }
+    // truncations at arbitrary points must fail
+    for cut in [0, 7, 16, pristine.len() / 2, pristine.len() - 1] {
+        std::fs::write(&path, &pristine[..cut]).unwrap();
+        assert!(codec::load(&path).is_err(), "truncation at {cut} accepted");
+    }
+}
+
+#[test]
+fn serving_protocol_answers_match_engine_state() {
+    let g = gen::Preset::NestedS.build();
+    let (forest, idx, theta) = wing_setup(&g);
+    let engine = QueryEngine::new(forest);
+    let deepest = *engine.forest().levels.last().unwrap();
+    let body = match server::handle_command(&engine, &format!("kwing {deepest}")) {
+        server::Reply::Body(b) => b,
+        server::Reply::Quit => unreachable!(),
+    };
+    let direct = kwing_components(&idx, &theta, deepest);
+    assert!(
+        body.starts_with(&format!("components {} level {deepest}", direct.len())),
+        "{body}"
+    );
+    // repeated level queries hit the cache
+    let _ = server::handle_command(&engine, &format!("kwing {deepest}"));
+    assert!(engine.meters.cache_hits.get() >= 1);
+    // stats reflect the traffic
+    let stats = match server::handle_command(&engine, "stats") {
+        server::Reply::Body(b) => b,
+        server::Reply::Quit => unreachable!(),
+    };
+    assert!(stats.contains("kind wing"), "{stats}");
+}
+
+#[test]
+fn hierarchy_summary_agrees_with_forest_and_direct() {
+    let g = gen::Preset::NestedS.build();
+    let (forest, idx, theta) = wing_setup(&g);
+    let summary = pbng::hierarchy::wing_hierarchy_summary(&g, &idx, &theta);
+    assert!(!summary.is_empty());
+    for l in &summary {
+        let direct = kwing_components(&idx, &theta, l.k);
+        assert_eq!(l.components, direct.len(), "level {}", l.k);
+        assert_eq!(
+            l.largest,
+            direct.iter().map(|c| c.len()).max().unwrap_or(0),
+            "level {}",
+            l.k
+        );
+    }
+    // and the forest's own summaries are the same table
+    assert_eq!(summary, pbng::index::forest_level_summaries(&forest));
+}

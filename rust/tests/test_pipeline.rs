@@ -46,7 +46,7 @@ fn hierarchy_from_pipeline_output_nests() {
     let (idx, _) = pbng::beindex::BeIndex::build(&g, 2);
     let d = wing_pbng(&g, PbngConfig { p: 8, threads: 2, ..Default::default() });
     pbng::hierarchy::check_wing_nesting(&g, &idx, &d.theta).unwrap();
-    let summary = pbng::hierarchy::wing_hierarchy_summary(&idx, &d.theta);
+    let summary = pbng::hierarchy::wing_hierarchy_summary(&g, &idx, &d.theta);
     assert!(!summary.is_empty());
     // planted dense blocks must produce a non-trivial hierarchy
     assert!(summary.len() >= 3, "levels: {}", summary.len());
