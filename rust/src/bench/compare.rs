@@ -1,0 +1,302 @@
+//! Regression gate between two bench reports.
+//!
+//! Gating policy (the CI contract):
+//!
+//! * **Counter metrics** (`updates`, `wedges`, `rho`) — gated against a
+//!   relative tolerance, default 0 (exact). They are deterministic for a
+//!   fixed seed and thread count, so any increase is a real algorithmic
+//!   regression, not noise. Decreases are reported as improvements and
+//!   never fail the gate (refresh the baseline to lock them in).
+//! * **Output shape** (`theta_max`, `peak_entities`, `theta_fnv`) — any
+//!   difference fails: the decomposition itself changed, which is a
+//!   correctness event, not a performance one.
+//! * **Wall time** — gated loosely (`min` ratio vs `--time-factor`,
+//!   default 1.5) because shared runners are noisy; `--ignore-time`
+//!   disables it entirely, which is what CI uses (counters only).
+//! * An entry present in the baseline but missing from the current
+//!   report fails; entries new in the current report pass ungated (this
+//!   is how a freshly bootstrapped, empty baseline behaves).
+
+use super::report::{Entry, Report};
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Thresholds {
+    /// Allowed relative increase for counter metrics (0.0 = exact).
+    pub counter_rel_tol: f64,
+    /// Allowed `current.min / baseline.min` wall-time ratio.
+    pub time_factor: f64,
+    /// Skip the wall-time gate entirely (CI on shared runners).
+    pub ignore_time: bool,
+}
+
+impl Default for Thresholds {
+    fn default() -> Self {
+        Thresholds { counter_rel_tol: 0.0, time_factor: 1.5, ignore_time: false }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Comparison {
+    /// Human-readable regression findings; non-empty fails the gate.
+    pub regressions: Vec<String>,
+    pub improvements: Vec<String>,
+    /// Entries in the current report with no baseline counterpart.
+    pub ungated: Vec<String>,
+    /// Number of baseline entries that were checked.
+    pub checked: usize,
+}
+
+impl Comparison {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.regressions {
+            out.push_str(&format!("REGRESSION  {r}\n"));
+        }
+        for i in &self.improvements {
+            out.push_str(&format!("improvement {i}\n"));
+        }
+        for u in &self.ungated {
+            out.push_str(&format!("ungated     {u} (not in baseline)\n"));
+        }
+        out.push_str(&format!(
+            "checked {} baseline entr{}: {} regression(s), {} improvement(s), {} ungated\n",
+            self.checked,
+            if self.checked == 1 { "y" } else { "ies" },
+            self.regressions.len(),
+            self.improvements.len(),
+            self.ungated.len()
+        ));
+        if self.checked == 0 && !self.ungated.is_empty() {
+            out.push_str(
+                "baseline has no entries (bootstrap): commit the current report as the new \
+                 baseline to arm the gate\n",
+            );
+        }
+        out
+    }
+}
+
+/// Compare `current` against `baseline`. Errors on malformed pairings
+/// (schema/suite mismatch); regressions are reported in the result, not
+/// as errors — the caller decides the exit code via [`Comparison::passed`].
+pub fn compare(baseline: &Report, current: &Report, th: &Thresholds) -> Result<Comparison> {
+    if baseline.schema_version != current.schema_version {
+        bail!(
+            "schema mismatch: baseline v{} vs current v{}",
+            baseline.schema_version,
+            current.schema_version
+        );
+    }
+    if baseline.suite != current.suite {
+        bail!(
+            "suite mismatch: baseline '{}' vs current '{}'",
+            baseline.suite,
+            current.suite
+        );
+    }
+    if baseline.env.threads != current.env.threads {
+        bail!(
+            "thread-count mismatch: baseline ran with {} thread(s), current with {} — \
+             counter metrics are only schedule-independent at a fixed thread count, so \
+             this comparison would gate noise; re-run one side with matching --threads",
+            baseline.env.threads,
+            current.env.threads
+        );
+    }
+    let mut cmp = Comparison::default();
+    for be in &baseline.entries {
+        let key = format!("{}/{}", be.dataset, be.algo);
+        match current.entry(&be.dataset, &be.algo) {
+            None => cmp
+                .regressions
+                .push(format!("{key}: entry missing from current report")),
+            Some(ce) => {
+                cmp.checked += 1;
+                check_entry(&key, be, ce, th, &mut cmp);
+            }
+        }
+    }
+    for ce in &current.entries {
+        if baseline.entry(&ce.dataset, &ce.algo).is_none() {
+            cmp.ungated.push(format!("{}/{}", ce.dataset, ce.algo));
+        }
+    }
+    Ok(cmp)
+}
+
+fn check_entry(key: &str, be: &Entry, ce: &Entry, th: &Thresholds, cmp: &mut Comparison) {
+    let b = &be.counters;
+    let c = &ce.counters;
+    for (metric, bv, cv) in [
+        ("updates", b.updates, c.updates),
+        ("wedges", b.wedges, c.wedges),
+        ("rho", b.rho, c.rho),
+    ] {
+        match cv.cmp(&bv) {
+            std::cmp::Ordering::Greater => {
+                let rel = (cv - bv) as f64 / bv.max(1) as f64;
+                if rel > th.counter_rel_tol {
+                    cmp.regressions.push(format!(
+                        "{key} {metric}: {bv} -> {cv} (+{:.2}%, tolerance {:.2}%)",
+                        rel * 100.0,
+                        th.counter_rel_tol * 100.0
+                    ));
+                }
+            }
+            std::cmp::Ordering::Less => {
+                cmp.improvements
+                    .push(format!("{key} {metric}: {bv} -> {cv}"));
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+    }
+    if b.theta_fnv != c.theta_fnv {
+        cmp.regressions.push(format!(
+            "{key} theta_fnv: {:#018x} -> {:#018x} (decomposition output changed)",
+            b.theta_fnv, c.theta_fnv
+        ));
+    } else {
+        // with an equal θ checksum these can only differ if the checksum
+        // collided — gate them anyway, they are nearly free
+        if b.theta_max != c.theta_max {
+            cmp.regressions.push(format!(
+                "{key} theta_max: {} -> {} (peak level changed)",
+                b.theta_max, c.theta_max
+            ));
+        }
+        if b.peak_entities != c.peak_entities {
+            cmp.regressions.push(format!(
+                "{key} peak_entities: {} -> {} (peak set changed)",
+                b.peak_entities, c.peak_entities
+            ));
+        }
+    }
+    if !th.ignore_time && ce.wall_ms.min > be.wall_ms.min * th.time_factor {
+        cmp.regressions.push(format!(
+            "{key} wall_ms.min: {:.3} -> {:.3} (> {:.2}x baseline)",
+            be.wall_ms.min, ce.wall_ms.min, th.time_factor
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::report::tests::{sample_entry, sample_report};
+
+    fn counters_only() -> Thresholds {
+        Thresholds { ignore_time: true, ..Thresholds::default() }
+    }
+
+    #[test]
+    fn identical_reports_pass() {
+        let r = sample_report(vec![sample_entry("a", "wing/bup", 100)]);
+        let cmp = compare(&r, &r, &Thresholds::default()).unwrap();
+        assert!(cmp.passed());
+        assert_eq!(cmp.checked, 1);
+        assert!(cmp.ungated.is_empty());
+    }
+
+    #[test]
+    fn counter_increase_fails_exactly() {
+        let base = sample_report(vec![sample_entry("a", "wing/bup", 100)]);
+        let mut cur = base.clone();
+        cur.entries[0].counters.updates = 101;
+        let cmp = compare(&base, &cur, &counters_only()).unwrap();
+        assert!(!cmp.passed());
+        assert!(cmp.regressions[0].contains("updates"), "{:?}", cmp.regressions);
+    }
+
+    #[test]
+    fn counter_increase_within_tolerance_passes() {
+        let base = sample_report(vec![sample_entry("a", "wing/bup", 100)]);
+        let mut cur = base.clone();
+        cur.entries[0].counters.updates = 110;
+        cur.entries[0].counters.wedges = 220;
+        let th = Thresholds { counter_rel_tol: 0.2, ignore_time: true, ..Thresholds::default() };
+        assert!(compare(&base, &cur, &th).unwrap().passed());
+        let th0 = counters_only();
+        assert!(!compare(&base, &cur, &th0).unwrap().passed());
+    }
+
+    #[test]
+    fn counter_decrease_is_an_improvement() {
+        let base = sample_report(vec![sample_entry("a", "wing/bup", 100)]);
+        let mut cur = base.clone();
+        cur.entries[0].counters.rho = 1;
+        let cmp = compare(&base, &cur, &counters_only()).unwrap();
+        assert!(cmp.passed());
+        assert_eq!(cmp.improvements.len(), 1);
+    }
+
+    #[test]
+    fn theta_checksum_change_fails_despite_tolerance() {
+        let base = sample_report(vec![sample_entry("a", "wing/bup", 100)]);
+        let mut cur = base.clone();
+        cur.entries[0].counters.theta_fnv ^= 1;
+        let th = Thresholds { counter_rel_tol: 1e9, ignore_time: true, ..Thresholds::default() };
+        let cmp = compare(&base, &cur, &th).unwrap();
+        assert!(!cmp.passed());
+        assert!(cmp.regressions[0].contains("theta_fnv"));
+    }
+
+    #[test]
+    fn time_gate_is_loose_and_skippable() {
+        let base = sample_report(vec![sample_entry("a", "wing/bup", 100)]);
+        let mut cur = base.clone();
+        cur.entries[0].wall_ms.min = base.entries[0].wall_ms.min * 10.0;
+        assert!(!compare(&base, &cur, &Thresholds::default()).unwrap().passed());
+        assert!(compare(&base, &cur, &counters_only()).unwrap().passed());
+        // within the factor: passes
+        let mut mild = base.clone();
+        mild.entries[0].wall_ms.min = base.entries[0].wall_ms.min * 1.4;
+        assert!(compare(&base, &mild, &Thresholds::default()).unwrap().passed());
+    }
+
+    #[test]
+    fn missing_entry_fails_new_entry_is_ungated() {
+        let two = sample_report(vec![
+            sample_entry("a", "wing/bup", 100),
+            sample_entry("b", "wing/bup", 50),
+        ]);
+        let one = sample_report(vec![sample_entry("a", "wing/bup", 100)]);
+        // baseline has more than current: fail
+        assert!(!compare(&two, &one, &counters_only()).unwrap().passed());
+        // current has more than baseline: pass, ungated noted
+        let cmp = compare(&one, &two, &counters_only()).unwrap();
+        assert!(cmp.passed());
+        assert_eq!(cmp.ungated, vec!["b/wing/bup".to_string()]);
+    }
+
+    #[test]
+    fn empty_bootstrap_baseline_passes() {
+        let base = sample_report(vec![]);
+        let cur = sample_report(vec![sample_entry("a", "wing/bup", 100)]);
+        let cmp = compare(&base, &cur, &counters_only()).unwrap();
+        assert!(cmp.passed());
+        assert_eq!(cmp.checked, 0);
+        assert!(cmp.render().contains("bootstrap"));
+    }
+
+    #[test]
+    fn suite_schema_and_threads_mismatch_error() {
+        let a = sample_report(vec![]);
+        let mut b = sample_report(vec![]);
+        b.suite = "other".to_string();
+        assert!(compare(&a, &b, &Thresholds::default()).is_err());
+        let mut c = sample_report(vec![]);
+        c.schema_version += 1;
+        assert!(compare(&a, &c, &Thresholds::default()).is_err());
+        // a baseline captured at a different thread count would gate
+        // scheduling noise, not regressions
+        let mut d = sample_report(vec![]);
+        d.env.threads = 8;
+        let err = compare(&a, &d, &Thresholds::default()).unwrap_err().to_string();
+        assert!(err.contains("thread"), "{err}");
+    }
+}

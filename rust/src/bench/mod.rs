@@ -1,0 +1,305 @@
+//! Benchmark & regression subsystem — the repo's measurement backbone.
+//!
+//! The paper's headline claims are quantitative: up to four orders of
+//! magnitude fewer synchronizations ρ than level-synchronous peeling and
+//! two orders of magnitude speedup over bottom-up peeling (Tables 3–4).
+//! This module turns those currencies into a reproducible, CI-gated
+//! harness:
+//!
+//! * **registry** (this file) — deterministic synthetic dataset suites
+//!   (seeded power-law, block-community, and grid bipartite graphs from
+//!   [`crate::graph::gen`]) crossed with algorithm configurations (wing:
+//!   BUP / ParB / PBNG CD+FD and the PBNG− / PBNG−− ablations / BE_Batch;
+//!   tip: peel / ParB / CD+FD);
+//! * [`runner`] — warmup + N-repetition execution collecting wall time,
+//!   peak-set sizes, and the [`crate::metrics::Meters`] counters;
+//! * [`report`] — the versioned `BENCH_<suite>.json` schema;
+//! * [`compare`] — the regression gate: counter metrics exactly, wall
+//!   time loosely (`pbng bench compare` exits non-zero past thresholds).
+
+pub mod compare;
+pub mod report;
+pub mod runner;
+
+use crate::graph::{gen, BipartiteGraph, Side};
+use crate::peel::Decomposition;
+
+/// A deterministic synthetic dataset: generator function + pinned seed.
+/// Building the same spec twice yields byte-identical edge lists.
+#[derive(Clone, Copy)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub seed: u64,
+    gen_fn: fn(u64) -> BipartiteGraph,
+}
+
+impl DatasetSpec {
+    pub fn build(&self) -> BipartiteGraph {
+        (self.gen_fn)(self.seed)
+    }
+}
+
+/// One benchmarked algorithm configuration (a Tables 3–4 row).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Sequential bottom-up wing peeling.
+    WingBup,
+    /// Level-synchronous parallel wing peeling (PARBUTTERFLY-style).
+    WingParb,
+    /// Two-phased PBNG wing decomposition (CD + FD).
+    WingPbng,
+    /// PBNG without dynamic BE-Index deletes (paper's PBNG−).
+    WingPbngMinus,
+    /// PBNG without deletes or batching (paper's PBNG−−).
+    WingPbngMinusMinus,
+    /// BE_Batch baseline: bottom-up level peeling on the BE-Index.
+    WingBeBatch,
+    /// Sequential bottom-up tip peeling (side U).
+    TipPeel,
+    /// Level-synchronous tip peeling (side U).
+    TipParb,
+    /// Two-phased PBNG tip decomposition (side U).
+    TipPbng,
+}
+
+impl Algo {
+    /// Stable identifier used as the report key — renames invalidate
+    /// committed baselines, so treat these as part of the schema.
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::WingBup => "wing/bup",
+            Algo::WingParb => "wing/parb",
+            Algo::WingPbng => "wing/pbng",
+            Algo::WingPbngMinus => "wing/pbng-",
+            Algo::WingPbngMinusMinus => "wing/pbng--",
+            Algo::WingBeBatch => "wing/be-batch",
+            Algo::TipPeel => "tip/peel",
+            Algo::TipParb => "tip/parb",
+            Algo::TipPbng => "tip/pbng",
+        }
+    }
+
+    pub fn is_wing(self) -> bool {
+        self.name().starts_with("wing/")
+    }
+
+    pub fn run(self, g: &BipartiteGraph, threads: usize) -> Decomposition {
+        let wing_cfg = |batch, dynamic_deletes| crate::wing::PbngConfig {
+            p: (g.m() / 500).clamp(4, 64),
+            threads,
+            batch,
+            dynamic_deletes,
+        };
+        match self {
+            Algo::WingBup => crate::peel::bup::wing_bup(g),
+            Algo::WingParb => crate::peel::parb::wing_parb(g),
+            Algo::WingPbng => crate::wing::wing_pbng(g, wing_cfg(true, true)),
+            Algo::WingPbngMinus => crate::wing::wing_pbng(g, wing_cfg(true, false)),
+            Algo::WingPbngMinusMinus => crate::wing::wing_pbng(g, wing_cfg(false, false)),
+            Algo::WingBeBatch => crate::wing::wing_be_batch(g, threads),
+            Algo::TipPeel => crate::tip::tip_bup(g, Side::U),
+            Algo::TipParb => crate::tip::tip_parb(g, Side::U),
+            Algo::TipPbng => crate::tip::tip_pbng(
+                g,
+                Side::U,
+                crate::tip::TipConfig {
+                    p: (g.nu() / 100).clamp(4, 32),
+                    threads,
+                    ..Default::default()
+                },
+            ),
+        }
+    }
+}
+
+/// A named dataset × algorithm grid. Tiers keep CI fast: `smoke` must
+/// finish well under two minutes on a shared runner.
+pub struct Suite {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub datasets: &'static [DatasetSpec],
+    pub algos: &'static [Algo],
+}
+
+// --- dataset generator thunks (seed-parametric, sizes pinned) ---------
+
+fn pl_micro(seed: u64) -> BipartiteGraph {
+    gen::zipf(120, 100, 700, 1.2, 1.2, seed)
+}
+fn blocks_micro(seed: u64) -> BipartiteGraph {
+    let blocks = [
+        gen::Block { rows: 8, cols: 8, density: 1.0 },
+        gen::Block { rows: 6, cols: 6, density: 0.9 },
+    ];
+    gen::planted_blocks(80, 80, 250, &blocks, seed)
+}
+fn grid_micro(seed: u64) -> BipartiteGraph {
+    gen::grid(60, 60, 4, 0.9, seed)
+}
+
+fn pl_smoke(seed: u64) -> BipartiteGraph {
+    gen::zipf(700, 500, 4000, 1.25, 1.25, seed)
+}
+fn blocks_smoke(seed: u64) -> BipartiteGraph {
+    let blocks = [
+        gen::Block { rows: 16, cols: 16, density: 0.9 },
+        gen::Block { rows: 12, cols: 12, density: 0.95 },
+        gen::Block { rows: 24, cols: 8, density: 0.85 },
+    ];
+    gen::planted_blocks(400, 400, 1500, &blocks, seed)
+}
+fn grid_smoke(seed: u64) -> BipartiteGraph {
+    gen::grid(300, 300, 5, 0.9, seed)
+}
+
+fn preset_di_af_s(_seed: u64) -> BipartiteGraph {
+    gen::Preset::DiAfS.build()
+}
+fn preset_tr_s(_seed: u64) -> BipartiteGraph {
+    gen::Preset::TrS.build()
+}
+fn preset_planted_s(_seed: u64) -> BipartiteGraph {
+    gen::Preset::PlantedS.build()
+}
+fn preset_nested_s(_seed: u64) -> BipartiteGraph {
+    gen::Preset::NestedS.build()
+}
+fn preset_grid_s(_seed: u64) -> BipartiteGraph {
+    gen::Preset::GridS.build()
+}
+fn preset_tr_m(_seed: u64) -> BipartiteGraph {
+    gen::Preset::TrM.build()
+}
+fn preset_or_m(_seed: u64) -> BipartiteGraph {
+    gen::Preset::OrM.build()
+}
+
+// Recorded seeds for presets are the generator seeds pinned in
+// `gen::Preset::build` — the spec seed is documentation there, not input.
+
+const MICRO_DATASETS: &[DatasetSpec] = &[
+    DatasetSpec { name: "pl-micro", seed: 31, gen_fn: pl_micro },
+    DatasetSpec { name: "blocks-micro", seed: 32, gen_fn: blocks_micro },
+    DatasetSpec { name: "grid-micro", seed: 33, gen_fn: grid_micro },
+];
+
+const SMOKE_DATASETS: &[DatasetSpec] = &[
+    DatasetSpec { name: "pl-s", seed: 21, gen_fn: pl_smoke },
+    DatasetSpec { name: "blocks-s", seed: 22, gen_fn: blocks_smoke },
+    DatasetSpec { name: "grid-s", seed: 23, gen_fn: grid_smoke },
+];
+
+const STANDARD_DATASETS: &[DatasetSpec] = &[
+    DatasetSpec { name: "di-af-s", seed: 101, gen_fn: preset_di_af_s },
+    DatasetSpec { name: "tr-s", seed: 106, gen_fn: preset_tr_s },
+    DatasetSpec { name: "planted-s", seed: 108, gen_fn: preset_planted_s },
+    DatasetSpec { name: "nested-s", seed: 109, gen_fn: preset_nested_s },
+    DatasetSpec { name: "grid-s", seed: 112, gen_fn: preset_grid_s },
+];
+
+const MEDIUM_DATASETS: &[DatasetSpec] = &[
+    DatasetSpec { name: "tr-m", seed: 110, gen_fn: preset_tr_m },
+    DatasetSpec { name: "or-m", seed: 111, gen_fn: preset_or_m },
+];
+
+const FULL_ALGOS: &[Algo] = &[
+    Algo::WingBup,
+    Algo::WingParb,
+    Algo::WingPbng,
+    Algo::WingPbngMinus,
+    Algo::WingPbngMinusMinus,
+    Algo::WingBeBatch,
+    Algo::TipPeel,
+    Algo::TipParb,
+    Algo::TipPbng,
+];
+
+/// Index-free sequential baselines are too slow for the medium tier (the
+/// paper's own Table 3 has "-" entries for the same reason).
+const MEDIUM_ALGOS: &[Algo] = &[Algo::WingParb, Algo::WingPbng, Algo::TipPbng];
+
+pub const SUITES: &[Suite] = &[
+    Suite {
+        name: "micro",
+        description: "seconds-fast tier for unit/integration tests",
+        datasets: MICRO_DATASETS,
+        algos: FULL_ALGOS,
+    },
+    Suite {
+        name: "smoke",
+        description: "CI regression gate (<2 min on a shared runner)",
+        datasets: SMOKE_DATASETS,
+        algos: FULL_ALGOS,
+    },
+    Suite {
+        name: "standard",
+        description: "paper-analog small presets (Tables 3-4 shape)",
+        datasets: STANDARD_DATASETS,
+        algos: FULL_ALGOS,
+    },
+    Suite {
+        name: "medium",
+        description: "larger tier, parallel algorithms only",
+        datasets: MEDIUM_DATASETS,
+        algos: MEDIUM_ALGOS,
+    },
+];
+
+pub fn find_suite(name: &str) -> Option<&'static Suite> {
+    SUITES.iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_lookup() {
+        assert!(find_suite("smoke").is_some());
+        assert!(find_suite("micro").is_some());
+        assert!(find_suite("nope").is_none());
+    }
+
+    #[test]
+    fn smoke_meets_acceptance_floor() {
+        // ISSUE acceptance: ≥ 5 algorithm configs on ≥ 3 datasets.
+        let s = find_suite("smoke").unwrap();
+        assert!(s.datasets.len() >= 3);
+        assert!(s.algos.len() >= 5);
+    }
+
+    #[test]
+    fn algo_names_are_unique_and_prefixed() {
+        let mut names: Vec<&str> = FULL_ALGOS.iter().map(|a| a.name()).collect();
+        names.sort_unstable();
+        let n = names.len();
+        names.dedup();
+        assert_eq!(names.len(), n);
+        for a in FULL_ALGOS {
+            assert!(a.name().starts_with(if a.is_wing() { "wing/" } else { "tip/" }));
+        }
+    }
+
+    #[test]
+    fn dataset_specs_are_deterministic() {
+        for s in SUITES.iter().filter(|s| s.name == "micro") {
+            for ds in s.datasets {
+                let a = ds.build();
+                let b = ds.build();
+                assert_eq!(a.edges(), b.edges(), "{} not deterministic", ds.name);
+                assert!(a.m() > 0, "{} is empty", ds.name);
+            }
+        }
+    }
+
+    #[test]
+    fn micro_algos_produce_full_theta() {
+        let ds = &MICRO_DATASETS[2]; // grid: smallest
+        let g = ds.build();
+        for &algo in FULL_ALGOS {
+            let d = algo.run(&g, 1);
+            let want = if algo.is_wing() { g.m() } else { g.nu() };
+            assert_eq!(d.theta.len(), want, "{}", algo.name());
+        }
+    }
+}

@@ -1,0 +1,451 @@
+//! Versioned, machine-readable bench reports (`BENCH_<suite>.json`).
+//!
+//! Schema v1 layout:
+//!
+//! ```text
+//! {
+//!   "schema_version": 1,
+//!   "suite": "smoke",
+//!   "env": { threads, repetitions, warmup, git_sha, crate_version },
+//!   "entries": [
+//!     { dataset, seed, nu, nv, m, algo,
+//!       "wall_ms": { min, mean, max },            // loosely gated
+//!       "counters": { updates, wedges, rho,       // exactly gated
+//!                     theta_max, peak_entities, theta_fnv },
+//!       "phases": [ { name, ms, updates, wedges }, ... ] }
+//!   ]
+//! }
+//! ```
+//!
+//! `counters` extends [`MetersSnapshot::to_json`] with the output-shape
+//! metrics: `theta_max` / `peak_entities` describe the densest level
+//! (peak set), and `theta_fnv` is an FNV-1a 64 checksum of the whole θ
+//! vector — any algorithmic output change flips it, so `bench compare`
+//! doubles as an equivalence gate. It is serialized as a hex string:
+//! 2⁶⁴-range integers do not survive f64 round-trips in common JSON
+//! tooling. Unknown members are ignored on load (forward compatible);
+//! renaming or removing members requires bumping [`SCHEMA_VERSION`].
+
+use super::runner::BenchOptions;
+use crate::index::codec::fnv64;
+use crate::jsonio::Value;
+use crate::metrics::MetersSnapshot;
+use crate::peel::Decomposition;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+pub const SCHEMA_VERSION: u32 = 1;
+
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub schema_version: u32,
+    pub suite: String,
+    pub env: Env,
+    pub entries: Vec<Entry>,
+}
+
+/// Environment stanza: everything needed to reproduce or explain a run.
+#[derive(Clone, Debug)]
+pub struct Env {
+    pub threads: usize,
+    pub repetitions: usize,
+    pub warmup: usize,
+    pub git_sha: String,
+    pub crate_version: String,
+}
+
+impl Env {
+    pub fn capture(opts: &BenchOptions) -> Env {
+        Env {
+            threads: opts.threads,
+            repetitions: opts.repetitions,
+            warmup: opts.warmup,
+            git_sha: detect_git_sha(),
+            crate_version: env!("CARGO_PKG_VERSION").to_string(),
+        }
+    }
+}
+
+fn detect_git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha.chars().take(12).collect();
+        }
+    }
+    let out = std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output();
+    match out {
+        Ok(o) if o.status.success() => String::from_utf8_lossy(&o.stdout).trim().to_string(),
+        _ => "unknown".to_string(),
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub dataset: String,
+    pub seed: u64,
+    pub nu: usize,
+    pub nv: usize,
+    pub m: usize,
+    pub algo: String,
+    pub wall_ms: WallMs,
+    pub counters: Counters,
+    pub phases: Vec<PhaseRow>,
+}
+
+/// Wall-time statistics over the repetitions, in milliseconds. `min` is
+/// the gated member — it is the least noise-inflated on shared runners.
+#[derive(Clone, Copy, Debug)]
+pub struct WallMs {
+    pub min: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl WallMs {
+    pub fn from_times(ms: &[f64]) -> WallMs {
+        assert!(!ms.is_empty());
+        let min = ms.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = ms.iter().copied().fold(0.0f64, f64::max);
+        let mean = ms.iter().sum::<f64>() / ms.len() as f64;
+        // millisecond precision keeps report diffs readable
+        let r = |x: f64| (x * 1000.0).round() / 1000.0;
+        WallMs { min: r(min), mean: r(mean), max: r(max) }
+    }
+}
+
+/// The exactly-gated section: deterministic for a fixed seed and thread
+/// count (the smoke suite runs with `threads = 1` for this reason).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Counters {
+    pub updates: u64,
+    pub wedges: u64,
+    pub rho: u64,
+    pub theta_max: u64,
+    pub peak_entities: u64,
+    pub theta_fnv: u64,
+}
+
+impl Counters {
+    pub fn from_decomposition(d: &Decomposition) -> Counters {
+        let snap = d.stats.meters_snapshot();
+        let theta_max = d.theta.iter().max().copied().unwrap_or(0);
+        let peak_entities = d.theta.iter().filter(|&&t| t == theta_max).count() as u64;
+        Counters {
+            updates: snap.updates,
+            wedges: snap.wedges,
+            rho: snap.rho,
+            theta_max,
+            peak_entities,
+            theta_fnv: theta_fnv(&d.theta),
+        }
+    }
+
+    fn to_json(self) -> Value {
+        let snap = MetersSnapshot {
+            updates: self.updates,
+            wedges: self.wedges,
+            rho: self.rho,
+        };
+        snap.to_json()
+            .with("theta_max", self.theta_max)
+            .with("peak_entities", self.peak_entities)
+            .with("theta_fnv", format!("{:#018x}", self.theta_fnv))
+    }
+
+    fn from_json(v: &Value) -> Result<Counters> {
+        let hex = v.req_str("theta_fnv")?;
+        let digits = hex
+            .strip_prefix("0x")
+            .with_context(|| format!("theta_fnv '{hex}' lacks 0x prefix"))?;
+        let theta_fnv = u64::from_str_radix(digits, 16)
+            .with_context(|| format!("theta_fnv '{hex}' is not a hex u64"))?;
+        Ok(Counters {
+            updates: v.req_u64("updates")?,
+            wedges: v.req_u64("wedges")?,
+            rho: v.req_u64("rho")?,
+            theta_max: v.req_u64("theta_max")?,
+            peak_entities: v.req_u64("peak_entities")?,
+            theta_fnv,
+        })
+    }
+}
+
+/// Order-sensitive checksum of a θ vector (little-endian u64 stream).
+pub fn theta_fnv(theta: &[u64]) -> u64 {
+    let mut bytes = Vec::with_capacity(theta.len() * 8);
+    for t in theta {
+        bytes.extend_from_slice(&t.to_le_bytes());
+    }
+    fnv64(&bytes)
+}
+
+/// Per-phase breakdown (Fig. 7 / Fig. 10 currency) — informational, not
+/// gated: phase splits shift with partition spreads across code changes.
+#[derive(Clone, Debug)]
+pub struct PhaseRow {
+    pub name: String,
+    pub ms: f64,
+    pub updates: u64,
+    pub wedges: u64,
+}
+
+impl Report {
+    pub fn to_json(&self) -> Value {
+        let env = Value::obj()
+            .with("threads", self.env.threads)
+            .with("repetitions", self.env.repetitions)
+            .with("warmup", self.env.warmup)
+            .with("git_sha", self.env.git_sha.as_str())
+            .with("crate_version", self.env.crate_version.as_str());
+        let entries: Vec<Value> = self.entries.iter().map(Entry::to_json).collect();
+        Value::obj()
+            .with("schema_version", self.schema_version)
+            .with("suite", self.suite.as_str())
+            .with("env", env)
+            .with("entries", entries)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Report> {
+        let schema_version = v.req_u64("schema_version")? as u32;
+        if schema_version != SCHEMA_VERSION {
+            bail!(
+                "unsupported schema_version {schema_version} (this binary reads v{SCHEMA_VERSION}); \
+                 refresh the report with `pbng bench`"
+            );
+        }
+        let env_v = v.req("env")?;
+        let env = Env {
+            threads: env_v.req_u64("threads")? as usize,
+            repetitions: env_v.req_u64("repetitions")? as usize,
+            warmup: env_v.req_u64("warmup")? as usize,
+            git_sha: env_v.req_str("git_sha")?.to_string(),
+            crate_version: env_v.req_str("crate_version")?.to_string(),
+        };
+        let mut entries = Vec::new();
+        for (i, e) in v.req_arr("entries")?.iter().enumerate() {
+            entries.push(Entry::from_json(e).with_context(|| format!("entries[{i}]"))?);
+        }
+        Ok(Report {
+            schema_version,
+            suite: v.req_str("suite")?.to_string(),
+            env,
+            entries,
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<Report> {
+        Report::from_json(&Value::parse(text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing bench report {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Report> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench report {}", path.display()))?;
+        Report::parse(&text).with_context(|| format!("parsing bench report {}", path.display()))
+    }
+
+    pub fn entry(&self, dataset: &str, algo: &str) -> Option<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.dataset == dataset && e.algo == algo)
+    }
+
+    /// The deterministic subset of the report as stable text: one line of
+    /// counters per entry, no times, no environment. Two runs with the
+    /// same seeds and thread count must produce byte-identical output.
+    pub fn counters_fingerprint(&self) -> String {
+        let mut lines: Vec<String> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let c = &e.counters;
+                format!(
+                    "{} {} updates={} wedges={} rho={} theta_max={} peak={} fnv={:#018x}",
+                    e.dataset,
+                    e.algo,
+                    c.updates,
+                    c.wedges,
+                    c.rho,
+                    c.theta_max,
+                    c.peak_entities,
+                    c.theta_fnv
+                )
+            })
+            .collect();
+        lines.sort_unstable();
+        lines.join("\n")
+    }
+}
+
+impl Entry {
+    fn to_json(&self) -> Value {
+        let phases: Vec<Value> = self
+            .phases
+            .iter()
+            .map(|p| {
+                Value::obj()
+                    .with("name", p.name.as_str())
+                    .with("ms", p.ms)
+                    .with("updates", p.updates)
+                    .with("wedges", p.wedges)
+            })
+            .collect();
+        Value::obj()
+            .with("dataset", self.dataset.as_str())
+            .with("seed", self.seed)
+            .with("nu", self.nu)
+            .with("nv", self.nv)
+            .with("m", self.m)
+            .with("algo", self.algo.as_str())
+            .with(
+                "wall_ms",
+                Value::obj()
+                    .with("min", self.wall_ms.min)
+                    .with("mean", self.wall_ms.mean)
+                    .with("max", self.wall_ms.max),
+            )
+            .with("counters", self.counters.to_json())
+            .with("phases", phases)
+    }
+
+    fn from_json(v: &Value) -> Result<Entry> {
+        let w = v.req("wall_ms")?;
+        let mut phases = Vec::new();
+        for p in v.req_arr("phases")? {
+            phases.push(PhaseRow {
+                name: p.req_str("name")?.to_string(),
+                ms: p.req_f64("ms")?,
+                updates: p.req_u64("updates")?,
+                wedges: p.req_u64("wedges")?,
+            });
+        }
+        Ok(Entry {
+            dataset: v.req_str("dataset")?.to_string(),
+            seed: v.req_u64("seed")?,
+            nu: v.req_u64("nu")? as usize,
+            nv: v.req_u64("nv")? as usize,
+            m: v.req_u64("m")? as usize,
+            algo: v.req_str("algo")?.to_string(),
+            wall_ms: WallMs {
+                min: w.req_f64("min")?,
+                mean: w.req_f64("mean")?,
+                max: w.req_f64("max")?,
+            },
+            counters: Counters::from_json(v.req("counters")?).context("counters")?,
+            phases,
+        })
+    }
+}
+
+#[cfg(test)]
+pub(super) mod tests {
+    use super::*;
+
+    pub(crate) fn sample_entry(dataset: &str, algo: &str, updates: u64) -> Entry {
+        Entry {
+            dataset: dataset.to_string(),
+            seed: 7,
+            nu: 10,
+            nv: 12,
+            m: 40,
+            algo: algo.to_string(),
+            wall_ms: WallMs { min: 1.5, mean: 2.0, max: 2.5 },
+            counters: Counters {
+                updates,
+                wedges: 2 * updates,
+                rho: 9,
+                theta_max: 4,
+                peak_entities: 6,
+                theta_fnv: 0xDEAD_BEEF_0123_4567,
+            },
+            phases: vec![PhaseRow {
+                name: "fine(FD)".to_string(),
+                ms: 1.25,
+                updates,
+                wedges: 2 * updates,
+            }],
+        }
+    }
+
+    pub(crate) fn sample_report(entries: Vec<Entry>) -> Report {
+        Report {
+            schema_version: SCHEMA_VERSION,
+            suite: "unit".to_string(),
+            env: Env {
+                threads: 1,
+                repetitions: 1,
+                warmup: 0,
+                git_sha: "unknown".to_string(),
+                crate_version: "test".to_string(),
+            },
+            entries,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything_gated() {
+        let r = sample_report(vec![
+            sample_entry("a", "wing/bup", 100),
+            sample_entry("b", "tip/pbng", 50),
+        ]);
+        let back = Report::parse(&r.to_json().to_pretty()).unwrap();
+        assert_eq!(back.counters_fingerprint(), r.counters_fingerprint());
+        assert_eq!(back.suite, r.suite);
+        assert_eq!(back.entries.len(), 2);
+        assert_eq!(back.entries[0].counters, r.entries[0].counters);
+        assert_eq!(back.entries[0].phases.len(), 1);
+        assert_eq!(back.env.threads, 1);
+    }
+
+    #[test]
+    fn wrong_schema_version_is_rejected() {
+        let r = sample_report(vec![]);
+        let mut v = r.to_json();
+        if let crate::jsonio::Value::Obj(kv) = &mut v {
+            kv[0].1 = crate::jsonio::Value::Int(99);
+        }
+        let err = Report::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("schema_version"), "{err}");
+    }
+
+    #[test]
+    fn theta_fnv_is_order_sensitive() {
+        assert_ne!(theta_fnv(&[1, 2, 3]), theta_fnv(&[3, 2, 1]));
+        assert_eq!(theta_fnv(&[1, 2, 3]), theta_fnv(&[1, 2, 3]));
+        assert_ne!(theta_fnv(&[]), theta_fnv(&[0]));
+    }
+
+    #[test]
+    fn wall_ms_stats() {
+        let w = WallMs::from_times(&[3.0, 1.0, 2.0]);
+        assert_eq!(w.min, 1.0);
+        assert_eq!(w.max, 3.0);
+        assert_eq!(w.mean, 2.0);
+    }
+
+    #[test]
+    fn entry_lookup_by_key() {
+        let r = sample_report(vec![sample_entry("a", "wing/bup", 1)]);
+        assert!(r.entry("a", "wing/bup").is_some());
+        assert!(r.entry("a", "wing/pbng").is_none());
+        assert!(r.entry("b", "wing/bup").is_none());
+    }
+
+    #[test]
+    fn fingerprint_ignores_times_and_env() {
+        let a = sample_report(vec![sample_entry("a", "wing/bup", 1)]);
+        let mut b = a.clone();
+        b.entries[0].wall_ms = WallMs { min: 99.0, mean: 99.0, max: 99.0 };
+        b.env.git_sha = "something".to_string();
+        assert_eq!(a.counters_fingerprint(), b.counters_fingerprint());
+        let mut c = a.clone();
+        c.entries[0].counters.rho += 1;
+        assert_ne!(a.counters_fingerprint(), c.counters_fingerprint());
+    }
+}

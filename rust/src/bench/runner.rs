@@ -1,0 +1,144 @@
+//! Suite execution: warmup + N repetitions per (dataset, algorithm) cell.
+//!
+//! Counters are taken from the last repetition; with a fixed seed and
+//! thread count every repetition produces the same values (asserted by
+//! `tests/test_bench.rs`), so which repetition is recorded is moot — but
+//! "last" also makes the wall-time and counter sections describe the same
+//! run. Wall time is the in-algorithm [`PeelStats::total`], measured
+//! around the full pipeline (counting included), matching Tables 3–4.
+//!
+//! [`PeelStats::total`]: crate::metrics::PeelStats
+
+use super::report::{Counters, Entry, Env, PhaseRow, Report, WallMs};
+use super::{Algo, DatasetSpec, Suite};
+use crate::graph::BipartiteGraph;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOptions {
+    /// Worker threads. Defaults to 1: counter metrics are only
+    /// guaranteed schedule-independent single-threaded, and the CI gate
+    /// needs determinism more than speed.
+    pub threads: usize,
+    pub repetitions: usize,
+    /// Discarded runs before measuring (cache/allocator warmup).
+    pub warmup: usize,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions { threads: 1, repetitions: 3, warmup: 0 }
+    }
+}
+
+/// Execute every (dataset × algorithm) cell of `suite`. `repetitions`
+/// is normalized to at least 1 so the env stanza always describes the
+/// runs that actually happened.
+pub fn run_suite(suite: &Suite, opts: &BenchOptions) -> Report {
+    let opts = BenchOptions { repetitions: opts.repetitions.max(1), ..*opts };
+    let mut entries = Vec::with_capacity(suite.datasets.len() * suite.algos.len());
+    for ds in suite.datasets {
+        let g = ds.build();
+        for &algo in suite.algos {
+            entries.push(run_cell(ds, &g, algo, &opts));
+        }
+    }
+    Report {
+        schema_version: super::report::SCHEMA_VERSION,
+        suite: suite.name.to_string(),
+        env: Env::capture(&opts),
+        entries,
+    }
+}
+
+fn run_cell(ds: &DatasetSpec, g: &BipartiteGraph, algo: Algo, opts: &BenchOptions) -> Entry {
+    for _ in 0..opts.warmup {
+        let _ = algo.run(g, opts.threads);
+    }
+    let reps = opts.repetitions; // >= 1, normalized by run_suite
+    let mut times_ms = Vec::with_capacity(reps);
+    let mut last = None;
+    for _ in 0..reps {
+        let d = algo.run(g, opts.threads);
+        times_ms.push(d.stats.total.as_secs_f64() * 1e3);
+        last = Some(d);
+    }
+    let d = last.expect("at least one repetition");
+    let phases = d
+        .stats
+        .phases
+        .iter()
+        .map(|(ph, t, upd, wdg)| PhaseRow {
+            name: ph.name().to_string(),
+            ms: t.as_secs_f64() * 1e3,
+            updates: *upd,
+            wedges: *wdg,
+        })
+        .collect();
+    Entry {
+        dataset: ds.name.to_string(),
+        seed: ds.seed,
+        nu: g.nu(),
+        nv: g.nv(),
+        m: g.m(),
+        algo: algo.name().to_string(),
+        wall_ms: WallMs::from_times(&times_ms),
+        counters: Counters::from_decomposition(&d),
+        phases,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::find_suite;
+
+    fn tiny_opts() -> BenchOptions {
+        BenchOptions { threads: 1, repetitions: 1, warmup: 0 }
+    }
+
+    #[test]
+    fn runner_fills_the_grid() {
+        let suite = find_suite("micro").unwrap();
+        let r = run_suite(suite, &tiny_opts());
+        assert_eq!(r.entries.len(), suite.datasets.len() * suite.algos.len());
+        assert_eq!(r.suite, "micro");
+        for e in &r.entries {
+            assert!(e.m > 0);
+            assert!(e.wall_ms.min <= e.wall_ms.mean && e.wall_ms.mean <= e.wall_ms.max);
+            assert!(
+                e.counters.updates > 0 || e.counters.wedges > 0,
+                "{}/{} did no work",
+                e.dataset,
+                e.algo
+            );
+            assert!(!e.phases.is_empty());
+        }
+        // every registered algorithm appears on every dataset
+        for ds in suite.datasets {
+            for a in suite.algos {
+                assert!(r.entry(ds.name, a.name()).is_some(), "{}/{}", ds.name, a.name());
+            }
+        }
+    }
+
+    #[test]
+    fn repetitions_and_warmup_are_recorded() {
+        let micro = find_suite("micro").unwrap();
+        let suite = crate::bench::Suite {
+            name: "unit",
+            description: "one-cell suite",
+            datasets: &micro.datasets[2..3], // grid-micro, the smallest
+            algos: &[crate::bench::Algo::WingPbng],
+        };
+        let opts = BenchOptions { threads: 1, repetitions: 2, warmup: 1 };
+        let r = run_suite(&suite, &opts);
+        assert_eq!(r.env.repetitions, 2);
+        assert_eq!(r.env.warmup, 1);
+        assert_eq!(r.env.threads, 1);
+        assert!(!r.env.crate_version.is_empty());
+        // repetitions are normalized, and the env stanza reflects that
+        let zero = BenchOptions { repetitions: 0, ..opts };
+        let r0 = run_suite(&suite, &zero);
+        assert_eq!(r0.env.repetitions, 1);
+    }
+}

@@ -19,7 +19,9 @@ const BOOL_FLAGS: &[&str] = &[
     "no-deletes",
     "full",
     "help",
+    "ignore-time",
     "levels",
+    "list",
     "quiet",
 ];
 

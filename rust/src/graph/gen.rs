@@ -134,6 +134,29 @@ pub fn nested_blocks(levels: usize, s: usize, seed: u64) -> BipartiteGraph {
     GraphBuilder::new().nu(side).nv(side).edges(&edges).build()
 }
 
+/// Banded "grid" bipartite graph: U-vertex `i` connects to the V-window
+/// centred at `i·nv/nu` with half-width `band`, each edge kept with
+/// probability `density`. Consecutive rows share most of their windows,
+/// so butterflies are abundant but *local* — degrees stay bounded by
+/// `2·band + 1`. The anti-hub complement to [`zipf`] in the bench suites:
+/// peeling proceeds in many shallow, wide levels instead of a deep tail.
+pub fn grid(nu: usize, nv: usize, band: usize, density: f64, seed: u64) -> BipartiteGraph {
+    assert!(nu > 0 && nv > 0);
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(nu * (2 * band + 1));
+    for i in 0..nu {
+        let c = i * nv / nu;
+        let lo = c.saturating_sub(band);
+        let hi = (c + band + 1).min(nv);
+        for j in lo..hi {
+            if rng.chance(density) {
+                edges.push((i as u32, j as u32));
+            }
+        }
+    }
+    GraphBuilder::new().nu(nu).nv(nv).edges(&edges).build()
+}
+
 /// Complete biclique K_{a,b} — every edge is in `(a-1)(b-1)` butterflies.
 pub fn biclique(a: usize, b: usize) -> BipartiteGraph {
     let mut edges = Vec::with_capacity(a * b);
@@ -192,6 +215,8 @@ pub enum Preset {
     PlantedS,
     /// Nested biclique chain (clean hierarchy).
     NestedS,
+    /// Banded grid: bounded degrees, local butterflies (no hubs).
+    GridS,
     /// Medium heavy-tail graph for the larger benchmark tier.
     TrM,
     /// Medium membership-like graph for the larger benchmark tier.
@@ -210,6 +235,7 @@ impl Preset {
             Preset::OrS => "or-s",
             Preset::PlantedS => "planted-s",
             Preset::NestedS => "nested-s",
+            Preset::GridS => "grid-s",
             Preset::TrM => "tr-m",
             Preset::OrM => "or-m",
         }
@@ -226,6 +252,7 @@ impl Preset {
             Preset::OrS,
             Preset::PlantedS,
             Preset::NestedS,
+            Preset::GridS,
         ]
     }
 
@@ -262,6 +289,7 @@ impl Preset {
                 108,
             ),
             Preset::NestedS => nested_blocks(4, 6, 109),
+            Preset::GridS => grid(400, 400, 6, 0.9, 112),
             Preset::TrM => zipf(40_000, 20_000, 200_000, 1.5, 1.5, 110),
             Preset::OrM => zipf(25_000, 50_000, 250_000, 1.0, 1.2, 111),
         }
@@ -330,6 +358,27 @@ mod tests {
             assert!(g.deg_u(r) >= 8, "inner row degree {}", g.deg_u(r));
         }
         assert_eq!(g.nu(), 16);
+    }
+
+    #[test]
+    fn grid_is_banded_and_deterministic() {
+        let a = grid(50, 50, 3, 1.0, 9);
+        let b = grid(50, 50, 3, 1.0, 9);
+        assert_eq!(a.edges(), b.edges());
+        // full density: every row has its complete window
+        assert_eq!(a.m(), 50 * 7 - 6 - 6); // rows 0..3 / 47..50 clip 1+2+3 each
+        for u in 0..50u32 {
+            assert!(a.deg_u(u) <= 7);
+            // edges stay within the band around the window centre (= u,
+            // since nu == nv here)
+            for &(v, _) in a.nbrs_u(u) {
+                assert!((v as i64 - u as i64).abs() <= 3, "edge ({u},{v}) outside band");
+            }
+        }
+        // sparser seed-controlled variant differs but stays deterministic
+        let c = grid(50, 50, 3, 0.5, 9);
+        assert!(c.m() < a.m());
+        assert_eq!(c.edges(), grid(50, 50, 3, 0.5, 9).edges());
     }
 
     #[test]

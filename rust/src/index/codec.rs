@@ -199,10 +199,10 @@ mod tests {
     use crate::index::build_wing_forest;
     use crate::peel::bup::wing_bup;
 
-    fn tmp(name: &str) -> std::path::PathBuf {
-        let dir = std::env::temp_dir().join("pbng_codec_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        dir.join(name)
+    fn tmp(name: &str) -> (crate::testkit::TempDir, std::path::PathBuf) {
+        let dir = crate::testkit::TempDir::new("codec").unwrap();
+        let path = dir.file(name);
+        (dir, path) // keep the TempDir alive alongside the path
     }
 
     fn sample_forest() -> Forest {
@@ -223,7 +223,7 @@ mod tests {
     #[test]
     fn roundtrip_preserves_forest_exactly() {
         let f = sample_forest();
-        let p = tmp("roundtrip.idx");
+        let (_dir, p) = tmp("roundtrip.idx");
         let bytes = save(&f, &p).unwrap();
         assert_eq!(bytes, std::fs::metadata(&p).unwrap().len());
         let g = load(&p).unwrap();
@@ -233,7 +233,7 @@ mod tests {
     #[test]
     fn rejects_bad_magic_and_version() {
         let f = sample_forest();
-        let p = tmp("magic.idx");
+        let (_dir, p) = tmp("magic.idx");
         save(&f, &p).unwrap();
         let mut bytes = std::fs::read(&p).unwrap();
         bytes[0] ^= 0xFF;
@@ -248,7 +248,7 @@ mod tests {
     #[test]
     fn rejects_payload_corruption_and_truncation() {
         let f = sample_forest();
-        let p = tmp("corrupt.idx");
+        let (_dir, p) = tmp("corrupt.idx");
         save(&f, &p).unwrap();
         let bytes = std::fs::read(&p).unwrap();
         // flip one byte in the middle of some section payload
@@ -269,7 +269,7 @@ mod tests {
     #[test]
     fn rejects_unknown_kind_tag_and_checksummed_header() {
         let f = sample_forest();
-        let p = tmp("kind.idx");
+        let (_dir, p) = tmp("kind.idx");
         save(&f, &p).unwrap();
         let mut bytes = std::fs::read(&p).unwrap();
         // a header flip without fixing the header checksum is caught...
@@ -298,7 +298,7 @@ mod tests {
             sub_nv: vec![],
         };
         f.validate().unwrap();
-        let p = tmp("empty.idx");
+        let (_dir, p) = tmp("empty.idx");
         save(&f, &p).unwrap();
         assert_eq!(load(&p).unwrap(), f);
     }

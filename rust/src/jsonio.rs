@@ -1,0 +1,530 @@
+//! Dependency-free JSON tree: stable-order writer + strict parser.
+//!
+//! The offline registry carries no `serde`; the bench subsystem
+//! ([`crate::bench`]) needs machine-readable reports that CI can diff
+//! against a committed baseline, so this module supplies the minimal JSON
+//! kernel: a [`Value`] tree, a pretty-printer with deterministic member
+//! order (insertion order — writers control the byte layout), and a
+//! recursive-descent parser for `pbng bench compare`.
+//!
+//! Numbers: non-negative integer literals parse to [`Value::Int`] (exact
+//! `u64` — counter metrics must not round-trip through `f64`); signed or
+//! fractional literals parse to [`Value::Num`]. Writers emit counters as
+//! `Int` and wall times as `Num`.
+
+use anyhow::{bail, Context, Result};
+
+/// Parse recursion cap: reports nest ~4 deep, so 128 is generous while
+/// keeping a malformed file from overflowing the stack.
+const MAX_DEPTH: usize = 128;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// Exact non-negative integer (counters, checksums).
+    Int(u64),
+    /// Any other number.
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    /// Insertion-ordered members, preserved by the writer.
+    Obj(Vec<(String, Value)>),
+}
+
+impl From<bool> for Value {
+    fn from(x: bool) -> Value {
+        Value::Bool(x)
+    }
+}
+impl From<u64> for Value {
+    fn from(x: u64) -> Value {
+        Value::Int(x)
+    }
+}
+impl From<u32> for Value {
+    fn from(x: u32) -> Value {
+        Value::Int(x as u64)
+    }
+}
+impl From<usize> for Value {
+    fn from(x: usize) -> Value {
+        Value::Int(x as u64)
+    }
+}
+impl From<f64> for Value {
+    fn from(x: f64) -> Value {
+        Value::Num(x)
+    }
+}
+impl From<&str> for Value {
+    fn from(x: &str) -> Value {
+        Value::Str(x.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(x: String) -> Value {
+        Value::Str(x)
+    }
+}
+impl From<Vec<Value>> for Value {
+    fn from(x: Vec<Value>) -> Value {
+        Value::Arr(x)
+    }
+}
+
+impl Value {
+    /// Empty object, for use with [`Value::with`].
+    pub fn obj() -> Value {
+        Value::Obj(Vec::new())
+    }
+
+    /// Builder-style member append (panics on non-objects — writer-side
+    /// misuse, not data-dependent).
+    pub fn with(mut self, key: &str, v: impl Into<Value>) -> Value {
+        match &mut self {
+            Value::Obj(kv) => kv.push((key.to_string(), v.into())),
+            _ => panic!("Value::with on a non-object"),
+        }
+        self
+    }
+
+    /// Object member lookup (first match; `None` on non-objects).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(x) => Some(*x as f64),
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    /// Typed member getters with path context for error messages.
+    pub fn req(&self, key: &str) -> Result<&Value> {
+        self.get(key)
+            .with_context(|| format!("missing member '{key}'"))
+    }
+
+    pub fn req_u64(&self, key: &str) -> Result<u64> {
+        self.req(key)?
+            .as_u64()
+            .with_context(|| format!("member '{key}' is not an unsigned integer"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .with_context(|| format!("member '{key}' is not a number"))
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<&str> {
+        self.req(key)?
+            .as_str()
+            .with_context(|| format!("member '{key}' is not a string"))
+    }
+
+    pub fn req_arr(&self, key: &str) -> Result<&[Value]> {
+        self.req(key)?
+            .as_arr()
+            .with_context(|| format!("member '{key}' is not an array"))
+    }
+
+    /// Serialize with 2-space indentation and a trailing newline.
+    pub fn to_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Int(x) => out.push_str(&x.to_string()),
+            Value::Num(x) => {
+                if x.is_finite() {
+                    out.push_str(&x.to_string());
+                } else {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                }
+            }
+            Value::Str(s) => write_string(out, s),
+            Value::Arr(xs) => {
+                if xs.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    x.write(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Value::Obj(kv) => {
+                if kv.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in kv.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    write_string(out, k);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+        }
+    }
+
+    /// Strict parse of a complete JSON document.
+    pub fn parse(text: &str) -> Result<Value> {
+        let mut p = Parser {
+            b: text.as_bytes(),
+            i: 0,
+        };
+        p.ws();
+        let v = p.value(0)?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing characters at byte {}", p.i);
+        }
+        Ok(v)
+    }
+}
+
+fn push_indent(out: &mut String, n: usize) {
+    for _ in 0..n {
+        out.push_str("  ");
+    }
+}
+
+fn write_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!("expected '{}' at byte {}", c as char, self.i)
+        }
+    }
+
+    fn eat_lit(&mut self, lit: &str) -> bool {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Value> {
+        if depth > MAX_DEPTH {
+            bail!("JSON nesting exceeds {MAX_DEPTH} levels");
+        }
+        self.ws();
+        let Some(c) = self.peek() else {
+            bail!("unexpected end of input")
+        };
+        match c {
+            b'n' | b't' | b'f' => {
+                for (lit, v) in [
+                    ("null", Value::Null),
+                    ("true", Value::Bool(true)),
+                    ("false", Value::Bool(false)),
+                ] {
+                    if self.eat_lit(lit) {
+                        return Ok(v);
+                    }
+                }
+                bail!("bad literal at byte {}", self.i)
+            }
+            b'"' => Ok(Value::Str(self.string()?)),
+            b'[' => self.array(depth),
+            b'{' => self.object(depth),
+            c if c == b'-' || c.is_ascii_digit() => self.number(),
+            c => bail!("unexpected character '{}' at byte {}", c as char, self.i),
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Value::Arr(xs));
+        }
+        loop {
+            xs.push(self.value(depth + 1)?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Value::Arr(xs));
+                }
+                _ => bail!("expected ',' or ']' at byte {}", self.i),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut kv = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Value::Obj(kv));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            let v = self.value(depth + 1)?;
+            kv.push((k, v));
+            self.ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Value::Obj(kv));
+                }
+                _ => bail!("expected ',' or '}}' at byte {}", self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let start = self.i;
+            while self.i < self.b.len() && self.b[self.i] != b'"' && self.b[self.i] != b'\\' {
+                self.i += 1;
+            }
+            s.push_str(
+                std::str::from_utf8(&self.b[start..self.i]).context("invalid UTF-8 in string")?,
+            );
+            match self.peek() {
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let e = self.peek().context("unterminated escape")?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{0008}'),
+                        b'f' => s.push('\u{000c}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                bail!("truncated \\u escape at byte {}", self.i);
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .ok()
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .with_context(|| format!("bad \\u escape at byte {}", self.i))?;
+                            self.i += 4;
+                            // Surrogate pairs are not produced by our
+                            // writer; map lone surrogates to U+FFFD.
+                            s.push(char::from_u32(hex).unwrap_or('\u{fffd}'));
+                        }
+                        c => bail!("unknown escape '\\{}' at byte {}", c as char, self.i),
+                    }
+                }
+                _ => bail!("unterminated string at byte {}", self.i),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.i;
+        let mut integral = true;
+        if self.peek() == Some(b'-') {
+            integral = false;
+            self.i += 1;
+        }
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => self.i += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    integral = false;
+                    self.i += 1;
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        if integral {
+            if let Ok(x) = text.parse::<u64>() {
+                return Ok(Value::Int(x));
+            }
+        }
+        let x: f64 = text
+            .parse()
+            .with_context(|| format!("bad number '{text}' at byte {start}"))?;
+        Ok(Value::Num(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_structure_and_order() {
+        let v = Value::obj()
+            .with("b", 1u64)
+            .with("a", "x")
+            .with("list", vec![Value::Int(1), Value::Num(2.5), Value::Null])
+            .with("nested", Value::obj().with("flag", true));
+        let text = v.to_pretty();
+        let back = Value::parse(&text).unwrap();
+        assert_eq!(v, back);
+        // insertion order is the byte order: "b" precedes "a"
+        assert!(text.find("\"b\"").unwrap() < text.find("\"a\"").unwrap());
+    }
+
+    #[test]
+    fn u64_counters_are_exact() {
+        let v = Value::obj().with("fnv", u64::MAX);
+        let back = Value::parse(&v.to_pretty()).unwrap();
+        assert_eq!(back.req_u64("fnv").unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn serialization_is_deterministic() {
+        let v = Value::obj().with("x", 3u64).with("y", 1.25f64);
+        assert_eq!(v.to_pretty(), v.to_pretty());
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let s = "quote \" slash \\ newline \n tab \t end";
+        let v = Value::obj().with("s", s);
+        let back = Value::parse(&v.to_pretty()).unwrap();
+        assert_eq!(back.req_str("s").unwrap(), s);
+    }
+
+    #[test]
+    fn parse_errors_are_rejected() {
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\" 1}",
+            "tru",
+            "{\"a\":1} extra",
+            "\"unterminated",
+        ] {
+            assert!(Value::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn negative_and_fractional_are_num() {
+        assert_eq!(Value::parse("-3").unwrap(), Value::Num(-3.0));
+        assert_eq!(Value::parse("2.5").unwrap(), Value::Num(2.5));
+        assert_eq!(Value::parse("7").unwrap(), Value::Int(7));
+    }
+
+    #[test]
+    fn deep_nesting_is_capped() {
+        let text = format!("{}1{}", "[".repeat(300), "]".repeat(300));
+        assert!(Value::parse(&text).is_err());
+    }
+
+    #[test]
+    fn typed_getters_report_the_key() {
+        let v = Value::obj().with("n", 1u64);
+        let err = v.req_u64("missing").unwrap_err().to_string();
+        assert!(err.contains("missing"), "{err}");
+        let err = v.req_str("n").unwrap_err().to_string();
+        assert!(err.contains("n"), "{err}");
+    }
+}

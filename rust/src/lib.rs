@@ -20,10 +20,12 @@
 //! ```
 
 pub mod beindex;
+pub mod bench;
 pub mod cli;
 pub mod count;
 pub mod graph;
 pub mod index;
+pub mod jsonio;
 pub mod metrics;
 pub mod par;
 pub mod hierarchy;

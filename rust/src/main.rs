@@ -9,6 +9,7 @@
 //!   index      build + persist the hierarchy forest index
 //!   query      one-shot query against a persisted index
 //!   serve      serve index queries over stdin or TCP
+//!   bench      run a benchmark suite / compare two bench reports
 //!   verify     run all algorithms and assert they agree
 //!   info       runtime / artifact status
 
@@ -48,6 +49,10 @@ USAGE: pbng <command> [args]
                     [--theta numbers.txt] [--p P] [--threads T]
   query <index.idx> <command ...>        (e.g. `query g.idx kwing 3`)
   serve <index.idx> [--port N]           (stdin line protocol without --port)
+  bench [--suite smoke] [--repetitions N] [--warmup N] [--threads T]
+        [--out FILE] [--list]
+  bench compare <baseline.json> <current.json> [--counter-tolerance F]
+        [--time-factor F] [--ignore-time]
   verify <graph.tsv> [--p P] [--threads T]
   info
 
@@ -77,6 +82,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "index" => cmd_index(&args),
         "query" => cmd_query(&args),
         "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
         "verify" => cmd_verify(&args),
         "info" => cmd_info(&args),
         other => bail!("unknown command '{other}' (try --help)"),
@@ -355,6 +361,96 @@ fn cmd_serve(args: &Args) -> Result<()> {
             pbng::index::server::serve_tcp(engine, &format!("127.0.0.1:{p}"))?;
         }
         None => pbng::index::server::serve_stdin(&engine)?,
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    if args.positional.first().map(String::as_str) == Some("compare") {
+        return cmd_bench_compare(args);
+    }
+    let suite_name = args.get_or("suite", "smoke").to_string();
+    if args.flag("list") {
+        args.check_unknown()?;
+        for s in pbng::bench::SUITES {
+            let datasets: Vec<&str> = s.datasets.iter().map(|d| d.name).collect();
+            let algos: Vec<&str> = s.algos.iter().map(|a| a.name()).collect();
+            println!("{:<10} {}", s.name, s.description);
+            println!("{:<10}   datasets: {}", "", datasets.join(", "));
+            println!("{:<10}   algos:    {}", "", algos.join(", "));
+        }
+        return Ok(());
+    }
+    let suite = pbng::bench::find_suite(&suite_name)
+        .with_context(|| format!("unknown suite '{suite_name}' (try `pbng bench --list`)"))?;
+    let opts = pbng::bench::runner::BenchOptions {
+        threads: args.get_usize("threads", 1)?,
+        repetitions: args.get_usize("repetitions", 3)?,
+        warmup: args.get_usize("warmup", 0)?,
+    };
+    let out = match args.get("out") {
+        Some(s) => s.to_string(),
+        None => format!("BENCH_{suite_name}.json"),
+    };
+    args.check_unknown()?;
+    let report = pbng::bench::runner::run_suite(suite, &opts);
+    let widths = [14usize, 14, 10, 10, 10, 8, 10];
+    pbng::metrics::print_row(
+        &["dataset", "algo", "ms(min)", "updates", "wedges", "rho", "theta_max"]
+            .map(String::from),
+        &widths,
+    );
+    for e in &report.entries {
+        pbng::metrics::print_row(
+            &[
+                e.dataset.clone(),
+                e.algo.clone(),
+                format!("{:.2}", e.wall_ms.min),
+                human(e.counters.updates),
+                human(e.counters.wedges),
+                e.counters.rho.to_string(),
+                e.counters.theta_max.to_string(),
+            ],
+            &widths,
+        );
+    }
+    report.save(Path::new(&out))?;
+    println!(
+        "wrote {out}: {} entries ({} datasets x {} algos), schema v{}, threads={}",
+        report.entries.len(),
+        suite.datasets.len(),
+        suite.algos.len(),
+        report.schema_version,
+        report.env.threads
+    );
+    Ok(())
+}
+
+fn cmd_bench_compare(args: &Args) -> Result<()> {
+    let baseline = args
+        .positional
+        .get(1)
+        .context("expected a baseline report path (bench compare <baseline> <current>)")?;
+    let current = args
+        .positional
+        .get(2)
+        .context("expected a current report path (bench compare <baseline> <current>)")?;
+    let th = pbng::bench::compare::Thresholds {
+        counter_rel_tol: args.get_f64("counter-tolerance", 0.0)?,
+        time_factor: args.get_f64("time-factor", 1.5)?,
+        ignore_time: args.flag("ignore-time"),
+    };
+    args.check_unknown()?;
+    let base = pbng::bench::report::Report::load(Path::new(baseline))?;
+    let cur = pbng::bench::report::Report::load(Path::new(current))?;
+    let cmp = pbng::bench::compare::compare(&base, &cur, &th)?;
+    print!("{}", cmp.render());
+    if !cmp.passed() {
+        bail!(
+            "{} regression(s) beyond thresholds (baseline {})",
+            cmp.regressions.len(),
+            baseline
+        );
     }
     Ok(())
 }

@@ -49,6 +49,43 @@ impl Meters {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// Point-in-time copy of the counters (the values CI gates on).
+    pub fn snapshot(&self) -> MetersSnapshot {
+        MetersSnapshot {
+            updates: self.updates.get(),
+            wedges: self.wedges.get(),
+            rho: self.rho.get(),
+        }
+    }
+
+    /// Stable JSON form of [`Meters::snapshot`].
+    pub fn to_json(&self) -> crate::jsonio::Value {
+        self.snapshot().to_json()
+    }
+}
+
+/// Immutable [`Meters`] snapshot with a schema-stable JSON form.
+///
+/// The bench subsystem ([`crate::bench`]) embeds this object in
+/// `BENCH_<suite>.json` and `bench compare` gates on its members, so the
+/// key set and order below are part of the report schema: additions are
+/// fine, renames/removals require a `report::SCHEMA_VERSION` bump.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MetersSnapshot {
+    pub updates: u64,
+    pub wedges: u64,
+    pub rho: u64,
+}
+
+impl MetersSnapshot {
+    /// JSON object `{updates, wedges, rho}` — fixed key order.
+    pub fn to_json(&self) -> crate::jsonio::Value {
+        crate::jsonio::Value::obj()
+            .with("updates", self.updates)
+            .with("wedges", self.wedges)
+            .with("rho", self.rho)
+    }
 }
 
 /// Final, immutable result of one decomposition run.
@@ -63,6 +100,15 @@ pub struct PeelStats {
 }
 
 impl PeelStats {
+    /// The final counter values as a [`MetersSnapshot`] (bench reports).
+    pub fn meters_snapshot(&self) -> MetersSnapshot {
+        MetersSnapshot {
+            updates: self.updates,
+            wedges: self.wedges,
+            rho: self.rho,
+        }
+    }
+
     pub fn phase_time(&self, p: Phase) -> Duration {
         self.phases
             .iter()
@@ -206,6 +252,35 @@ mod tests {
         assert_eq!(s.phase_updates(Phase::Count), 5);
         assert_eq!(s.phase_updates(Phase::Coarse), 7);
         assert_eq!(s.phases.len(), 2);
+    }
+
+    #[test]
+    fn snapshot_to_json_is_stable() {
+        let m = Meters::new();
+        m.updates.add(7);
+        m.wedges.add(9);
+        m.rho.add(2);
+        let text = m.to_json().to_pretty();
+        assert_eq!(text, m.to_json().to_pretty());
+        let back = crate::jsonio::Value::parse(&text).unwrap();
+        assert_eq!(back.req_u64("updates").unwrap(), 7);
+        assert_eq!(back.req_u64("wedges").unwrap(), 9);
+        assert_eq!(back.req_u64("rho").unwrap(), 2);
+        assert_eq!(m.snapshot(), m.snapshot());
+    }
+
+    #[test]
+    fn peel_stats_snapshot_mirrors_counters() {
+        let m = Meters::new();
+        let mut r = Recorder::new(&m);
+        r.enter(Phase::Fine);
+        m.updates.add(4);
+        m.rho.add(1);
+        let s = r.finish();
+        let snap = s.meters_snapshot();
+        assert_eq!(snap, m.snapshot());
+        assert_eq!(snap.updates, 4);
+        assert_eq!(snap.rho, 1);
     }
 
     #[test]

@@ -38,6 +38,11 @@ pub fn wing_parb(g: &BipartiteGraph) -> Decomposition {
     let mut sup = counts.per_edge;
     let mut theta = vec![0u64; m];
     let mut alive = vec![true; m];
+    // in-bucket bitmap: stale heap duplicates of an edge would otherwise
+    // need an O(bucket) `contains` scan per pop (O(bucket²) per level).
+    // Never cleared — every bucketed edge is peeled at its level, so a
+    // set bit can only belong to a dead edge afterwards.
+    let mut in_bucket = vec![false; m];
     let mut heap = LazyHeap::with_initial(&sup);
     let mut remaining = m;
     while remaining > 0 {
@@ -46,13 +51,15 @@ pub fn wing_parb(g: &BipartiteGraph) -> Decomposition {
             .pop_live(|i| alive[i as usize].then(|| sup[i as usize]))
             .expect("heap exhausted");
         // gather the whole bucket at level k
+        in_bucket[first as usize] = true;
         let mut active = vec![first];
         while let Some((s, e)) = heap.pop_live(|i| alive[i as usize].then(|| sup[i as usize])) {
             if s > k {
                 heap.push(s, e); // belongs to a later level
                 break;
             }
-            if !active.contains(&e) {
+            if !in_bucket[e as usize] {
+                in_bucket[e as usize] = true;
                 active.push(e);
             }
         }

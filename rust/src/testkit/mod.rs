@@ -4,7 +4,8 @@
 //! supplies (a) a splitmix64 PRNG (Steele et al., public domain algorithm)
 //! and (b) a tiny property-test runner that sweeps seeds and reports the
 //! failing seed so any counterexample is reproducible with
-//! `Rng::new(seed)`.
+//! `Rng::new(seed)`, plus (c) a self-cleaning [`TempDir`] (no `tempfile`
+//! crate) for codec and bench-report I/O tests.
 
 /// SplitMix64: tiny, fast, statistically solid for test-data generation.
 #[derive(Clone, Debug)]
@@ -108,6 +109,42 @@ impl ZipfSampler {
     }
 }
 
+/// Unique self-cleaning temp directory for tests that exercise file I/O
+/// (index codec round trips, bench report save/load). Directories are
+/// disambiguated by pid + a process-wide sequence number so parallel test
+/// threads and concurrent `cargo test` invocations never collide.
+pub struct TempDir {
+    path: std::path::PathBuf,
+}
+
+impl TempDir {
+    pub fn new(label: &str) -> std::io::Result<TempDir> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "pbng-{label}-{}-{seq}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(TempDir { path })
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    pub fn file(&self, name: &str) -> std::path::PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
 /// Run `prop(seed)` for `cases` seeds derived from `base_seed`; panic with
 /// the reproducing seed on the first failure (returned as Err(msg)).
 pub fn check_property<F>(name: &str, base_seed: u64, cases: u64, prop: F)
@@ -178,6 +215,19 @@ mod tests {
         let mut sorted = xs.clone();
         sorted.sort();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn temp_dir_is_unique_and_cleaned() {
+        let a = TempDir::new("unit").unwrap();
+        let b = TempDir::new("unit").unwrap();
+        assert_ne!(a.path(), b.path());
+        let f = a.file("x.txt");
+        std::fs::write(&f, b"hi").unwrap();
+        let kept = a.path().to_path_buf();
+        drop(a);
+        assert!(!kept.exists());
+        assert!(b.path().exists());
     }
 
     #[test]

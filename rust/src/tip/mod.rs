@@ -172,10 +172,15 @@ pub fn tip_parb(g: &BipartiteGraph, side: Side) -> Decomposition {
     let mut remaining = nu;
     let mut ep = 0u32;
     let alive = |epoch: &[AtomicU32], i: u32| epoch[i as usize].load(Ordering::Relaxed) == ALIVE;
+    // in-bucket bitmap replacing an O(bucket) `contains` scan per pop
+    // (see peel::parb); never cleared — bucketed vertices are peeled at
+    // their level, so stale bits only ever shadow dead vertices.
+    let mut in_bucket = vec![false; nu];
     while remaining > 0 {
         let (k, first) = heap
             .pop_live(|i| alive(&epoch, i).then(|| sup[i as usize].get()))
             .expect("tip heap exhausted");
+        in_bucket[first as usize] = true;
         let mut active = vec![first];
         while let Some((s, u)) = heap.pop_live(|i| alive(&epoch, i).then(|| sup[i as usize].get()))
         {
@@ -183,7 +188,8 @@ pub fn tip_parb(g: &BipartiteGraph, side: Side) -> Decomposition {
                 heap.push(s, u);
                 break;
             }
-            if !active.contains(&u) {
+            if !in_bucket[u as usize] {
+                in_bucket[u as usize] = true;
                 active.push(u);
             }
         }

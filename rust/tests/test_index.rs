@@ -10,10 +10,10 @@ use pbng::index::{build_tip_forest, build_wing_forest, codec, server, Forest, Fo
 use pbng::peel::bup::wing_bup;
 use pbng::testkit::{check_property, Rng};
 
-fn tmp(name: &str) -> std::path::PathBuf {
-    let dir = std::env::temp_dir().join("pbng_index_itest");
-    std::fs::create_dir_all(&dir).unwrap();
-    dir.join(name)
+fn tmp(name: &str) -> (pbng::testkit::TempDir, std::path::PathBuf) {
+    let dir = pbng::testkit::TempDir::new("index-itest").unwrap();
+    let path = dir.file(name);
+    (dir, path) // keep the TempDir alive alongside the path
 }
 
 fn wing_setup(g: &pbng::graph::BipartiteGraph) -> (Forest, BeIndex, Vec<u64>) {
@@ -41,7 +41,7 @@ fn acceptance_preset_forest_matches_direct_at_every_level() {
     let g = gen::Preset::PlantedS.build();
     let (forest, idx, theta) = wing_setup(&g);
     forest.validate().unwrap();
-    let path = tmp("planted.idx");
+    let (_dir, path) = tmp("planted.idx");
     codec::save(&forest, &path).unwrap();
     let engine = QueryEngine::new(codec::load(&path).unwrap());
     for k in probe_levels(&theta) {
@@ -67,7 +67,7 @@ fn random_graphs_forest_and_roundtrip_match_direct() {
         if let Err(e) = forest.validate() {
             return Err(e);
         }
-        let path = tmp(&format!("rand_{seed:x}.idx"));
+        let (_dir, path) = tmp(&format!("rand_{seed:x}.idx"));
         codec::save(&forest, &path).map_err(|e| e.to_string())?;
         let loaded = codec::load(&path).map_err(|e| e.to_string())?;
         if loaded != forest {
@@ -89,7 +89,7 @@ fn tip_roundtrip_matches_ktip_vertices_both_sides() {
         let theta = pbng::tip::tip_bup(&g, side).theta;
         let forest = build_tip_forest(&theta, kind);
         forest.validate().unwrap();
-        let path = tmp(&format!("tip_{}.idx", kind.name()));
+        let (_dir, path) = tmp(&format!("tip_{}.idx", kind.name()));
         codec::save(&forest, &path).unwrap();
         let loaded = codec::load(&path).unwrap();
         assert_eq!(loaded, forest);
@@ -111,7 +111,7 @@ fn tip_roundtrip_matches_ktip_vertices_both_sides() {
 fn corrupted_index_files_are_rejected() {
     let g = gen::paper_fig1();
     let (forest, _, _) = wing_setup(&g);
-    let path = tmp("corrupt_e2e.idx");
+    let (_dir, path) = tmp("corrupt_e2e.idx");
     codec::save(&forest, &path).unwrap();
     let pristine = std::fs::read(&path).unwrap();
     // every single-byte flip anywhere in the file must fail loudly or
