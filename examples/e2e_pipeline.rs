@@ -82,7 +82,7 @@ fn main() {
     );
     let bup = pbng::peel::bup::wing_bup(&small);
     row("BUP", &bup);
-    let parb = pbng::peel::parb::wing_parb(&small);
+    let parb = pbng::peel::parb::wing_parb(&small, threads);
     row("ParB", &parb);
     let beb = wing_be_batch(&small, threads);
     row("BE_Batch", &beb);

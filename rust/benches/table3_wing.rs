@@ -39,7 +39,7 @@ fn main() {
         let g = p.build();
         let skip_slow = g.m() > budget;
         let bup = (!skip_slow).then(|| pbng::peel::bup::wing_bup(&g));
-        let parb = (!skip_slow).then(|| pbng::peel::parb::wing_parb(&g));
+        let parb = (!skip_slow).then(|| pbng::peel::parb::wing_parb(&g, threads));
         let beb = wing_be_batch(&g, threads);
         let pc = wing_be_pc(&g, 0.02);
         let pbng_d = wing_pbng(&g, PbngConfig { p: 64, threads, ..Default::default() });

@@ -28,7 +28,7 @@ fn main() {
         for side in [Side::U, Side::V] {
             let name = format!("{}{}", p.name(), if side == Side::U { "U" } else { "V" });
             let bup = tip_bup(&g, side);
-            let parb = tip_parb(&g, side);
+            let parb = tip_parb(&g, side, threads);
             let pbng_d = tip_pbng(&g, side, TipConfig { p: 32, threads, ..Default::default() });
             assert_eq!(pbng_d.theta, bup.theta, "{name}: PBNG != BUP");
             assert_eq!(parb.theta, bup.theta, "{name}: ParB != BUP");

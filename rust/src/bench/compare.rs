@@ -14,8 +14,11 @@
 //!   default 1.5) because shared runners are noisy; `--ignore-time`
 //!   disables it entirely, which is what CI uses (counters only).
 //! * An entry present in the baseline but missing from the current
-//!   report fails; entries new in the current report pass ungated (this
-//!   is how a freshly bootstrapped, empty baseline behaves).
+//!   report fails; entries new in the current report pass ungated.
+//! * An **empty baseline** fails loudly by default: a bootstrap baseline
+//!   gates nothing, and a vacuous pass must not masquerade as a green
+//!   perf gate. `--allow-empty-baseline` (CI passes it explicitly)
+//!   acknowledges the un-armed state and turns it back into a pass.
 
 use super::report::{Entry, Report};
 use anyhow::{bail, Result};
@@ -28,11 +31,19 @@ pub struct Thresholds {
     pub time_factor: f64,
     /// Skip the wall-time gate entirely (CI on shared runners).
     pub ignore_time: bool,
+    /// Accept an entry-less bootstrap baseline instead of failing the
+    /// gate (an un-armed gate must be a loud, explicit choice).
+    pub allow_empty_baseline: bool,
 }
 
 impl Default for Thresholds {
     fn default() -> Self {
-        Thresholds { counter_rel_tol: 0.0, time_factor: 1.5, ignore_time: false }
+        Thresholds {
+            counter_rel_tol: 0.0,
+            time_factor: 1.5,
+            ignore_time: false,
+            allow_empty_baseline: false,
+        }
     }
 }
 
@@ -109,6 +120,12 @@ pub fn compare(baseline: &Report, current: &Report, th: &Thresholds) -> Result<C
         );
     }
     let mut cmp = Comparison::default();
+    if baseline.entries.is_empty() && !th.allow_empty_baseline {
+        let msg = "baseline has no entries: the gate is un-armed and would pass vacuously; \
+                   refresh and commit the baseline to arm it, or pass --allow-empty-baseline \
+                   to accept the bootstrap state explicitly";
+        cmp.regressions.push(msg.to_string());
+    }
     for be in &baseline.entries {
         let key = format!("{}/{}", be.dataset, be.algo);
         match current.entry(&be.dataset, &be.algo) {
@@ -274,13 +291,23 @@ mod tests {
     }
 
     #[test]
-    fn empty_bootstrap_baseline_passes() {
+    fn empty_baseline_is_loud_unless_allowed() {
         let base = sample_report(vec![]);
         let cur = sample_report(vec![sample_entry("a", "wing/bup", 100)]);
+        // default: an un-armed gate fails, with a distinct message
         let cmp = compare(&base, &cur, &counters_only()).unwrap();
+        assert!(!cmp.passed());
+        assert_eq!(cmp.checked, 0);
+        assert!(cmp.regressions[0].contains("un-armed"), "{:?}", cmp.regressions);
+        // explicit opt-in: passes, and still renders the bootstrap hint
+        let th = Thresholds { allow_empty_baseline: true, ..counters_only() };
+        let cmp = compare(&base, &cur, &th).unwrap();
         assert!(cmp.passed());
         assert_eq!(cmp.checked, 0);
         assert!(cmp.render().contains("bootstrap"));
+        // a non-empty baseline is unaffected by the flag
+        let armed = sample_report(vec![sample_entry("a", "wing/bup", 100)]);
+        assert!(compare(&armed, &cur, &counters_only()).unwrap().passed());
     }
 
     #[test]

@@ -92,13 +92,13 @@ impl Algo {
         };
         match self {
             Algo::WingBup => crate::peel::bup::wing_bup(g),
-            Algo::WingParb => crate::peel::parb::wing_parb(g),
+            Algo::WingParb => crate::peel::parb::wing_parb(g, threads),
             Algo::WingPbng => crate::wing::wing_pbng(g, wing_cfg(true, true)),
             Algo::WingPbngMinus => crate::wing::wing_pbng(g, wing_cfg(true, false)),
             Algo::WingPbngMinusMinus => crate::wing::wing_pbng(g, wing_cfg(false, false)),
             Algo::WingBeBatch => crate::wing::wing_be_batch(g, threads),
             Algo::TipPeel => crate::tip::tip_bup(g, Side::U),
-            Algo::TipParb => crate::tip::tip_parb(g, Side::U),
+            Algo::TipParb => crate::tip::tip_parb(g, Side::U, threads),
             Algo::TipPbng => crate::tip::tip_pbng(
                 g,
                 Side::U,

@@ -17,7 +17,9 @@
 //! }
 //! ```
 //!
-//! `counters` extends [`MetersSnapshot::to_json`] with the output-shape
+//! `counters` carries the deterministic [`crate::metrics::Meters`]
+//! members (`spawns` is deliberately excluded: it depends on whether the
+//! process already warmed the worker pool) plus the output-shape
 //! metrics: `theta_max` / `peak_entities` describe the densest level
 //! (peak set), and `theta_fnv` is an FNV-1a 64 checksum of the whole θ
 //! vector — any algorithmic output change flips it, so `bench compare`
@@ -29,7 +31,6 @@
 use super::runner::BenchOptions;
 use crate::index::codec::fnv64;
 use crate::jsonio::Value;
-use crate::metrics::MetersSnapshot;
 use crate::peel::Decomposition;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -143,12 +144,15 @@ impl Counters {
     }
 
     fn to_json(self) -> Value {
-        let snap = MetersSnapshot {
-            updates: self.updates,
-            wedges: self.wedges,
-            rho: self.rho,
-        };
-        snap.to_json()
+        // Spelled out rather than delegated to `MetersSnapshot::to_json`:
+        // that snapshot now also carries `spawns`, a process-lifetime
+        // runtime metric (non-zero only for the run that first warms the
+        // worker pool) that has no place in a deterministically-gated
+        // report section — and the v1 key set must stay byte-stable.
+        Value::obj()
+            .with("updates", self.updates)
+            .with("wedges", self.wedges)
+            .with("rho", self.rho)
             .with("theta_max", self.theta_max)
             .with("peak_entities", self.peak_entities)
             .with("theta_fnv", format!("{:#018x}", self.theta_fnv))

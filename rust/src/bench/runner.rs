@@ -15,9 +15,11 @@ use crate::graph::BipartiteGraph;
 
 #[derive(Clone, Copy, Debug)]
 pub struct BenchOptions {
-    /// Worker threads. Defaults to 1: counter metrics are only
-    /// guaranteed schedule-independent single-threaded, and the CI gate
-    /// needs determinism more than speed.
+    /// Worker threads, honored end to end through every algorithm's
+    /// pipeline (counting, CD, FD) on the persistent runtime pool.
+    /// Defaults to 1, which never wakes the pool: counter metrics are
+    /// only guaranteed schedule-independent single-threaded, and the CI
+    /// gate needs determinism more than speed.
     pub threads: usize,
     pub repetitions: usize,
     /// Discarded runs before measuring (cache/allocator warmup).

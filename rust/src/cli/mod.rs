@@ -15,6 +15,7 @@ pub struct Args {
 
 /// Flags that take no value.
 const BOOL_FLAGS: &[&str] = &[
+    "allow-empty-baseline",
     "no-batch",
     "no-deletes",
     "full",

@@ -119,18 +119,21 @@ pub fn pve_bcnt(
     let total = crate::par::Counter::new();
 
     let threads = opts.threads.max(1);
-    // Per-thread bloom harvests, merged afterwards.
-    let harvests: Vec<std::sync::Mutex<RawBloomsLocal>> = (0..threads)
-        .map(|_| std::sync::Mutex::new(RawBloomsLocal::default()))
+    let lanes = crate::par::max_lanes(threads);
+    // Per-lane bloom harvests, merged afterwards.
+    let mut harvests: Vec<crate::par::RacyCell<RawBloomsLocal>> = (0..lanes)
+        .map(|_| crate::par::RacyCell::new(RawBloomsLocal::default()))
         .collect();
-    // Per-thread scratch (wedge counts indexed by label).
-    let scratch: Vec<std::sync::Mutex<Scratch>> = (0..threads)
-        .map(|_| std::sync::Mutex::new(Scratch::new(nw)))
+    // Per-lane scratch (wedge counts indexed by label).
+    let scratch: Vec<crate::par::RacyCell<Scratch>> = (0..lanes)
+        .map(|_| crate::par::RacyCell::new(Scratch::new(nw)))
         .collect();
 
     parallel_for_chunked(nw, threads, 64, |t, lo, hi| {
-        let mut sc = scratch[t].lock().unwrap();
-        let mut hv = harvests[t].lock().unwrap();
+        // SAFETY: the pool drives each lane id from at most one thread
+        // per region, so slot `t` is exclusively ours inside this chunk.
+        let sc = unsafe { scratch[t].get_mut() };
+        let hv = unsafe { harvests[t].get_mut() };
         let mut local_total = 0u64;
         let mut local_wedges = 0u64;
         for start in lo..hi {
@@ -140,8 +143,8 @@ pub fn pve_bcnt(
                 &per_w,
                 &per_edge,
                 opts,
-                &mut sc,
-                &mut hv,
+                sc,
+                hv,
                 &mut local_total,
                 &mut local_wedges,
             );
@@ -172,8 +175,8 @@ pub fn pve_bcnt(
         pairs: Vec::new(),
     };
     if opts.build_blooms {
-        for h in &harvests {
-            let h = h.lock().unwrap();
+        for h in harvests.iter_mut() {
+            let h = h.as_mut(); // region over: exclusive access
             for b in 0..h.ks.len() {
                 let s = h.offs[b];
                 let e = h.offs[b + 1];

@@ -51,6 +51,10 @@ pub fn parse<R: BufRead>(reader: R) -> Result<BipartiteGraph> {
             .with_context(|| format!("line {}: bad v", lineno + 1))?;
         edges.push((u, v));
     }
+    // KONECT dumps routinely repeat `u v` lines; parallel edges would
+    // inflate butterfly counts. `GraphBuilder::build` collapses
+    // duplicates (simple-graph invariant) — pinned down by the
+    // `duplicate_edge_lines_do_not_change_theta` regression test.
     Ok(b.edges(&edges).build())
 }
 
@@ -142,9 +146,10 @@ mod tests {
 
     #[test]
     fn numbers_roundtrip_and_validation() {
-        let dir = std::env::temp_dir().join("pbng_io_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("nums.txt");
+        // TempDir (not a fixed temp_dir() path): parallel test binaries
+        // and concurrent CI jobs must not race on shared files.
+        let dir = crate::testkit::TempDir::new("io-numbers").unwrap();
+        let p = dir.file("nums.txt");
         let nums = vec![4u64, 0, 17, 3];
         save_numbers(&nums, &p).unwrap();
         assert_eq!(load_numbers(&p).unwrap(), nums);
@@ -157,13 +162,31 @@ mod tests {
     #[test]
     fn save_load_roundtrip() {
         let g = crate::graph::gen::erdos(30, 40, 100, 1);
-        let dir = std::env::temp_dir().join("pbng_io_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("g.tsv");
+        let dir = crate::testkit::TempDir::new("io-graph").unwrap();
+        let p = dir.file("g.tsv");
         save(&g, &p).unwrap();
         let g2 = load(&p).unwrap();
         assert_eq!(g.nu(), g2.nu());
         assert_eq!(g.nv(), g2.nv());
         assert_eq!(g.edges(), g2.edges());
+    }
+
+    #[test]
+    fn duplicate_edge_lines_do_not_change_theta() {
+        // Regression: a KONECT-style file with repeated `u v` lines must
+        // decompose exactly like its deduplicated version — parallel
+        // edges would inflate butterfly counts and shift θ.
+        let clean = "% bip 3 3\n0 0\n0 1\n1 0\n1 1\n2 0\n2 1\n";
+        let dup = "% bip 3 3\n0 0\n0 1\n0 1\n1 0\n1 1\n1 1\n2 0\n0 0\n2 1\n1 0\n";
+        let a = parse(Cursor::new(clean)).unwrap();
+        let b = parse(Cursor::new(dup)).unwrap();
+        assert_eq!(a.edges(), b.edges());
+        assert_eq!(a.m(), 6);
+        let ta = crate::peel::bup::wing_bup(&a).theta;
+        let tb = crate::peel::bup::wing_bup(&b).theta;
+        assert_eq!(ta, tb);
+        let bf_a = crate::count::total_butterflies(&a, 1);
+        let bf_b = crate::count::total_butterflies(&b, 1);
+        assert_eq!(bf_a, bf_b);
     }
 }

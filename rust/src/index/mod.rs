@@ -540,11 +540,14 @@ pub fn build_wing_forest_opts(
     assert_eq!(theta.len(), g.m(), "theta must be per-edge wing numbers");
     let nb = idx.n_blooms();
     let threads = threads.max(1);
+    let lanes = crate::par::max_lanes(threads);
     // (level, bloom, e, t) wedge-activation events, harvested in parallel
-    let buffers: Vec<std::sync::Mutex<Vec<(u64, u32, u32, u32)>>> =
-        (0..threads).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    let mut buffers: Vec<RacyCell<Vec<(u64, u32, u32, u32)>>> =
+        (0..lanes).map(|_| RacyCell::new(Vec::new())).collect();
     parallel_for_chunked(nb, threads, 64, |t, lo, hi| {
-        let mut buf = buffers[t].lock().unwrap();
+        // SAFETY: the pool drives each lane id from at most one thread
+        // per region, so buffer `t` is exclusively ours in this chunk.
+        let buf = unsafe { buffers[t].get_mut() };
         for b in lo..hi {
             for &(e, tw) in idx.entries(b as u32) {
                 if e < tw {
@@ -558,8 +561,8 @@ pub fn build_wing_forest_opts(
         }
     });
     let mut events: Vec<(u64, u32, u32, u32)> = Vec::new();
-    for b in &buffers {
-        events.append(&mut b.lock().unwrap());
+    for b in buffers.iter_mut() {
+        events.append(b.as_mut()); // region over: exclusive access
     }
     // full deterministic order: by level descending, then bloom/edge ids
     events.sort_unstable_by(|a, b| b.0.cmp(&a.0).then_with(|| (a.1, a.2, a.3).cmp(&(b.1, b.2, b.3))));
@@ -647,12 +650,14 @@ fn compute_wing_stats(forest: &mut Forest, g: &BipartiteGraph, threads: usize) {
     let threads = threads.max(1);
     let sub_nu = RacyCell::new(vec![0u32; n]);
     let sub_nv = RacyCell::new(vec![0u32; n]);
-    let scratch: Vec<std::sync::Mutex<(Vec<u32>, Vec<u32>)>> = (0..threads)
-        .map(|_| std::sync::Mutex::new((vec![NONE; g.nu()], vec![NONE; g.nv()])))
+    let scratch: Vec<RacyCell<(Vec<u32>, Vec<u32>)>> = (0..crate::par::max_lanes(threads))
+        .map(|_| RacyCell::new((vec![NONE; g.nu()], vec![NONE; g.nv()])))
         .collect();
     let f: &Forest = forest;
     parallel_for_chunked(n, threads, 8, |t, lo, hi| {
-        let mut sc = scratch[t].lock().unwrap();
+        // SAFETY: the pool drives each lane id from at most one thread
+        // per region, so stamp pair `t` is exclusively ours in this chunk.
+        let sc = unsafe { scratch[t].get_mut() };
         let (stamp_u, stamp_v) = &mut *sc;
         for node in lo..hi {
             let mut cu = 0u32;

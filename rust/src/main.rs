@@ -52,7 +52,7 @@ USAGE: pbng <command> [args]
   bench [--suite smoke] [--repetitions N] [--warmup N] [--threads T]
         [--out FILE] [--list]
   bench compare <baseline.json> <current.json> [--counter-tolerance F]
-        [--time-factor F] [--ignore-time]
+        [--time-factor F] [--ignore-time] [--allow-empty-baseline]
   verify <graph.tsv> [--p P] [--threads T]
   info
 
@@ -199,7 +199,7 @@ fn cmd_wing(args: &Args) -> Result<()> {
     let d = match algo.as_str() {
         "pbng" => pbng::wing::wing_pbng(&g, cfg),
         "bup" => pbng::peel::bup::wing_bup(&g),
-        "parb" => pbng::peel::parb::wing_parb(&g),
+        "parb" => pbng::peel::parb::wing_parb(&g, cfg.threads),
         "be-batch" => pbng::wing::wing_be_batch(&g, cfg.threads),
         "be-pc" => pbng::wing::wing_be_pc(&g, tau),
         a => bail!("unknown wing algo '{a}'"),
@@ -231,7 +231,7 @@ fn cmd_tip(args: &Args) -> Result<()> {
     let d = match algo.as_str() {
         "pbng" => pbng::tip::tip_pbng(&g, side, cfg),
         "bup" => pbng::tip::tip_bup(&g, side),
-        "parb" => pbng::tip::tip_parb(&g, side),
+        "parb" => pbng::tip::tip_parb(&g, side, cfg.threads),
         a => bail!("unknown tip algo '{a}'"),
     };
     report(&format!("tip[{algo}]{side:?}"), &d);
@@ -439,6 +439,7 @@ fn cmd_bench_compare(args: &Args) -> Result<()> {
         counter_rel_tol: args.get_f64("counter-tolerance", 0.0)?,
         time_factor: args.get_f64("time-factor", 1.5)?,
         ignore_time: args.flag("ignore-time"),
+        allow_empty_baseline: args.flag("allow-empty-baseline"),
     };
     args.check_unknown()?;
     let base = pbng::bench::report::Report::load(Path::new(baseline))?;

@@ -43,6 +43,11 @@ pub struct Meters {
     pub wedges: Counter,
     /// Parallel peeling iterations == thread synchronizations (ρ).
     pub rho: Counter,
+    /// OS threads spawned by the runtime pool during the recorded run.
+    /// With the persistent pool this is bounded by the pool size (and is
+    /// zero once the pool is warm) no matter how large ρ gets — the
+    /// [`Recorder`] fills it in from [`crate::par::total_spawns`].
+    pub spawns: Counter,
 }
 
 impl Meters {
@@ -56,6 +61,7 @@ impl Meters {
             updates: self.updates.get(),
             wedges: self.wedges.get(),
             rho: self.rho.get(),
+            spawns: self.spawns.get(),
         }
     }
 
@@ -76,15 +82,20 @@ pub struct MetersSnapshot {
     pub updates: u64,
     pub wedges: u64,
     pub rho: u64,
+    /// Pool threads spawned during the run (process-dependent: non-zero
+    /// only for the run that first warms the pool). Excluded from the
+    /// bench-report counter section, which gates deterministic values.
+    pub spawns: u64,
 }
 
 impl MetersSnapshot {
-    /// JSON object `{updates, wedges, rho}` — fixed key order.
+    /// JSON object `{updates, wedges, rho, spawns}` — fixed key order.
     pub fn to_json(&self) -> crate::jsonio::Value {
         crate::jsonio::Value::obj()
             .with("updates", self.updates)
             .with("wedges", self.wedges)
             .with("rho", self.rho)
+            .with("spawns", self.spawns)
     }
 }
 
@@ -94,6 +105,8 @@ pub struct PeelStats {
     pub updates: u64,
     pub wedges: u64,
     pub rho: u64,
+    /// Pool threads spawned while this run was recorded (≤ pool size).
+    pub spawns: u64,
     pub total: Duration,
     /// (phase, duration, phase-local updates, phase-local wedges)
     pub phases: Vec<(Phase, Duration, u64, u64)>,
@@ -106,6 +119,7 @@ impl PeelStats {
             updates: self.updates,
             wedges: self.wedges,
             rho: self.rho,
+            spawns: self.spawns,
         }
     }
 
@@ -136,6 +150,9 @@ impl PeelStats {
 pub struct Recorder<'a> {
     meters: &'a Meters,
     start: Instant,
+    /// Pool spawn count when recording started; the delta at `finish`
+    /// proves worker reuse across the run's parallel regions.
+    spawns0: u64,
     phase_start: Instant,
     phase_updates0: u64,
     phase_wedges0: u64,
@@ -149,6 +166,7 @@ impl<'a> Recorder<'a> {
         Recorder {
             meters,
             start: now,
+            spawns0: crate::par::total_spawns(),
             phase_start: now,
             phase_updates0: 0,
             phase_wedges0: 0,
@@ -178,10 +196,12 @@ impl<'a> Recorder<'a> {
 
     pub fn finish(mut self) -> PeelStats {
         self.close_phase();
+        self.meters.spawns.add(crate::par::total_spawns() - self.spawns0);
         PeelStats {
             updates: self.meters.updates.get(),
             wedges: self.meters.wedges.get(),
             rho: self.meters.rho.get(),
+            spawns: self.meters.spawns.get(),
             total: self.start.elapsed(),
             phases: self.phases,
         }
@@ -260,12 +280,14 @@ mod tests {
         m.updates.add(7);
         m.wedges.add(9);
         m.rho.add(2);
+        m.spawns.add(3);
         let text = m.to_json().to_pretty();
         assert_eq!(text, m.to_json().to_pretty());
         let back = crate::jsonio::Value::parse(&text).unwrap();
         assert_eq!(back.req_u64("updates").unwrap(), 7);
         assert_eq!(back.req_u64("wedges").unwrap(), 9);
         assert_eq!(back.req_u64("rho").unwrap(), 2);
+        assert_eq!(back.req_u64("spawns").unwrap(), 3);
         assert_eq!(m.snapshot(), m.snapshot());
     }
 

@@ -1,24 +1,35 @@
-//! Shared-memory fork-join parallelism built on `std::thread::scope`.
+//! Shared-memory fork-join parallelism on a persistent worker pool.
 //!
 //! The paper's reference implementation uses OpenMP `parallel for`; this
 //! module provides the equivalent primitives: a chunked `parallel_for`,
-//! a reduce variant, and saturating atomic support cells implementing the
-//! paper's `⋈ ← max(θ, ⋈ − x)` update (Alg. 3/4/6).
+//! a reduce variant, an SPMD region, and saturating atomic support cells
+//! implementing the paper's `⋈ ← max(θ, ⋈ − x)` update (Alg. 3/4/6).
 //!
 //! The cargo registry available in this environment does not carry rayon,
-//! so the pool is hand-rolled. Threads are spawned per parallel region
-//! (scoped), which matches OpenMP's fork-join semantics and keeps the
-//! region composable with borrowed data.
+//! so the pool is hand-rolled (see [`pool`]): workers are spawned once,
+//! parked between regions, and reused for every parallel region in the
+//! process — the thousands of small CD/FD peel iterations no longer pay
+//! thread-creation cost per iteration. Scoped borrows still work because
+//! a region broadcasts a borrowed closure and barriers on completion
+//! before returning. Every primitive degrades to sequential execution
+//! below a grain threshold (or when `threads == 1`) without touching the
+//! pool at all.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 pub mod atomics;
-pub use atomics::SupportCell;
+pub mod pool;
 
-/// Number of worker threads for a parallel region.
+pub use atomics::SupportCell;
+pub use pool::{total_spawns, ScratchSet, ScratchSlot};
+
+/// Number of worker lanes for a parallel region.
 ///
 /// Defaults to the machine's available parallelism; override with
 /// `PBNG_THREADS` or per-call sites that take an explicit `threads`.
+/// The persistent pool snapshots this value once, when the first
+/// multi-lane region creates it; later `PBNG_THREADS` changes only cap
+/// requests, they cannot grow the pool.
 pub fn default_threads() -> usize {
     if let Ok(v) = std::env::var("PBNG_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
@@ -30,10 +41,28 @@ pub fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Total lanes of the persistent pool (caller + parked workers).
+/// Touching this initializes the pool.
+pub fn pool_capacity() -> usize {
+    pool::Pool::global().capacity()
+}
+
+/// Upper bound on the lane ids a region with this `threads` request can
+/// observe — use it to size per-lane scratch ([`ScratchSet::take`]).
+/// `threads <= 1` never initializes the pool.
+pub fn max_lanes(threads: usize) -> usize {
+    if threads <= 1 {
+        1
+    } else {
+        pool::Pool::global().lanes(threads)
+    }
+}
+
 /// Run `body(thread_id, start, end)` over `0..n` split into contiguous
-/// chunks, one chunk stream per thread, work-stealing by grabbing the next
-/// chunk index from a shared atomic (guided scheduling, like OpenMP
-/// `schedule(dynamic)` with a fixed grain).
+/// chunks, work-stealing by grabbing the next chunk index from a shared
+/// atomic (guided scheduling, like OpenMP `schedule(dynamic)` with a
+/// fixed grain). `n <= grain` or `threads == 1` runs inline on the
+/// caller without waking the pool.
 pub fn parallel_for_chunked<F>(n: usize, threads: usize, grain: usize, body: F)
 where
     F: Fn(usize, usize, usize) + Sync,
@@ -45,19 +74,13 @@ where
     }
     let grain = grain.max(1);
     let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for t in 0..threads {
-            let next = &next;
-            let body = &body;
-            s.spawn(move || loop {
-                let start = next.fetch_add(grain, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let end = (start + grain).min(n);
-                body(t, start, end);
-            });
+    pool::Pool::global().run(threads, |t| loop {
+        let start = next.fetch_add(grain, Ordering::Relaxed);
+        if start >= n {
+            break;
         }
+        let end = (start + grain).min(n);
+        body(t, start, end);
     });
 }
 
@@ -74,7 +97,7 @@ where
     });
 }
 
-/// Parallel map-reduce over `0..n`: each thread folds chunks with `fold`,
+/// Parallel map-reduce over `0..n`: each lane folds chunks with `fold`,
 /// results combined with `combine`.
 pub fn parallel_reduce<A, F, C>(n: usize, threads: usize, init: A, fold: F, combine: C) -> A
 where
@@ -83,42 +106,50 @@ where
     C: Fn(A, A) -> A,
 {
     let threads = threads.max(1);
-    if threads == 1 || n < 1024 {
+    let lanes = if threads == 1 || n < 1024 {
+        1
+    } else {
+        max_lanes(threads)
+    };
+    if lanes == 1 {
         let mut acc = init;
         for i in 0..n {
             acc = fold(acc, i);
         }
         return acc;
     }
-    let grain = (n / (threads * 8)).max(256);
+    let grain = (n / (lanes * 8)).max(256);
     let next = AtomicUsize::new(0);
-    let partials: Vec<A> = std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(threads);
-        for _ in 0..threads {
-            let next = &next;
-            let fold = &fold;
-            let init = init.clone();
-            handles.push(s.spawn(move || {
-                let mut acc = init;
-                loop {
-                    let start = next.fetch_add(grain, Ordering::Relaxed);
-                    if start >= n {
-                        break;
-                    }
-                    let end = (start + grain).min(n);
-                    for i in start..end {
-                        acc = fold(acc, i);
-                    }
-                }
-                acc
-            }));
+    // Accumulators are pre-cloned on the caller (cloning inside a lane
+    // would need `A: Sync`) and handed to lanes through one cell per
+    // lane — per-slot cells, so no lane ever forms a reference to
+    // another lane's accumulator.
+    let partials: Vec<RacyCell<Option<A>>> =
+        (0..lanes).map(|_| RacyCell::new(Some(init.clone()))).collect();
+    pool::Pool::global().run(lanes, |t| {
+        // SAFETY: lane `t` runs exactly once per region and touches only
+        // cell `t` — disjoint.
+        let slot = unsafe { partials[t].get_mut() };
+        let mut acc = slot.take().expect("lane accumulator present");
+        loop {
+            let start = next.fetch_add(grain, Ordering::Relaxed);
+            if start >= n {
+                break;
+            }
+            let end = (start + grain).min(n);
+            for i in start..end {
+                acc = fold(acc, i);
+            }
         }
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+        *slot = Some(acc);
     });
-    partials.into_iter().fold(init, combine)
+    partials.into_iter().filter_map(RacyCell::into_inner).fold(init, combine)
 }
 
-/// Run one closure per thread id (SPMD region), like `omp parallel`.
+/// Run one closure per logical thread id (SPMD region), like
+/// `omp parallel`: `body(t)` executes exactly once for every
+/// `t in 0..threads`, even when the pool has fewer lanes — extra ids are
+/// distributed round-robin over the available lanes.
 pub fn spmd<F>(threads: usize, body: F)
 where
     F: Fn(usize) + Sync,
@@ -128,10 +159,12 @@ where
         body(0);
         return;
     }
-    std::thread::scope(|s| {
-        for t in 0..threads {
-            let body = &body;
-            s.spawn(move || body(t));
+    let lanes = max_lanes(threads);
+    pool::Pool::global().run(lanes, |lane| {
+        let mut t = lane;
+        while t < threads {
+            body(t);
+            t += lanes;
         }
     });
 }
@@ -156,6 +189,10 @@ impl<T> RacyCell<T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn get_mut(&self) -> &mut T {
         &mut *self.0.get()
+    }
+    /// Safe exclusive access (post-region collection sweeps).
+    pub fn as_mut(&mut self) -> &mut T {
+        self.0.get_mut()
     }
     pub fn into_inner(self) -> T {
         self.0.into_inner()
@@ -234,9 +271,77 @@ mod tests {
     }
 
     #[test]
+    fn spmd_covers_ids_beyond_pool_capacity() {
+        // More logical ids than the pool can possibly have lanes: the
+        // round-robin distribution must still run every id exactly once.
+        let n = pool_capacity() + 3;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        spmd(n, |t| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
     fn counter_accumulates() {
         let c = Counter::new();
         parallel_for(1000, 4, |_, _| c.add(2));
         assert_eq!(c.get(), 2000);
+    }
+
+    #[test]
+    fn regions_reuse_pool_workers() {
+        // Force the pool into existence, then run many regions: no new
+        // OS threads may appear (spawns bounded by pool size, not by the
+        // number of regions — the PR's acceptance criterion at the unit
+        // level).
+        let cap = pool_capacity();
+        let before = total_spawns();
+        for _ in 0..64 {
+            parallel_for(20_000, 4, |_, _| {});
+            spmd(4, |_| {});
+        }
+        assert_eq!(total_spawns(), before);
+        assert!(before <= cap as u64, "spawns {before} > capacity {cap}");
+    }
+
+    #[test]
+    fn nested_regions_fall_back_sequentially() {
+        let hits: Vec<AtomicU64> = (0..2_000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_chunked(2, 2, 1, |_, lo, hi| {
+            for half in lo..hi {
+                // nested region inside a running region: must complete
+                // (sequential fallback), not deadlock
+                let base = half * 1000;
+                parallel_for(1000, 4, |_, i| {
+                    hits[base + i].fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn scratch_set_recycles_slots() {
+        let mut s = ScratchSet::take(2);
+        // SAFETY: single-threaded test; lanes accessed one at a time.
+        unsafe {
+            s.lane(0).a.push(7);
+            s.lane(1).b.push(9);
+            let (cnt, _, _) = s.lane(1).split(16);
+            cnt[3] += 1;
+            cnt[3] = 0; // restore the zero invariant
+        }
+        let mut seen = Vec::new();
+        s.for_each(|sl| seen.push((sl.a.len(), sl.b.len())));
+        assert_eq!(seen, vec![(1, 0), (0, 1)]);
+        drop(s);
+        // recycled slots come back empty
+        let mut s2 = ScratchSet::take(2);
+        s2.for_each(|sl| {
+            assert!(sl.a.is_empty() && sl.b.is_empty());
+            let (cnt, _, _) = sl.split(16);
+            assert!(cnt.iter().all(|&c| c == 0));
+        });
     }
 }

@@ -1,0 +1,334 @@
+//! Persistent worker pool: parked OS threads reused across parallel
+//! regions.
+//!
+//! The previous runtime spawned fresh scoped threads for every parallel
+//! region. PBNG's coarse decomposition executes thousands of small peel
+//! iterations (one region per ρ, often more), so thread-creation cost and
+//! scheduler churn dominated the exact overhead regime ParButterfly-style
+//! frameworks avoid with persistent pools. This module keeps a single
+//! process-wide pool of parked workers and broadcasts each region to them
+//! with an epoch ticket:
+//!
+//! * **Lifecycle** — the pool is created lazily on the first region that
+//!   asks for more than one lane. Worker count is `default_threads() - 1`
+//!   (the caller itself is lane 0), snapshotted once from `PBNG_THREADS` /
+//!   `available_parallelism`. Workers park on a condvar between regions
+//!   and live for the rest of the process (like rayon's global pool).
+//! * **Region protocol** — the caller publishes a lifetime-erased
+//!   `&dyn Fn(usize)` job plus a bumped epoch under the state mutex and
+//!   wakes all workers. Each worker runs the job at most once per epoch,
+//!   then decrements `remaining`; the caller participates as lane 0 and
+//!   blocks until `remaining == 0` before returning, which is what makes
+//!   the lifetime erasure sound: the borrowed closure (and everything it
+//!   captures from the caller's stack) strictly outlives every use.
+//! * **Fallback** — regions are serialized with a `try_lock`. A nested or
+//!   concurrent region (or a panicked predecessor) degrades to running
+//!   every lane id on the calling thread, so the lane contract below
+//!   holds unconditionally and nesting can never deadlock.
+//!
+//! **Lane contract**: `Pool::run(threads, body)` invokes `body(t)` exactly
+//! once for every lane `t in 0..lanes(threads)`, where `lanes(threads) =
+//! threads.clamp(1, capacity)`. Per-lane scratch indexed by `t` is
+//! therefore race-free within one region.
+//!
+//! [`ScratchSet`] complements the pool: reusable per-lane buffer slots
+//! recycled through a global freelist, so hot peeling kernels neither
+//! allocate nor lock per region (two freelist mutex ops per *region*,
+//! versus one mutex op per *chunk* with the old `Mutex<Vec<u32>>`
+//! collectors).
+
+use super::RacyCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, TryLockError};
+
+/// OS threads ever spawned by the pool (process-wide, monotonic). The
+/// peeling pipelines snapshot this around a run to prove worker reuse:
+/// the per-run delta is bounded by the pool capacity, not by ρ.
+static TOTAL_SPAWNS: AtomicU64 = AtomicU64::new(0);
+
+pub fn total_spawns() -> u64 {
+    TOTAL_SPAWNS.load(Ordering::Relaxed)
+}
+
+/// A parallel-region job. Lifetime-erased from the caller's borrow; only
+/// valid until the caller's region wait completes (see module docs).
+type Body = dyn Fn(usize) + Sync;
+
+struct State {
+    /// Region ticket; workers run a job at most once per epoch.
+    epoch: u64,
+    job: Option<&'static Body>,
+    /// Worker lanes participating in the current region (lanes `1..=p`).
+    participants: usize,
+    /// Participants that have not finished the current region yet.
+    remaining: usize,
+    /// A worker's job panicked; surfaced to the caller after the barrier.
+    panicked: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between regions.
+    start: Condvar,
+    /// The caller parks here until `remaining == 0`.
+    done: Condvar,
+}
+
+fn lock_state(sh: &Shared) -> std::sync::MutexGuard<'_, State> {
+    // Jobs run outside the lock and decrements are panic-safe, so a
+    // poisoned state mutex only ever holds consistent data.
+    sh.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+pub struct Pool {
+    shared: Arc<Shared>,
+    /// Total lanes including the caller (= worker count + 1).
+    capacity: usize,
+    /// Serializes regions; `try_lock` losers degrade to sequential.
+    region: Mutex<()>,
+}
+
+impl Pool {
+    /// The process-wide pool, created on first use.
+    pub fn global() -> &'static Pool {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        POOL.get_or_init(Pool::create)
+    }
+
+    fn create() -> Pool {
+        let capacity = super::default_threads().max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                participants: 0,
+                remaining: 0,
+                panicked: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        for lane in 1..capacity {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("pbng-worker-{lane}"))
+                .spawn(move || worker_loop(&sh, lane))
+                .expect("spawning pbng pool worker");
+            TOTAL_SPAWNS.fetch_add(1, Ordering::Relaxed);
+        }
+        Pool {
+            shared,
+            capacity,
+            region: Mutex::new(()),
+        }
+    }
+
+    /// Total lanes (caller + parked workers).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Lanes a region with this `threads` request will actually use.
+    pub fn lanes(&self, threads: usize) -> usize {
+        threads.clamp(1, self.capacity)
+    }
+
+    /// Run `body(t)` exactly once for every lane `t in 0..lanes(threads)`
+    /// (see the module-level lane contract).
+    pub fn run<F>(&self, threads: usize, body: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let lanes = self.lanes(threads);
+        if lanes == 1 {
+            body(0);
+            return;
+        }
+        let _guard = match self.region.try_lock() {
+            Ok(g) => g,
+            // A caller panic mid-region poisons the lock after the
+            // region barrier completed; the pool itself is fine.
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+            // Nested or concurrent region: keep the lane contract on the
+            // calling thread instead of deadlocking on our own lock.
+            Err(TryLockError::WouldBlock) => {
+                for t in 0..lanes {
+                    body(t);
+                }
+                return;
+            }
+        };
+        let wide: &Body = &body;
+        // SAFETY: the erased borrow is only reachable through `State.job`,
+        // workers only run it between the publish below and their
+        // `remaining` decrement, and `RegionWait` blocks (even during
+        // unwinding of `body(0)`) until `remaining == 0` — so every use
+        // ends before `body` can be dropped.
+        let job: &'static Body = unsafe { std::mem::transmute::<&Body, &'static Body>(wide) };
+        {
+            let mut st = lock_state(&self.shared);
+            st.epoch += 1;
+            st.participants = lanes - 1;
+            st.remaining = lanes - 1;
+            st.job = Some(job);
+            self.shared.start.notify_all();
+        }
+        let _wait = RegionWait { shared: &self.shared };
+        body(0);
+        // `_wait` drops here: barrier, then worker-panic propagation.
+    }
+}
+
+/// Blocks until the current region's workers are done — including on the
+/// unwind path, which is what keeps the job borrow sound if the caller's
+/// own lane panics. Also owns worker-panic handling: the flag is always
+/// consumed at the barrier (so it cannot leak into a later region) and
+/// re-raised only when the caller is not already unwinding.
+struct RegionWait<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for RegionWait<'_> {
+    fn drop(&mut self) {
+        let mut st = lock_state(self.shared);
+        while st.remaining > 0 {
+            st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = None;
+        let worker_panicked = st.panicked;
+        st.panicked = false;
+        drop(st);
+        if worker_panicked && !std::thread::panicking() {
+            panic!("a pbng pool worker panicked during a parallel region");
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared, lane: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock_state(sh);
+            while st.epoch == seen {
+                st = sh.start.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            seen = st.epoch;
+            // Lanes beyond the region's request sit this epoch out.
+            if lane <= st.participants {
+                st.job
+            } else {
+                None
+            }
+        };
+        if let Some(job) = job {
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(lane)));
+            let mut st = lock_state(sh);
+            if outcome.is_err() {
+                st.panicked = true;
+            }
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                sh.done.notify_one();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-lane reusable scratch
+// ---------------------------------------------------------------------
+
+/// One lane's reusable buffers. The two id collectors keep their
+/// capacity across regions; `cnt` is a dense counter array with the
+/// invariant that it is all-zero whenever the slot is not inside a
+/// region (the peeling kernels re-zero entries as they flush them).
+#[derive(Default)]
+pub struct ScratchSlot {
+    /// First id collector (wing: dirty blooms; tip: wedge-end list).
+    pub a: Vec<u32>,
+    /// Second id collector (wing/tip: touched entities).
+    pub b: Vec<u32>,
+    cnt: Vec<u32>,
+}
+
+impl ScratchSlot {
+    /// `(cnt[..n], a, b)` with `cnt` zero-extended to at least `n`
+    /// entries. Callers must restore the zeros they overwrite before the
+    /// region ends.
+    pub fn split(&mut self, n: usize) -> (&mut [u32], &mut Vec<u32>, &mut Vec<u32>) {
+        if self.cnt.len() < n {
+            self.cnt.resize(n, 0);
+        }
+        (&mut self.cnt[..n], &mut self.a, &mut self.b)
+    }
+}
+
+/// Slots recycled through the freelist so steady-state peel iterations
+/// are allocation-free.
+static FREELIST: Mutex<Vec<ScratchSlot>> = Mutex::new(Vec::new());
+
+/// A per-lane scratch checkout: one [`ScratchSlot`] per lane id of a
+/// parallel region, acquired from (and returned to) the global freelist
+/// with a single lock round-trip each way.
+pub struct ScratchSet {
+    slots: Vec<RacyCell<ScratchSlot>>,
+}
+
+impl ScratchSet {
+    /// Check out `lanes` slots (size with [`super::max_lanes`]).
+    pub fn take(lanes: usize) -> ScratchSet {
+        let lanes = lanes.max(1);
+        let mut fl = FREELIST.lock().unwrap_or_else(|e| e.into_inner());
+        let mut slots = Vec::with_capacity(lanes);
+        for _ in 0..lanes {
+            slots.push(RacyCell::new(fl.pop().unwrap_or_default()));
+        }
+        ScratchSet { slots }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The slot for lane `t`.
+    ///
+    /// # Safety
+    /// Caller must be inside a region whose lane `t` it currently drives
+    /// (the pool's lane contract makes slot access race-free), and must
+    /// not hold two references to the same lane's slot at once.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn lane(&self, t: usize) -> &mut ScratchSlot {
+        self.slots[t].get_mut()
+    }
+
+    /// Exclusive post-region sweep over every slot (result collection).
+    pub fn for_each(&mut self, mut f: impl FnMut(&mut ScratchSlot)) {
+        for s in &mut self.slots {
+            f(s.as_mut());
+        }
+    }
+}
+
+impl Drop for ScratchSet {
+    fn drop(&mut self) {
+        let unwinding = std::thread::panicking();
+        let mut fl = FREELIST.lock().unwrap_or_else(|e| e.into_inner());
+        for s in self.slots.drain(..) {
+            let mut s = s.into_inner();
+            s.a.clear();
+            s.b.clear();
+            if unwinding {
+                // A panicking kernel may have died between bumping `cnt`
+                // and re-zeroing it; sanitize rather than poisoning the
+                // freelist (or double-panicking on the assert below).
+                s.cnt.fill(0);
+            } else {
+                debug_assert!(
+                    s.cnt.iter().all(|&c| c == 0),
+                    "ScratchSlot.cnt returned to the freelist dirty"
+                );
+            }
+            fl.push(s);
+        }
+    }
+}

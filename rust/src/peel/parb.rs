@@ -12,15 +12,17 @@
 //! same number of support updates as BUP"). Because the floor-clamped
 //! decrements of a round commute, applying the round's peels one after
 //! another produces exactly the state a race-free parallel round would;
-//! on this 1-core container we execute rounds that way, and ρ / updates /
-//! θ are all schedule-independent.
+//! peel rounds are executed that way here, and ρ / updates / θ are all
+//! schedule-independent. The counting phase runs on the runtime pool
+//! with the caller's `threads` (its counters are traversal-exact, so
+//! they stay deterministic across thread counts too).
 
 use super::{update_wedge, Decomposition, LazyHeap};
 use crate::count::{pve_bcnt, CountOptions};
 use crate::graph::BipartiteGraph;
 use crate::metrics::{Meters, Phase, Recorder};
 
-pub fn wing_parb(g: &BipartiteGraph) -> Decomposition {
+pub fn wing_parb(g: &BipartiteGraph, threads: usize) -> Decomposition {
     let meters = Meters::new();
     let mut rec = Recorder::new(&meters);
     rec.enter(Phase::Count);
@@ -29,7 +31,7 @@ pub fn wing_parb(g: &BipartiteGraph) -> Decomposition {
         CountOptions {
             per_edge: true,
             build_blooms: false,
-            threads: 1,
+            threads,
         },
         Some(&meters),
     );
@@ -120,7 +122,7 @@ mod tests {
             let nv = 5 + rng.usize_below(15);
             let m = 15 + rng.usize_below(80);
             let g = gen::erdos(nu, nv, m, seed);
-            let a = wing_parb(&g).theta;
+            let a = wing_parb(&g, 2).theta;
             let b = wing_bup(&g).theta;
             if a != b {
                 return Err(format!("θ mismatch: parb={a:?} bup={b:?}"));
@@ -132,14 +134,14 @@ mod tests {
     #[test]
     fn matches_bup_on_structured_graphs() {
         for g in [gen::biclique(4, 4), gen::paper_fig1(), gen::nested_blocks(3, 3, 2)] {
-            assert_eq!(wing_parb(&g).theta, wing_bup(&g).theta);
+            assert_eq!(wing_parb(&g, 2).theta, wing_bup(&g).theta);
         }
     }
 
     #[test]
     fn rho_counts_rounds() {
         let g = gen::biclique(3, 3);
-        let d = wing_parb(&g);
+        let d = wing_parb(&g, 1);
         assert!(d.stats.rho >= 1);
         assert!(d.stats.rho <= g.m() as u64);
     }
@@ -147,7 +149,7 @@ mod tests {
     #[test]
     fn updates_equal_bup() {
         let g = gen::zipf(25, 25, 120, 1.1, 1.1, 17);
-        let a = wing_parb(&g);
+        let a = wing_parb(&g, 2);
         let b = wing_bup(&g);
         assert_eq!(a.stats.updates, b.stats.updates);
     }
@@ -161,7 +163,7 @@ mod tests {
             &[gen::Block { rows: 10, cols: 10, density: 1.0 }],
             3,
         );
-        let d = wing_parb(&g);
+        let d = wing_parb(&g, 2);
         // batching whole levels must beat one-edge-at-a-time
         assert!(d.stats.rho < g.m() as u64 / 2);
     }

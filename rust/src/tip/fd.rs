@@ -4,7 +4,8 @@
 //! `G_i = G[(U_i, V)]` — a butterfly has exactly two U-vertices, so `G_i`
 //! preserves precisely the butterflies with both U-endpoints in `U_i`;
 //! everything else is already baked into ⋈init. Partitions are pulled
-//! from an LPT-ordered dynamic task queue and peeled sequentially with a
+//! from an LPT-ordered dynamic task queue by the persistent runtime
+//! pool's lanes ([`crate::par::spmd`]) and peeled sequentially with a
 //! range-clamped bucket queue; no global synchronization.
 
 use crate::graph::induced::{build_partitions, InducedSubgraph};

@@ -149,13 +149,14 @@ pub fn tip_bup(g: &BipartiteGraph, side: Side) -> Decomposition {
 
 /// ParB-style level-synchronous tip decomposition (baseline). See
 /// [`crate::peel::parb`] for the modeling notes; ρ counts parallel
-/// sub-iterations.
-pub fn tip_parb(g: &BipartiteGraph, side: Side) -> Decomposition {
+/// sub-iterations. The counting phase runs on the runtime pool with the
+/// caller's `threads` (counters stay deterministic across thread counts).
+pub fn tip_parb(g: &BipartiteGraph, side: Side, threads: usize) -> Decomposition {
     let g = oriented(g, side);
     let meters = Meters::new();
     let mut rec = Recorder::new(&meters);
     rec.enter(Phase::Count);
-    let per_u = count_side(&g, 1, &meters);
+    let per_u = count_side(&g, threads, &meters);
     rec.enter(Phase::Fine);
     let nu = g.nu();
     let sup: Vec<crate::par::SupportCell> = per_u
@@ -244,7 +245,7 @@ mod tests {
             for side in [Side::U, Side::V] {
                 let want = brute::brute_tip_numbers(&g, side);
                 let bup = tip_bup(&g, side).theta;
-                let parb = tip_parb(&g, side).theta;
+                let parb = tip_parb(&g, side, 2).theta;
                 let pbng = tip_pbng(&g, side, TipConfig { p: 3, threads: 2, ..Default::default() }).theta;
                 if bup != want {
                     return Err(format!("bup {side:?}: {bup:?} want {want:?}"));
@@ -264,7 +265,7 @@ mod tests {
     fn pbng_rho_beats_parb() {
         let g = gen::zipf(80, 40, 500, 1.3, 1.2, 71);
         let pbng = tip_pbng(&g, Side::U, TipConfig { p: 4, threads: 2, ..Default::default() });
-        let parb = tip_parb(&g, Side::U);
+        let parb = tip_parb(&g, Side::U, 2);
         assert!(
             pbng.stats.rho <= parb.stats.rho,
             "pbng rho {} > parb rho {}",

@@ -70,21 +70,6 @@ impl VAdj {
     }
 }
 
-/// Per-thread scratch for wedge counting during peeling.
-pub struct TipScratch {
-    cnt: Vec<u32>,
-    touched: Vec<u32>,
-}
-
-impl TipScratch {
-    pub fn new(nu: usize) -> Self {
-        TipScratch {
-            cnt: vec![0; nu],
-            touched: Vec::new(),
-        }
-    }
-}
-
 /// Peel a set of U vertices in one parallel iteration. `active` must be
 /// pre-marked at `epoch`. Returns alive vertices whose support changed.
 ///
@@ -103,51 +88,53 @@ pub fn peel_batch_tip(
     meters: &Meters,
 ) -> Vec<u32> {
     let threads = threads.max(1);
-    let scratch: Vec<std::sync::Mutex<TipScratch>> = (0..threads)
-        .map(|_| std::sync::Mutex::new(TipScratch::new(g.nu())))
-        .collect();
-    let touched_out: Vec<std::sync::Mutex<Vec<u32>>> =
-        (0..threads).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    // Pool-owned per-lane scratch: the dense wedge counter (`cnt`, kept
+    // all-zero between regions), the per-vertex wedge-end list (`a`) and
+    // the touched-output collector (`b`) all keep their capacity across
+    // the ρ peel iterations instead of being reallocated per call.
+    let mut scratch = crate::par::ScratchSet::take(crate::par::max_lanes(threads));
     let vadj_ref: &VAdj = vadj;
 
     parallel_for_chunked(active.len(), threads, 8, |t, lo, hi| {
-        let mut sc = scratch[t].lock().unwrap();
-        let mut out = touched_out[t].lock().unwrap();
+        // SAFETY: the pool drives each lane id from at most one thread
+        // per region, so slot `t` is exclusively ours inside this chunk.
+        let sc = unsafe { scratch.lane(t) };
+        let (cnt, wedge_ends, out) = sc.split(g.nu());
         let mut wedges = 0u64;
         let mut updates = 0u64;
         for &u in &active[lo..hi] {
-            let sc = &mut *sc;
             for &(v, _) in g.nbrs_u(u) {
                 for &u2 in vadj_ref.list(v) {
                     wedges += 1;
                     if u2 == u || epoch[u2 as usize].load(Ordering::Relaxed) != ALIVE {
                         continue;
                     }
-                    if sc.cnt[u2 as usize] == 0 {
-                        sc.touched.push(u2);
+                    if cnt[u2 as usize] == 0 {
+                        wedge_ends.push(u2);
                     }
-                    sc.cnt[u2 as usize] += 1;
+                    cnt[u2 as usize] += 1;
                 }
             }
-            for &u2 in &sc.touched {
-                let c = sc.cnt[u2 as usize] as u64;
-                sc.cnt[u2 as usize] = 0;
+            for &u2 in wedge_ends.iter() {
+                let c = cnt[u2 as usize] as u64;
+                cnt[u2 as usize] = 0; // restore the all-zero invariant
                 if c >= 2 {
                     sup[u2 as usize].sub_clamped(c * (c - 1) / 2, floor);
                     updates += 1;
                     out.push(u2);
                 }
             }
-            sc.touched.clear();
+            wedge_ends.clear();
         }
         meters.wedges.add(wedges);
         meters.updates.add(updates);
     });
 
-    let touched: Vec<u32> = touched_out
-        .into_iter()
-        .flat_map(|m| m.into_inner().unwrap())
-        .collect();
+    let mut touched: Vec<u32> = Vec::new();
+    scratch.for_each(|sc| {
+        touched.extend_from_slice(&sc.b);
+        sc.b.clear();
+    });
 
     if deletes {
         // compact every V list adjacent to a peeled vertex (disjoint v's)

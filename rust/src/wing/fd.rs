@@ -5,7 +5,9 @@
 //! sequential bottom-up peeling *independently* of all other partitions —
 //! supports are initialized from ⋈init, so no cross-partition updates are
 //! needed and **no global synchronization** happens: partitions are
-//! dynamically pulled off a workload-sorted task queue (LPT, §3.1.4).
+//! dynamically pulled off a workload-sorted task queue (LPT, §3.1.4) by
+//! the persistent runtime pool's lanes ([`crate::par::spmd`] — no thread
+//! spawning here either).
 
 use crate::beindex::partition::{PartIndex, Partitioned};
 use crate::metrics::Meters;

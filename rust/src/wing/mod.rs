@@ -191,7 +191,7 @@ mod tests {
             let pbng = wing_pbng(&g, PbngConfig { p: 4, threads: 2, ..Default::default() }).theta;
             let beb = wing_be_batch(&g, 2).theta;
             let pc = wing_be_pc(&g, 0.25).theta;
-            let parb = wing_parb(&g).theta;
+            let parb = wing_parb(&g, 2).theta;
             if pbng != bup {
                 return Err(format!("pbng != bup: {pbng:?} vs {bup:?}"));
             }

@@ -89,17 +89,18 @@ pub fn peel_set_batch(
     meters: &Meters,
 ) -> Vec<u32> {
     let threads = threads.max(1);
-    let n_threads = threads;
-    let dirty_lists: Vec<std::sync::Mutex<Vec<u32>>> =
-        (0..n_threads).map(|_| std::sync::Mutex::new(Vec::new())).collect();
-    let touched_lists: Vec<std::sync::Mutex<Vec<u32>>> =
-        (0..n_threads).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    // Per-lane collectors checked out from the runtime pool's freelist:
+    // CD calls this once per peel iteration (ρ times), so per-call
+    // `Mutex<Vec<u32>>` allocation and locking was pure overhead.
+    let mut scratch = crate::par::ScratchSet::take(crate::par::max_lanes(threads));
 
     // Phase 1: per peeled edge, resolve twins and aggregate wedge-removal
     // counts at blooms. bloom_k reads are stable (only phase 2 writes).
     parallel_for_chunked(active.len(), threads, 64, |t, lo, hi| {
-        let mut dirty = dirty_lists[t].lock().unwrap();
-        let mut touched = touched_lists[t].lock().unwrap();
+        // SAFETY: the pool drives each lane id from at most one thread
+        // per region, so slot `t` is exclusively ours inside this chunk.
+        let sc = unsafe { scratch.lane(t) };
+        let (dirty, touched) = (&mut sc.a, &mut sc.b);
         let mut wedges = 0u64;
         let mut updates = 0u64;
         for &e in &active[lo..hi] {
@@ -133,22 +134,23 @@ pub fn peel_set_batch(
         meters.updates.add(updates);
     });
 
-    let dirty: Vec<u32> = dirty_lists
-        .into_iter()
-        .flat_map(|m| m.into_inner().unwrap())
-        .collect();
-    let mut touched: Vec<u32> = touched_lists
-        .into_iter()
-        .flat_map(|m| m.into_inner().unwrap())
-        .collect();
+    let mut dirty: Vec<u32> = Vec::new();
+    let mut touched: Vec<u32> = Vec::new();
+    scratch.for_each(|sc| {
+        dirty.extend_from_slice(&sc.a);
+        sc.a.clear();
+        touched.extend_from_slice(&sc.b);
+        sc.b.clear();
+    });
 
     // Phase 2: per dirty bloom, decrement the bloom number and apply the
     // aggregated −count[B] to live edges with live twins. Disjoint blooms
-    // → RacyCell writes are race-free.
-    let touched2: Vec<std::sync::Mutex<Vec<u32>>> =
-        (0..n_threads).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    // → RacyCell writes are race-free. Lane slots (`b`) are reused as the
+    // phase-local touched collectors.
     parallel_for_chunked(dirty.len(), threads, 16, |t, lo, hi| {
-        let mut touched = touched2[t].lock().unwrap();
+        // SAFETY: lane-exclusive slot (see phase 1).
+        let sc = unsafe { scratch.lane(t) };
+        let touched = &mut sc.b;
         let mut wedges = 0u64;
         let mut updates = 0u64;
         for &b in &dirty[lo..hi] {
@@ -192,7 +194,10 @@ pub fn peel_set_batch(
         meters.wedges.add(wedges);
         meters.updates.add(updates);
     });
-    touched.extend(touched2.into_iter().flat_map(|m| m.into_inner().unwrap()));
+    scratch.for_each(|sc| {
+        touched.extend_from_slice(&sc.b);
+        sc.b.clear();
+    });
     touched
 }
 

@@ -1,0 +1,73 @@
+//! Runtime-pool integration: the PR's acceptance criteria.
+//!
+//! * θ vectors must be byte-identical across thread counts {1, 2, 8} for
+//!   both entity types (wing + tip) on the zipf and grid generators —
+//!   catches pool races and lane-ordering bugs.
+//! * A full PBNG wing run must spawn at most pool-capacity OS threads
+//!   (bounded by the pool size, not by ρ), and a warm pool must spawn
+//!   none at all — the "no per-region thread spawning" criterion.
+
+use pbng::graph::{gen, Side};
+use pbng::tip::{tip_pbng, TipConfig};
+use pbng::wing::{wing_pbng, PbngConfig};
+
+fn graphs() -> Vec<(&'static str, pbng::graph::BipartiteGraph)> {
+    vec![
+        ("zipf", gen::zipf(90, 90, 600, 1.2, 1.2, 93)),
+        ("grid", gen::grid(80, 80, 4, 0.9, 94)),
+    ]
+}
+
+#[test]
+fn wing_theta_identical_across_thread_counts() {
+    for (name, g) in graphs() {
+        let reference = wing_pbng(&g, PbngConfig { p: 6, threads: 1, ..Default::default() }).theta;
+        for threads in [2, 8] {
+            let got = wing_pbng(&g, PbngConfig { p: 6, threads, ..Default::default() }).theta;
+            assert_eq!(got, reference, "wing θ diverged on {name} at threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn tip_theta_identical_across_thread_counts() {
+    for (name, g) in graphs() {
+        for side in [Side::U, Side::V] {
+            let reference =
+                tip_pbng(&g, side, TipConfig { p: 4, threads: 1, ..Default::default() }).theta;
+            for threads in [2, 8] {
+                let got =
+                    tip_pbng(&g, side, TipConfig { p: 4, threads, ..Default::default() }).theta;
+                assert_eq!(
+                    got,
+                    reference,
+                    "tip θ diverged on {name} {side:?} at threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn full_wing_run_spawns_at_most_pool_capacity_threads() {
+    // Run first, read the capacity after: if this test gets to create the
+    // pool, the first run measures the real cold-start spawn delta
+    // (capacity − 1); if a sibling test already warmed it, the delta is 0.
+    // The bound holds either way, and the second run is always warm.
+    let g = gen::zipf(70, 70, 450, 1.2, 1.2, 95);
+    let d = wing_pbng(&g, PbngConfig { p: 6, threads: 8, ..Default::default() });
+    let capacity = pbng::par::pool_capacity() as u64;
+    assert!(d.stats.rho >= 1, "run must execute peel iterations");
+    assert!(
+        d.stats.spawns <= capacity,
+        "spawned {} threads over a run with rho={} — pool not persistent (capacity {})",
+        d.stats.spawns,
+        d.stats.rho,
+        capacity
+    );
+    // The pool is warm now: a second full run — thousands of parallel
+    // regions — must not create a single new OS thread.
+    let d2 = wing_pbng(&g, PbngConfig { p: 6, threads: 8, ..Default::default() });
+    assert_eq!(d2.stats.spawns, 0, "warm pool spawned threads; workers not reused");
+    assert_eq!(d2.theta, d.theta);
+}
