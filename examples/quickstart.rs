@@ -6,10 +6,11 @@
 //! Run: `cargo run --release --example quickstart`
 
 use pbng::beindex::BeIndex;
+use pbng::engine::EngineConfig;
 use pbng::graph::{gen, Side};
 use pbng::hierarchy;
-use pbng::tip::{tip_pbng, TipConfig};
-use pbng::wing::{wing_pbng, PbngConfig};
+use pbng::tip::tip_pbng;
+use pbng::wing::wing_pbng;
 
 fn main() {
     let g = gen::paper_fig1();
@@ -20,8 +21,8 @@ fn main() {
         g.m()
     );
 
-    // --- wing decomposition -------------------------------------------
-    let cfg = PbngConfig {
+    // --- wing decomposition (one EngineConfig drives both pipelines) ---
+    let cfg = EngineConfig {
         p: 4,
         threads: 2,
         ..Default::default()
@@ -45,7 +46,7 @@ fn main() {
     }
 
     // --- tip decomposition ----------------------------------------------
-    let tip = tip_pbng(&g, Side::U, TipConfig { p: 3, threads: 2, ..Default::default() });
+    let tip = tip_pbng(&g, Side::U, EngineConfig { p: 3, ..cfg });
     println!("\ntip numbers (θ_u, peeling U):");
     for u in 0..g.nu() {
         println!("  u{u:<2} θ = {}", tip.theta[u]);

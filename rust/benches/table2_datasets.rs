@@ -5,10 +5,11 @@
 //! same columns for the synthetic stand-in suite (DESIGN.md
 //! §Substitutions). `--full` adds the medium tier.
 
+use pbng::engine::EngineConfig;
 use pbng::graph::{gen, Side};
 use pbng::metrics::human;
-use pbng::tip::{tip_pbng, TipConfig};
-use pbng::wing::{wing_pbng, PbngConfig};
+use pbng::tip::tip_pbng;
+use pbng::wing::wing_pbng;
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
@@ -25,9 +26,9 @@ fn main() {
     for p in presets {
         let g = p.build();
         let total = pbng::count::total_butterflies(&g, threads);
-        let tu = tip_pbng(&g, Side::U, TipConfig { threads, ..Default::default() });
-        let tv = tip_pbng(&g, Side::V, TipConfig { threads, ..Default::default() });
-        let w = wing_pbng(&g, PbngConfig { threads, ..Default::default() });
+        let tu = tip_pbng(&g, Side::U, EngineConfig { threads, ..EngineConfig::tip() });
+        let tv = tip_pbng(&g, Side::V, EngineConfig { threads, ..EngineConfig::tip() });
+        let w = wing_pbng(&g, EngineConfig { threads, ..Default::default() });
         println!(
             "{:<12} {:>8} {:>8} {:>9} {:>12} {:>10} {:>10} {:>9}",
             p.name(),

@@ -17,8 +17,10 @@
 //!   report fails; entries new in the current report pass ungated.
 //! * An **empty baseline** fails loudly by default: a bootstrap baseline
 //!   gates nothing, and a vacuous pass must not masquerade as a green
-//!   perf gate. `--allow-empty-baseline` (CI passes it explicitly)
-//!   acknowledges the un-armed state and turns it back into a pass.
+//!   perf gate. `--allow-empty-baseline` acknowledges the un-armed state
+//!   and turns it back into a pass (a local escape hatch — CI instead
+//!   substitutes a freshly measured report for an empty baseline and
+//!   commits it back, so the flag no longer appears in the workflow).
 
 use super::report::{Entry, Report};
 use anyhow::{bail, Result};

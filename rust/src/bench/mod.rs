@@ -84,11 +84,12 @@ impl Algo {
     }
 
     pub fn run(self, g: &BipartiteGraph, threads: usize) -> Decomposition {
-        let wing_cfg = |batch, dynamic_deletes| crate::wing::PbngConfig {
+        let wing_cfg = |batch, dynamic_deletes| crate::engine::EngineConfig {
             p: (g.m() / 500).clamp(4, 64),
             threads,
             batch,
             dynamic_deletes,
+            ..Default::default()
         };
         match self {
             Algo::WingBup => crate::peel::bup::wing_bup(g),
@@ -102,7 +103,7 @@ impl Algo {
             Algo::TipPbng => crate::tip::tip_pbng(
                 g,
                 Side::U,
-                crate::tip::TipConfig {
+                crate::engine::EngineConfig {
                     p: (g.nu() / 100).clamp(4, 32),
                     threads,
                     ..Default::default()

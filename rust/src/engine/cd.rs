@@ -1,0 +1,112 @@
+//! Generic coarse-grained decomposition driver (Alg. 4 / §3.2).
+//!
+//! Divides the entity universe into `P` partitions by iteratively
+//! peeling, in parallel, *every* entity whose support falls in the
+//! current range `[θ(i), θ(i+1))`. Each parallel iteration peels a large
+//! set (little synchronization — the ρ reduction that is the paper's
+//! core claim) through the domain's peel kernel; the domain decides
+//! between the §5.1 batch engine, the one-at-a-time ablation, or (tip)
+//! a from-scratch support recount.
+//!
+//! Outputs per-entity partition assignments, the support-initialization
+//! vector ⋈init (supports snapshotted when each partition starts — i.e.
+//! the cumulative effect of peeling all lower partitions), and the range
+//! bounds — everything [`super::fd::fine_decompose`] needs to peel
+//! partitions independently.
+
+use super::range::{find_range, AdaptiveTarget};
+use super::{CdOutput, EngineConfig, PeelDomain, PeelOutcome};
+use crate::metrics::Meters;
+
+pub fn coarse_decompose<D: PeelDomain>(
+    dom: &mut D,
+    cfg: &EngineConfig,
+    meters: &Meters,
+) -> CdOutput {
+    let n = dom.n_entities();
+    let mut part_of = vec![u32::MAX; n];
+    let mut sup_init = vec![0u64; n];
+    let mut lowers = Vec::new();
+    let mut remaining = n;
+    let mut epoch = 0u32;
+    let mut lower = 0u64;
+    let mut adaptive = AdaptiveTarget::new(cfg.p, cfg.adaptive);
+    // reusable range histogram (see engine::range)
+    let mut bins: Vec<(u64, u64)> = Vec::new();
+    let mut i = 0usize;
+
+    while remaining > 0 {
+        // Snapshot ⋈init for alive entities (Alg. 4 lines 6–7). Also
+        // accumulates the remaining workload for adaptive targeting.
+        let mut remaining_work = 0u64;
+        for x in 0..n as u32 {
+            if dom.is_alive(x) {
+                let s = dom.support(x);
+                sup_init[x as usize] = s;
+                remaining_work += dom.workload_proxy(x, s);
+            }
+        }
+        // Range upper bound.
+        let is_last = i + 1 >= cfg.p;
+        let (upper, initial_estimate) = if is_last {
+            (u64::MAX, remaining_work)
+        } else {
+            let tgt = adaptive.target(remaining_work);
+            let r = find_range(
+                (0..n as u32).filter(|&x| dom.is_alive(x)).map(|x| {
+                    let s = dom.support(x);
+                    (s, dom.workload_proxy(x, s).max(1))
+                }),
+                tgt.max(1),
+                &mut bins,
+            );
+            (r.upper.max(lower + 1), r.initial_estimate)
+        };
+        lowers.push(lower);
+
+        // Initial active set: all alive entities with support < upper.
+        let mut active: Vec<u32> = (0..n as u32)
+            .filter(|&x| dom.is_alive(x) && dom.support(x) < upper)
+            .collect();
+        let mut partition_work = 0u64;
+
+        while !active.is_empty() {
+            meters.rho.add(1);
+            epoch += 1;
+            for &x in &active {
+                part_of[x as usize] = i as u32;
+                partition_work += dom.workload_proxy(x, sup_init[x as usize]);
+            }
+            remaining -= active.len();
+            match dom.peel_set(&active, lower, epoch, remaining, cfg, meters) {
+                PeelOutcome::Touched(mut next) => {
+                    // next frontier: live entities that dropped under the bound
+                    next.sort_unstable();
+                    next.dedup();
+                    next.retain(|&x| dom.is_alive(x) && dom.support(x) < upper);
+                    active = next;
+                }
+                PeelOutcome::Recounted => {
+                    // supports were recomputed from scratch: re-gather
+                    active = (0..n as u32)
+                        .filter(|&x| dom.is_alive(x) && dom.support(x) < upper)
+                        .collect();
+                }
+            }
+        }
+
+        adaptive.record(initial_estimate, partition_work.max(1));
+        lower = upper;
+        i += 1;
+        if is_last {
+            break;
+        }
+    }
+    debug_assert_eq!(remaining, 0, "all entities must be assigned");
+    CdOutput {
+        part_of,
+        sup_init,
+        lowers,
+        n_parts: i,
+    }
+}

@@ -1,0 +1,183 @@
+//! Generic fine-grained decomposition driver (Alg. 5 / §3.2).
+//!
+//! Each partition, together with its partition-local substrate (built by
+//! [`PeelDomain::build_substrate`]), is peeled *independently* of all
+//! other partitions — supports are initialized from ⋈init, so no
+//! cross-partition updates are needed and **no global synchronization**
+//! happens. Partitions are dispatched to the persistent runtime pool's
+//! lanes ([`crate::par::spmd`] — no thread spawning here either) through
+//! a workload-sorted task queue (LPT, §3.1.4) with chunk→lane affinity:
+//! partitions are pre-assigned to lanes greedily (heaviest first, to the
+//! least-loaded lane), each lane drains its own share first, and only
+//! then steals from the global LPT order. Affinity keeps a lane on
+//! substrate it already pulled into cache; stealing keeps the schedule
+//! dynamic, so a mis-estimated heavy partition cannot strand idle lanes.
+
+use super::{CdOutput, EngineConfig, PeelDomain};
+use crate::metrics::Meters;
+use crate::par::{spmd, RacyCell};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// LPT task queue with greedy lane pre-assignment and work stealing.
+/// Every partition is claimed exactly once (the `taken` flags), no
+/// matter how lanes interleave.
+struct LaneQueue {
+    /// Per-lane partition lists (greedy LPT assignment).
+    lanes: Vec<Vec<usize>>,
+    /// Per-lane cursor into the matching `lanes` entry.
+    cursors: Vec<AtomicUsize>,
+    /// Claim flags, one per partition: exactly-once execution.
+    taken: Vec<AtomicBool>,
+    /// Global LPT order, scanned once a lane's own list is drained.
+    order: Vec<usize>,
+    steal: AtomicUsize,
+}
+
+impl LaneQueue {
+    /// `order` is the global LPT order (heaviest first); `work[i]` the
+    /// workload indicator of partition `i`.
+    fn new(order: Vec<usize>, work: &[u64], n_lanes: usize) -> LaneQueue {
+        let n_lanes = n_lanes.max(1);
+        let mut lanes: Vec<Vec<usize>> = vec![Vec::new(); n_lanes];
+        let mut load = vec![0u64; n_lanes];
+        for &i in &order {
+            // least-loaded lane, ties to the lowest id (deterministic)
+            let l = (0..n_lanes).min_by_key(|&l| (load[l], l)).expect("n_lanes >= 1");
+            load[l] += work[i].max(1);
+            lanes[l].push(i);
+        }
+        LaneQueue {
+            lanes,
+            cursors: (0..n_lanes).map(|_| AtomicUsize::new(0)).collect(),
+            taken: (0..work.len()).map(|_| AtomicBool::new(false)).collect(),
+            order,
+            steal: AtomicUsize::new(0),
+        }
+    }
+
+    /// Next partition for logical lane `t`, or `None` once every
+    /// partition is claimed.
+    fn next(&self, t: usize) -> Option<usize> {
+        let lane = t % self.lanes.len();
+        let own = &self.lanes[lane];
+        let cursor = &self.cursors[lane];
+        loop {
+            let c = cursor.fetch_add(1, Ordering::Relaxed);
+            if c >= own.len() {
+                break;
+            }
+            let i = own[c];
+            if !self.taken[i].swap(true, Ordering::Relaxed) {
+                return Some(i);
+            }
+        }
+        loop {
+            let c = self.steal.fetch_add(1, Ordering::Relaxed);
+            if c >= self.order.len() {
+                return None;
+            }
+            let i = self.order[c];
+            if !self.taken[i].swap(true, Ordering::Relaxed) {
+                return Some(i);
+            }
+        }
+    }
+}
+
+/// Peel all partitions; returns θ per entity. Requires
+/// [`PeelDomain::build_substrate`] to have run for this `cd`.
+pub fn fine_decompose<D: PeelDomain>(
+    dom: &D,
+    cd: &CdOutput,
+    cfg: &EngineConfig,
+    meters: &Meters,
+) -> Vec<u64> {
+    let p = cd.n_parts;
+    let threads = cfg.threads.max(1);
+
+    // LPT order: workload indicator from the domain (Alg. 5 line 4).
+    let mut order: Vec<usize> = (0..p).collect();
+    let work: Vec<u64> = (0..p).map(|i| dom.partition_workload(i, cd)).collect();
+    order.sort_unstable_by(|&a, &b| work[b].cmp(&work[a]));
+    let queue = LaneQueue::new(order, &work, threads);
+
+    let theta_cell = RacyCell::new(vec![0u64; dom.n_entities()]);
+    spmd(threads, |t| {
+        while let Some(i) = queue.next(t) {
+            // SAFETY: CD assigns every entity to exactly one partition,
+            // the queue hands every partition to exactly one logical
+            // lane, and `peel_partition` only writes θ slots of its own
+            // partition's entities — all θ writes are disjoint.
+            let theta = unsafe { theta_cell.get_mut() };
+            let lo = cd.lowers.get(i).copied().unwrap_or(0);
+            let hi = cd.lowers.get(i + 1).copied().unwrap_or(u64::MAX);
+            dom.peel_partition(i, (lo, hi), theta, cd, cfg, meters);
+        }
+    });
+    theta_cell.into_inner()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn lane_queue_hands_out_every_partition_exactly_once() {
+        let work = vec![5u64, 9, 1, 7, 3, 3, 8, 2];
+        let mut order: Vec<usize> = (0..work.len()).collect();
+        order.sort_unstable_by(|&a, &b| work[b].cmp(&work[a]));
+        let q = LaneQueue::new(order, &work, 3);
+        let mut seen = HashSet::new();
+        // interleave lanes to exercise both the own-list and steal paths
+        let mut done = [false; 3];
+        while !done.iter().all(|&d| d) {
+            for t in 0..3 {
+                if done[t] {
+                    continue;
+                }
+                match q.next(t) {
+                    Some(i) => assert!(seen.insert(i), "partition {i} handed out twice"),
+                    None => done[t] = true,
+                }
+            }
+        }
+        assert_eq!(seen.len(), work.len());
+    }
+
+    #[test]
+    fn lane_queue_single_lane_covers_all() {
+        let work = vec![1u64; 5];
+        let q = LaneQueue::new((0..5).collect(), &work, 1);
+        let mut got = Vec::new();
+        while let Some(i) = q.next(0) {
+            got.push(i);
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn lane_queue_steals_when_own_list_is_exhausted() {
+        // two lanes, all work pre-assigned alternately; lane 0 alone must
+        // still drain everything through the steal path
+        let work = vec![4u64, 4, 4, 4];
+        let q = LaneQueue::new((0..4).collect(), &work, 2);
+        let mut got = Vec::new();
+        while let Some(i) = q.next(0) {
+            got.push(i);
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn lpt_assignment_balances_load() {
+        // loads 8,7,2,1 over two lanes: greedy LPT puts 8+1 and 7+2
+        let work = vec![8u64, 7, 2, 1];
+        let order = vec![0usize, 1, 2, 3]; // already descending
+        let q = LaneQueue::new(order, &work, 2);
+        let sums: Vec<u64> = q.lanes.iter().map(|l| l.iter().map(|&i| work[i]).sum()).collect();
+        assert_eq!(sums, vec![9, 9]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Generic two-phase peeling engine — the PBNG core, entity-agnostic.
+//!
+//! The paper's contribution is a *scheme*, not an edge- or vertex-specific
+//! algorithm: coarse-grained decomposition (CD, Alg. 4) splits the entity
+//! spectrum into `P` support ranges and peels each range with large
+//! low-synchronization parallel iterations; fine-grained decomposition
+//! (FD, Alg. 5 / §3.2) then peels every partition independently on a
+//! partition-local substrate, with **zero** cross-partition
+//! synchronization. This repo used to implement that scheme twice — once
+//! over edges (wing) and once over vertices (tip). This module owns the
+//! single copy:
+//!
+//! * [`EngineConfig`] — the merged configuration (`P`, threads, the §5.1
+//!   batch toggle, the §5.2 dynamic-delete toggle, and the adaptive
+//!   range-targeting knobs) that replaced the former `CdConfig` /
+//!   `TipCdConfig` / `FdConfig` / `TipFdConfig` quartet.
+//! * [`PeelDomain`] — the trait a peelable entity universe implements:
+//!   entity count, liveness, current support, a workload proxy for range
+//!   targeting, the batch peel kernel, and the per-partition
+//!   substrate/recount hooks. `wing::WingDomain` (BE-Index edge peeling)
+//!   and `tip::TipDomain` (wedge vertex peeling) are the two impls.
+//! * [`cd::coarse_decompose`] — the CD driver: ⋈init snapshotting,
+//!   adaptive range finding ([`range`]), active-set gathering, partition
+//!   bookkeeping.
+//! * [`fd::fine_decompose`] — the FD driver: LPT ordering, a lane-affine
+//!   dynamic task queue on the persistent pool ([`crate::par::spmd`]),
+//!   and θ write-back through [`crate::par::RacyCell`].
+//! * [`decompose`] / [`EngineReport`] — the phase-recorded Coarse →
+//!   Partition → Fine pipeline feeding [`crate::metrics::PeelStats`].
+//!
+//! The entity-specific counting phase stays with the caller (edge
+//! supports need the BE-Index, vertex supports need per-vertex butterfly
+//! counts), which is why [`decompose`] accepts a running
+//! [`Recorder`](crate::metrics::Recorder) instead of creating one.
+
+pub mod cd;
+pub mod fd;
+pub mod range;
+
+pub use cd::coarse_decompose;
+pub use fd::fine_decompose;
+pub use range::{find_range, AdaptiveConfig, AdaptiveTarget, Range};
+
+use crate::metrics::{Meters, Phase, Recorder};
+
+/// Unified two-phase engine configuration (replaces the former
+/// `CdConfig`/`TipCdConfig`/`FdConfig`/`TipFdConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Number of CD partitions P. Paper: 400/1000 for wing, 150 for tip;
+    /// scaled presets here default to 64 (wing) / 32 (tip), see
+    /// [`EngineConfig::tip`].
+    pub p: usize,
+    pub threads: usize,
+    /// Batch optimization (§5.1); off = PBNG−− ablation.
+    pub batch: bool,
+    /// Dynamic substrate deletes (§5.2); off = PBNG− ablation.
+    pub dynamic_deletes: bool,
+    /// Adaptive range-targeting knobs (§3.1.3).
+    pub adaptive: AdaptiveConfig,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            p: 64,
+            threads: crate::par::default_threads(),
+            batch: true,
+            dynamic_deletes: true,
+            adaptive: AdaptiveConfig::default(),
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Wing-scaled defaults (P = 64).
+    pub fn wing() -> Self {
+        Self::default()
+    }
+
+    /// Tip-scaled defaults (P = 32).
+    pub fn tip() -> Self {
+        EngineConfig {
+            p: 32,
+            ..Self::default()
+        }
+    }
+}
+
+/// Output of the generic CD driver (partition assignment, shared by both
+/// decompositions).
+#[derive(Debug)]
+pub struct CdOutput {
+    /// Partition index per entity.
+    pub part_of: Vec<u32>,
+    /// ⋈init per entity: support after all lower partitions were peeled
+    /// (snapshotted when the entity's partition started).
+    pub sup_init: Vec<u64>,
+    /// Lower bound θ(i) per partition (`lowers[i] ≤ θ_x < lowers[i+1]`
+    /// for x ∈ partition i; the last upper bound is implicit/unbounded).
+    pub lowers: Vec<u64>,
+    /// Number of partitions actually created.
+    pub n_parts: usize,
+}
+
+/// What one CD peel iteration did (see [`PeelDomain::peel_set`]).
+pub enum PeelOutcome {
+    /// Live entities whose support may have changed (duplicates allowed;
+    /// the driver dedups and re-filters against the range bound).
+    Touched(Vec<u32>),
+    /// Supports were recounted from scratch (the tip §5.1 path): the
+    /// driver must re-gather the active set over all alive entities.
+    Recounted,
+}
+
+/// A peelable entity universe. Implementations plug their support
+/// storage, peel kernels, and per-partition substrate into the shared
+/// CD/FD drivers; everything else — range targeting, active-set
+/// management, LPT scheduling, θ write-back — is engine-owned.
+///
+/// `Sync` is required because the FD driver shares `&self` across the
+/// persistent pool's lanes.
+pub trait PeelDomain: Sync {
+    /// Number of peelable entities (edges for wing, one side's vertices
+    /// for tip).
+    fn n_entities(&self) -> usize;
+
+    /// Entity not yet peeled/assigned?
+    fn is_alive(&self, x: u32) -> bool;
+
+    /// Current support ⋈ of entity `x`.
+    fn support(&self, x: u32) -> u64;
+
+    /// Workload proxy for range targeting and LPT accounting. `sup_init`
+    /// is the support snapshotted at the current partition's start (wing
+    /// peel cost is `O(⋈_e)`, so it returns `sup_init`; tip returns the
+    /// static wedge count of `x`).
+    fn workload_proxy(&self, x: u32, sup_init: u64) -> u64;
+
+    /// Peel `active` (already assigned to the current partition by the
+    /// driver) at `epoch`, clamping support updates to `lower`.
+    /// `remaining` counts entities still alive after this set.
+    fn peel_set(
+        &mut self,
+        active: &[u32],
+        lower: u64,
+        epoch: u32,
+        remaining: usize,
+        cfg: &EngineConfig,
+        meters: &Meters,
+    ) -> PeelOutcome;
+
+    /// Build the per-partition FD substrate from the CD assignment
+    /// (partitioned BE-Index for wing, induced subgraphs for tip).
+    fn build_substrate(&mut self, cd: &CdOutput, cfg: &EngineConfig);
+
+    /// FD workload indicator of partition `part` (LPT ordering). Only
+    /// called after [`PeelDomain::build_substrate`].
+    fn partition_workload(&self, part: usize, cd: &CdOutput) -> u64;
+
+    /// Sequentially peel partition `part` within `[bounds.0, bounds.1)`,
+    /// writing final entity numbers into `theta`. Must only write θ slots
+    /// of entities owned by `part` (the FD driver's soundness contract).
+    fn peel_partition(
+        &self,
+        part: usize,
+        bounds: (u64, u64),
+        theta: &mut [u64],
+        cd: &CdOutput,
+        cfg: &EngineConfig,
+        meters: &Meters,
+    );
+}
+
+/// Result of a full two-phase run.
+pub struct EngineReport {
+    /// Final entity numbers θ.
+    pub theta: Vec<u64>,
+    /// The CD partition assignment the run was built on.
+    pub cd: CdOutput,
+    /// Phase-attributed workload statistics.
+    pub stats: crate::metrics::PeelStats,
+}
+
+impl EngineReport {
+    pub fn into_decomposition(self) -> crate::peel::Decomposition {
+        crate::peel::Decomposition {
+            theta: self.theta,
+            stats: self.stats,
+        }
+    }
+}
+
+/// Run the full Coarse → Partition → Fine pipeline on `dom`.
+///
+/// The caller owns the counting phase: start a
+/// [`Recorder`](crate::metrics::Recorder), enter
+/// [`Phase::Count`](crate::metrics::Phase), build the domain, then hand
+/// the recorder over. The engine records the remaining phases and
+/// finishes the recorder into the report's
+/// [`PeelStats`](crate::metrics::PeelStats).
+pub fn decompose<D: PeelDomain>(
+    dom: &mut D,
+    cfg: &EngineConfig,
+    mut rec: Recorder<'_>,
+) -> EngineReport {
+    let meters = rec.meters();
+    rec.enter(Phase::Coarse);
+    let cd = coarse_decompose(dom, cfg, meters);
+    rec.enter(Phase::Partition);
+    dom.build_substrate(&cd, cfg);
+    rec.enter(Phase::Fine);
+    let theta = fine_decompose(dom, &cd, cfg, meters);
+    EngineReport {
+        theta,
+        cd,
+        stats: rec.finish(),
+    }
+}

@@ -1,0 +1,213 @@
+//! Range determination for PBNG CD (§3.1.3, Alg. 4 lines 15–20).
+//!
+//! The spectrum of entity numbers is split into `P` non-overlapping
+//! ranges so that each partition poses roughly `tgt` peeling workload.
+//! Workload of peeling entity `l` is proxied by the domain
+//! ([`crate::engine::PeelDomain::workload_proxy`]): current support for
+//! wing (`O(⋈_e)` BE-Index traversal per peeled edge), wedge count for
+//! tip. Bins keyed by support value are prefix-scanned to find the
+//! smallest upper bound whose cumulative workload reaches the target.
+//!
+//! Binning uses a caller-provided `Vec<(support, workload)>` that is
+//! cleared and sorted in place: the CD driver reuses one buffer across
+//! all `P` partitions, so the hot path neither allocates nor rehashes
+//! (the previous implementation built a fresh `HashMap` per partition)
+//! and iterates bins in deterministic ascending-support order by
+//! construction.
+//!
+//! The *two-way adaptive* scheme: (1) `tgt` is recomputed per partition
+//! from the remaining workload and remaining partition count; (2) the
+//! target is scaled down by the previous partition's overshoot ratio
+//! (initial estimate ÷ final workload), assuming locally predictive
+//! behaviour. The clamp on that scale is configurable via
+//! [`AdaptiveConfig`].
+
+/// Result of one range computation.
+#[derive(Clone, Copy, Debug)]
+pub struct Range {
+    /// Exclusive upper bound θ(i+1) on supports peeled into this
+    /// partition.
+    pub upper: u64,
+    /// Estimated workload of the initial active set (Σ workload of
+    /// entities currently under `upper`).
+    pub initial_estimate: u64,
+}
+
+/// Find the smallest `upper` such that entities with support `< upper`
+/// carry cumulative workload ≥ `tgt`. `supports` enumerates
+/// `(support, workload)` of *alive* entities only. `bins` is reusable
+/// scratch: cleared, filled, and sorted by support in place.
+pub fn find_range<I>(supports: I, tgt: u64, bins: &mut Vec<(u64, u64)>) -> Range
+where
+    I: Iterator<Item = (u64, u64)>, // (support, workload)
+{
+    bins.clear();
+    bins.extend(supports);
+    bins.sort_unstable_by_key(|&(s, _)| s);
+    let mut acc = 0u64;
+    let mut i = 0usize;
+    let n = bins.len();
+    while i < n {
+        // aggregate the run of equal supports into one bin
+        let k = bins[i].0;
+        while i < n && bins[i].0 == k {
+            acc += bins[i].1;
+            i += 1;
+        }
+        if acc >= tgt {
+            return Range {
+                upper: k + 1,
+                initial_estimate: acc,
+            };
+        }
+    }
+    // everything fits under the target: take it all
+    Range {
+        upper: bins.last().map(|&(k, _)| k + 1).unwrap_or(1),
+        initial_estimate: acc,
+    }
+}
+
+/// Knobs of the two-way adaptive target scheme.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveConfig {
+    /// Lower clamp on the overshoot-correction scale: prevents one
+    /// wildly-overshooting partition from collapsing all later targets.
+    pub scale_floor: f64,
+    /// Upper clamp on the scale (1.0 = targets are never scaled *up*).
+    pub scale_cap: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            scale_floor: 0.02,
+            scale_cap: 1.0,
+        }
+    }
+}
+
+/// Adaptive target state across partitions.
+#[derive(Debug)]
+pub struct AdaptiveTarget {
+    /// Partitions still to create (including the current one).
+    remaining_parts: usize,
+    /// Overshoot scale from the previous partition (≤ scale_cap).
+    scale: f64,
+    knobs: AdaptiveConfig,
+}
+
+impl AdaptiveTarget {
+    pub fn new(p: usize, knobs: AdaptiveConfig) -> Self {
+        AdaptiveTarget {
+            remaining_parts: p.max(1),
+            scale: 1.0,
+            knobs,
+        }
+    }
+
+    /// Target workload for the next partition given the total remaining
+    /// workload.
+    pub fn target(&self, remaining_workload: u64) -> u64 {
+        let base = remaining_workload as f64 / self.remaining_parts as f64;
+        ((base * self.scale).max(1.0)) as u64
+    }
+
+    /// Record a finished partition: its initial estimate (at range time)
+    /// and the final workload it actually absorbed.
+    pub fn record(&mut self, initial_estimate: u64, final_workload: u64) {
+        if self.remaining_parts > 1 {
+            self.remaining_parts -= 1;
+        }
+        if final_workload > 0 && initial_estimate > 0 {
+            // assume the next partition overshoots similarly; min/max
+            // instead of clamp so a misordered knob pair cannot panic
+            self.scale = (initial_estimate as f64 / final_workload as f64)
+                .max(self.knobs.scale_floor)
+                .min(self.knobs.scale_cap);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn range(sup: &[u64], tgt: u64) -> Range {
+        let mut bins = Vec::new();
+        find_range(sup.iter().map(|&s| (s, s)), tgt, &mut bins)
+    }
+
+    #[test]
+    fn find_range_basic() {
+        // supports 1,1,2,3 with identity workload; tgt 3 → bins: 1→2, 2→2
+        // cumulative at support 1 = 2 < 3; at 2 = 4 ≥ 3 → upper 3
+        let r = range(&[1, 1, 2, 3], 3);
+        assert_eq!(r.upper, 3);
+        assert_eq!(r.initial_estimate, 4);
+    }
+
+    #[test]
+    fn find_range_takes_all_when_target_large() {
+        let r = range(&[5, 7], 1_000);
+        assert_eq!(r.upper, 8);
+        assert_eq!(r.initial_estimate, 12);
+    }
+
+    #[test]
+    fn find_range_single_bin() {
+        let r = range(&[4; 10], 1);
+        assert_eq!(r.upper, 5);
+    }
+
+    #[test]
+    fn find_range_empty() {
+        let mut bins = Vec::new();
+        let r = find_range(std::iter::empty(), 10, &mut bins);
+        assert_eq!(r.upper, 1);
+        assert_eq!(r.initial_estimate, 0);
+    }
+
+    #[test]
+    fn bins_are_reused_and_sorted() {
+        let mut bins = vec![(99, 99); 8]; // stale contents must not leak
+        let r = find_range([(3u64, 1u64), (1, 1), (2, 1)].into_iter(), 2, &mut bins);
+        assert_eq!(r.upper, 3); // bins 1→1, 2→1: cumulative 2 ≥ 2 at support 2
+        assert_eq!(bins, vec![(1, 1), (2, 1), (3, 1)]);
+        // second use of the same buffer
+        let r2 = find_range([(7u64, 5u64)].into_iter(), 1, &mut bins);
+        assert_eq!(r2.upper, 8);
+        assert_eq!(bins, vec![(7, 5)]);
+    }
+
+    #[test]
+    fn adaptive_target_divides_evenly() {
+        let t = AdaptiveTarget::new(4, AdaptiveConfig::default());
+        assert_eq!(t.target(100), 25);
+    }
+
+    #[test]
+    fn adaptive_target_scales_down_after_overshoot() {
+        let mut t = AdaptiveTarget::new(4, AdaptiveConfig::default());
+        // estimated 25 but absorbed 100 → scale 0.25
+        t.record(25, 100);
+        // remaining workload 300 over 3 parts = 100, scaled to 25
+        assert_eq!(t.target(300), 25);
+    }
+
+    #[test]
+    fn adaptive_scale_clamped() {
+        let mut t = AdaptiveTarget::new(2, AdaptiveConfig::default());
+        t.record(1, 1_000_000);
+        assert!(t.target(1_000_000) >= 1);
+        // default floor 0.02, one partition left: 1000 × 0.02 = 20
+        assert_eq!(t.target(1_000), 20);
+    }
+
+    #[test]
+    fn adaptive_knobs_are_honored() {
+        let mut t = AdaptiveTarget::new(2, AdaptiveConfig { scale_floor: 0.5, scale_cap: 1.0 });
+        t.record(1, 1_000_000); // raw ratio ~1e-6, floored to 0.5
+        assert_eq!(t.target(1_000), 500);
+    }
+}

@@ -11,18 +11,24 @@
 //! Quick start:
 //!
 //! ```
+//! use pbng::engine::EngineConfig;
 //! use pbng::graph::gen;
-//! use pbng::wing::{wing_pbng, PbngConfig};
+//! use pbng::wing::wing_pbng;
 //!
 //! let g = gen::paper_fig1();
-//! let d = wing_pbng(&g, PbngConfig { p: 4, threads: 2, ..Default::default() });
+//! let d = wing_pbng(&g, EngineConfig { p: 4, threads: 2, ..Default::default() });
 //! assert_eq!(d.theta.len(), g.m());
 //! ```
+//!
+//! Both decompositions run on the generic two-phase engine
+//! ([`engine`]): wing and tip are thin [`engine::PeelDomain`] impls over
+//! one shared CD/FD driver pair.
 
 pub mod beindex;
 pub mod bench;
 pub mod cli;
 pub mod count;
+pub mod engine;
 pub mod graph;
 pub mod index;
 pub mod jsonio;

@@ -159,13 +159,21 @@ fn cmd_count(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn wing_cfg(args: &Args) -> Result<pbng::wing::PbngConfig> {
-    Ok(pbng::wing::PbngConfig {
-        p: args.get_usize("p", 64)?,
+/// One config for both decompositions: all `--p/--threads/--no-batch/
+/// --no-deletes` flags route through the shared `engine::EngineConfig`
+/// (wing and tip only differ in the default partition count).
+fn engine_cfg(args: &Args, default_p: usize) -> Result<pbng::engine::EngineConfig> {
+    Ok(pbng::engine::EngineConfig {
+        p: args.get_usize("p", default_p)?,
         threads: args.get_usize("threads", pbng::par::default_threads())?,
         batch: !args.flag("no-batch"),
         dynamic_deletes: !args.flag("no-deletes"),
+        ..Default::default()
     })
+}
+
+fn wing_cfg(args: &Args) -> Result<pbng::engine::EngineConfig> {
+    engine_cfg(args, 64)
 }
 
 fn report(name: &str, d: &pbng::peel::Decomposition) {
@@ -219,12 +227,7 @@ fn cmd_tip(args: &Args) -> Result<()> {
         "v" | "V" => Side::V,
         s => bail!("--side must be u or v, got '{s}'"),
     };
-    let cfg = pbng::tip::TipConfig {
-        p: args.get_usize("p", 32)?,
-        threads: args.get_usize("threads", pbng::par::default_threads())?,
-        batch: !args.flag("no-batch"),
-        dynamic_deletes: !args.flag("no-deletes"),
-    };
+    let cfg = engine_cfg(args, 32)?;
     let algo = args.get_or("algo", "pbng").to_string();
     let out = args.get("out").map(|s| s.to_string());
     args.check_unknown()?;
@@ -298,18 +301,7 @@ fn cmd_index(args: &Args) -> Result<()> {
             };
             let theta = match load_theta(g.n_side(side), "vertex")? {
                 Some(t) => t,
-                None => {
-                    pbng::tip::tip_pbng(
-                        &g,
-                        side,
-                        pbng::tip::TipConfig {
-                            p: cfg.p,
-                            threads: cfg.threads,
-                            ..Default::default()
-                        },
-                    )
-                    .theta
-                }
+                None => pbng::tip::tip_pbng(&g, side, cfg).theta,
             };
             pbng::index::build_tip_forest(&theta, fkind)
         }
@@ -471,9 +463,9 @@ fn cmd_verify(args: &Args) -> Result<()> {
         let p = pbng::tip::tip_pbng(
             &g,
             side,
-            pbng::tip::TipConfig {
+            pbng::engine::EngineConfig {
                 threads: cfg.threads,
-                ..Default::default()
+                ..pbng::engine::EngineConfig::tip()
             },
         )
         .theta;

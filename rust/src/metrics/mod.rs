@@ -175,6 +175,12 @@ impl<'a> Recorder<'a> {
         }
     }
 
+    /// The meters this recorder attributes phases to (the engine records
+    /// phases against the caller's recorder without owning the meters).
+    pub fn meters(&self) -> &'a Meters {
+        self.meters
+    }
+
     pub fn enter(&mut self, p: Phase) {
         self.close_phase();
         self.current = Some(p);

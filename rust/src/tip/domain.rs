@@ -1,0 +1,358 @@
+//! Tip (vertex) peel domain: plugs wedge-based vertex peeling into the
+//! generic two-phase engine ([`crate::engine`]).
+//!
+//! * CD hook — atomic support cells + peel epochs over side U, the
+//!   [`peel_batch_tip`] wedge kernel, and the §5.1 *recount* escape
+//!   hatch: when the estimated peel traversal Λ(activeSet) exceeds the
+//!   counting bound Λ_cnt, supports of all remaining vertices are
+//!   re-counted from scratch instead ([`PeelOutcome::Recounted`]). The
+//!   workload proxy is the static wedge count Σ_{v∈N_u} d_v.
+//! * FD substrate — induced subgraphs `G_i = G[(U_i, V)]`
+//!   ([`build_partitions`]): a butterfly has exactly two U-vertices, so
+//!   `G_i` preserves precisely the butterflies with both endpoints in
+//!   `U_i`; everything else is baked into ⋈init.
+
+use super::peel::{peel_batch_tip, peel_workload, recount, VAdj, ALIVE};
+use crate::engine::{CdOutput, EngineConfig, PeelDomain, PeelOutcome};
+use crate::graph::induced::{build_partitions, InducedSubgraph};
+use crate::graph::BipartiteGraph;
+use crate::metrics::Meters;
+use crate::par::SupportCell;
+use crate::peel::BucketQueue;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+pub struct TipDomain<'a> {
+    g: &'a BipartiteGraph,
+    sup: Vec<SupportCell>,
+    epoch: Vec<AtomicU32>,
+    vadj: VAdj,
+    /// Static workload proxy: wedge count of u in G.
+    wedge_proxy: Vec<u64>,
+    /// §5.1 counting bound Λ_cnt.
+    lambda_cnt: u64,
+    /// FD substrate (set by `build_substrate`).
+    subs: Vec<InducedSubgraph>,
+}
+
+impl<'a> TipDomain<'a> {
+    /// `per_u` are the initial butterfly counts of side U of `g`
+    /// (callers transpose the graph for side V).
+    pub fn new(g: &'a BipartiteGraph, per_u: &[u64]) -> Self {
+        let nu = g.nu();
+        let wedge_proxy: Vec<u64> = (0..nu as u32)
+            .map(|u| g.nbrs_u(u).iter().map(|&(v, _)| g.deg_v(v) as u64).sum())
+            .collect();
+        TipDomain {
+            g,
+            sup: per_u.iter().map(|&s| SupportCell::new(s)).collect(),
+            epoch: (0..nu).map(|_| AtomicU32::new(ALIVE)).collect(),
+            vadj: VAdj::from_graph(g),
+            wedge_proxy,
+            lambda_cnt: g.count_workload_bound(),
+            subs: Vec::new(),
+        }
+    }
+}
+
+impl PeelDomain for TipDomain<'_> {
+    fn n_entities(&self) -> usize {
+        self.sup.len()
+    }
+
+    fn is_alive(&self, u: u32) -> bool {
+        self.epoch[u as usize].load(Ordering::Relaxed) == ALIVE
+    }
+
+    fn support(&self, u: u32) -> u64 {
+        self.sup[u as usize].get()
+    }
+
+    fn workload_proxy(&self, u: u32, _sup_init: u64) -> u64 {
+        self.wedge_proxy[u as usize]
+    }
+
+    fn peel_set(
+        &mut self,
+        active: &[u32],
+        lower: u64,
+        epoch: u32,
+        remaining: usize,
+        cfg: &EngineConfig,
+        meters: &Meters,
+    ) -> PeelOutcome {
+        for &u in active {
+            self.epoch[u as usize].store(epoch, Ordering::Relaxed);
+        }
+        // §5.1: re-count instead of peeling when cheaper
+        let use_recount = cfg.batch
+            && remaining > 0
+            && peel_workload(self.g, &self.vadj, active) > self.lambda_cnt;
+        if use_recount {
+            self.vadj = recount(self.g, &self.epoch, &self.sup, cfg.threads, meters);
+            PeelOutcome::Recounted
+        } else {
+            PeelOutcome::Touched(peel_batch_tip(
+                self.g,
+                &mut self.vadj,
+                active,
+                lower,
+                &self.epoch,
+                &self.sup,
+                cfg.threads,
+                cfg.dynamic_deletes,
+                meters,
+            ))
+        }
+    }
+
+    fn build_substrate(&mut self, cd: &CdOutput, _cfg: &EngineConfig) {
+        self.subs = build_partitions(self.g, &cd.part_of, cd.n_parts);
+    }
+
+    fn partition_workload(&self, part: usize, _cd: &CdOutput) -> u64 {
+        // wedges with both endpoints in the partition (§3.2)
+        self.subs[part].wedge_workload()
+    }
+
+    fn peel_partition(
+        &self,
+        part: usize,
+        bounds: (u64, u64),
+        theta: &mut [u64],
+        cd: &CdOutput,
+        cfg: &EngineConfig,
+        meters: &Meters,
+    ) {
+        peel_induced(
+            &self.subs[part],
+            &cd.sup_init,
+            bounds,
+            theta,
+            cfg.dynamic_deletes,
+            meters,
+        );
+    }
+}
+
+/// Sequential bottom-up tip peel of one induced subgraph.
+fn peel_induced(
+    s: &InducedSubgraph,
+    sup_init: &[u64],
+    (range_lo, range_hi): (u64, u64),
+    theta: &mut [u64],
+    dynamic_deletes: bool,
+    meters: &Meters,
+) {
+    let n = s.n_users();
+    if n == 0 {
+        return;
+    }
+    let mut sup: Vec<u64> = s.users.iter().map(|&u| sup_init[u as usize]).collect();
+    let mut peeled = vec![false; n];
+    // local mutable v-side adjacency (lists of local u ids)
+    let mut adj_v: Vec<u32> = s.adj_v.clone();
+    let mut len_v: Vec<u32> = (0..s.n_items())
+        .map(|v| (s.offs_v[v + 1] - s.offs_v[v]) as u32)
+        .collect();
+    let hi = if range_hi == u64::MAX {
+        sup.iter().copied().max().unwrap_or(range_lo) + 1
+    } else {
+        range_hi
+    };
+    let mut heap = BucketQueue::new(range_lo, hi);
+    for (lu, &su) in sup.iter().enumerate() {
+        heap.push(su, lu as u32);
+    }
+    let mut cnt = vec![0u32; n];
+    let mut touched: Vec<u32> = Vec::new();
+    let mut level = 0u64;
+    let mut remaining = n;
+    let mut wedges = 0u64;
+    let mut updates = 0u64;
+    while remaining > 0 {
+        let (su, lu) = heap
+            .pop_live(|i| (!peeled[i as usize]).then(|| sup[i as usize]))
+            .expect("induced heap exhausted early");
+        let lu = lu as usize;
+        level = level.max(su);
+        theta[s.users[lu] as usize] = level;
+        peeled[lu] = true;
+        remaining -= 1;
+        // wedge traversal within the induced subgraph
+        for &lv in s.nbrs_u(lu) {
+            let base = s.offs_v[lv as usize];
+            let llen = len_v[lv as usize] as usize;
+            let mut w = 0usize;
+            for r in 0..llen {
+                let u2 = adj_v[base + r];
+                wedges += 1;
+                if peeled[u2 as usize] {
+                    if !dynamic_deletes {
+                        adj_v[base + w] = adj_v[base + r];
+                        w += 1;
+                    }
+                    continue;
+                }
+                if cnt[u2 as usize] == 0 {
+                    touched.push(u2);
+                }
+                cnt[u2 as usize] += 1;
+                adj_v[base + w] = adj_v[base + r];
+                w += 1;
+            }
+            if dynamic_deletes {
+                len_v[lv as usize] = w as u32;
+            }
+        }
+        for &u2 in &touched {
+            let c = cnt[u2 as usize] as u64;
+            cnt[u2 as usize] = 0;
+            if c >= 2 {
+                let ns = sup[u2 as usize].saturating_sub(c * (c - 1) / 2).max(level);
+                if ns != sup[u2 as usize] {
+                    sup[u2 as usize] = ns;
+                    heap.push(ns, u2);
+                }
+                updates += 1;
+            }
+        }
+        touched.clear();
+    }
+    meters.wedges.add(wedges);
+    meters.updates.add(updates);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::count::brute;
+    use crate::engine::coarse_decompose;
+    use crate::graph::gen;
+    use crate::graph::Side;
+    use crate::tip::tip_pbng;
+
+    fn cfg(p: usize, threads: usize, batch: bool, dynamic_deletes: bool) -> EngineConfig {
+        EngineConfig {
+            p,
+            threads,
+            batch,
+            dynamic_deletes,
+            ..Default::default()
+        }
+    }
+
+    fn counts_u(g: &BipartiteGraph) -> Vec<u64> {
+        crate::count::pve_bcnt(
+            g,
+            crate::count::CountOptions {
+                per_edge: false,
+                build_blooms: false,
+                threads: 1,
+            },
+            None,
+        )
+        .0
+        .per_u
+    }
+
+    fn run_cd(g: &BipartiteGraph, c: &EngineConfig) -> CdOutput {
+        let per_u = counts_u(g);
+        let meters = Meters::new();
+        let mut dom = TipDomain::new(g, &per_u);
+        coarse_decompose(&mut dom, c, &meters)
+    }
+
+    #[test]
+    fn partitions_bracket_tip_numbers() {
+        crate::testkit::check_property("tipcd-brackets", 0x71CD, 8, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(
+                5 + rng.usize_below(10),
+                5 + rng.usize_below(10),
+                15 + rng.usize_below(50),
+                seed,
+            );
+            let theta = brute::brute_tip_numbers(&g, Side::U);
+            let p = 1 + rng.usize_below(4);
+            let out = run_cd(&g, &cfg(p, 2, true, true));
+            for u in 0..g.nu() {
+                let i = out.part_of[u] as usize;
+                let lo = out.lowers[i];
+                let hi = out.lowers.get(i + 1).copied().unwrap_or(u64::MAX);
+                if theta[u] < lo || theta[u] >= hi {
+                    return Err(format!(
+                        "u{u}: θ={} outside partition {i} [{lo},{hi})",
+                        theta[u]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sup_init_counts_higher_universe() {
+        let g = gen::zipf(25, 25, 150, 1.2, 1.2, 3);
+        let out = run_cd(&g, &cfg(3, 1, false, true));
+        for i in 0..out.n_parts as u32 {
+            let alive: Vec<bool> = (0..g.nu()).map(|u| out.part_of[u] >= i).collect();
+            let oracle = brute::vertex_support_restricted(&g, &alive);
+            for u in 0..g.nu() {
+                if out.part_of[u] == i {
+                    assert_eq!(out.sup_init[u], oracle[u], "u{u} part {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recount_and_peel_paths_agree() {
+        let g = gen::zipf(40, 20, 300, 1.3, 1.1, 5);
+        let a = run_cd(&g, &cfg(4, 2, true, true));
+        let b = run_cd(&g, &cfg(4, 1, false, false));
+        assert_eq!(a.part_of, b.part_of);
+        assert_eq!(a.sup_init, b.sup_init);
+    }
+
+    #[test]
+    fn matches_brute_on_biclique() {
+        let g = gen::biclique(4, 3);
+        let got = tip_pbng(&g, Side::U, cfg(2, 2, true, true)).theta;
+        assert_eq!(got, brute::brute_tip_numbers(&g, Side::U));
+    }
+
+    #[test]
+    fn matches_brute_on_random_graphs() {
+        crate::testkit::check_property("tip-fd-vs-brute", 0x71FD, 8, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(
+                5 + rng.usize_below(10),
+                5 + rng.usize_below(10),
+                15 + rng.usize_below(50),
+                seed,
+            );
+            let p = 1 + rng.usize_below(4);
+            let threads = 1 + rng.usize_below(3);
+            let got = tip_pbng(&g, Side::U, cfg(p, threads, true, true)).theta;
+            let want = brute::brute_tip_numbers(&g, Side::U);
+            if got != want {
+                return Err(format!("P={p} T={threads}: got={got:?} want={want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matches_brute_on_fig1() {
+        let g = gen::paper_fig1();
+        let got = tip_pbng(&g, Side::U, cfg(3, 2, true, true)).theta;
+        assert_eq!(got, brute::brute_tip_numbers(&g, Side::U));
+    }
+
+    #[test]
+    fn deletes_off_same_output() {
+        let g = gen::zipf(30, 30, 200, 1.2, 1.2, 9);
+        let got = tip_pbng(&g, Side::U, cfg(4, 1, true, false)).theta;
+        assert_eq!(got, brute::brute_tip_numbers(&g, Side::U));
+    }
+}

@@ -1,44 +1,40 @@
-//! Tip decomposition (vertex peeling): the PBNG two-phased pipeline and
-//! the BUP / ParB baselines.
+//! Tip decomposition (vertex peeling): the PBNG pipeline on the generic
+//! two-phase engine, plus the BUP / ParB baselines.
 //!
 //! Tip decomposition peels exactly one side of the bipartition (a k-tip
 //! contains all of the other side, Defn. 2). All algorithms here peel
-//! side `U`; [`tip_decompose`]-style entry points take a [`Side`] and
-//! transpose internally.
+//! side `U`; entry points take a [`Side`] and transpose internally.
+//!
+//! Since the engine refactor, this module holds **no CD/FD driver of its
+//! own**: [`tip_pbng`] counts butterflies per vertex (the counting
+//! phase), wraps the graph in [`domain::TipDomain`] — the
+//! [`crate::engine::PeelDomain`] impl for vertices, including the §5.1
+//! recount hook and the induced-subgraph FD substrate — and hands off to
+//! [`crate::engine::decompose`]. What remains here is strictly
+//! vertex-specific: the wedge peel kernel ([`peel`]), the per-partition
+//! induced peel ([`domain`]), and the baselines.
+//!
+//! Configuration: the former `TipConfig`/`TipCdConfig`/`TipFdConfig`
+//! trio is replaced by [`crate::engine::EngineConfig`] (tip-scaled
+//! defaults via [`EngineConfig::tip`]); `TipConfig` remains as an alias
+//! for downstream code.
 
-pub mod cd;
-pub mod fd;
+pub mod domain;
 pub mod peel;
 
+use crate::engine::{self, EngineConfig};
 use crate::graph::{BipartiteGraph, Side};
 use crate::metrics::{Meters, Phase, Recorder};
 use crate::peel::{Decomposition, LazyHeap};
-use cd::{coarse_decompose_tip, TipCdConfig};
-use fd::{fine_decompose_tip, TipFdConfig};
+use domain::TipDomain;
 use peel::{peel_batch_tip, VAdj, ALIVE};
 use std::sync::atomic::{AtomicU32, Ordering};
 
-#[derive(Clone, Copy, Debug)]
-pub struct TipConfig {
-    /// Number of CD partitions P (paper: 150; scaled default 32).
-    pub p: usize,
-    pub threads: usize,
-    /// §5.1 re-counting batch optimization. Off = PBNG−−.
-    pub batch: bool,
-    /// §5.2 dynamic deletes. Off = PBNG−.
-    pub dynamic_deletes: bool,
-}
-
-impl Default for TipConfig {
-    fn default() -> Self {
-        TipConfig {
-            p: 32,
-            threads: crate::par::default_threads(),
-            batch: true,
-            dynamic_deletes: true,
-        }
-    }
-}
+/// Back-compat alias: the tip pipeline is configured by the shared
+/// engine config since the `pbng::engine` refactor. Note that
+/// `TipConfig::default()` now carries the engine-wide default `P = 64`;
+/// use [`EngineConfig::tip`] for the tip-scaled `P = 32`.
+pub type TipConfig = EngineConfig;
 
 fn oriented(g: &BipartiteGraph, side: Side) -> std::borrow::Cow<'_, BipartiteGraph> {
     match side {
@@ -61,42 +57,16 @@ fn count_side(g: &BipartiteGraph, threads: usize, meters: &Meters) -> Vec<u64> {
     .per_u
 }
 
-/// PBNG tip decomposition of `side`.
+/// PBNG tip decomposition of `side` (two-phased peeling on the generic
+/// engine).
 pub fn tip_pbng(g: &BipartiteGraph, side: Side, cfg: TipConfig) -> Decomposition {
     let g = oriented(g, side);
     let meters = Meters::new();
     let mut rec = Recorder::new(&meters);
     rec.enter(Phase::Count);
     let per_u = count_side(&g, cfg.threads, &meters);
-    rec.enter(Phase::Coarse);
-    let cd_out = coarse_decompose_tip(
-        &g,
-        &per_u,
-        TipCdConfig {
-            p: cfg.p,
-            threads: cfg.threads,
-            batch: cfg.batch,
-            dynamic_deletes: cfg.dynamic_deletes,
-        },
-        &meters,
-    );
-    rec.enter(Phase::Fine);
-    let theta = fine_decompose_tip(
-        &g,
-        &cd_out.part_of,
-        &cd_out.sup_init,
-        &cd_out.lowers,
-        cd_out.n_parts,
-        TipFdConfig {
-            threads: cfg.threads,
-            dynamic_deletes: cfg.dynamic_deletes,
-        },
-        &meters,
-    );
-    Decomposition {
-        theta,
-        stats: rec.finish(),
-    }
+    let mut dom = TipDomain::new(&g, &per_u);
+    engine::decompose(&mut dom, &cfg, rec).into_decomposition()
 }
 
 /// Sequential bottom-up tip decomposition (baseline).
@@ -277,8 +247,8 @@ mod tests {
     #[test]
     fn sides_are_independent() {
         let g = gen::biclique(3, 5);
-        let u = tip_pbng(&g, Side::U, TipConfig::default());
-        let v = tip_pbng(&g, Side::V, TipConfig::default());
+        let u = tip_pbng(&g, Side::U, EngineConfig::tip());
+        let v = tip_pbng(&g, Side::V, EngineConfig::tip());
         assert_eq!(u.theta.len(), 3);
         assert_eq!(v.theta.len(), 5);
         // K_{3,5}: u vertices participate in C(5,2)*(3-1)... just check

@@ -1,0 +1,399 @@
+//! Wing (edge) peel domain: plugs BE-Index edge peeling into the
+//! generic two-phase engine ([`crate::engine`]).
+//!
+//! * CD hook — [`WingState`] with the Alg. 6 batch engine
+//!   ([`peel_set_batch`], twin conflict resolution) or the Alg. 3
+//!   per-edge ablation ([`peel_set_single`]); the workload proxy is the
+//!   edge support itself (peeling `e` is `O(⋈_e)` index traversal).
+//! * FD substrate — the partitioned BE-Index (Alg. 5 lines 12–25,
+//!   [`partition_be_index`]); each partition is peeled sequentially over
+//!   its own `I_i` with a range-clamped [`BucketQueue`].
+
+use crate::beindex::partition::{partition_be_index, PartIndex};
+use crate::beindex::BeIndex;
+use crate::engine::{CdOutput, EngineConfig, PeelDomain, PeelOutcome};
+use crate::metrics::Meters;
+use crate::peel::BucketQueue;
+use crate::wing::state::{peel_set_batch, peel_set_single, WingState};
+use std::sync::Mutex;
+
+pub struct WingDomain<'a> {
+    st: WingState<'a>,
+    /// FD substrate (set by `build_substrate`). Each partition's index is
+    /// handed off exclusively to one FD task; the Mutex realizes that
+    /// hand-off safely.
+    parts: Vec<Mutex<PartIndex>>,
+    edges_of: Vec<Vec<u32>>,
+    local_of: Vec<u32>,
+}
+
+impl<'a> WingDomain<'a> {
+    pub fn new(idx: &'a BeIndex, per_edge: &[u64], cfg: &EngineConfig) -> Self {
+        WingDomain {
+            st: WingState::new(idx, per_edge, cfg.dynamic_deletes),
+            parts: Vec::new(),
+            edges_of: Vec::new(),
+            local_of: Vec::new(),
+        }
+    }
+}
+
+impl PeelDomain for WingDomain<'_> {
+    fn n_entities(&self) -> usize {
+        self.st.sup.len()
+    }
+
+    fn is_alive(&self, e: u32) -> bool {
+        self.st.is_alive(e)
+    }
+
+    fn support(&self, e: u32) -> u64 {
+        self.st.sup[e as usize].get()
+    }
+
+    fn workload_proxy(&self, _e: u32, sup_init: u64) -> u64 {
+        sup_init
+    }
+
+    fn peel_set(
+        &mut self,
+        active: &[u32],
+        lower: u64,
+        epoch: u32,
+        _remaining: usize,
+        cfg: &EngineConfig,
+        meters: &Meters,
+    ) -> PeelOutcome {
+        let touched = if cfg.batch {
+            self.st.mark_peeled(active, epoch, cfg.threads);
+            peel_set_batch(&self.st, active, lower, epoch, cfg.threads, meters)
+        } else {
+            // Alg. 3 semantics: peel_set_single marks one edge at a time
+            peel_set_single(&self.st, active, lower, epoch, meters)
+        };
+        PeelOutcome::Touched(touched)
+    }
+
+    fn build_substrate(&mut self, cd: &CdOutput, _cfg: &EngineConfig) {
+        let pt = partition_be_index(self.st.idx, &cd.part_of, cd.n_parts);
+        self.parts = pt.parts.into_iter().map(Mutex::new).collect();
+        self.edges_of = pt.edges_of;
+        self.local_of = pt.local_of;
+    }
+
+    fn partition_workload(&self, part: usize, cd: &CdOutput) -> u64 {
+        // Σ ⋈init over the partition's edges (Alg. 5 line 4)
+        self.edges_of[part]
+            .iter()
+            .map(|&e| cd.sup_init[e as usize])
+            .sum()
+    }
+
+    fn peel_partition(
+        &self,
+        part: usize,
+        bounds: (u64, u64),
+        theta: &mut [u64],
+        cd: &CdOutput,
+        cfg: &EngineConfig,
+        meters: &Meters,
+    ) {
+        let mut idx = self.parts[part].lock().unwrap();
+        peel_one_partition(
+            part as u32,
+            &mut idx,
+            &self.edges_of[part],
+            &self.local_of,
+            &cd.part_of,
+            &cd.sup_init,
+            bounds,
+            theta,
+            cfg.dynamic_deletes,
+            meters,
+        );
+    }
+}
+
+/// Sequential bottom-up peel of one partition over its own BE-Index.
+#[allow(clippy::too_many_arguments)]
+fn peel_one_partition(
+    part_id: u32,
+    idx: &mut PartIndex,
+    edges: &[u32],
+    local_of: &[u32],
+    part_of: &[u32],
+    sup_init: &[u64],
+    (range_lo, range_hi): (u64, u64),
+    theta: &mut [u64],
+    dynamic_deletes: bool,
+    meters: &Meters,
+) {
+    let n = edges.len();
+    if n == 0 {
+        return;
+    }
+    let mut sup: Vec<u64> = edges.iter().map(|&e| sup_init[e as usize]).collect();
+    let mut peeled = vec![false; n];
+    let mut bloom_len: Vec<u32> = (0..idx.n_blooms())
+        .map(|b| (idx.bloom_offs[b + 1] - idx.bloom_offs[b]) as u32)
+        .collect();
+    // Clamped bucket queue over the partition's range (Theorem 1): θs
+    // assigned here fall in [range_lo, range_hi), so exact ordering is
+    // only needed below range_hi. For the last (unbounded) partition the
+    // width is capped by the max initial support.
+    let hi = if range_hi == u64::MAX {
+        sup.iter().copied().max().unwrap_or(range_lo) + 1
+    } else {
+        range_hi
+    };
+    let mut heap = BucketQueue::new(range_lo, hi);
+    for (le, &s) in sup.iter().enumerate() {
+        heap.push(s, le as u32);
+    }
+    let mut level = 0u64;
+    let mut remaining = n;
+    let mut wedges = 0u64;
+    let mut updates = 0u64;
+    while remaining > 0 {
+        let (s, le) = heap
+            .pop_live(|i| (!peeled[i as usize]).then(|| sup[i as usize]))
+            .expect("partition heap exhausted early");
+        let le = le as usize;
+        level = level.max(s);
+        let e_glob = edges[le];
+        theta[e_glob as usize] = level;
+        peeled[le] = true;
+        remaining -= 1;
+        // Alg. 3 over the partitioned index.
+        let links_start = idx.edge_offs[le];
+        let links_end = idx.edge_offs[le + 1];
+        for li in links_start..links_end {
+            let (lb, tw) = idx.edge_links[li];
+            wedges += 1;
+            // twin peeled already (same partition only — higher-partition
+            // twins are never peeled during this run)?
+            let tw_same_part = part_of[tw as usize] == part_id;
+            if tw_same_part && peeled[local_of[tw as usize] as usize] {
+                continue; // wedge already removed
+            }
+            let lbu = lb as usize;
+            let k = idx.bloom_k[lbu];
+            debug_assert!(k >= 1, "live wedge implies k >= 1 (bloom {lb})");
+            if tw_same_part {
+                let lt = local_of[tw as usize] as usize;
+                let ns = sup[lt].saturating_sub(k as u64 - 1).max(level);
+                if ns != sup[lt] {
+                    sup[lt] = ns;
+                    heap.push(ns, lt as u32);
+                }
+                updates += 1;
+            }
+            idx.bloom_k[lbu] = k - 1;
+            // neighborhood sweep: −1 to live edges with live wedges
+            let bs = idx.bloom_offs[lbu];
+            let blen = bloom_len[lbu] as usize;
+            let mut w = 0usize;
+            for r in 0..blen {
+                wedges += 1;
+                let (e2, t2) = idx.bloom_entries[bs + r];
+                // e2 ∈ E_i by link preservation
+                let l2 = local_of[e2 as usize] as usize;
+                let e2_dead = peeled[l2] || e2 == e_glob;
+                let t2_dead = t2 == e_glob
+                    || (part_of[t2 as usize] == part_id
+                        && peeled[local_of[t2 as usize] as usize]);
+                if e2_dead || t2_dead {
+                    if !dynamic_deletes {
+                        idx.bloom_entries[bs + w] = idx.bloom_entries[bs + r];
+                        w += 1;
+                    }
+                    continue;
+                }
+                let ns = sup[l2].saturating_sub(1).max(level);
+                if ns != sup[l2] {
+                    sup[l2] = ns;
+                    heap.push(ns, l2 as u32);
+                }
+                updates += 1;
+                idx.bloom_entries[bs + w] = idx.bloom_entries[bs + r];
+                w += 1;
+            }
+            if dynamic_deletes {
+                bloom_len[lbu] = w as u32;
+            }
+        }
+    }
+    meters.wedges.add(wedges);
+    meters.updates.add(updates);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{coarse_decompose, EngineConfig};
+    use crate::graph::gen;
+    use crate::peel::bup::wing_bup;
+    use crate::wing::wing_pbng;
+
+    fn cfg(p: usize, threads: usize, batch: bool, dynamic_deletes: bool) -> EngineConfig {
+        EngineConfig {
+            p,
+            threads,
+            batch,
+            dynamic_deletes,
+            ..Default::default()
+        }
+    }
+
+    fn run_cd(g: &crate::graph::BipartiteGraph, p: usize) -> CdOutput {
+        let (idx, per_edge) = BeIndex::build(g, 1);
+        let meters = Meters::new();
+        let c = cfg(p, 2, true, true);
+        let mut dom = WingDomain::new(&idx, &per_edge, &c);
+        coarse_decompose(&mut dom, &c, &meters)
+    }
+
+    /// Theorem 1: partitions bracket the true wing numbers.
+    #[test]
+    fn partitions_bracket_wing_numbers() {
+        crate::testkit::check_property("cd-brackets-theta", 0xCD1, 8, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(
+                6 + rng.usize_below(12),
+                6 + rng.usize_below(12),
+                20 + rng.usize_below(60),
+                seed,
+            );
+            if g.m() == 0 {
+                return Ok(());
+            }
+            let theta = wing_bup(&g).theta;
+            let p = 1 + rng.usize_below(5);
+            let out = run_cd(&g, p);
+            for e in 0..g.m() {
+                let i = out.part_of[e] as usize;
+                let lo = out.lowers[i];
+                let hi = out.lowers.get(i + 1).copied().unwrap_or(u64::MAX);
+                if theta[e] < lo || theta[e] >= hi {
+                    return Err(format!(
+                        "edge {e}: θ={} outside partition {i} range [{lo},{hi})",
+                        theta[e]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// ⋈init must equal the butterfly count of e restricted to its own and
+    /// higher partitions (§3.1.1).
+    #[test]
+    fn sup_init_counts_higher_universe() {
+        crate::testkit::check_property("cd-supinit", 0xCD2, 6, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(
+                6 + rng.usize_below(10),
+                6 + rng.usize_below(10),
+                20 + rng.usize_below(50),
+                seed,
+            );
+            if g.m() == 0 {
+                return Ok(());
+            }
+            let out = run_cd(&g, 3);
+            for i in 0..out.n_parts as u32 {
+                // alive = edges in partitions >= i
+                let alive: Vec<bool> = (0..g.m()).map(|e| out.part_of[e] >= i).collect();
+                let oracle = crate::count::brute::edge_support_restricted(&g, &alive);
+                for e in 0..g.m() {
+                    if out.part_of[e] == i && out.sup_init[e] != oracle[e] {
+                        return Err(format!(
+                            "edge {e} (part {i}): sup_init={} oracle={}",
+                            out.sup_init[e], oracle[e]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_partition_assigns_everything_to_zero() {
+        let g = gen::biclique(3, 3);
+        let out = run_cd(&g, 1);
+        assert!(out.part_of.iter().all(|&p| p == 0));
+        assert_eq!(out.n_parts, 1);
+    }
+
+    #[test]
+    fn respects_partition_budget() {
+        let g = gen::zipf(60, 60, 400, 1.2, 1.2, 5);
+        let out = run_cd(&g, 8);
+        assert!(out.n_parts <= 8);
+        assert!(out.part_of.iter().all(|&p| (p as usize) < out.n_parts));
+    }
+
+    #[test]
+    fn batch_and_single_produce_same_partitions() {
+        let g = gen::zipf(40, 40, 250, 1.2, 1.2, 9);
+        let (idx, per_edge) = BeIndex::build(&g, 1);
+        let meters = Meters::new();
+        let ca = cfg(4, 2, true, true);
+        let mut da = WingDomain::new(&idx, &per_edge, &ca);
+        let a = coarse_decompose(&mut da, &ca, &meters);
+        let cb = cfg(4, 1, false, false);
+        let mut db = WingDomain::new(&idx, &per_edge, &cb);
+        let b = coarse_decompose(&mut db, &cb, &meters);
+        assert_eq!(a.part_of, b.part_of);
+        assert_eq!(a.sup_init, b.sup_init);
+    }
+
+    #[test]
+    fn rho_is_much_less_than_m_with_wide_ranges() {
+        let g = gen::zipf(80, 80, 600, 1.2, 1.2, 11);
+        let (idx, per_edge) = BeIndex::build(&g, 1);
+        let meters = Meters::new();
+        let c = cfg(4, crate::par::default_threads(), true, true);
+        let mut dom = WingDomain::new(&idx, &per_edge, &c);
+        coarse_decompose(&mut dom, &c, &meters);
+        assert!(
+            meters.rho.get() < g.m() as u64 / 4,
+            "rho {} not << m {}",
+            meters.rho.get(),
+            g.m()
+        );
+    }
+
+    /// Theorem 2 end to end: the engine pipeline equals sequential BUP.
+    #[test]
+    fn matches_bup_on_random_graphs_theorem2() {
+        crate::testkit::check_property("pbng-fd-vs-bup", 0xFD1, 10, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(
+                6 + rng.usize_below(14),
+                6 + rng.usize_below(14),
+                20 + rng.usize_below(80),
+                seed,
+            );
+            if g.m() == 0 {
+                return Ok(());
+            }
+            let p = 1 + rng.usize_below(6);
+            let threads = 1 + rng.usize_below(4);
+            let a = wing_pbng(&g, cfg(p, threads, true, true)).theta;
+            let b = wing_bup(&g).theta;
+            if a != b {
+                return Err(format!("P={p} T={threads}: pbng={a:?} bup={b:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deletes_off_gives_same_output() {
+        let g = gen::zipf(30, 30, 180, 1.2, 1.2, 43);
+        let theta = wing_pbng(&g, cfg(4, 1, true, false)).theta;
+        assert_eq!(theta, wing_bup(&g).theta);
+    }
+}

@@ -1,8 +1,18 @@
-//! Wing decomposition (bitruss decomposition): the full PBNG pipeline and
-//! the BE-Index based baselines.
+//! Wing decomposition (bitruss decomposition): the PBNG pipeline on the
+//! generic two-phase engine, plus the BE-Index based baselines.
 //!
-//! * [`wing_pbng`] — counting + BE-Index → PBNG CD (Alg. 4) → index
-//!   partitioning (Alg. 5) → PBNG FD: the paper's contribution.
+//! Since the engine refactor, this module holds **no CD/FD driver of its
+//! own**: [`wing_pbng`] builds the BE-Index (the counting phase), wraps
+//! it in [`domain::WingDomain`] — the [`crate::engine::PeelDomain`] impl
+//! for edges — and hands off to [`crate::engine::decompose`], which owns
+//! range finding, active-set management, ⋈init snapshotting, LPT
+//! scheduling, and θ write-back for *both* decompositions. What remains
+//! here is strictly edge-specific: the Alg. 6 batch kernels
+//! ([`state`]), the per-partition sequential peel over the partitioned
+//! BE-Index ([`domain`]), and the baselines.
+//!
+//! * [`wing_pbng`] — counting + BE-Index → engine CD (Alg. 4) → index
+//!   partitioning (Alg. 5) → engine FD: the paper's contribution.
 //! * [`wing_be_batch`] — BE_Batch baseline [67]: bottom-up level peeling
 //!   with batched BE-Index updates and dynamic deletes.
 //! * [`wing_be_pc`] — BE_PC-style baseline [67]: sequential
@@ -10,80 +20,34 @@
 //!   range-partitioned two-phase peel with geometric candidate ranges
 //!   controlled by τ (see DESIGN.md §Substitutions).
 //! * Index-free baselines BUP and ParB live in [`crate::peel`].
+//!
+//! Configuration: the former `PbngConfig`/`CdConfig`/`FdConfig` trio is
+//! replaced by [`crate::engine::EngineConfig`]; `PbngConfig` remains as
+//! an alias for downstream code.
 
-pub mod cd;
-pub mod fd;
-pub mod range;
+pub mod domain;
 pub mod state;
 
-use crate::beindex::{partition::partition_be_index, BeIndex};
+use crate::beindex::BeIndex;
+use crate::engine::{self, EngineConfig};
 use crate::graph::BipartiteGraph;
 use crate::metrics::{Meters, Phase, Recorder};
 use crate::peel::{Decomposition, LazyHeap};
-use cd::{coarse_decompose, CdConfig};
-use fd::{fine_decompose, FdConfig};
+use domain::WingDomain;
 use state::{peel_set_batch, WingState};
 
-/// Configuration for the PBNG wing pipeline.
-#[derive(Clone, Copy, Debug)]
-pub struct PbngConfig {
-    /// Number of CD partitions P. Paper: 400 (<100M edges) / 1000; scaled
-    /// presets here default to 64 (see DESIGN.md §6).
-    pub p: usize,
-    pub threads: usize,
-    /// Batch optimization (§5.1). Off = PBNG−−.
-    pub batch: bool,
-    /// Dynamic BE-Index updates (§5.2). Off = PBNG−.
-    pub dynamic_deletes: bool,
-}
+/// Back-compat alias: the wing pipeline is configured by the shared
+/// engine config since the `pbng::engine` refactor.
+pub type PbngConfig = EngineConfig;
 
-impl Default for PbngConfig {
-    fn default() -> Self {
-        PbngConfig {
-            p: 64,
-            threads: crate::par::default_threads(),
-            batch: true,
-            dynamic_deletes: true,
-        }
-    }
-}
-
-/// PBNG wing decomposition (two-phased peeling).
+/// PBNG wing decomposition (two-phased peeling on the generic engine).
 pub fn wing_pbng(g: &BipartiteGraph, cfg: PbngConfig) -> Decomposition {
     let meters = Meters::new();
     let mut rec = Recorder::new(&meters);
     rec.enter(Phase::Count);
     let (idx, per_edge) = BeIndex::build(g, cfg.threads);
-    rec.enter(Phase::Coarse);
-    let cd_out = coarse_decompose(
-        &idx,
-        &per_edge,
-        CdConfig {
-            p: cfg.p,
-            threads: cfg.threads,
-            batch: cfg.batch,
-            dynamic_deletes: cfg.dynamic_deletes,
-        },
-        &meters,
-    );
-    rec.enter(Phase::Partition);
-    let mut pt = partition_be_index(&idx, &cd_out.part_of, cd_out.n_parts);
-    rec.enter(Phase::Fine);
-    let theta = fine_decompose(
-        &mut pt,
-        &cd_out.part_of,
-        &cd_out.sup_init,
-        &cd_out.lowers,
-        FdConfig {
-            threads: cfg.threads,
-            dynamic_deletes: cfg.dynamic_deletes,
-        },
-        &meters,
-    );
-    Decomposition {
-        theta,
-        stats: rec.finish(),
-    }
+    let mut dom = WingDomain::new(&idx, &per_edge, &cfg);
+    engine::decompose(&mut dom, &cfg, rec).into_decomposition()
 }
 
 /// BE_Batch baseline: bottom-up peeling of minimum-support levels with
@@ -163,6 +127,7 @@ pub fn wing_be_pc(g: &BipartiteGraph, tau: f64) -> Decomposition {
             threads: 1,
             batch: true,
             dynamic_deletes: true,
+            ..Default::default()
         },
     )
 }

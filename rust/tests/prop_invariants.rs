@@ -4,6 +4,7 @@
 //! counting identities.
 
 use pbng::count::{brute, pve_bcnt, CountOptions};
+use pbng::engine::EngineConfig;
 use pbng::graph::{gen, GraphBuilder, Side};
 use pbng::testkit::{check_property, Rng};
 use pbng::tip::{tip_pbng, TipConfig};
@@ -160,7 +161,7 @@ fn degenerate_inputs() {
     let g = GraphBuilder::new().nu(5).nv(5).build();
     let d = wing_pbng(&g, PbngConfig::default());
     assert!(d.theta.is_empty());
-    let t = tip_pbng(&g, Side::U, TipConfig::default());
+    let t = tip_pbng(&g, Side::U, EngineConfig::tip());
     assert!(t.theta.iter().all(|&x| x == 0));
     // single edge
     let g = GraphBuilder::new().edges(&[(0, 0)]).build();

@@ -1,0 +1,88 @@
+//! Engine refactor acceptance: the generic two-phase engine must be a
+//! *behavior-preserving* unification of the former wing/tip drivers.
+//!
+//! The config matrix `P ∈ {1, 4, 64} × batch {on, off} × dynamic_deletes
+//! {on, off} × threads {1, 8}` is run for both decompositions on the
+//! zipf and grid generators, and every θ vector is asserted
+//! **byte-identical** to the sequential BUP baseline — the same
+//! Theorem 2/§3.2 correctness contract the deleted per-entity drivers
+//! were tested against, now proven across the full knob cross-product in
+//! one place.
+
+use pbng::engine::EngineConfig;
+use pbng::graph::{gen, BipartiteGraph, Side};
+use pbng::peel::bup::wing_bup;
+use pbng::tip::{tip_bup, tip_pbng};
+use pbng::wing::wing_pbng;
+
+fn graphs() -> Vec<(&'static str, BipartiteGraph)> {
+    vec![
+        ("zipf", gen::zipf(60, 60, 400, 1.2, 1.2, 17)),
+        ("grid", gen::grid(50, 50, 4, 0.9, 18)),
+    ]
+}
+
+fn matrix() -> Vec<EngineConfig> {
+    let mut cfgs = Vec::new();
+    for p in [1usize, 4, 64] {
+        for batch in [true, false] {
+            for dynamic_deletes in [true, false] {
+                for threads in [1usize, 8] {
+                    cfgs.push(EngineConfig {
+                        p,
+                        threads,
+                        batch,
+                        dynamic_deletes,
+                        ..Default::default()
+                    });
+                }
+            }
+        }
+    }
+    cfgs
+}
+
+/// θ vectors as raw bytes: "byte-identical" taken literally.
+fn bytes(theta: &[u64]) -> Vec<u8> {
+    theta.iter().flat_map(|t| t.to_le_bytes()).collect()
+}
+
+#[test]
+fn wing_config_matrix_is_byte_identical_to_bup() {
+    for (name, g) in graphs() {
+        let baseline = bytes(&wing_bup(&g).theta);
+        for cfg in matrix() {
+            let got = bytes(&wing_pbng(&g, cfg).theta);
+            assert_eq!(
+                got,
+                baseline,
+                "wing θ diverged on {name}: P={} batch={} deletes={} threads={}",
+                cfg.p,
+                cfg.batch,
+                cfg.dynamic_deletes,
+                cfg.threads
+            );
+        }
+    }
+}
+
+#[test]
+fn tip_config_matrix_is_byte_identical_to_bup() {
+    for (name, g) in graphs() {
+        for side in [Side::U, Side::V] {
+            let baseline = bytes(&tip_bup(&g, side).theta);
+            for cfg in matrix() {
+                let got = bytes(&tip_pbng(&g, side, cfg).theta);
+                assert_eq!(
+                    got,
+                    baseline,
+                    "tip θ diverged on {name} {side:?}: P={} batch={} deletes={} threads={}",
+                    cfg.p,
+                    cfg.batch,
+                    cfg.dynamic_deletes,
+                    cfg.threads
+                );
+            }
+        }
+    }
+}

@@ -49,6 +49,32 @@ fn tip_theta_identical_across_thread_counts() {
 }
 
 #[test]
+fn spin_before_park_preserves_warm_pool_correctness() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    // warm the pool (no-op region)
+    pbng::par::spmd(4, |_| {});
+    let before = pbng::par::total_spawns();
+    let hits: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+    // thousands of back-to-back sub-microsecond regions: whether a worker
+    // catches a region on the spin path or after parking, the lane
+    // contract (every logical id exactly once per region) must hold,
+    // and a warm pool must never fall back to spawning threads
+    for _ in 0..2_000 {
+        pbng::par::spmd(4, |t| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    for (t, h) in hits.iter().enumerate() {
+        assert_eq!(h.load(Ordering::Relaxed), 2_000, "lane {t} miscounted");
+    }
+    assert_eq!(
+        pbng::par::total_spawns(),
+        before,
+        "warm pool spawned threads across spin-paced regions"
+    );
+}
+
+#[test]
 fn full_wing_run_spawns_at_most_pool_capacity_threads() {
     // Run first, read the capacity after: if this test gets to create the
     // pool, the first run measures the real cold-start spawn delta
