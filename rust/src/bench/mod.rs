@@ -60,6 +60,16 @@ pub enum Algo {
     TipParb,
     /// Two-phased PBNG tip decomposition (side U).
     TipPbng,
+    /// Incremental wing maintenance over the standard update stream
+    /// (init + per-batch affected-region re-peels).
+    WingIncr,
+    /// From-scratch wing re-decomposition after every batch of the same
+    /// stream (the latency baseline `wing/incr` is measured against).
+    WingIncrScratch,
+    /// Incremental tip maintenance over the standard update stream.
+    TipIncr,
+    /// From-scratch tip re-decomposition after every batch.
+    TipIncrScratch,
 }
 
 impl Algo {
@@ -76,6 +86,10 @@ impl Algo {
             Algo::TipPeel => "tip/peel",
             Algo::TipParb => "tip/parb",
             Algo::TipPbng => "tip/pbng",
+            Algo::WingIncr => "wing/incr",
+            Algo::WingIncrScratch => "wing/incr-scratch",
+            Algo::TipIncr => "tip/incr",
+            Algo::TipIncrScratch => "tip/incr-scratch",
         }
     }
 
@@ -109,7 +123,133 @@ impl Algo {
                     ..Default::default()
                 },
             ),
+            Algo::WingIncr => incr::run_wing_incremental(g, threads),
+            Algo::WingIncrScratch => incr::run_wing_scratch(g, threads),
+            Algo::TipIncr => incr::run_tip_incremental(g, threads),
+            Algo::TipIncrScratch => incr::run_tip_scratch(g, threads),
         }
+    }
+}
+
+/// Incremental-suite drivers: a pinned mixed update stream applied either
+/// through [`crate::engine::incremental`] or via from-scratch
+/// re-decomposition, so the `incremental` suite's wall-time columns are a
+/// direct update-latency comparison and the θ checksums of the `incr` /
+/// `incr-scratch` pairs must match entry for entry.
+mod incr {
+    use super::BipartiteGraph;
+    use crate::engine::incremental::{IncrementalConfig, TipIncremental, WingIncremental};
+    use crate::engine::EngineConfig;
+    use crate::graph::dynamic::{DeltaBatch, DeltaOp, DynGraph};
+    use crate::graph::Side;
+    use crate::metrics::PeelStats;
+    use crate::peel::Decomposition;
+
+    const STREAM_SEED: u64 = 0x1C4B;
+    const ROUNDS: usize = 4;
+    const OPS_PER_ROUND: usize = 24;
+
+    /// Deterministic mixed stream: alternating random-pair inserts and
+    /// removals of original edges (no-ops allowed — set semantics).
+    fn update_stream(g: &BipartiteGraph) -> Vec<DeltaBatch> {
+        let mut rng = crate::testkit::Rng::new(STREAM_SEED);
+        let es = g.edges();
+        (0..ROUNDS)
+            .map(|_| {
+                let ops = (0..OPS_PER_ROUND)
+                    .map(|k| {
+                        if k % 2 == 0 || es.is_empty() {
+                            DeltaOp::Insert(
+                                rng.usize_below(g.nu()) as u32,
+                                rng.usize_below(g.nv()) as u32,
+                            )
+                        } else {
+                            let (u, v) = es[rng.usize_below(es.len())];
+                            DeltaOp::Remove(u, v)
+                        }
+                    })
+                    .collect();
+                DeltaBatch::new(ops)
+            })
+            .collect()
+    }
+
+    fn wing_cfg(g: &BipartiteGraph, threads: usize) -> EngineConfig {
+        EngineConfig {
+            p: (g.m() / 500).clamp(4, 64),
+            threads,
+            ..Default::default()
+        }
+    }
+
+    fn tip_cfg(g: &BipartiteGraph, threads: usize) -> EngineConfig {
+        EngineConfig {
+            p: (g.nu() / 100).clamp(4, 32),
+            threads,
+            ..Default::default()
+        }
+    }
+
+    fn merge_stats(acc: &mut PeelStats, s: PeelStats) {
+        acc.updates += s.updates;
+        acc.wedges += s.wedges;
+        acc.rho += s.rho;
+        acc.spawns += s.spawns;
+        acc.invalidated_parts += s.invalidated_parts;
+        acc.total += s.total;
+        acc.phases.extend(s.phases);
+    }
+
+    pub fn run_wing_incremental(g: &BipartiteGraph, threads: usize) -> Decomposition {
+        let cfg = IncrementalConfig {
+            engine: wing_cfg(g, threads),
+            ..Default::default()
+        };
+        let mut st = WingIncremental::new(g, cfg);
+        let mut stats = st.init_stats().clone();
+        for batch in update_stream(g) {
+            merge_stats(&mut stats, st.apply(&batch).stats);
+        }
+        Decomposition { theta: st.theta().to_vec(), stats }
+    }
+
+    pub fn run_wing_scratch(g: &BipartiteGraph, threads: usize) -> Decomposition {
+        let cfg = wing_cfg(g, threads);
+        let mut dg = DynGraph::from_graph(g);
+        let mut last = crate::wing::wing_pbng(g, cfg);
+        let mut stats = std::mem::take(&mut last.stats);
+        for batch in update_stream(g) {
+            dg.apply_batch(&batch);
+            last = crate::wing::wing_pbng(&dg.snapshot(), cfg);
+            merge_stats(&mut stats, std::mem::take(&mut last.stats));
+        }
+        Decomposition { theta: last.theta, stats }
+    }
+
+    pub fn run_tip_incremental(g: &BipartiteGraph, threads: usize) -> Decomposition {
+        let cfg = IncrementalConfig {
+            engine: tip_cfg(g, threads),
+            ..Default::default()
+        };
+        let mut st = TipIncremental::new(g, Side::U, cfg);
+        let mut stats = st.init_stats().clone();
+        for batch in update_stream(g) {
+            merge_stats(&mut stats, st.apply(&batch).stats);
+        }
+        Decomposition { theta: st.theta().to_vec(), stats }
+    }
+
+    pub fn run_tip_scratch(g: &BipartiteGraph, threads: usize) -> Decomposition {
+        let cfg = tip_cfg(g, threads);
+        let mut dg = DynGraph::from_graph(g);
+        let mut last = crate::tip::tip_pbng(g, Side::U, cfg);
+        let mut stats = std::mem::take(&mut last.stats);
+        for batch in update_stream(g) {
+            dg.apply_batch(&batch);
+            last = crate::tip::tip_pbng(&dg.snapshot(), Side::U, cfg);
+            merge_stats(&mut stats, std::mem::take(&mut last.stats));
+        }
+        Decomposition { theta: last.theta, stats }
     }
 }
 
@@ -219,6 +359,15 @@ const FULL_ALGOS: &[Algo] = &[
 /// paper's own Table 3 has "-" entries for the same reason).
 const MEDIUM_ALGOS: &[Algo] = &[Algo::WingParb, Algo::WingPbng, Algo::TipPbng];
 
+/// Update-latency pairs: each `incr` entry's θ checksum must equal its
+/// `incr-scratch` sibling (same stream, same final graph).
+const INCR_ALGOS: &[Algo] = &[
+    Algo::WingIncr,
+    Algo::WingIncrScratch,
+    Algo::TipIncr,
+    Algo::TipIncrScratch,
+];
+
 pub const SUITES: &[Suite] = &[
     Suite {
         name: "micro",
@@ -243,6 +392,12 @@ pub const SUITES: &[Suite] = &[
         description: "larger tier, parallel algorithms only",
         datasets: MEDIUM_DATASETS,
         algos: MEDIUM_ALGOS,
+    },
+    Suite {
+        name: "incremental",
+        description: "dynamic-graph update streams: incremental vs from-scratch re-peeling",
+        datasets: MICRO_DATASETS,
+        algos: INCR_ALGOS,
     },
 ];
 
@@ -271,14 +426,37 @@ mod tests {
 
     #[test]
     fn algo_names_are_unique_and_prefixed() {
-        let mut names: Vec<&str> = FULL_ALGOS.iter().map(|a| a.name()).collect();
+        let mut names: Vec<&str> = FULL_ALGOS
+            .iter()
+            .chain(INCR_ALGOS.iter())
+            .map(|a| a.name())
+            .collect();
         names.sort_unstable();
         let n = names.len();
         names.dedup();
         assert_eq!(names.len(), n);
-        for a in FULL_ALGOS {
+        for a in FULL_ALGOS.iter().chain(INCR_ALGOS.iter()) {
             assert!(a.name().starts_with(if a.is_wing() { "wing/" } else { "tip/" }));
         }
+    }
+
+    #[test]
+    fn incremental_suite_pairs_agree_on_final_theta() {
+        // the incr / incr-scratch pairs follow the same pinned stream, so
+        // their final θ vectors (and lengths) must match exactly
+        let s = find_suite("incremental").unwrap();
+        assert!(s.algos.len() >= 4);
+        let g = MICRO_DATASETS[2].build(); // grid-micro, the smallest
+        let wi = Algo::WingIncr.run(&g, 1);
+        let ws = Algo::WingIncrScratch.run(&g, 1);
+        assert_eq!(wi.theta, ws.theta, "wing incr != scratch");
+        let ti = Algo::TipIncr.run(&g, 1);
+        let ts = Algo::TipIncrScratch.run(&g, 1);
+        assert_eq!(ti.theta, ts.theta, "tip incr != scratch");
+        // counters are deterministic run to run (the CI gate relies on it)
+        let wi2 = Algo::WingIncr.run(&g, 1);
+        assert_eq!(wi.stats.updates, wi2.stats.updates);
+        assert_eq!(wi.stats.invalidated_parts, wi2.stats.invalidated_parts);
     }
 
     #[test]

@@ -1,0 +1,712 @@
+//! Engine-level incremental peeling for dynamic graphs.
+//!
+//! The two-phase engine ([`super::decompose`]) assumes a static graph;
+//! this module maintains θ (wing and tip, through the same
+//! [`PeelDomain`](super::PeelDomain) impls) under batched edge
+//! insertions and deletions without recomputing from scratch — and with
+//! a hard guarantee: after every batch the maintained θ is
+//! **byte-identical** to a fresh [`super::decompose`] of the updated
+//! graph (gated by `tests/test_incremental.rs`).
+//!
+//! # How it works
+//!
+//! 1. **Delta counting** — [`DynGraph::apply_batch`] applies the batch
+//!    and reports per-entity butterfly-count deltas by enumerating only
+//!    the wedges incident to changed edges (no global recount), plus the
+//!    adjacency links of every butterfly it created.
+//! 2. **Invalidation** — θ is a *per-butterfly-component* quantity:
+//!    supports only ever flow along butterfly adjacency, so a component
+//!    of the butterfly-adjacency graph (old components ∪ created links —
+//!    a sound coarsening of the union graph's components) that contains
+//!    no touched entity has an unchanged level structure and keeps its θ
+//!    verbatim. The *affected* set is therefore the union of components
+//!    containing a touched entity. Components are cached from the last
+//!    full run (derived from the counting blooms: every k ≥ 2 bloom's
+//!    entities are pairwise butterfly-adjacent, Property 1) and only
+//!    merged — never re-split — between full runs, which is conservative
+//!    and cheap to maintain. Each non-empty batch still pays an `O(m)`
+//!    remap/relabel floor (wing edge ids shift with the sorted edge
+//!    list, and labels are re-rooted) — it is the *butterfly-heavy* work
+//!    (counting and peeling) that is confined to the affected region.
+//!    At partition granularity, a CD partition of the last full run is
+//!    *invalidated* when its support interval `[θ(i), θ(i+1))` contains
+//!    the pre-update θ of an affected entity
+//!    ([`Meters::invalidated_parts`]).
+//! 3. **Re-peel** — the affected entities form a self-contained
+//!    sub-universe (every butterfly of an affected entity stays inside
+//!    its component), so the generic CD + FD drivers re-run on the
+//!    compacted induced subgraph — the same `engine::cd`/`engine::fd`
+//!    code path as a full run, just restricted — and the resulting θ
+//!    values are scattered back. CD must re-run on that sub-universe
+//!    (not just FD): deltas move θ across the cached range boundaries,
+//!    so the old partition assignment cannot be trusted inside the
+//!    affected region.
+//! 4. **Fallback** — when the affected fraction exceeds
+//!    [`IncrementalConfig::fallback_fraction`], locality buys nothing:
+//!    the state falls back to a full [`super::decompose`] (which also
+//!    re-canonicalizes the cached component labels and range bounds).
+//!
+//! Determinism: delta reports are sorted, the sub-universe relabeling is
+//! order-preserving, and the engine drivers are θ-deterministic across
+//! thread counts — so incremental θ equals from-scratch θ for *any*
+//! interleaving of batch sizes and thread counts.
+
+use super::{decompose, EngineConfig};
+use crate::beindex::BeIndex;
+use crate::graph::dynamic::{DeltaBatch, DynGraph};
+use crate::graph::{BipartiteGraph, GraphBuilder, Side};
+use crate::hierarchy::UnionFind;
+use crate::metrics::{Meters, PeelStats, Phase, Recorder};
+use crate::tip::domain::TipDomain;
+use crate::wing::domain::WingDomain;
+
+/// Configuration of an incremental peeling state.
+#[derive(Clone, Copy, Debug)]
+pub struct IncrementalConfig {
+    /// Engine knobs used for full runs and affected-region re-peels.
+    pub engine: EngineConfig,
+    /// Full-rebuild threshold: when `affected / total` exceeds this
+    /// fraction, [`WingIncremental::apply`] / [`TipIncremental::apply`]
+    /// fall back to a full decomposition.
+    pub fallback_fraction: f64,
+}
+
+impl Default for IncrementalConfig {
+    fn default() -> Self {
+        IncrementalConfig {
+            engine: EngineConfig::default(),
+            fallback_fraction: 0.25,
+        }
+    }
+}
+
+/// What one applied batch did, for observability and tests.
+#[derive(Clone, Debug, Default)]
+pub struct UpdateStats {
+    /// Net edges inserted / removed by the batch.
+    pub inserted: usize,
+    pub removed: usize,
+    pub butterflies_created: u64,
+    pub butterflies_destroyed: u64,
+    /// Entities whose θ had to be recomputed (0 when the batch only
+    /// touched butterfly-free structure).
+    pub affected_entities: usize,
+    pub total_entities: usize,
+    /// Partitions of the last full run whose support interval contained
+    /// a pre-update θ of an affected entity.
+    pub invalidated_partitions: usize,
+    pub total_partitions: usize,
+    /// Whether the fallback-to-full path ran.
+    pub full_rebuild: bool,
+    /// Phase-attributed stats of this apply (the `incremental` phase
+    /// covers delta application and invalidation analysis; the re-peel
+    /// records the usual engine phases after it).
+    pub stats: PeelStats,
+}
+
+/// Partitions (given the last full run's lower bounds) whose support
+/// interval contains at least one of `values`.
+fn invalidated_partitions(lowers: &[u64], values: impl Iterator<Item = u64>) -> usize {
+    if lowers.is_empty() {
+        return 0;
+    }
+    let mut hit = vec![false; lowers.len()];
+    for v in values {
+        // lowers is strictly ascending and starts at 0
+        let i = lowers.partition_point(|&lo| lo <= v).saturating_sub(1);
+        hit[i] = true;
+    }
+    hit.iter().filter(|&&h| h).count()
+}
+
+const NONE: u32 = u32::MAX;
+
+// ---------------------------------------------------------------- wing
+
+/// Incrementally maintained wing (edge) decomposition.
+///
+/// Edge ids follow the usual convention (position in the sorted edge
+/// list), so they shift under updates; [`WingIncremental::theta`] is
+/// always indexed by the *current* graph's edge ids — byte-comparable to
+/// `wing_pbng(self.graph(), ..)`.
+pub struct WingIncremental {
+    dg: DynGraph,
+    graph: BipartiteGraph,
+    theta: Vec<u64>,
+    /// Full-graph per-edge butterfly counts, delta-maintained.
+    counts: Vec<u64>,
+    /// Cached butterfly-component root per edge (a coarsening between
+    /// full runs — see module docs).
+    comp: Vec<u32>,
+    /// Partition lower bounds of the last full run.
+    lowers: Vec<u64>,
+    cfg: IncrementalConfig,
+    init_stats: PeelStats,
+}
+
+impl WingIncremental {
+    /// Build the state with one full decomposition of `g`.
+    pub fn new(g: &BipartiteGraph, cfg: IncrementalConfig) -> WingIncremental {
+        debug_assert!(
+            g.edges().windows(2).all(|w| w[0] < w[1]),
+            "edge list must be sorted (GraphBuilder invariant)"
+        );
+        let mut s = WingIncremental {
+            dg: DynGraph::from_graph(g),
+            graph: g.clone(),
+            theta: Vec::new(),
+            counts: Vec::new(),
+            comp: Vec::new(),
+            lowers: Vec::new(),
+            cfg,
+            init_stats: PeelStats::default(),
+        };
+        let meters = Meters::new();
+        let rec = Recorder::new(&meters);
+        s.init_stats = s.rebuild_full(rec);
+        s
+    }
+
+    /// Current graph (updated by [`WingIncremental::apply`]).
+    pub fn graph(&self) -> &BipartiteGraph {
+        &self.graph
+    }
+
+    /// θ per current edge id.
+    pub fn theta(&self) -> &[u64] {
+        &self.theta
+    }
+
+    /// Delta-maintained per-edge butterfly counts (tests compare these
+    /// against fresh recounts).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Stats of the initial full decomposition.
+    pub fn init_stats(&self) -> &PeelStats {
+        &self.init_stats
+    }
+
+    /// Full decomposition of `self.graph`, refreshing θ, counts,
+    /// component labels, and partition bounds.
+    fn rebuild_full(&mut self, mut rec: Recorder<'_>) -> PeelStats {
+        let threads = self.cfg.engine.threads;
+        rec.enter(Phase::Count);
+        let (idx, per_edge) = BeIndex::build(&self.graph, threads);
+        let m = self.graph.m();
+        // butterfly components: all edges of a k >= 2 bloom are pairwise
+        // butterfly-adjacent (Property 1)
+        let mut uf = UnionFind::new(m);
+        for b in 0..idx.n_blooms() as u32 {
+            if idx.bloom_k[b as usize] >= 2 {
+                let ents = idx.entries(b);
+                let anchor = ents[0].0;
+                for &(e, _) in ents {
+                    uf.union(anchor, e);
+                }
+            }
+        }
+        let (theta, lowers, stats) = {
+            let mut dom = WingDomain::new(&idx, &per_edge, &self.cfg.engine);
+            let rep = decompose(&mut dom, &self.cfg.engine, rec);
+            (rep.theta, rep.cd.lowers, rep.stats)
+        };
+        self.theta = theta;
+        self.lowers = lowers;
+        self.counts = per_edge;
+        self.comp = (0..m as u32).map(|e| uf.find(e)).collect();
+        stats
+    }
+
+    /// Apply one batch; afterwards [`WingIncremental::theta`] equals a
+    /// from-scratch decomposition of the updated graph.
+    pub fn apply(&mut self, batch: &DeltaBatch) -> UpdateStats {
+        let meters = Meters::new();
+        let mut rec = Recorder::new(&meters);
+        rec.enter(Phase::Incremental);
+        let rep = self.dg.apply_batch(batch);
+        if rep.inserted.is_empty() && rep.removed.is_empty() && rep.edge_delta.is_empty() {
+            // pure no-op batch: nothing changed, skip even the remap
+            return UpdateStats {
+                total_entities: self.graph.m(),
+                total_partitions: self.lowers.len(),
+                stats: rec.finish(),
+                ..UpdateStats::default()
+            };
+        }
+        let new_graph = self.dg.snapshot();
+        let m_new = new_graph.m();
+        let m_old = self.graph.m();
+
+        // Remap θ / counts / components old edge ids → new edge ids
+        // (inserts and removals shift the sorted-list positions).
+        let mut theta = vec![0u64; m_new];
+        let mut counts = vec![0u64; m_new];
+        let mut from_old = vec![false; m_new];
+        let mut uf = UnionFind::new(m_new);
+        let mut root_rep = vec![NONE; m_old];
+        {
+            let old_edges = self.graph.edges();
+            let new_edges = new_graph.edges();
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < m_old && j < m_new {
+                match old_edges[i].cmp(&new_edges[j]) {
+                    std::cmp::Ordering::Less => i += 1, // removed
+                    std::cmp::Ordering::Greater => j += 1, // inserted
+                    std::cmp::Ordering::Equal => {
+                        theta[j] = self.theta[i];
+                        counts[j] = self.counts[i];
+                        from_old[j] = true;
+                        let r = self.comp[i] as usize;
+                        if root_rep[r] == NONE {
+                            root_rep[r] = j as u32;
+                        } else {
+                            uf.union(root_rep[r], j as u32);
+                        }
+                        i += 1;
+                        j += 1;
+                    }
+                }
+            }
+        }
+        // Fold in the butterfly-count deltas; every touched surviving
+        // edge is dirty (touch entries exist even at net delta 0).
+        let mut dirty: Vec<u32> = Vec::new();
+        for &((u, v), d) in &rep.edge_delta {
+            if let Some(e) = new_graph.edge_id(u, v) {
+                counts[e as usize] = (counts[e as usize] as i64 + d) as u64;
+                dirty.push(e);
+            }
+        }
+        // Merge components along created butterflies (links whose edges
+        // were removed again later in the batch are gone — skipping them
+        // is exact, not just sound).
+        for &((au, av), (bu, bv)) in &rep.links {
+            if let (Some(a), Some(b)) = (new_graph.edge_id(au, av), new_graph.edge_id(bu, bv)) {
+                uf.union(a, b);
+            }
+        }
+        // Affected = components containing a dirty edge.
+        let mut aff_root = vec![false; m_new];
+        for &d in &dirty {
+            aff_root[uf.find(d) as usize] = true;
+        }
+        let affected: Vec<u32> =
+            (0..m_new as u32).filter(|&e| aff_root[uf.find(e) as usize]).collect();
+
+        let inval = invalidated_partitions(
+            &self.lowers,
+            affected
+                .iter()
+                .filter(|&&e| from_old[e as usize])
+                .map(|&e| theta[e as usize]),
+        );
+        meters.invalidated_parts.add(inval as u64);
+
+        let frac = if m_new == 0 {
+            0.0
+        } else {
+            affected.len() as f64 / m_new as f64
+        };
+        let mut out = UpdateStats {
+            inserted: rep.inserted.len(),
+            removed: rep.removed.len(),
+            butterflies_created: rep.butterflies_created,
+            butterflies_destroyed: rep.butterflies_destroyed,
+            affected_entities: affected.len(),
+            total_entities: m_new,
+            invalidated_partitions: inval,
+            total_partitions: self.lowers.len(),
+            full_rebuild: frac > self.cfg.fallback_fraction,
+            stats: PeelStats::default(),
+        };
+        self.graph = new_graph;
+        if out.full_rebuild {
+            out.stats = self.rebuild_full(rec);
+            return out;
+        }
+        self.counts = counts;
+        if affected.is_empty() {
+            // only butterfly-free structure changed: θ survives verbatim
+            self.theta = theta;
+            self.comp = (0..m_new as u32).map(|e| uf.find(e)).collect();
+            out.stats = rec.finish();
+            return out;
+        }
+        // Compact the affected components into a sub-universe. The
+        // endpoint relabeling is monotone, so sub edge id i corresponds
+        // exactly to affected[i].
+        let g = &self.graph;
+        let mut us: Vec<u32> = Vec::with_capacity(affected.len());
+        let mut vs: Vec<u32> = Vec::with_capacity(affected.len());
+        for &e in &affected {
+            let (u, v) = g.edge(e);
+            us.push(u);
+            vs.push(v);
+        }
+        us.sort_unstable();
+        us.dedup();
+        vs.sort_unstable();
+        vs.dedup();
+        let sub_edges: Vec<(u32, u32)> = affected
+            .iter()
+            .map(|&e| {
+                let (u, v) = g.edge(e);
+                (
+                    us.binary_search(&u).expect("relabel map") as u32,
+                    vs.binary_search(&v).expect("relabel map") as u32,
+                )
+            })
+            .collect();
+        let sub = GraphBuilder::new().nu(us.len()).nv(vs.len()).edges(&sub_edges).build();
+        debug_assert_eq!(sub.m(), affected.len());
+        rec.enter(Phase::Count);
+        let (idx, per_edge) = BeIndex::build(&sub, self.cfg.engine.threads);
+        let sub_theta = {
+            let mut dom = WingDomain::new(&idx, &per_edge, &self.cfg.engine);
+            let r = decompose(&mut dom, &self.cfg.engine, rec);
+            out.stats = r.stats;
+            r.theta
+        };
+        for (i, &e) in affected.iter().enumerate() {
+            theta[e as usize] = sub_theta[i];
+        }
+        self.theta = theta;
+        self.comp = (0..m_new as u32).map(|e| uf.find(e)).collect();
+        out
+    }
+}
+
+// ---------------------------------------------------------------- tip
+
+/// Incrementally maintained tip (vertex) decomposition of one side.
+///
+/// Vertex ids are stable under edge updates (the vertex universe is
+/// fixed), so [`TipIncremental::theta`] indexing never shifts.
+pub struct TipIncremental {
+    /// Oriented so the peel side is U.
+    dg: DynGraph,
+    graph: BipartiteGraph,
+    side: Side,
+    theta: Vec<u64>,
+    /// Full-graph per-vertex butterfly counts, delta-maintained.
+    counts: Vec<u64>,
+    /// Cached butterfly-component root per peel-side vertex.
+    comp: Vec<u32>,
+    lowers: Vec<u64>,
+    cfg: IncrementalConfig,
+    init_stats: PeelStats,
+}
+
+impl TipIncremental {
+    /// Build the state with one full tip decomposition of `side`.
+    pub fn new(g: &BipartiteGraph, side: Side, cfg: IncrementalConfig) -> TipIncremental {
+        let oriented = match side {
+            Side::U => g.clone(),
+            Side::V => g.transposed(),
+        };
+        let mut s = TipIncremental {
+            dg: DynGraph::from_graph(&oriented),
+            graph: oriented,
+            side,
+            theta: Vec::new(),
+            counts: Vec::new(),
+            comp: Vec::new(),
+            lowers: Vec::new(),
+            cfg,
+            init_stats: PeelStats::default(),
+        };
+        let meters = Meters::new();
+        let rec = Recorder::new(&meters);
+        s.init_stats = s.rebuild_full(rec);
+        s
+    }
+
+    /// Current graph, oriented so the peel side is U.
+    pub fn graph(&self) -> &BipartiteGraph {
+        &self.graph
+    }
+
+    pub fn side(&self) -> Side {
+        self.side
+    }
+
+    /// θ per peel-side vertex.
+    pub fn theta(&self) -> &[u64] {
+        &self.theta
+    }
+
+    /// Delta-maintained per-vertex butterfly counts.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn init_stats(&self) -> &PeelStats {
+        &self.init_stats
+    }
+
+    fn rebuild_full(&mut self, mut rec: Recorder<'_>) -> PeelStats {
+        let threads = self.cfg.engine.threads;
+        rec.enter(Phase::Count);
+        let (c, raw) = crate::count::pve_bcnt(
+            &self.graph,
+            crate::count::CountOptions {
+                per_edge: false,
+                build_blooms: true,
+                threads,
+            },
+            Some(rec.meters()),
+        );
+        let nu = self.graph.nu();
+        // U-side butterfly components from the blooms: each bloom's
+        // distinct U endpoints are pairwise butterfly-adjacent (the
+        // dominant pair when it lies in U, all the wedge mids when the
+        // dominant pair lies in V).
+        let mut uf = UnionFind::new(nu);
+        for b in 0..raw.n_blooms() {
+            let (s, e) = (raw.offs[b], raw.offs[b + 1]);
+            if e - s >= 2 {
+                let anchor = self.graph.edge(raw.pairs[s].0).0;
+                for &(e1, e2) in &raw.pairs[s..e] {
+                    uf.union(anchor, self.graph.edge(e1).0);
+                    uf.union(anchor, self.graph.edge(e2).0);
+                }
+            }
+        }
+        let (theta, lowers, stats) = {
+            let mut dom = TipDomain::new(&self.graph, &c.per_u);
+            let rep = decompose(&mut dom, &self.cfg.engine, rec);
+            (rep.theta, rep.cd.lowers, rep.stats)
+        };
+        self.theta = theta;
+        self.lowers = lowers;
+        self.counts = c.per_u;
+        self.comp = (0..nu as u32).map(|u| uf.find(u)).collect();
+        stats
+    }
+
+    /// Apply one batch (given in the graph's original orientation; it is
+    /// transposed internally for side V). Afterwards
+    /// [`TipIncremental::theta`] equals a from-scratch tip decomposition
+    /// of the updated graph.
+    pub fn apply(&mut self, batch: &DeltaBatch) -> UpdateStats {
+        let oriented;
+        let batch = match self.side {
+            Side::U => batch,
+            Side::V => {
+                oriented = batch.transposed();
+                &oriented
+            }
+        };
+        let meters = Meters::new();
+        let mut rec = Recorder::new(&meters);
+        rec.enter(Phase::Incremental);
+        let rep = self.dg.apply_batch(batch);
+        if rep.inserted.is_empty() && rep.removed.is_empty() && rep.edge_delta.is_empty() {
+            // pure no-op batch: nothing changed, skip even the relabel
+            return UpdateStats {
+                total_entities: self.graph.nu(),
+                total_partitions: self.lowers.len(),
+                stats: rec.finish(),
+                ..UpdateStats::default()
+            };
+        }
+        let new_graph = self.dg.snapshot();
+        let nu = new_graph.nu();
+
+        let mut counts = self.counts.clone();
+        let mut dirty: Vec<u32> = Vec::with_capacity(rep.delta_u.len());
+        for &(u, d) in &rep.delta_u {
+            counts[u as usize] = (counts[u as usize] as i64 + d) as u64;
+            dirty.push(u);
+        }
+        let mut uf = UnionFind::new(nu);
+        for u in 0..nu as u32 {
+            uf.union(u, self.comp[u as usize]);
+        }
+        for &(a, b) in &rep.links_u {
+            uf.union(a, b);
+        }
+        let mut aff_root = vec![false; nu];
+        for &d in &dirty {
+            aff_root[uf.find(d) as usize] = true;
+        }
+        let affected: Vec<u32> =
+            (0..nu as u32).filter(|&u| aff_root[uf.find(u) as usize]).collect();
+
+        let inval = invalidated_partitions(
+            &self.lowers,
+            affected.iter().map(|&u| self.theta[u as usize]),
+        );
+        meters.invalidated_parts.add(inval as u64);
+
+        let frac = if nu == 0 {
+            0.0
+        } else {
+            affected.len() as f64 / nu as f64
+        };
+        let mut out = UpdateStats {
+            inserted: rep.inserted.len(),
+            removed: rep.removed.len(),
+            butterflies_created: rep.butterflies_created,
+            butterflies_destroyed: rep.butterflies_destroyed,
+            affected_entities: affected.len(),
+            total_entities: nu,
+            invalidated_partitions: inval,
+            total_partitions: self.lowers.len(),
+            full_rebuild: frac > self.cfg.fallback_fraction,
+            stats: PeelStats::default(),
+        };
+        self.graph = new_graph;
+        if out.full_rebuild {
+            out.stats = self.rebuild_full(rec);
+            return out;
+        }
+        self.counts = counts;
+        self.comp = (0..nu as u32).map(|u| uf.find(u)).collect();
+        if affected.is_empty() {
+            out.stats = rec.finish();
+            return out;
+        }
+        // Induced sub-universe: the affected vertices with *all* their
+        // edges — their butterflies live entirely inside their component,
+        // so the restricted counts equal the delta-maintained full-graph
+        // counts and are reused as initial supports (no recount).
+        let g = &self.graph;
+        let mut vs: Vec<u32> = Vec::new();
+        for &u in &affected {
+            for &(v, _) in g.nbrs_u(u) {
+                vs.push(v);
+            }
+        }
+        vs.sort_unstable();
+        vs.dedup();
+        let mut sub_edges: Vec<(u32, u32)> = Vec::new();
+        for (i, &u) in affected.iter().enumerate() {
+            for &(v, _) in g.nbrs_u(u) {
+                sub_edges.push((i as u32, vs.binary_search(&v).expect("relabel map") as u32));
+            }
+        }
+        let sub = GraphBuilder::new()
+            .nu(affected.len())
+            .nv(vs.len())
+            .edges(&sub_edges)
+            .build();
+        let per_u_sub: Vec<u64> = affected.iter().map(|&u| counts[u as usize]).collect();
+        let sub_theta = {
+            let mut dom = TipDomain::new(&sub, &per_u_sub);
+            let r = decompose(&mut dom, &self.cfg.engine, rec);
+            out.stats = r.stats;
+            r.theta
+        };
+        let mut theta = std::mem::take(&mut self.theta);
+        for (i, &u) in affected.iter().enumerate() {
+            theta[u as usize] = sub_theta[i];
+        }
+        self.theta = theta;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dynamic::DeltaOp;
+    use crate::graph::gen;
+    use crate::peel::bup::wing_bup;
+    use crate::tip::tip_bup;
+
+    fn cfg(p: usize, threads: usize, fallback: f64) -> IncrementalConfig {
+        IncrementalConfig {
+            engine: EngineConfig {
+                p,
+                threads,
+                ..Default::default()
+            },
+            fallback_fraction: fallback,
+        }
+    }
+
+    #[test]
+    fn invalidated_partitions_hits_intervals() {
+        let lowers = vec![0u64, 3, 7];
+        assert_eq!(invalidated_partitions(&lowers, [0u64].into_iter()), 1);
+        assert_eq!(invalidated_partitions(&lowers, [2u64, 3].into_iter()), 2);
+        assert_eq!(invalidated_partitions(&lowers, [9u64, 100].into_iter()), 1);
+        assert_eq!(invalidated_partitions(&lowers, std::iter::empty()), 0);
+        assert_eq!(invalidated_partitions(&[], [5u64].into_iter()), 0);
+    }
+
+    #[test]
+    fn wing_single_insert_matches_scratch() {
+        let g = gen::paper_fig1();
+        let mut inc = WingIncremental::new(&g, cfg(4, 2, 1.0));
+        assert_eq!(inc.theta(), &wing_bup(&g).theta[..]);
+        // close a butterfly across a bridge
+        let up = inc.apply(&DeltaBatch::new(vec![DeltaOp::Insert(0, 2)]));
+        assert!(!up.full_rebuild);
+        let fresh = wing_bup(inc.graph()).theta;
+        assert_eq!(inc.theta(), &fresh[..]);
+    }
+
+    #[test]
+    fn wing_remove_and_reinsert_roundtrips() {
+        let g = gen::zipf(20, 20, 120, 1.2, 1.2, 7);
+        let mut inc = WingIncremental::new(&g, cfg(4, 1, 1.0));
+        let (u, v) = g.edge(0);
+        inc.apply(&DeltaBatch::new(vec![DeltaOp::Remove(u, v)]));
+        assert_eq!(inc.theta(), &wing_bup(inc.graph()).theta[..]);
+        inc.apply(&DeltaBatch::new(vec![DeltaOp::Insert(u, v)]));
+        assert_eq!(inc.graph().edges(), g.edges());
+        assert_eq!(inc.theta(), &wing_bup(&g).theta[..]);
+    }
+
+    #[test]
+    fn wing_fallback_path_stays_correct() {
+        let g = gen::zipf(20, 20, 100, 1.2, 1.2, 9);
+        let mut inc = WingIncremental::new(&g, cfg(4, 2, 0.0));
+        let (u, v) = g.edge(1);
+        let up = inc.apply(&DeltaBatch::new(vec![DeltaOp::Remove(u, v)]));
+        // removing a butterfly-carrying edge must trip the 0.0 threshold
+        assert!(up.full_rebuild || up.affected_entities == 0);
+        assert_eq!(inc.theta(), &wing_bup(inc.graph()).theta[..]);
+    }
+
+    #[test]
+    fn tip_both_sides_match_scratch_after_updates() {
+        let g = gen::zipf(16, 14, 90, 1.2, 1.2, 11);
+        for side in [Side::U, Side::V] {
+            let mut inc = TipIncremental::new(&g, side, cfg(3, 2, 1.0));
+            assert_eq!(inc.theta(), &tip_bup(&g, side).theta[..]);
+            let ops = vec![
+                DeltaOp::Insert(0, 0),
+                DeltaOp::Insert(1, 13),
+                DeltaOp::Remove(g.edge(2).0, g.edge(2).1),
+            ];
+            inc.apply(&DeltaBatch::new(ops));
+            // fresh tip of the updated graph, in original orientation
+            let updated = match side {
+                Side::U => inc.graph().clone(),
+                Side::V => inc.graph().transposed(),
+            };
+            assert_eq!(inc.theta(), &tip_bup(&updated, side).theta[..]);
+        }
+    }
+
+    #[test]
+    fn butterfly_free_updates_touch_nothing() {
+        // a star has no butterflies; adding another leaf keeps it that way
+        let g = GraphBuilder::new()
+            .nu(5)
+            .nv(2)
+            .edges(&[(0, 0), (1, 0), (2, 0), (3, 0)])
+            .build();
+        let mut inc = WingIncremental::new(&g, cfg(2, 1, 1.0));
+        let up = inc.apply(&DeltaBatch::new(vec![DeltaOp::Insert(4, 1)]));
+        assert_eq!(up.affected_entities, 0);
+        assert_eq!(up.invalidated_partitions, 0);
+        assert!(inc.theta().iter().all(|&t| t == 0));
+        assert_eq!(inc.theta().len(), 5);
+    }
+}

@@ -27,6 +27,10 @@
 //!   and θ write-back through [`crate::par::RacyCell`].
 //! * [`decompose`] / [`EngineReport`] — the phase-recorded Coarse →
 //!   Partition → Fine pipeline feeding [`crate::metrics::PeelStats`].
+//! * [`incremental`] — dynamic-graph maintenance on top of the same
+//!   drivers: batched edge deltas, butterfly-component invalidation, and
+//!   affected-region re-peeling with a fallback-to-full threshold
+//!   ([`incremental::WingIncremental`], [`incremental::TipIncremental`]).
 //!
 //! The entity-specific counting phase stays with the caller (edge
 //! supports need the BE-Index, vertex supports need per-vertex butterfly
@@ -35,6 +39,7 @@
 
 pub mod cd;
 pub mod fd;
+pub mod incremental;
 pub mod range;
 
 pub use cd::coarse_decompose;

@@ -1,0 +1,524 @@
+//! Dynamic bipartite graph: batched edge updates with per-entity
+//! butterfly-count deltas — the substrate of
+//! [`crate::engine::incremental`].
+//!
+//! [`DynGraph`] keeps mutable sorted adjacency over a *fixed* vertex
+//! universe (`nu`/`nv` never change, so vertex-indexed state — tip
+//! numbers, per-vertex counts — stays valid across updates; edge ids are
+//! reassigned by [`DynGraph::snapshot`], and edge-indexed state is keyed
+//! by `(u, v)` pairs until remapped). [`DynGraph::apply_batch`] applies a
+//! [`DeltaBatch`] one effective operation at a time and, for each edge
+//! actually inserted or removed, enumerates exactly the butterflies that
+//! operation creates or destroys by restricting the counting recurrence
+//! to the wedges incident to the changed edge: for `(u, v)` every
+//! `u' ∈ N(v)` is intersected with `N(u)`, so the cost is
+//! `O(Σ_{u'∈N(v)} (d_u + d_{u'}))` per changed edge instead of a full
+//! `O(α·m)` recount.
+//!
+//! The resulting [`DeltaReport`] is the contract the incremental engine
+//! builds on:
+//!
+//! * **net count deltas** per edge / per vertex (old count + delta ==
+//!   fresh count of the updated graph — pinned by the unit tests below);
+//! * **touch entries**: an edge/vertex participating in any created *or*
+//!   destroyed butterfly gets a delta entry *even when the net delta is
+//!   zero* — membership, not magnitude, is the dirtiness signal
+//!   (offsetting gains and losses still change the level structure);
+//! * **adjacency links** of every created butterfly (edge-granular for
+//!   wing, U-vertex-granular for tip), which the incremental engine
+//!   unions into its cached butterfly-component labels. Destroyed
+//!   butterflies need no links: their edges were already co-component in
+//!   the pre-update graph.
+//!
+//! All report sections are sorted (`BTreeMap`/`BTreeSet` internally), so
+//! downstream consumers are deterministic regardless of hash seeds.
+
+use super::{BipartiteGraph, GraphBuilder};
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::BufRead;
+use std::path::Path;
+
+/// One edge mutation. Set semantics: inserting a present edge or
+/// removing an absent one is a no-op (not an error).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaOp {
+    Insert(u32, u32),
+    Remove(u32, u32),
+}
+
+impl DeltaOp {
+    /// Swap the U/V roles (used to orient deltas for tip side V).
+    pub fn transposed(self) -> DeltaOp {
+        match self {
+            DeltaOp::Insert(u, v) => DeltaOp::Insert(v, u),
+            DeltaOp::Remove(u, v) => DeltaOp::Remove(v, u),
+        }
+    }
+}
+
+/// A batch of edge mutations, applied in order within one
+/// [`DynGraph::apply_batch`] call.
+#[derive(Clone, Debug, Default)]
+pub struct DeltaBatch {
+    pub ops: Vec<DeltaOp>,
+}
+
+impl DeltaBatch {
+    pub fn new(ops: Vec<DeltaOp>) -> DeltaBatch {
+        DeltaBatch { ops }
+    }
+
+    /// The batch with U/V roles swapped.
+    pub fn transposed(&self) -> DeltaBatch {
+        DeltaBatch {
+            ops: self.ops.iter().map(|op| op.transposed()).collect(),
+        }
+    }
+}
+
+/// What one applied batch changed. See the module docs for the
+/// touch-entry and link contracts.
+#[derive(Clone, Debug, Default)]
+pub struct DeltaReport {
+    /// Edges present after the batch that were absent before, sorted.
+    pub inserted: Vec<(u32, u32)>,
+    /// Edges absent after the batch that were present before, sorted.
+    pub removed: Vec<(u32, u32)>,
+    /// `((u, v), net butterfly delta)` for every *touched* edge, sorted
+    /// by key. Keys may refer to edges removed by the batch.
+    pub edge_delta: Vec<((u32, u32), i64)>,
+    /// `(u, net delta)` for every touched U vertex, sorted.
+    pub delta_u: Vec<(u32, i64)>,
+    /// `(v, net delta)` for every touched V vertex, sorted.
+    pub delta_v: Vec<(u32, i64)>,
+    /// Butterfly-adjacency links created by insertions: the changed edge
+    /// paired with each of the three partner edges of a created
+    /// butterfly. Canonically ordered and deduplicated.
+    pub links: Vec<((u32, u32), (u32, u32))>,
+    /// Same links at U-vertex granularity (the two U endpoints of each
+    /// created butterfly).
+    pub links_u: Vec<(u32, u32)>,
+    pub butterflies_created: u64,
+    pub butterflies_destroyed: u64,
+}
+
+fn ord_pair<T: Ord>(a: T, b: T) -> (T, T) {
+    if a <= b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+/// Mutable bipartite graph over a fixed vertex universe.
+#[derive(Clone, Debug)]
+pub struct DynGraph {
+    nu: usize,
+    nv: usize,
+    /// Sorted V-neighbor list per U vertex.
+    adj_u: Vec<Vec<u32>>,
+    /// Sorted U-neighbor list per V vertex.
+    adj_v: Vec<Vec<u32>>,
+    m: usize,
+}
+
+impl DynGraph {
+    pub fn new(nu: usize, nv: usize) -> DynGraph {
+        DynGraph {
+            nu,
+            nv,
+            adj_u: vec![Vec::new(); nu],
+            adj_v: vec![Vec::new(); nv],
+            m: 0,
+        }
+    }
+
+    pub fn from_graph(g: &BipartiteGraph) -> DynGraph {
+        let mut dg = DynGraph::new(g.nu(), g.nv());
+        for u in 0..g.nu() as u32 {
+            dg.adj_u[u as usize] = g.nbrs_u(u).iter().map(|&(v, _)| v).collect();
+        }
+        for v in 0..g.nv() as u32 {
+            dg.adj_v[v as usize] = g.nbrs_v(v).iter().map(|&(u, _)| u).collect();
+        }
+        dg.m = g.m();
+        dg
+    }
+
+    pub fn nu(&self) -> usize {
+        self.nu
+    }
+    pub fn nv(&self) -> usize {
+        self.nv
+    }
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Out-of-range endpoints are simply absent, never a panic.
+    pub fn has(&self, u: u32, v: u32) -> bool {
+        (u as usize) < self.nu
+            && (v as usize) < self.nv
+            && self.adj_u[u as usize].binary_search(&v).is_ok()
+    }
+
+    /// Insert `(u, v)`; returns false if already present.
+    pub fn insert(&mut self, u: u32, v: u32) -> bool {
+        assert!((u as usize) < self.nu && (v as usize) < self.nv, "edge out of range");
+        match self.adj_u[u as usize].binary_search(&v) {
+            Ok(_) => false,
+            Err(i) => {
+                self.adj_u[u as usize].insert(i, v);
+                let j = self.adj_v[v as usize]
+                    .binary_search(&u)
+                    .expect_err("adjacency sides out of sync");
+                self.adj_v[v as usize].insert(j, u);
+                self.m += 1;
+                true
+            }
+        }
+    }
+
+    /// Remove `(u, v)`; returns false if absent (including out-of-range
+    /// endpoints).
+    pub fn remove(&mut self, u: u32, v: u32) -> bool {
+        if !self.has(u, v) {
+            return false;
+        }
+        match self.adj_u[u as usize].binary_search(&v) {
+            Err(_) => false,
+            Ok(i) => {
+                self.adj_u[u as usize].remove(i);
+                let j = self.adj_v[v as usize]
+                    .binary_search(&u)
+                    .expect("adjacency sides out of sync");
+                self.adj_v[v as usize].remove(j);
+                self.m -= 1;
+                true
+            }
+        }
+    }
+
+    /// Immutable CSR snapshot of the current edge set. Edge ids are
+    /// positions in the sorted `(u, v)` list, as everywhere else.
+    pub fn snapshot(&self) -> BipartiteGraph {
+        let mut edges = Vec::with_capacity(self.m);
+        for (u, nbrs) in self.adj_u.iter().enumerate() {
+            for &v in nbrs {
+                edges.push((u as u32, v));
+            }
+        }
+        GraphBuilder::new().nu(self.nu).nv(self.nv).edges(&edges).build()
+    }
+
+    /// Visit every butterfly through edge `(u, v)` in the *current*
+    /// state, which must contain the edge: `f(u2, v2)` is called once per
+    /// butterfly `{(u,v), (u,v2), (u2,v), (u2,v2)}`.
+    fn butterflies_through<F: FnMut(u32, u32)>(&self, u: u32, v: u32, mut f: F) {
+        debug_assert!(self.has(u, v));
+        let mine = &self.adj_u[u as usize];
+        for &u2 in &self.adj_v[v as usize] {
+            if u2 == u {
+                continue;
+            }
+            let other = &self.adj_u[u2 as usize];
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < mine.len() && j < other.len() {
+                match mine[i].cmp(&other[j]) {
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                    std::cmp::Ordering::Equal => {
+                        if mine[i] != v {
+                            f(u2, mine[i]);
+                        }
+                        i += 1;
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Apply `batch` in order and report butterfly-count deltas. Each
+    /// effective operation is counted against the intermediate state it
+    /// executes in, so the net deltas telescope to
+    /// `count(after) - count(before)` exactly.
+    pub fn apply_batch(&mut self, batch: &DeltaBatch) -> DeltaReport {
+        let mut presence: BTreeMap<(u32, u32), i32> = BTreeMap::new();
+        let mut edge_delta: BTreeMap<(u32, u32), i64> = BTreeMap::new();
+        let mut delta_u: BTreeMap<u32, i64> = BTreeMap::new();
+        let mut delta_v: BTreeMap<u32, i64> = BTreeMap::new();
+        let mut links: BTreeSet<((u32, u32), (u32, u32))> = BTreeSet::new();
+        let mut links_u: BTreeSet<(u32, u32)> = BTreeSet::new();
+        let mut created = 0u64;
+        let mut destroyed = 0u64;
+
+        for &op in &batch.ops {
+            match op {
+                DeltaOp::Insert(u, v) => {
+                    if !self.insert(u, v) {
+                        continue;
+                    }
+                    *presence.entry((u, v)).or_insert(0) += 1;
+                    self.butterflies_through(u, v, |u2, v2| {
+                        created += 1;
+                        for key in [(u, v), (u, v2), (u2, v), (u2, v2)] {
+                            *edge_delta.entry(key).or_insert(0) += 1;
+                        }
+                        *delta_u.entry(u).or_insert(0) += 1;
+                        *delta_u.entry(u2).or_insert(0) += 1;
+                        *delta_v.entry(v).or_insert(0) += 1;
+                        *delta_v.entry(v2).or_insert(0) += 1;
+                        for other in [(u, v2), (u2, v), (u2, v2)] {
+                            links.insert(ord_pair((u, v), other));
+                        }
+                        links_u.insert(ord_pair(u, u2));
+                    });
+                }
+                DeltaOp::Remove(u, v) => {
+                    if !self.has(u, v) {
+                        continue;
+                    }
+                    self.butterflies_through(u, v, |u2, v2| {
+                        destroyed += 1;
+                        for key in [(u, v), (u, v2), (u2, v), (u2, v2)] {
+                            *edge_delta.entry(key).or_insert(0) -= 1;
+                        }
+                        *delta_u.entry(u).or_insert(0) -= 1;
+                        *delta_u.entry(u2).or_insert(0) -= 1;
+                        *delta_v.entry(v).or_insert(0) -= 1;
+                        *delta_v.entry(v2).or_insert(0) -= 1;
+                    });
+                    self.remove(u, v);
+                    *presence.entry((u, v)).or_insert(0) -= 1;
+                }
+            }
+        }
+
+        DeltaReport {
+            inserted: presence
+                .iter()
+                .filter(|&(_, &d)| d > 0)
+                .map(|(&e, _)| e)
+                .collect(),
+            removed: presence
+                .iter()
+                .filter(|&(_, &d)| d < 0)
+                .map(|(&e, _)| e)
+                .collect(),
+            edge_delta: edge_delta.into_iter().collect(),
+            delta_u: delta_u.into_iter().collect(),
+            delta_v: delta_v.into_iter().collect(),
+            links: links.into_iter().collect(),
+            links_u: links_u.into_iter().collect(),
+            butterflies_created: created,
+            butterflies_destroyed: destroyed,
+        }
+    }
+}
+
+/// Parse an edge-delta file: one op per line, `+ u v` inserts and
+/// `- u v` removes; `%`/`#` comment lines and blanks are skipped
+/// (the format `pbng update` consumes).
+pub fn load_deltas(path: &Path) -> Result<Vec<DeltaOp>> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening delta file {}", path.display()))?;
+    let reader = std::io::BufReader::new(f);
+    let mut ops = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let sign = it
+            .next()
+            .with_context(|| format!("line {}: missing op sign", lineno + 1))?;
+        let u: u32 = it
+            .next()
+            .with_context(|| format!("line {}: missing u", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad u", lineno + 1))?;
+        let v: u32 = it
+            .next()
+            .with_context(|| format!("line {}: missing v", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad v", lineno + 1))?;
+        match sign {
+            "+" => ops.push(DeltaOp::Insert(u, v)),
+            "-" => ops.push(DeltaOp::Remove(u, v)),
+            s => anyhow::bail!("line {}: op must be '+' or '-', got '{s}'", lineno + 1),
+        }
+    }
+    Ok(ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::count::brute;
+    use crate::graph::gen;
+    use crate::testkit::{check_property, Rng};
+
+    fn edge_counts_by_key(g: &BipartiteGraph) -> BTreeMap<(u32, u32), u64> {
+        let c = brute::brute_counts(g);
+        (0..g.m() as u32)
+            .map(|e| (g.edge(e), c.per_edge[e as usize]))
+            .collect()
+    }
+
+    fn random_batch(rng: &mut Rng, dg: &DynGraph, n_ops: usize) -> DeltaBatch {
+        let mut ops = Vec::with_capacity(n_ops);
+        for _ in 0..n_ops {
+            let u = rng.usize_below(dg.nu()) as u32;
+            let v = rng.usize_below(dg.nv()) as u32;
+            if rng.chance(0.5) {
+                ops.push(DeltaOp::Insert(u, v));
+            } else {
+                ops.push(DeltaOp::Remove(u, v));
+            }
+        }
+        DeltaBatch::new(ops)
+    }
+
+    #[test]
+    fn insert_remove_roundtrip_and_snapshot() {
+        let g = gen::erdos(12, 12, 40, 3);
+        let mut dg = DynGraph::from_graph(&g);
+        assert_eq!(dg.m(), g.m());
+        assert_eq!(dg.snapshot().edges(), g.edges());
+        // insert an absent edge, remove it again: back to the original
+        let (u, v) = (0..12u32)
+            .flat_map(|u| (0..12u32).map(move |v| (u, v)))
+            .find(|&(u, v)| !g.has_edge(u, v))
+            .unwrap();
+        assert!(dg.insert(u, v));
+        assert!(!dg.insert(u, v)); // already present
+        assert_eq!(dg.m(), g.m() + 1);
+        assert!(dg.remove(u, v));
+        assert!(!dg.remove(u, v)); // already absent
+        assert_eq!(dg.snapshot().edges(), g.edges());
+    }
+
+    #[test]
+    fn noop_batch_reports_nothing() {
+        let g = gen::biclique(3, 3);
+        let mut dg = DynGraph::from_graph(&g);
+        let rep = dg.apply_batch(&DeltaBatch::new(vec![
+            DeltaOp::Insert(0, 0), // present
+            DeltaOp::Remove(2, 2), // removed below, then re-added: net zero
+            DeltaOp::Insert(2, 2),
+        ]));
+        assert!(rep.inserted.is_empty());
+        assert!(rep.removed.is_empty());
+        assert_eq!(rep.butterflies_created, rep.butterflies_destroyed);
+        // every touched edge nets to zero
+        assert!(rep.edge_delta.iter().all(|&(_, d)| d == 0));
+        assert!(rep.delta_u.iter().all(|&(_, d)| d == 0));
+        assert_eq!(dg.snapshot().edges(), g.edges());
+    }
+
+    #[test]
+    fn single_insert_creates_the_closing_butterfly() {
+        // path u0-v0, u1-v0, u1-v1: inserting (u0, v1) closes one butterfly
+        let g = GraphBuilder::new()
+            .nu(2)
+            .nv(2)
+            .edges(&[(0, 0), (1, 0), (1, 1)])
+            .build();
+        let mut dg = DynGraph::from_graph(&g);
+        let rep = dg.apply_batch(&DeltaBatch::new(vec![DeltaOp::Insert(0, 1)]));
+        assert_eq!(rep.inserted, vec![(0, 1)]);
+        assert_eq!(rep.butterflies_created, 1);
+        assert_eq!(rep.butterflies_destroyed, 0);
+        // all four edges gain one butterfly
+        assert_eq!(
+            rep.edge_delta,
+            vec![((0, 0), 1), ((0, 1), 1), ((1, 0), 1), ((1, 1), 1)]
+        );
+        assert_eq!(rep.delta_u, vec![(0, 1), (1, 1)]);
+        assert_eq!(rep.delta_v, vec![(0, 1), (1, 1)]);
+        // the inserted edge is linked to the three partners
+        assert_eq!(rep.links.len(), 3);
+        assert!(rep.links.iter().all(|&(a, b)| a == (0, 1) || b == (0, 1)));
+        assert_eq!(rep.links_u, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn deltas_telescope_to_fresh_counts() {
+        check_property("dyn-deltas-vs-brute", 0xD41A, 8, |seed| {
+            let mut rng = Rng::new(seed);
+            let g = gen::erdos(
+                5 + rng.usize_below(10),
+                5 + rng.usize_below(10),
+                15 + rng.usize_below(50),
+                seed,
+            );
+            let before = brute::brute_counts(&g);
+            let edge_before = edge_counts_by_key(&g);
+            let mut dg = DynGraph::from_graph(&g);
+            let batch = random_batch(&mut rng, &dg, 1 + rng.usize_below(40));
+            let rep = dg.apply_batch(&batch);
+            let g2 = dg.snapshot();
+            let after = brute::brute_counts(&g2);
+            let edge_after = edge_counts_by_key(&g2);
+            // per-edge: old + delta == fresh, for every surviving edge
+            let delta: BTreeMap<(u32, u32), i64> = rep.edge_delta.iter().copied().collect();
+            for (&key, &cnt) in &edge_after {
+                let base = edge_before.get(&key).copied().unwrap_or(0) as i64;
+                let d = delta.get(&key).copied().unwrap_or(0);
+                if base + d != cnt as i64 {
+                    return Err(format!("edge {key:?}: {base} + {d} != {cnt}"));
+                }
+            }
+            // per-vertex, both sides
+            let du: BTreeMap<u32, i64> = rep.delta_u.iter().copied().collect();
+            for u in 0..g.nu() {
+                let want = after.per_u[u] as i64;
+                let got = before.per_u[u] as i64 + du.get(&(u as u32)).copied().unwrap_or(0);
+                if got != want {
+                    return Err(format!("u{u}: {got} != {want}"));
+                }
+            }
+            let dv: BTreeMap<u32, i64> = rep.delta_v.iter().copied().collect();
+            for v in 0..g.nv() {
+                let want = after.per_v[v] as i64;
+                let got = before.per_v[v] as i64 + dv.get(&(v as u32)).copied().unwrap_or(0);
+                if got != want {
+                    return Err(format!("v{v}: {got} != {want}"));
+                }
+            }
+            // net totals telescope too
+            let net = rep.butterflies_created as i64 - rep.butterflies_destroyed as i64;
+            if before.total as i64 + net != after.total as i64 {
+                return Err(format!(
+                    "total: {} + {net} != {}",
+                    before.total, after.total
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn load_deltas_parses_and_rejects() {
+        let dir = crate::testkit::TempDir::new("deltas").unwrap();
+        let p = dir.file("d.txt");
+        std::fs::write(&p, "% comment\n+ 1 2\n\n- 3 4\n# note\n+ 0 0\n").unwrap();
+        let ops = load_deltas(&p).unwrap();
+        assert_eq!(
+            ops,
+            vec![
+                DeltaOp::Insert(1, 2),
+                DeltaOp::Remove(3, 4),
+                DeltaOp::Insert(0, 0)
+            ]
+        );
+        std::fs::write(&p, "* 1 2\n").unwrap();
+        assert!(load_deltas(&p).is_err());
+        std::fs::write(&p, "+ 1\n").unwrap();
+        assert!(load_deltas(&p).is_err());
+    }
+}

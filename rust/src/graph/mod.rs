@@ -7,6 +7,7 @@
 //! state (supports, wing numbers, partitions) is a flat vector.
 
 pub mod builder;
+pub mod dynamic;
 pub mod gen;
 pub mod induced;
 pub mod io;

@@ -19,16 +19,28 @@ pub enum Phase {
     Partition,
     /// Fine-grained decomposition (PBNG FD).
     Fine,
+    /// Incremental update bookkeeping ([`crate::engine::incremental`]):
+    /// delta application, θ/count remapping, and invalidation analysis.
+    /// The re-peel of the affected sub-universe records the usual
+    /// Count/Coarse/Partition/Fine phases after this one.
+    Incremental,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 4] = [Phase::Count, Phase::Coarse, Phase::Partition, Phase::Fine];
+    pub const ALL: [Phase; 5] = [
+        Phase::Count,
+        Phase::Coarse,
+        Phase::Partition,
+        Phase::Fine,
+        Phase::Incremental,
+    ];
     pub fn name(self) -> &'static str {
         match self {
             Phase::Count => "count+index",
             Phase::Coarse => "coarse(CD)",
             Phase::Partition => "partition",
             Phase::Fine => "fine(FD)",
+            Phase::Incremental => "incremental",
         }
     }
 }
@@ -48,6 +60,10 @@ pub struct Meters {
     /// zero once the pool is warm) no matter how large ρ gets — the
     /// [`Recorder`] fills it in from [`crate::par::total_spawns`].
     pub spawns: Counter,
+    /// CD partitions whose support interval was invalidated by dynamic
+    /// edge deltas ([`crate::engine::incremental`]); zero for static
+    /// runs.
+    pub invalidated_parts: Counter,
 }
 
 impl Meters {
@@ -62,6 +78,7 @@ impl Meters {
             wedges: self.wedges.get(),
             rho: self.rho.get(),
             spawns: self.spawns.get(),
+            invalidated_parts: self.invalidated_parts.get(),
         }
     }
 
@@ -86,16 +103,20 @@ pub struct MetersSnapshot {
     /// only for the run that first warms the pool). Excluded from the
     /// bench-report counter section, which gates deterministic values.
     pub spawns: u64,
+    /// CD partitions invalidated by incremental updates (0 when static).
+    pub invalidated_parts: u64,
 }
 
 impl MetersSnapshot {
-    /// JSON object `{updates, wedges, rho, spawns}` — fixed key order.
+    /// JSON object `{updates, wedges, rho, spawns, invalidated_parts}` —
+    /// fixed key order (appending keys is schema-compatible).
     pub fn to_json(&self) -> crate::jsonio::Value {
         crate::jsonio::Value::obj()
             .with("updates", self.updates)
             .with("wedges", self.wedges)
             .with("rho", self.rho)
             .with("spawns", self.spawns)
+            .with("invalidated_parts", self.invalidated_parts)
     }
 }
 
@@ -107,6 +128,8 @@ pub struct PeelStats {
     pub rho: u64,
     /// Pool threads spawned while this run was recorded (≤ pool size).
     pub spawns: u64,
+    /// CD partitions invalidated by incremental updates (0 when static).
+    pub invalidated_parts: u64,
     pub total: Duration,
     /// (phase, duration, phase-local updates, phase-local wedges)
     pub phases: Vec<(Phase, Duration, u64, u64)>,
@@ -120,6 +143,7 @@ impl PeelStats {
             wedges: self.wedges,
             rho: self.rho,
             spawns: self.spawns,
+            invalidated_parts: self.invalidated_parts,
         }
     }
 
@@ -208,6 +232,7 @@ impl<'a> Recorder<'a> {
             wedges: self.meters.wedges.get(),
             rho: self.meters.rho.get(),
             spawns: self.meters.spawns.get(),
+            invalidated_parts: self.meters.invalidated_parts.get(),
             total: self.start.elapsed(),
             phases: self.phases,
         }

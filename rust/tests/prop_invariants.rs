@@ -130,6 +130,78 @@ fn wing_numbers_monotone_under_edge_addition() {
     });
 }
 
+/// Adding an edge can only raise (or keep) tip numbers of the existing
+/// vertices — the vertex-side mirror of the wing property above, and the
+/// monotonicity `engine::incremental` leans on for insert streams.
+#[test]
+fn tip_numbers_monotone_under_edge_addition() {
+    check_property("tip-monotone-add", 0x1006, 8, |seed| {
+        let mut rng = Rng::new(seed);
+        let g = gen::erdos(8, 8, 25, seed);
+        // add one random absent edge
+        let mut extra = None;
+        for _ in 0..100 {
+            let u = rng.below(8) as u32;
+            let v = rng.below(8) as u32;
+            if !g.has_edge(u, v) {
+                extra = Some((u, v));
+                break;
+            }
+        }
+        let Some(extra) = extra else { return Ok(()) };
+        let mut edges: Vec<(u32, u32)> = g.edges().to_vec();
+        edges.push(extra);
+        let g2 = GraphBuilder::new().nu(8).nv(8).edges(&edges).build();
+        for side in [Side::U, Side::V] {
+            let t1 = brute::brute_tip_numbers(&g, side);
+            let t2 = brute::brute_tip_numbers(&g2, side);
+            for (x, (&a, &b)) in t1.iter().zip(&t2).enumerate() {
+                if b < a {
+                    return Err(format!(
+                        "{side:?} vertex {x}: θ dropped {a} → {b} after adding {extra:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Removing an edge can only lower (or keep) wing numbers of the
+/// surviving edges — the deletion direction of the same invariant.
+#[test]
+fn wing_numbers_monotone_under_edge_deletion() {
+    check_property("wing-monotone-del", 0x1007, 8, |seed| {
+        let mut rng = Rng::new(seed);
+        let g = gen::erdos(8, 8, 28, seed);
+        if g.m() == 0 {
+            return Ok(());
+        }
+        let t1 = brute::brute_wing_numbers(&g);
+        let victim = rng.usize_below(g.m());
+        let edges: Vec<(u32, u32)> = g
+            .edges()
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != victim)
+            .map(|(_, &e)| e)
+            .collect();
+        let g2 = GraphBuilder::new().nu(8).nv(8).edges(&edges).build();
+        let t2 = brute::brute_wing_numbers(&g2);
+        for e2 in 0..g2.m() as u32 {
+            let (u, v) = g2.edge(e2);
+            let e1 = g.edge_id(u, v).expect("surviving edge");
+            if t2[e2 as usize] > t1[e1 as usize] {
+                return Err(format!(
+                    "θ({u},{v}) rose {} → {} after removing edge {victim}",
+                    t1[e1 as usize], t2[e2 as usize]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Counting identities on the fast counter: Σ per-edge = 4·total,
 /// Σ per-u = Σ per-v = 2·total.
 #[test]

@@ -126,6 +126,33 @@ fn committed_smoke_baseline_parses_and_gates() {
 }
 
 #[test]
+fn committed_incremental_baseline_parses_and_gates() {
+    // Same contract as the smoke baseline: the file bench-smoke compares
+    // the `incremental` suite against must load, and its entries must
+    // refer to registered datasets/algos (empty until CI arms it).
+    let base = Report::load(Path::new("../BENCH_incremental.json")).unwrap();
+    assert_eq!(base.suite, "incremental");
+    let suite = find_suite("incremental").unwrap();
+    for e in &base.entries {
+        assert!(
+            suite.datasets.iter().any(|d| d.name == e.dataset),
+            "baseline references unregistered dataset '{}'",
+            e.dataset
+        );
+        assert!(
+            suite.algos.iter().any(|a| a.name() == e.algo),
+            "baseline references unregistered algo '{}'",
+            e.algo
+        );
+    }
+    if !base.entries.is_empty() && std::env::var("PBNG_BENCH_GATE").is_ok() {
+        let cur = run_suite(suite, &one_rep());
+        let cmp = compare(&base, &cur, &counters_only()).unwrap();
+        assert!(cmp.passed(), "{}", cmp.render());
+    }
+}
+
+#[test]
 fn theta_checksum_distinguishes_algo_outputs_only_when_different() {
     let g = find_suite("micro").unwrap().datasets[0].build();
     let a = Algo::WingBup.run(&g, 1);

@@ -1,0 +1,322 @@
+//! Differential harness for `engine::incremental` (the PR's acceptance
+//! gate): for seeded random update streams — insert-only, delete-only,
+//! and mixed, at batch sizes 1 / 16 / 256 — over the `testkit` preset
+//! generators (`zipf`, `grid`, `planted_blocks`), the incrementally
+//! maintained θ must be **byte-identical** to a from-scratch
+//! `engine::decompose` of the updated graph after *every* batch, for
+//! both wing and tip, at thread caps 1 and 8 (CI additionally runs the
+//! whole binary under `PBNG_THREADS ∈ {1, 8}` and a 4-value `PBNG_SEED`
+//! matrix — the base seed below comes from that env var).
+
+use pbng::engine::incremental::{IncrementalConfig, TipIncremental, WingIncremental};
+use pbng::engine::EngineConfig;
+use pbng::graph::dynamic::{DeltaBatch, DeltaOp};
+use pbng::graph::{gen, BipartiteGraph, Side};
+use pbng::testkit::Rng;
+use pbng::tip::tip_pbng;
+use pbng::wing::wing_pbng;
+use std::collections::BTreeSet;
+
+fn base_seed() -> u64 {
+    std::env::var("PBNG_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x1C0FFEE)
+}
+
+fn graphs(seed: u64) -> Vec<(&'static str, BipartiteGraph)> {
+    vec![
+        ("zipf", gen::zipf(40, 40, 220, 1.2, 1.2, seed)),
+        ("grid", gen::grid(40, 40, 3, 0.9, seed ^ 1)),
+        (
+            "planted_blocks",
+            gen::planted_blocks(
+                48,
+                48,
+                120,
+                &[gen::Block { rows: 6, cols: 6, density: 0.9 }],
+                seed ^ 2,
+            ),
+        ),
+    ]
+}
+
+#[derive(Clone, Copy, Debug)]
+enum StreamKind {
+    InsertOnly,
+    DeleteOnly,
+    Mixed,
+}
+
+/// Generates ops against a mirror of the current edge set, so deletions
+/// always target present edges and insertions absent pairs (plus a few
+/// deliberate no-ops to exercise set semantics).
+struct StreamGen {
+    rng: Rng,
+    present: BTreeSet<(u32, u32)>,
+    nu: usize,
+    nv: usize,
+}
+
+impl StreamGen {
+    fn new(g: &BipartiteGraph, seed: u64) -> StreamGen {
+        StreamGen {
+            rng: Rng::new(seed),
+            present: g.edges().iter().copied().collect(),
+            nu: g.nu(),
+            nv: g.nv(),
+        }
+    }
+
+    fn insert_op(&mut self) -> Option<DeltaOp> {
+        for _ in 0..64 {
+            let u = self.rng.usize_below(self.nu) as u32;
+            let v = self.rng.usize_below(self.nv) as u32;
+            if self.present.insert((u, v)) {
+                return Some(DeltaOp::Insert(u, v));
+            }
+        }
+        None
+    }
+
+    fn delete_op(&mut self) -> Option<DeltaOp> {
+        if self.present.is_empty() {
+            return None;
+        }
+        let i = self.rng.usize_below(self.present.len());
+        let &(u, v) = self.present.iter().nth(i).expect("index in range");
+        self.present.remove(&(u, v));
+        Some(DeltaOp::Remove(u, v))
+    }
+
+    fn batch(&mut self, kind: StreamKind, size: usize) -> DeltaBatch {
+        let mut ops = Vec::with_capacity(size);
+        while ops.len() < size {
+            let op = match kind {
+                StreamKind::InsertOnly => self.insert_op(),
+                StreamKind::DeleteOnly => self.delete_op(),
+                StreamKind::Mixed => {
+                    if self.rng.chance(0.5) {
+                        self.insert_op()
+                    } else {
+                        self.delete_op()
+                    }
+                }
+            };
+            match op {
+                Some(op) => ops.push(op),
+                None => break, // universe full / empty: shorter batch
+            }
+        }
+        DeltaBatch::new(ops)
+    }
+}
+
+/// θ vectors as raw bytes: "byte-identical" taken literally.
+fn bytes(theta: &[u64]) -> Vec<u8> {
+    theta.iter().flat_map(|t| t.to_le_bytes()).collect()
+}
+
+/// Drive one (graph × kind × batch size × threads) cell: after every
+/// batch, wing and tip θ must be byte-identical to from-scratch runs.
+fn run_cell(
+    name: &str,
+    g0: &BipartiteGraph,
+    kind: StreamKind,
+    batch: usize,
+    n_batches: usize,
+    threads: usize,
+) {
+    let ecfg = EngineConfig { p: 8, threads, ..Default::default() };
+    let icfg = IncrementalConfig { engine: ecfg, fallback_fraction: 0.3 };
+    let mut wing = WingIncremental::new(g0, icfg);
+    let mut tip = TipIncremental::new(g0, Side::U, icfg);
+    let mut stream = StreamGen::new(g0, base_seed() ^ (batch as u64) << 8);
+    let mut applied = 0usize;
+    for bi in 0..n_batches {
+        let b = stream.batch(kind, batch);
+        if b.ops.is_empty() {
+            break;
+        }
+        let uw = wing.apply(&b);
+        let ut = tip.apply(&b);
+        applied += 1;
+        let g = wing.graph().clone();
+        assert_eq!(
+            g.edges().iter().copied().collect::<BTreeSet<_>>(),
+            stream.present,
+            "{name}/{kind:?} b={batch} t={threads}: edge set diverged at batch {bi}"
+        );
+        let wing_fresh = wing_pbng(&g, ecfg).theta;
+        assert_eq!(
+            bytes(wing.theta()),
+            bytes(&wing_fresh),
+            "{name}/{kind:?} b={batch} t={threads}: wing θ diverged at batch {bi} \
+             (affected {}/{}, full={})",
+            uw.affected_entities,
+            uw.total_entities,
+            uw.full_rebuild
+        );
+        let tip_fresh = tip_pbng(&g, Side::U, ecfg).theta;
+        assert_eq!(
+            bytes(tip.theta()),
+            bytes(&tip_fresh),
+            "{name}/{kind:?} b={batch} t={threads}: tip θ diverged at batch {bi} \
+             (affected {}/{}, full={})",
+            ut.affected_entities,
+            ut.total_entities,
+            ut.full_rebuild
+        );
+    }
+    // the differential loop must have actually run
+    assert!(applied > 0, "{name}/{kind:?} b={batch}: no batch was applied");
+}
+
+fn run_matrix(kind: StreamKind, batch: usize, n_batches: usize) {
+    for (name, g) in graphs(base_seed()) {
+        for threads in [1usize, 8] {
+            run_cell(name, &g, kind, batch, n_batches, threads);
+        }
+    }
+}
+
+#[test]
+fn insert_only_batch_1() {
+    run_matrix(StreamKind::InsertOnly, 1, 10);
+}
+
+#[test]
+fn insert_only_batch_16() {
+    run_matrix(StreamKind::InsertOnly, 16, 5);
+}
+
+#[test]
+fn insert_only_batch_256() {
+    run_matrix(StreamKind::InsertOnly, 256, 2);
+}
+
+#[test]
+fn delete_only_batch_1() {
+    run_matrix(StreamKind::DeleteOnly, 1, 10);
+}
+
+#[test]
+fn delete_only_batch_16() {
+    run_matrix(StreamKind::DeleteOnly, 16, 5);
+}
+
+#[test]
+fn delete_only_batch_256() {
+    run_matrix(StreamKind::DeleteOnly, 256, 2);
+}
+
+#[test]
+fn mixed_batch_1() {
+    run_matrix(StreamKind::Mixed, 1, 10);
+}
+
+#[test]
+fn mixed_batch_16() {
+    run_matrix(StreamKind::Mixed, 16, 5);
+}
+
+#[test]
+fn mixed_batch_256() {
+    run_matrix(StreamKind::Mixed, 256, 2);
+}
+
+/// ISSUE acceptance: the fallback-to-full path must be exercised and
+/// stay byte-identical. `fallback_fraction = 0.0` forces it on every
+/// butterfly-touching batch; `1.0` forbids it entirely.
+#[test]
+fn fallback_thresholds_both_paths_stay_identical() {
+    let gs = graphs(base_seed());
+    let g0 = &gs[0].1;
+    let ecfg = EngineConfig { p: 8, threads: 8, ..Default::default() };
+    for (fraction, want_full) in [(0.0f64, true), (1.0, false)] {
+        let icfg = IncrementalConfig { engine: ecfg, fallback_fraction: fraction };
+        let mut wing = WingIncremental::new(g0, icfg);
+        let mut tip = TipIncremental::new(g0, Side::U, icfg);
+        let mut stream = StreamGen::new(g0, base_seed() ^ 0xFA11);
+        let mut any_full = false;
+        let mut any_affected = false;
+        for _ in 0..6 {
+            let b = stream.batch(StreamKind::Mixed, 8);
+            let uw = wing.apply(&b);
+            let ut = tip.apply(&b);
+            any_full |= uw.full_rebuild || ut.full_rebuild;
+            any_affected |= uw.affected_entities > 0 || ut.affected_entities > 0;
+            let g = wing.graph().clone();
+            assert_eq!(bytes(wing.theta()), bytes(&wing_pbng(&g, ecfg).theta));
+            assert_eq!(bytes(tip.theta()), bytes(&tip_pbng(&g, Side::U, ecfg).theta));
+            if !want_full {
+                assert!(!uw.full_rebuild && !ut.full_rebuild, "fraction 1.0 must never rebuild");
+            }
+        }
+        if want_full {
+            assert!(any_full, "fraction 0.0 never exercised the fallback path");
+        } else {
+            assert!(any_affected, "stream never touched a butterfly");
+        }
+    }
+}
+
+/// Set semantics: no-op batches (re-inserting present edges, removing
+/// absent ones, remove+reinsert) leave θ, counts, and the graph alone.
+#[test]
+fn noop_batches_change_nothing() {
+    let gs = graphs(base_seed());
+    let g0 = &gs[0].1;
+    let icfg = IncrementalConfig {
+        engine: EngineConfig { p: 8, threads: 1, ..Default::default() },
+        fallback_fraction: 0.3,
+    };
+    let mut wing = WingIncremental::new(g0, icfg);
+    let theta0 = wing.theta().to_vec();
+    let (u, v) = g0.edge(0);
+    let u2 = (u + 1) % g0.nu() as u32;
+    let churn = if g0.has_edge(u2, v) {
+        [DeltaOp::Remove(u2, v), DeltaOp::Insert(u2, v)] // remove + re-add
+    } else {
+        [DeltaOp::Insert(u2, v), DeltaOp::Remove(u2, v)] // add + undo
+    };
+    let up = wing.apply(&DeltaBatch::new(vec![
+        DeltaOp::Insert(u, v), // already present: pure no-op
+        churn[0],
+        churn[1],
+    ]));
+    assert_eq!(up.inserted + up.removed, 0);
+    assert_eq!(wing.graph().edges(), g0.edges());
+    assert_eq!(wing.theta(), &theta0[..]);
+    let empty = wing.apply(&DeltaBatch::default());
+    assert_eq!(empty.affected_entities, 0);
+    assert_eq!(wing.theta(), &theta0[..]);
+}
+
+/// The delta-maintained butterfly counts must stay equal to a fresh
+/// count of the updated graph (the invariant invalidation builds on).
+#[test]
+fn maintained_counts_match_fresh_recounts() {
+    let gs = graphs(base_seed());
+    let g0 = &gs[1].1;
+    let icfg = IncrementalConfig {
+        engine: EngineConfig { p: 8, threads: 1, ..Default::default() },
+        fallback_fraction: 1.0, // keep the delta-maintained path active
+    };
+    let mut wing = WingIncremental::new(g0, icfg);
+    let mut tip = TipIncremental::new(g0, Side::U, icfg);
+    let mut stream = StreamGen::new(g0, base_seed() ^ 0xC07);
+    for _ in 0..4 {
+        let b = stream.batch(StreamKind::Mixed, 12);
+        wing.apply(&b);
+        tip.apply(&b);
+        let g = wing.graph().clone();
+        let (fresh, _) = pbng::count::pve_bcnt(
+            &g,
+            pbng::count::CountOptions { per_edge: true, build_blooms: false, threads: 1 },
+            None,
+        );
+        assert_eq!(wing.counts(), &fresh.per_edge[..], "per-edge counts drifted");
+        assert_eq!(tip.counts(), &fresh.per_u[..], "per-vertex counts drifted");
+    }
+}

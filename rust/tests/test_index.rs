@@ -160,6 +160,68 @@ fn serving_protocol_answers_match_engine_state() {
 }
 
 #[test]
+fn forest_refresh_after_incremental_update_matches_fresh_index() {
+    // ISSUE satellite: after `engine::incremental` applies edge deltas,
+    // rebuilding the forest from the post-update θ must answer every
+    // query identically to an index built from a from-scratch
+    // decomposition of the updated graph — i.e. `pbng update` + `pbng
+    // index` composes with no staleness.
+    use pbng::engine::incremental::{IncrementalConfig, WingIncremental};
+    use pbng::engine::EngineConfig;
+    use pbng::graph::dynamic::{DeltaBatch, DeltaOp};
+
+    let g = gen::zipf(40, 40, 260, 1.2, 1.2, 0x1DF);
+    let ecfg = EngineConfig { p: 6, threads: 2, ..Default::default() };
+    let mut inc = WingIncremental::new(
+        &g,
+        IncrementalConfig { engine: ecfg, fallback_fraction: 0.5 },
+    );
+    // deterministic churn: drop a handful of hub edges, add fresh pairs
+    let mut ops: Vec<DeltaOp> = (0..6u32)
+        .map(|i| {
+            let (u, v) = g.edge(i * 7 % g.m() as u32);
+            DeltaOp::Remove(u, v)
+        })
+        .collect();
+    let mut rng = Rng::new(0x1DF2);
+    for _ in 0..10 {
+        ops.push(DeltaOp::Insert(rng.below(40) as u32, rng.below(40) as u32));
+    }
+    inc.apply(&DeltaBatch::new(ops));
+
+    let g2 = inc.graph().clone();
+    let (idx2, _) = BeIndex::build(&g2, 2);
+    // forest refreshed from the incrementally maintained θ ...
+    let refreshed = build_wing_forest(&g2, &idx2, inc.theta(), 2);
+    refreshed.validate().unwrap();
+    // ... must equal the forest of a from-scratch decomposition
+    let fresh_theta = wing_bup(&g2).theta;
+    assert_eq!(inc.theta(), &fresh_theta[..], "incremental θ diverged");
+    let fresh = build_wing_forest(&g2, &idx2, &fresh_theta, 2);
+    assert_eq!(refreshed, fresh, "refreshed forest diverged from fresh build");
+    // and `pbng query`-level answers must match a fresh index, level by
+    // level, including through a codec round trip
+    let (_dir, path) = tmp("refresh.idx");
+    codec::save(&refreshed, &path).unwrap();
+    let engine_refreshed = QueryEngine::new(codec::load(&path).unwrap());
+    let engine_fresh = QueryEngine::new(fresh);
+    for k in probe_levels(&fresh_theta) {
+        let direct = kwing_components(&idx2, &fresh_theta, k);
+        assert_eq!(*engine_refreshed.components(k), direct, "level {k}");
+        assert_eq!(*engine_fresh.components(k), direct, "level {k}");
+        let q = format!("kwing {k}");
+        let a = server::handle_command(&engine_refreshed, &q);
+        let b = server::handle_command(&engine_fresh, &q);
+        match (a, b) {
+            (server::Reply::Body(a), server::Reply::Body(b)) => {
+                assert_eq!(a, b, "query answers diverged at level {k}")
+            }
+            _ => unreachable!("kwing never quits"),
+        }
+    }
+}
+
+#[test]
 fn hierarchy_summary_agrees_with_forest_and_direct() {
     let g = gen::Preset::NestedS.build();
     let (forest, idx, theta) = wing_setup(&g);
