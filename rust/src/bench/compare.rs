@@ -195,12 +195,46 @@ fn check_entry(key: &str, be: &Entry, ce: &Entry, th: &Thresholds, cmp: &mut Com
             ));
         }
     }
-    if !th.ignore_time && ce.wall_ms.min > be.wall_ms.min * th.time_factor {
-        cmp.regressions.push(format!(
-            "{key} wall_ms.min: {:.3} -> {:.3} (> {:.2}x baseline)",
-            be.wall_ms.min, ce.wall_ms.min, th.time_factor
-        ));
+    if !th.ignore_time {
+        // Median-of-repetitions when both sides recorded per-rep times
+        // (additive `rep_ms` field): a single slow rep on a shared
+        // runner no longer moves the gated statistic. Older baselines
+        // without `rep_ms` fall back to the original `min` gate.
+        match (median(&be.rep_ms), median(&ce.rep_ms)) {
+            (Some(bm), Some(cm)) => {
+                if cm > bm * th.time_factor {
+                    cmp.regressions.push(format!(
+                        "{key} wall_ms median-of-reps: {bm:.3} -> {cm:.3} (> {:.2}x baseline)",
+                        th.time_factor
+                    ));
+                }
+            }
+            _ => {
+                if ce.wall_ms.min > be.wall_ms.min * th.time_factor {
+                    cmp.regressions.push(format!(
+                        "{key} wall_ms.min: {:.3} -> {:.3} (> {:.2}x baseline)",
+                        be.wall_ms.min, ce.wall_ms.min, th.time_factor
+                    ));
+                }
+            }
+        }
     }
+}
+
+/// Median of the recorded per-repetition times; `None` when the report
+/// predates the `rep_ms` field.
+fn median(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).expect("wall times are finite"));
+    let n = s.len();
+    Some(if n % 2 == 1 {
+        s[n / 2]
+    } else {
+        (s[n / 2 - 1] + s[n / 2]) / 2.0
+    })
 }
 
 #[cfg(test)]
@@ -269,12 +303,53 @@ mod tests {
         let base = sample_report(vec![sample_entry("a", "wing/bup", 100)]);
         let mut cur = base.clone();
         cur.entries[0].wall_ms.min = base.entries[0].wall_ms.min * 10.0;
+        cur.entries[0].rep_ms = base.entries[0].rep_ms.iter().map(|t| t * 10.0).collect();
         assert!(!compare(&base, &cur, &Thresholds::default()).unwrap().passed());
         assert!(compare(&base, &cur, &counters_only()).unwrap().passed());
         // within the factor: passes
         let mut mild = base.clone();
         mild.entries[0].wall_ms.min = base.entries[0].wall_ms.min * 1.4;
+        mild.entries[0].rep_ms = base.entries[0].rep_ms.iter().map(|t| t * 1.4).collect();
         assert!(compare(&base, &mild, &Thresholds::default()).unwrap().passed());
+    }
+
+    #[test]
+    fn time_gate_uses_median_of_reps() {
+        // sample_entry reps are [2.5, 1.5, 2.0] -> median 2.0. One wild
+        // outlier rep must not fail the gate (the ROADMAP noise fix)...
+        let base = sample_report(vec![sample_entry("a", "wing/bup", 100)]);
+        let mut cur = base.clone();
+        cur.entries[0].rep_ms = vec![2.0, 50.0, 1.9]; // median 2.0
+        cur.entries[0].wall_ms = crate::bench::report::WallMs {
+            min: 1.9,
+            mean: 17.966,
+            max: 50.0,
+        };
+        assert!(compare(&base, &cur, &Thresholds::default()).unwrap().passed());
+        // ...while a shifted median (all reps slow) still fails.
+        let mut slow = base.clone();
+        slow.entries[0].rep_ms = vec![8.0, 8.1, 8.2];
+        assert!(!compare(&base, &slow, &Thresholds::default()).unwrap().passed());
+    }
+
+    #[test]
+    fn time_gate_falls_back_to_min_without_rep_times() {
+        // baseline written before rep_ms existed: gate on wall_ms.min
+        let mut base = sample_report(vec![sample_entry("a", "wing/bup", 100)]);
+        base.entries[0].rep_ms.clear();
+        let mut cur = base.clone();
+        cur.entries[0].wall_ms.min = base.entries[0].wall_ms.min * 10.0;
+        assert!(!compare(&base, &cur, &Thresholds::default()).unwrap().passed());
+        let ok = base.clone();
+        assert!(compare(&base, &ok, &Thresholds::default()).unwrap().passed());
+    }
+
+    #[test]
+    fn median_handles_odd_even_and_empty() {
+        assert_eq!(median(&[]), None);
+        assert_eq!(median(&[3.0]), Some(3.0));
+        assert_eq!(median(&[4.0, 1.0, 3.0]), Some(3.0));
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), Some(2.5));
     }
 
     #[test]

@@ -31,6 +31,7 @@
 use super::runner::BenchOptions;
 use crate::index::codec::fnv64;
 use crate::jsonio::Value;
+use crate::metrics::MetersSnapshot;
 use crate::peel::Decomposition;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -91,8 +92,91 @@ pub struct Entry {
     pub m: usize,
     pub algo: String,
     pub wall_ms: WallMs,
+    /// Wall time of each individual repetition, in report order —
+    /// `bench compare` gates on the median of these when both sides
+    /// carry them (less runner-noise flake than `min`). Empty in
+    /// reports written before the field existed.
+    pub rep_ms: Vec<f64>,
     pub counters: Counters,
+    /// Per-partition FD balance summary of the recorded repetition
+    /// (informational, never gated).
+    pub fd_balance: FdBalance,
     pub phases: Vec<PhaseRow>,
+}
+
+/// Per-partition workload-balance summary of the FD phase, distilled
+/// from the obs `fd_task` spans of the recorded repetition: task-time
+/// spread across partitions (max/mean/stddev) plus how many tasks were
+/// claimed through the steal path — the RECEIPT-style view that tells
+/// whether LPT + stealing actually evened out the lanes. Timing-derived
+/// and schedule-dependent, so informational only; `bench compare` never
+/// gates on it.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FdBalance {
+    /// FD partition tasks observed (0 for baselines without an FD phase).
+    pub tasks: u64,
+    /// Tasks claimed via the global steal path rather than a lane's own
+    /// pre-assigned list.
+    pub steals: u64,
+    /// Distinct pool lanes that executed at least one task.
+    pub lanes: u64,
+    pub max_ms: f64,
+    pub mean_ms: f64,
+    pub stddev_ms: f64,
+}
+
+impl FdBalance {
+    /// Summarize the `fd_task` spans in an obs event drain.
+    pub fn from_events(events: &[crate::obs::Event]) -> FdBalance {
+        let mut durs_ms: Vec<f64> = Vec::new();
+        let mut steals = 0u64;
+        let mut lanes = std::collections::BTreeSet::new();
+        for (enter, exit) in crate::obs::pair_spans(events) {
+            if enter.kind == crate::obs::Kind::FdTask {
+                durs_ms.push((exit.ts_ns.saturating_sub(enter.ts_ns)) as f64 / 1e6);
+                steals += u64::from(enter.c != 0);
+                lanes.insert(enter.lane);
+            }
+        }
+        if durs_ms.is_empty() {
+            return FdBalance::default();
+        }
+        let n = durs_ms.len() as f64;
+        let max = durs_ms.iter().copied().fold(0.0f64, f64::max);
+        let mean = durs_ms.iter().sum::<f64>() / n;
+        let var = durs_ms.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        // microsecond precision: FD tasks are often sub-millisecond
+        let r = |x: f64| (x * 1e6).round() / 1e6;
+        FdBalance {
+            tasks: durs_ms.len() as u64,
+            steals,
+            lanes: lanes.len() as u64,
+            max_ms: r(max),
+            mean_ms: r(mean),
+            stddev_ms: r(var.sqrt()),
+        }
+    }
+
+    fn to_json(self) -> Value {
+        Value::obj()
+            .with("tasks", self.tasks)
+            .with("steals", self.steals)
+            .with("lanes", self.lanes)
+            .with("max_ms", self.max_ms)
+            .with("mean_ms", self.mean_ms)
+            .with("stddev_ms", self.stddev_ms)
+    }
+
+    fn from_json(v: &Value) -> Result<FdBalance> {
+        Ok(FdBalance {
+            tasks: v.req_u64("tasks")?,
+            steals: v.req_u64("steals")?,
+            lanes: v.req_u64("lanes")?,
+            max_ms: v.req_f64("max_ms")?,
+            mean_ms: v.req_f64("mean_ms")?,
+            stddev_ms: v.req_f64("stddev_ms")?,
+        })
+    }
 }
 
 /// Wall-time statistics over the repetitions, in milliseconds. `min` is
@@ -144,15 +228,21 @@ impl Counters {
     }
 
     fn to_json(self) -> Value {
-        // Spelled out rather than delegated to `MetersSnapshot::to_json`:
-        // that snapshot now also carries `spawns`, a process-lifetime
-        // runtime metric (non-zero only for the run that first warms the
-        // worker pool) that has no place in a deterministically-gated
-        // report section — and the v1 key set must stay byte-stable.
-        Value::obj()
-            .with("updates", self.updates)
-            .with("wedges", self.wedges)
-            .with("rho", self.rho)
+        // The deterministic core goes through the one shared serializer
+        // (`metrics::counters_to_json` over `MetersSnapshot::core_pairs`)
+        // — the same prefix `MetersSnapshot::to_json` emits, so the two
+        // counter sections cannot silently diverge. `spawns`, a
+        // process-lifetime runtime metric (non-zero only for the run
+        // that first warms the worker pool), stays excluded here and the
+        // v1 key set stays byte-stable; the output-shape metrics follow.
+        let core = MetersSnapshot {
+            updates: self.updates,
+            wedges: self.wedges,
+            rho: self.rho,
+            spawns: 0,
+            invalidated_parts: 0,
+        };
+        crate::metrics::counters_to_json(&core.core_pairs())
             .with("theta_max", self.theta_max)
             .with("peak_entities", self.peak_entities)
             .with("theta_fnv", format!("{:#018x}", self.theta_fnv))
@@ -300,6 +390,7 @@ impl Entry {
                     .with("wedges", p.wedges)
             })
             .collect();
+        let rep_ms: Vec<Value> = self.rep_ms.iter().map(|&t| Value::from(t)).collect();
         Value::obj()
             .with("dataset", self.dataset.as_str())
             .with("seed", self.seed)
@@ -314,7 +405,9 @@ impl Entry {
                     .with("mean", self.wall_ms.mean)
                     .with("max", self.wall_ms.max),
             )
+            .with("rep_ms", rep_ms)
             .with("counters", self.counters.to_json())
+            .with("fd_balance", self.fd_balance.to_json())
             .with("phases", phases)
     }
 
@@ -329,6 +422,19 @@ impl Entry {
                 wedges: p.req_u64("wedges")?,
             });
         }
+        // Both fields below were added after v1 baselines shipped; absent
+        // means "written by an older binary", not an error (additive
+        // schema evolution, see the module docs).
+        let mut rep_ms = Vec::new();
+        if let Some(arr) = v.get("rep_ms").and_then(|x| x.as_arr()) {
+            for t in arr {
+                rep_ms.push(t.as_f64().context("rep_ms entry")?);
+            }
+        }
+        let fd_balance = match v.get("fd_balance") {
+            Some(b) => FdBalance::from_json(b).context("fd_balance")?,
+            None => FdBalance::default(),
+        };
         Ok(Entry {
             dataset: v.req_str("dataset")?.to_string(),
             seed: v.req_u64("seed")?,
@@ -341,7 +447,9 @@ impl Entry {
                 mean: w.req_f64("mean")?,
                 max: w.req_f64("max")?,
             },
+            rep_ms,
             counters: Counters::from_json(v.req("counters")?).context("counters")?,
+            fd_balance,
             phases,
         })
     }
@@ -360,6 +468,15 @@ pub(super) mod tests {
             m: 40,
             algo: algo.to_string(),
             wall_ms: WallMs { min: 1.5, mean: 2.0, max: 2.5 },
+            rep_ms: vec![2.5, 1.5, 2.0],
+            fd_balance: FdBalance {
+                tasks: 8,
+                steals: 2,
+                lanes: 2,
+                max_ms: 0.5,
+                mean_ms: 0.25,
+                stddev_ms: 0.125,
+            },
             counters: Counters {
                 updates,
                 wedges: 2 * updates,
@@ -416,6 +533,90 @@ pub(super) mod tests {
         }
         let err = Report::from_json(&v).unwrap_err().to_string();
         assert!(err.contains("schema_version"), "{err}");
+    }
+
+    #[test]
+    fn rep_times_and_balance_round_trip() {
+        let r = sample_report(vec![sample_entry("a", "wing/pbng", 10)]);
+        let back = Report::parse(&r.to_json().to_pretty()).unwrap();
+        assert_eq!(back.entries[0].rep_ms, vec![2.5, 1.5, 2.0]);
+        assert_eq!(back.entries[0].fd_balance, r.entries[0].fd_balance);
+    }
+
+    #[test]
+    fn entries_without_new_fields_still_load() {
+        // Reports written before rep_ms / fd_balance existed must load
+        // with defaults (additive schema evolution, no version bump).
+        let r = sample_report(vec![sample_entry("a", "wing/pbng", 10)]);
+        let mut v = r.to_json();
+        if let Value::Obj(kv) = &mut v {
+            let entries = kv.iter_mut().find(|(k, _)| k == "entries").unwrap();
+            if let Value::Arr(es) = &mut entries.1 {
+                if let Value::Obj(e) = &mut es[0] {
+                    e.retain(|(k, _)| k != "rep_ms" && k != "fd_balance");
+                }
+            }
+        }
+        let back = Report::from_json(&v).unwrap();
+        assert!(back.entries[0].rep_ms.is_empty());
+        assert_eq!(back.entries[0].fd_balance, FdBalance::default());
+    }
+
+    #[test]
+    fn fd_balance_from_events_summarizes_tasks() {
+        use crate::obs::{Event, Kind};
+        let task = |span: u64, lane: u32, t0: u64, t1: u64, steal: u64| {
+            [
+                Event {
+                    ts_ns: t0,
+                    span,
+                    lane,
+                    kind: Kind::FdTask,
+                    is_exit: false,
+                    a: span,
+                    b: 10,
+                    c: steal,
+                },
+                Event {
+                    ts_ns: t1,
+                    span,
+                    lane,
+                    kind: Kind::FdTask,
+                    is_exit: true,
+                    a: span,
+                    b: 10,
+                    c: steal,
+                },
+            ]
+        };
+        let mut evs = Vec::new();
+        evs.extend(task(1, 0, 0, 2_000_000, 0)); // 2 ms
+        evs.extend(task(2, 1, 0, 4_000_000, 1)); // 4 ms, stolen
+        // a non-FD span must be ignored
+        evs.push(Event {
+            ts_ns: 0,
+            span: 3,
+            lane: 0,
+            kind: Kind::CdRound,
+            is_exit: false,
+            ..Event::default()
+        });
+        evs.push(Event {
+            ts_ns: 1,
+            span: 3,
+            lane: 0,
+            kind: Kind::CdRound,
+            is_exit: true,
+            ..Event::default()
+        });
+        let b = FdBalance::from_events(&evs);
+        assert_eq!(b.tasks, 2);
+        assert_eq!(b.steals, 1);
+        assert_eq!(b.lanes, 2);
+        assert_eq!(b.max_ms, 4.0);
+        assert_eq!(b.mean_ms, 3.0);
+        assert_eq!(b.stddev_ms, 1.0);
+        assert_eq!(FdBalance::from_events(&[]), FdBalance::default());
     }
 
     #[test]

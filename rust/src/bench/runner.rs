@@ -9,9 +9,10 @@
 //!
 //! [`PeelStats::total`]: crate::metrics::PeelStats
 
-use super::report::{Counters, Entry, Env, PhaseRow, Report, WallMs};
+use super::report::{Counters, Entry, Env, FdBalance, PhaseRow, Report, WallMs};
 use super::{Algo, DatasetSpec, Suite};
 use crate::graph::BipartiteGraph;
+use crate::obs;
 
 #[derive(Clone, Copy, Debug)]
 pub struct BenchOptions {
@@ -59,9 +60,27 @@ fn run_cell(ds: &DatasetSpec, g: &BipartiteGraph, algo: Algo, opts: &BenchOption
     let reps = opts.repetitions; // >= 1, normalized by run_suite
     let mut times_ms = Vec::with_capacity(reps);
     let mut last = None;
+    // The FD balance summary is distilled from obs spans, but the runner
+    // never toggles the global tracing window itself (a library has no
+    // business flipping process state under a concurrent caller): the
+    // summary is collected only when the caller — `pbng bench` always
+    // does — enabled tracing. Obs overhead is a branch plus one
+    // lane-local buffer write per span, far below the wall gate's slack,
+    // and does not touch the gated counters at all.
+    let collect = obs::enabled();
+    let mut balance = FdBalance::default();
     for _ in 0..reps {
+        if collect {
+            obs::clear();
+        }
         let d = algo.run(g, opts.threads);
         times_ms.push(d.stats.total.as_secs_f64() * 1e3);
+        if collect {
+            // like the counters: the balance describes the recorded
+            // (last) repetition; a snapshot (not a drain) leaves the
+            // window in place for `pbng bench --trace` to export
+            balance = FdBalance::from_events(&obs::snapshot_events());
+        }
         last = Some(d);
     }
     let d = last.expect("at least one repetition");
@@ -76,6 +95,8 @@ fn run_cell(ds: &DatasetSpec, g: &BipartiteGraph, algo: Algo, opts: &BenchOption
             wedges: *wdg,
         })
         .collect();
+    // per-rep times at the same millisecond precision as `wall_ms`
+    let rep_ms: Vec<f64> = times_ms.iter().map(|&t| (t * 1000.0).round() / 1000.0).collect();
     Entry {
         dataset: ds.name.to_string(),
         seed: ds.seed,
@@ -84,7 +105,9 @@ fn run_cell(ds: &DatasetSpec, g: &BipartiteGraph, algo: Algo, opts: &BenchOption
         m: g.m(),
         algo: algo.name().to_string(),
         wall_ms: WallMs::from_times(&times_ms),
+        rep_ms,
         counters: Counters::from_decomposition(&d),
+        fd_balance: balance,
         phases,
     }
 }
@@ -125,6 +148,9 @@ mod tests {
 
     #[test]
     fn repetitions_and_warmup_are_recorded() {
+        // enables the global tracing window to exercise balance capture
+        let _g = crate::obs::test_guard();
+        crate::obs::enable();
         let micro = find_suite("micro").unwrap();
         let suite = crate::bench::Suite {
             name: "unit",
@@ -138,9 +164,18 @@ mod tests {
         assert_eq!(r.env.warmup, 1);
         assert_eq!(r.env.threads, 1);
         assert!(!r.env.crate_version.is_empty());
+        // one recorded wall time per repetition, and the FD balance
+        // summary of the recorded rep is populated for a PBNG algorithm
+        let e = &r.entries[0];
+        assert_eq!(e.rep_ms.len(), 2);
+        assert!(e.rep_ms.iter().all(|&t| t >= 0.0));
+        assert!(e.fd_balance.tasks > 0, "wing/pbng ran FD tasks");
+        assert!(e.fd_balance.lanes >= 1);
         // repetitions are normalized, and the env stanza reflects that
         let zero = BenchOptions { repetitions: 0, ..opts };
         let r0 = run_suite(&suite, &zero);
         assert_eq!(r0.env.repetitions, 1);
+        crate::obs::disable();
+        crate::obs::clear();
     }
 }

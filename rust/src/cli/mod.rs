@@ -24,6 +24,7 @@ const BOOL_FLAGS: &[&str] = &[
     "levels",
     "list",
     "quiet",
+    "trace",
     "verify",
 ];
 

@@ -17,6 +17,7 @@
 use super::range::{find_range, AdaptiveTarget};
 use super::{CdOutput, EngineConfig, PeelDomain, PeelOutcome};
 use crate::metrics::Meters;
+use crate::obs;
 
 pub fn coarse_decompose<D: PeelDomain>(
     dom: &mut D,
@@ -73,6 +74,8 @@ pub fn coarse_decompose<D: PeelDomain>(
         while !active.is_empty() {
             meters.rho.add(1);
             epoch += 1;
+            let _sp =
+                obs::span(obs::Kind::CdRound, i as u64, u64::from(epoch), active.len() as u64);
             for &x in &active {
                 part_of[x as usize] = i as u32;
                 partition_work += dom.workload_proxy(x, sup_init[x as usize]);

@@ -15,6 +15,7 @@
 
 use super::{CdOutput, EngineConfig, PeelDomain};
 use crate::metrics::Meters;
+use crate::obs;
 use crate::par::{spmd, RacyCell};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
@@ -56,8 +57,10 @@ impl LaneQueue {
     }
 
     /// Next partition for logical lane `t`, or `None` once every
-    /// partition is claimed.
-    fn next(&self, t: usize) -> Option<usize> {
+    /// partition is claimed. The flag reports provenance: `true` when the
+    /// partition came from the global steal path rather than the lane's
+    /// own pre-assigned list (obs / balance attribution).
+    fn next_task(&self, t: usize) -> Option<(usize, bool)> {
         let lane = t % self.lanes.len();
         let own = &self.lanes[lane];
         let cursor = &self.cursors[lane];
@@ -68,7 +71,7 @@ impl LaneQueue {
             }
             let i = own[c];
             if !self.taken[i].swap(true, Ordering::Relaxed) {
-                return Some(i);
+                return Some((i, false));
             }
         }
         loop {
@@ -78,7 +81,7 @@ impl LaneQueue {
             }
             let i = self.order[c];
             if !self.taken[i].swap(true, Ordering::Relaxed) {
-                return Some(i);
+                return Some((i, true));
             }
         }
     }
@@ -103,7 +106,8 @@ pub fn fine_decompose<D: PeelDomain>(
 
     let theta_cell = RacyCell::new(vec![0u64; dom.n_entities()]);
     spmd(threads, |t| {
-        while let Some(i) = queue.next(t) {
+        while let Some((i, stolen)) = queue.next_task(t) {
+            let _sp = obs::span(obs::Kind::FdTask, i as u64, work[i], u64::from(stolen));
             // SAFETY: CD assigns every entity to exactly one partition,
             // the queue hands every partition to exactly one logical
             // lane, and `peel_partition` only writes θ slots of its own
@@ -136,8 +140,8 @@ mod tests {
                 if done[t] {
                     continue;
                 }
-                match q.next(t) {
-                    Some(i) => assert!(seen.insert(i), "partition {i} handed out twice"),
+                match q.next_task(t) {
+                    Some((i, _)) => assert!(seen.insert(i), "partition {i} handed out twice"),
                     None => done[t] = true,
                 }
             }
@@ -150,7 +154,8 @@ mod tests {
         let work = vec![1u64; 5];
         let q = LaneQueue::new((0..5).collect(), &work, 1);
         let mut got = Vec::new();
-        while let Some(i) = q.next(0) {
+        while let Some((i, stolen)) = q.next_task(0) {
+            assert!(!stolen, "single lane never needs to steal");
             got.push(i);
         }
         got.sort_unstable();
@@ -164,9 +169,12 @@ mod tests {
         let work = vec![4u64, 4, 4, 4];
         let q = LaneQueue::new((0..4).collect(), &work, 2);
         let mut got = Vec::new();
-        while let Some(i) = q.next(0) {
+        let mut steals = 0;
+        while let Some((i, stolen)) = q.next_task(0) {
+            steals += u32::from(stolen);
             got.push(i);
         }
+        assert!(steals > 0, "lane 0 must reach lane 1's share via the steal path");
         got.sort_unstable();
         assert_eq!(got, vec![0, 1, 2, 3]);
     }

@@ -193,7 +193,10 @@ impl WingIncremental {
     fn rebuild_full(&mut self, mut rec: Recorder<'_>) -> PeelStats {
         let threads = self.cfg.engine.threads;
         rec.enter(Phase::Count);
-        let (idx, per_edge) = BeIndex::build(&self.graph, threads);
+        let (idx, per_edge) = {
+            let _sp = crate::obs::span(crate::obs::Kind::CountKernel, self.graph.m() as u64, 0, 0);
+            BeIndex::build(&self.graph, threads)
+        };
         let m = self.graph.m();
         // butterfly components: all edges of a k >= 2 bloom are pairwise
         // butterfly-adjacent (Property 1)
@@ -321,6 +324,12 @@ impl WingIncremental {
             full_rebuild: frac > self.cfg.fallback_fraction,
             stats: PeelStats::default(),
         };
+        let _sp = crate::obs::span(
+            crate::obs::Kind::Repeel,
+            affected.len() as u64,
+            inval as u64,
+            u64::from(out.full_rebuild),
+        );
         self.graph = new_graph;
         if out.full_rebuild {
             out.stats = self.rebuild_full(rec);
@@ -362,7 +371,10 @@ impl WingIncremental {
         let sub = GraphBuilder::new().nu(us.len()).nv(vs.len()).edges(&sub_edges).build();
         debug_assert_eq!(sub.m(), affected.len());
         rec.enter(Phase::Count);
-        let (idx, per_edge) = BeIndex::build(&sub, self.cfg.engine.threads);
+        let (idx, per_edge) = {
+            let _sp = crate::obs::span(crate::obs::Kind::CountKernel, sub.m() as u64, 0, 0);
+            BeIndex::build(&sub, self.cfg.engine.threads)
+        };
         let sub_theta = {
             let mut dom = WingDomain::new(&idx, &per_edge, &self.cfg.engine);
             let r = decompose(&mut dom, &self.cfg.engine, rec);
@@ -558,6 +570,12 @@ impl TipIncremental {
             full_rebuild: frac > self.cfg.fallback_fraction,
             stats: PeelStats::default(),
         };
+        let _sp = crate::obs::span(
+            crate::obs::Kind::Repeel,
+            affected.len() as u64,
+            inval as u64,
+            u64::from(out.full_rebuild),
+        );
         self.graph = new_graph;
         if out.full_rebuild {
             out.stats = self.rebuild_full(rec);

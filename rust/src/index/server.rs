@@ -12,9 +12,16 @@
 //! top <n>             n densest components overall
 //! summary             per-level table (k, entities, components, largest)
 //! stats               index shape + query/cache counters
+//! metrics             live registry dump (index.* + server.* counters)
 //! help                command list
 //! quit                close the session
 //! ```
+//!
+//! `metrics` reads the process-wide [`crate::obs::Registry`]: the
+//! engine's [`crate::metrics::IndexMeters`] are published into it on
+//! every call (so they are readable, not write-only), alongside the
+//! always-on `server.connections` / `server.commands` counters bumped
+//! by the session loop itself.
 
 use super::query::{NodeInfo, QueryEngine};
 use super::ForestKind;
@@ -73,6 +80,7 @@ pub fn handle_command(engine: &QueryEngine, line: &str) -> Reply {
         Some(v) => v.to_ascii_lowercase(),
         None => return Reply::Body("ERR empty command (try: help)".to_string()),
     };
+    crate::obs::Registry::global().counter("server.commands").add(1);
     let body = match verb.as_str() {
         "quit" | "exit" => return Reply::Quit,
         "help" => Ok(concat!(
@@ -83,6 +91,7 @@ pub fn handle_command(engine: &QueryEngine, line: &str) -> Reply {
             "  top <n>          n densest components\n",
             "  summary          per-level hierarchy table\n",
             "  stats            index shape + query counters\n",
+            "  metrics          live registry dump (index.* + server.*)\n",
             "  quit             close the session"
         )
         .to_string()),
@@ -167,6 +176,16 @@ pub fn handle_command(engine: &QueryEngine, line: &str) -> Reply {
                 engine.meters.cache_misses.get(),
             ))
         }
+        "metrics" => {
+            let reg = crate::obs::Registry::global();
+            engine.meters.publish(reg);
+            Ok(reg
+                .counter_snapshot()
+                .iter()
+                .map(|(n, v)| format!("{n} {v}"))
+                .collect::<Vec<_>>()
+                .join("\n"))
+        }
         other => Err(format!("unknown command '{other}' (try: help)")),
     };
     Reply::Body(match body {
@@ -176,6 +195,7 @@ pub fn handle_command(engine: &QueryEngine, line: &str) -> Reply {
 }
 
 fn session<R: BufRead, W: Write>(engine: &QueryEngine, reader: R, mut writer: W) -> std::io::Result<()> {
+    crate::obs::Registry::global().counter("server.connections").add(1);
     writeln!(
         writer,
         "READY kind={} entities={} nodes={} levels={}",
@@ -302,6 +322,33 @@ mod tests {
         let sm = body(&e, "summary");
         assert_eq!(sm.lines().count(), 4, "{sm}");
         assert!(sm.contains("level 4 entities 9 components 1 largest 9"), "{sm}");
+    }
+
+    #[test]
+    fn metrics_verb_reads_registry() {
+        let e = engine();
+        // drive a query so the cache counters move, then dump
+        let _ = body(&e, "kwing 2");
+        let b = body(&e, "metrics");
+        let mut seen_queries = false;
+        for line in b.lines() {
+            let mut toks = line.split_whitespace();
+            let name = toks.next().unwrap();
+            let val: u64 = toks.next().unwrap().parse().unwrap();
+            assert!(toks.next().is_none(), "bad metrics line: {line}");
+            if name == "index.queries" {
+                assert!(val >= 1, "{line}");
+                seen_queries = true;
+            }
+        }
+        assert!(seen_queries, "index.queries missing from:\n{b}");
+        assert!(b.contains("server.commands"), "{b}");
+        // names come out sorted (registry snapshot contract)
+        let names: Vec<&str> =
+            b.lines().map(|l| l.split_whitespace().next().unwrap()).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted);
     }
 
     #[test]

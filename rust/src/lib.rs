@@ -33,6 +33,7 @@ pub mod graph;
 pub mod index;
 pub mod jsonio;
 pub mod metrics;
+pub mod obs;
 pub mod par;
 pub mod hierarchy;
 pub mod peel;

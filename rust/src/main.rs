@@ -11,8 +11,13 @@
 //!   query      one-shot query against a persisted index
 //!   serve      serve index queries over stdin or TCP
 //!   bench      run a benchmark suite / compare two bench reports
+//!   trace      run one decomposition with span tracing, write the trace
 //!   verify     run all algorithms and assert they agree
 //!   info       runtime / artifact status
+//!
+//! `wing`, `tip`, `update`, and `bench` also accept `--trace`
+//! (`--trace-out FILE`) to capture a Chrome trace of the run they
+//! already do.
 
 use anyhow::{bail, Context, Result};
 use pbng::cli::Args;
@@ -57,11 +62,16 @@ USAGE: pbng <command> [args]
         [--out FILE] [--list]
   bench compare <baseline.json> <current.json> [--counter-tolerance F]
         [--time-factor F] [--ignore-time] [--allow-empty-baseline]
+  trace <graph.tsv> [--kind wing|tip-u|tip-v] [--p P] [--threads T]
+        [--format chrome|jsonl] [--out trace.json] [--verify]
   verify <graph.tsv> [--p P] [--threads T]
   info
 
+wing/tip/update/bench also take --trace [--trace-out FILE] to write a
+Chrome trace (trace.json) of the run.
+
 Index line protocol: components/kwing/ktip <k>, membership <id>,
-densest <id>, top <n>, summary, stats, help, quit.
+densest <id>, top <n>, summary, stats, metrics, help, quit.
 
 <graph.tsv> may also be a preset name.
 Presets: {}",
@@ -88,6 +98,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "query" => cmd_query(&args),
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
+        "trace" => cmd_trace(&args),
         "verify" => cmd_verify(&args),
         "info" => cmd_info(&args),
         other => bail!("unknown command '{other}' (try --help)"),
@@ -202,12 +213,86 @@ fn report(name: &str, d: &pbng::peel::Decomposition) {
     println!("  θ_max = {max}");
 }
 
+/// Shared `--trace` handling for wing/tip/update/bench: when requested,
+/// turns span collection on and returns the trace output path.
+fn trace_begin(args: &Args) -> Option<String> {
+    let out = args.get("trace-out").map(str::to_string);
+    if args.flag("trace") || out.is_some() {
+        pbng::obs::enable();
+        Some(out.unwrap_or_else(|| "trace.json".to_string()))
+    } else {
+        None
+    }
+}
+
+/// Counterpart of [`trace_begin`]: drains the buffered spans and writes
+/// a Chrome `trace_event` JSON file.
+fn trace_finish(out: Option<String>) -> Result<()> {
+    let Some(path) = out else { return Ok(()) };
+    let events = pbng::obs::take_events();
+    pbng::obs::disable();
+    let text = pbng::obs::export::chrome_trace(&events).to_pretty();
+    std::fs::write(&path, text).with_context(|| format!("writing trace to {path}"))?;
+    let dropped = pbng::obs::dropped();
+    let note = if dropped > 0 { format!(" ({dropped} dropped)") } else { String::new() };
+    println!("wrote {} trace events to {path}{note}", events.len());
+    Ok(())
+}
+
+/// `pbng trace`: run one decomposition with span tracing on, validate
+/// the span stream, and write the trace in the requested format.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let kind = args.get_or("kind", "wing").to_string();
+    let cfg = engine_cfg(args, if kind == "wing" { 64 } else { 32 })?;
+    let out = args.get_or("out", "trace.json").to_string();
+    let format = args.get_or("format", "chrome").to_string();
+    let verify = args.flag("verify");
+    args.check_unknown()?;
+    pbng::obs::enable();
+    let d = match kind.as_str() {
+        "wing" => pbng::wing::wing_pbng(&g, cfg),
+        "tip" | "tip-u" => pbng::tip::tip_pbng(&g, Side::U, cfg),
+        "tip-v" => pbng::tip::tip_pbng(&g, Side::V, cfg),
+        k => bail!("unknown --kind '{k}' (wing | tip-u | tip-v)"),
+    };
+    let events = pbng::obs::take_events();
+    pbng::obs::disable();
+    pbng::obs::check_spans(&events)
+        .map_err(|e| anyhow::anyhow!("malformed span stream: {e}"))?;
+    let text = match format.as_str() {
+        "chrome" => pbng::obs::export::chrome_trace(&events).to_pretty(),
+        "jsonl" => pbng::obs::export::jsonl(&events),
+        f => bail!("unknown --format '{f}' (chrome | jsonl)"),
+    };
+    std::fs::write(&out, &text).with_context(|| format!("writing trace to {out}"))?;
+    if verify {
+        match format.as_str() {
+            "chrome" => pbng::testkit::check_trace_json(&text)
+                .map_err(|e| anyhow::anyhow!("trace validation failed: {e}"))?,
+            _ => pbng::testkit::check_trace_jsonl(&text)
+                .map_err(|e| anyhow::anyhow!("trace validation failed: {e}"))?,
+        }
+        println!("OK: trace file validated ({format})");
+    }
+    report(&format!("{kind}[pbng]"), &d);
+    let dropped = pbng::obs::dropped();
+    let note = if dropped > 0 { format!(" ({dropped} dropped)") } else { String::new() };
+    println!(
+        "wrote {} trace events ({} spans) to {out}{note}",
+        events.len(),
+        events.len() / 2
+    );
+    Ok(())
+}
+
 fn cmd_wing(args: &Args) -> Result<()> {
     let g = load_graph(args)?;
     let cfg = wing_cfg(args)?;
     let algo = args.get_or("algo", "pbng").to_string();
     let tau = args.get_f64("tau", 0.02)?;
     let out = args.get("out").map(|s| s.to_string());
+    let trace = trace_begin(args);
     args.check_unknown()?;
     let d = match algo.as_str() {
         "pbng" => pbng::wing::wing_pbng(&g, cfg),
@@ -218,6 +303,7 @@ fn cmd_wing(args: &Args) -> Result<()> {
         a => bail!("unknown wing algo '{a}'"),
     };
     report(&format!("wing[{algo}]"), &d);
+    trace_finish(trace)?;
     if let Some(out) = out {
         io::save_numbers(&d.theta, Path::new(&out))?;
         println!("wrote wing numbers to {out}");
@@ -235,6 +321,7 @@ fn cmd_tip(args: &Args) -> Result<()> {
     let cfg = engine_cfg(args, 32)?;
     let algo = args.get_or("algo", "pbng").to_string();
     let out = args.get("out").map(|s| s.to_string());
+    let trace = trace_begin(args);
     args.check_unknown()?;
     let d = match algo.as_str() {
         "pbng" => pbng::tip::tip_pbng(&g, side, cfg),
@@ -243,6 +330,7 @@ fn cmd_tip(args: &Args) -> Result<()> {
         a => bail!("unknown tip algo '{a}'"),
     };
     report(&format!("tip[{algo}]{side:?}"), &d);
+    trace_finish(trace)?;
     if let Some(out) = out {
         io::save_numbers(&d.theta, Path::new(&out))?;
         println!("wrote tip numbers to {out}");
@@ -268,6 +356,7 @@ fn cmd_update(args: &Args) -> Result<()> {
     let engine = engine_cfg(args, if kind == "wing" { 64 } else { 32 })?;
     let out = args.get("out").map(str::to_string);
     let verify = args.flag("verify");
+    let trace = trace_begin(args);
     args.check_unknown()?;
     let ops = load_deltas(Path::new(&delta_path))?;
     for (i, op) in ops.iter().enumerate() {
@@ -317,6 +406,8 @@ fn cmd_update(args: &Args) -> Result<()> {
             up.stats.total,
         );
     }
+    // finish before --verify so the trace covers only the delta stream
+    trace_finish(trace)?;
     let theta: Vec<u64> = match &st {
         State::Wing(s) => s.theta().to_vec(),
         State::Tip(s) => s.theta().to_vec(),
@@ -481,7 +572,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
         Some(s) => s.to_string(),
         None => format!("BENCH_{suite_name}.json"),
     };
+    let trace = trace_begin(args);
     args.check_unknown()?;
+    // Tracing is always on for bench runs so every entry gets its FD
+    // balance summary (the runner only collects, never toggles); the
+    // runner clears the span window per repetition, so a `--trace` file
+    // holds the recorded (last) repetition of the last cell.
+    pbng::obs::enable();
     let report = pbng::bench::runner::run_suite(suite, &opts);
     let widths = [14usize, 14, 10, 10, 10, 8, 10];
     pbng::metrics::print_row(
@@ -504,6 +601,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
         );
     }
     report.save(Path::new(&out))?;
+    if trace.is_some() {
+        trace_finish(trace)?;
+    } else {
+        pbng::obs::disable();
+        pbng::obs::clear();
+    }
     println!(
         "wrote {out}: {} entries ({} datasets x {} algos), schema v{}, threads={}",
         report.entries.len(),

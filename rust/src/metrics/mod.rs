@@ -107,14 +107,36 @@ pub struct MetersSnapshot {
     pub invalidated_parts: u64,
 }
 
+/// The one counter-section serializer: emits `pairs` as a JSON object in
+/// the given order. [`MetersSnapshot::to_json`] and the bench report's
+/// counter section (`bench::report`) both route through this with
+/// [`MetersSnapshot::core_pairs`] as the shared prefix, so the two forms
+/// cannot silently diverge on the deterministic counters.
+pub fn counters_to_json(pairs: &[(&str, u64)]) -> crate::jsonio::Value {
+    let mut obj = crate::jsonio::Value::obj();
+    for &(k, v) in pairs {
+        obj = obj.with(k, v);
+    }
+    obj
+}
+
 impl MetersSnapshot {
+    /// The deterministic core counters in schema order — the prefix
+    /// every counter section starts with. `spawns` (process-dependent)
+    /// and `invalidated_parts` are appended only where the schema wants
+    /// them.
+    pub fn core_pairs(&self) -> [(&'static str, u64); 3] {
+        [
+            ("updates", self.updates),
+            ("wedges", self.wedges),
+            ("rho", self.rho),
+        ]
+    }
+
     /// JSON object `{updates, wedges, rho, spawns, invalidated_parts}` —
     /// fixed key order (appending keys is schema-compatible).
     pub fn to_json(&self) -> crate::jsonio::Value {
-        crate::jsonio::Value::obj()
-            .with("updates", self.updates)
-            .with("wedges", self.wedges)
-            .with("rho", self.rho)
+        counters_to_json(&self.core_pairs())
             .with("spawns", self.spawns)
             .with("invalidated_parts", self.invalidated_parts)
     }
@@ -167,6 +189,25 @@ impl PeelStats {
             .filter(|(ph, ..)| *ph == p)
             .map(|(.., w)| *w)
             .sum()
+    }
+
+    /// Thin-view publish into an [`crate::obs::Registry`]: the final
+    /// counters land as `peel.*` gauges and every phase duration is
+    /// recorded into a log-scale latency histogram `phase.<name>_ns`.
+    /// [`Recorder::finish`] calls this against the global registry when
+    /// tracing is enabled.
+    pub fn publish(&self, reg: &crate::obs::Registry) {
+        for (n, v) in [
+            ("updates", self.updates),
+            ("wedges", self.wedges),
+            ("rho", self.rho),
+            ("invalidated_parts", self.invalidated_parts),
+        ] {
+            reg.counter(&format!("peel.{n}")).set(v);
+        }
+        for (p, d, _, _) in &self.phases {
+            reg.histogram(&format!("phase.{}_ns", p.name())).record_duration(*d);
+        }
     }
 }
 
@@ -227,7 +268,7 @@ impl<'a> Recorder<'a> {
     pub fn finish(mut self) -> PeelStats {
         self.close_phase();
         self.meters.spawns.add(crate::par::total_spawns() - self.spawns0);
-        PeelStats {
+        let stats = PeelStats {
             updates: self.meters.updates.get(),
             wedges: self.meters.wedges.get(),
             rho: self.meters.rho.get(),
@@ -235,7 +276,11 @@ impl<'a> Recorder<'a> {
             invalidated_parts: self.meters.invalidated_parts.get(),
             total: self.start.elapsed(),
             phases: self.phases,
+        };
+        if crate::obs::enabled() {
+            stats.publish(crate::obs::Registry::global());
         }
+        stats
     }
 }
 
@@ -255,6 +300,26 @@ pub struct IndexMeters {
 impl IndexMeters {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// The counters as `(name, value)` pairs in stable order — consumed
+    /// by the server `STATS`/`METRICS` verbs and by [`Self::publish`],
+    /// which is what makes these counters readable rather than
+    /// write-only.
+    pub fn pairs(&self) -> [(&'static str, u64); 3] {
+        [
+            ("queries", self.queries.get()),
+            ("cache_hits", self.cache_hits.get()),
+            ("cache_misses", self.cache_misses.get()),
+        ]
+    }
+
+    /// Thin-view publish into an [`crate::obs::Registry`] under
+    /// `index.*` names.
+    pub fn publish(&self, reg: &crate::obs::Registry) {
+        for (n, v) in self.pairs() {
+            reg.counter(&format!("index.{n}")).set(v);
+        }
     }
 }
 
@@ -334,6 +399,47 @@ mod tests {
         assert_eq!(snap, m.snapshot());
         assert_eq!(snap.updates, 4);
         assert_eq!(snap.rho, 1);
+    }
+
+    #[test]
+    fn counters_to_json_preserves_order() {
+        let v = counters_to_json(&[("b", 2), ("a", 1)]);
+        let text = v.to_pretty();
+        assert!(text.find("\"b\"").unwrap() < text.find("\"a\"").unwrap());
+        assert_eq!(v.req_u64("a").unwrap(), 1);
+        assert_eq!(v.req_u64("b").unwrap(), 2);
+    }
+
+    #[test]
+    fn core_pairs_match_snapshot_json_prefix() {
+        let snap = MetersSnapshot {
+            updates: 1,
+            wedges: 2,
+            rho: 3,
+            spawns: 4,
+            invalidated_parts: 5,
+        };
+        let [(uk, uv), (wk, wv), (rk, rv)] = snap.core_pairs();
+        assert_eq!((uk, uv), ("updates", 1));
+        assert_eq!((wk, wv), ("wedges", 2));
+        assert_eq!((rk, rv), ("rho", 3));
+        let j = snap.to_json();
+        assert_eq!(j.req_u64("spawns").unwrap(), 4);
+        assert_eq!(j.req_u64("invalidated_parts").unwrap(), 5);
+    }
+
+    #[test]
+    fn index_meters_pairs_are_readable() {
+        let m = IndexMeters::new();
+        m.queries.add(3);
+        m.cache_hits.add(1);
+        assert_eq!(
+            m.pairs(),
+            [("queries", 3), ("cache_hits", 1), ("cache_misses", 0)]
+        );
+        let reg = crate::obs::Registry::new();
+        m.publish(&reg);
+        assert_eq!(reg.counter("index.queries").get(), 3);
     }
 
     #[test]

@@ -1,0 +1,195 @@
+//! Trace exporters: Chrome `trace_event` JSON and self-describing JSONL.
+//!
+//! Both formats are built on [`crate::jsonio`] so output is deterministic
+//! for a given event list (fixed key order, stable number formatting):
+//! two traces of the same single-threaded run differ only in the
+//! timestamp fields.
+
+use super::{Event, Kind};
+use crate::jsonio::Value;
+
+/// Schema tag emitted by both exporters (first JSONL line, Chrome-trace
+/// `otherData.schema`). Bump on any field change.
+pub const SCHEMA: &str = "pbng-obs-v1";
+
+fn args_json(e: &Event) -> Value {
+    let names = e.kind.attr_names();
+    Value::obj()
+        .with("span", e.span)
+        .with(names[0], e.a)
+        .with(names[1], e.b)
+        .with(names[2], e.c)
+}
+
+/// Chrome `trace_event` format (the JSON-object flavour): duration
+/// events (`ph: "B"`/`"E"`) with `tid` = pool lane and `ts` in
+/// microseconds, loadable in `chrome://tracing` or Perfetto.
+pub fn chrome_trace(events: &[Event]) -> Value {
+    let mut out = Vec::with_capacity(events.len());
+    for e in events {
+        out.push(
+            Value::obj()
+                .with("name", e.kind.name())
+                .with("cat", e.kind.cat())
+                .with("ph", if e.is_exit { "E" } else { "B" })
+                .with("ts", e.ts_ns as f64 / 1_000.0)
+                .with("pid", 1u64)
+                .with("tid", u64::from(e.lane))
+                .with("args", args_json(e)),
+        );
+    }
+    Value::obj()
+        .with("traceEvents", out)
+        .with("displayTimeUnit", "ms")
+        .with("otherData", Value::obj().with("schema", SCHEMA))
+}
+
+/// Self-describing JSONL: line 1 is a schema header naming every field,
+/// then one compact JSON object per event.
+pub fn jsonl(events: &[Event]) -> String {
+    let mut out = String::new();
+    let header = Value::obj()
+        .with("schema", SCHEMA)
+        .with(
+            "fields",
+            vec![
+                Value::from("ts_ns"),
+                Value::from("span"),
+                Value::from("lane"),
+                Value::from("kind"),
+                Value::from("phase"),
+                Value::from("a"),
+                Value::from("b"),
+                Value::from("c"),
+            ],
+        )
+        .with(
+            "kinds",
+            Kind::ALL
+                .iter()
+                .map(|k| {
+                    let names = k.attr_names();
+                    Value::obj()
+                        .with("kind", k.name())
+                        .with("a", names[0])
+                        .with("b", names[1])
+                        .with("c", names[2])
+                })
+                .collect::<Vec<_>>(),
+        );
+    push_line(&mut out, &header);
+    for e in events {
+        let line = Value::obj()
+            .with("ts_ns", e.ts_ns)
+            .with("span", e.span)
+            .with("lane", u64::from(e.lane))
+            .with("kind", e.kind.name())
+            .with("phase", if e.is_exit { "exit" } else { "enter" })
+            .with("a", e.a)
+            .with("b", e.b)
+            .with("c", e.c);
+        push_line(&mut out, &line);
+    }
+    out
+}
+
+fn push_line(out: &mut String, v: &Value) {
+    // `to_pretty` is the only writer jsonio exposes; collapse it to one
+    // line so the log stays one-event-per-line greppable.
+    let pretty = v.to_pretty();
+    let mut first = true;
+    for part in pretty.lines() {
+        if !first {
+            out.push(' ');
+        }
+        out.push_str(part.trim());
+        first = false;
+    }
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio;
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event {
+                ts_ns: 10,
+                span: 1,
+                lane: 0,
+                kind: Kind::CountKernel,
+                is_exit: false,
+                a: 64,
+                b: 0,
+                c: 0,
+            },
+            Event {
+                ts_ns: 40,
+                span: 1,
+                lane: 0,
+                kind: Kind::CountKernel,
+                is_exit: true,
+                a: 64,
+                b: 0,
+                c: 0,
+            },
+            Event {
+                ts_ns: 50,
+                span: 2,
+                lane: 1,
+                kind: Kind::FdTask,
+                is_exit: false,
+                a: 3,
+                b: 120,
+                c: 1,
+            },
+            Event {
+                ts_ns: 90,
+                span: 2,
+                lane: 1,
+                kind: Kind::FdTask,
+                is_exit: true,
+                a: 3,
+                b: 120,
+                c: 1,
+            },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_jsonio() {
+        let v = chrome_trace(&sample_events());
+        let text = v.to_pretty();
+        let back = jsonio::Value::parse(&text).expect("chrome trace parses");
+        let evs = back.req_arr("traceEvents").unwrap();
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs[0].req_str("ph").unwrap(), "B");
+        assert_eq!(evs[1].req_str("ph").unwrap(), "E");
+        let args = evs[2].get("args").unwrap();
+        assert_eq!(args.req_u64("partition").unwrap(), 3);
+        assert_eq!(args.req_u64("steal").unwrap(), 1);
+    }
+
+    #[test]
+    fn jsonl_every_line_parses() {
+        let text = jsonl(&sample_events());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5);
+        let header = jsonio::Value::parse(lines[0]).unwrap();
+        assert_eq!(header.req_str("schema").unwrap(), SCHEMA);
+        for line in &lines[1..] {
+            let v = jsonio::Value::parse(line).unwrap();
+            assert!(v.req_u64("span").unwrap() >= 1);
+        }
+    }
+
+    #[test]
+    fn export_is_deterministic_for_same_events() {
+        let a = chrome_trace(&sample_events()).to_pretty();
+        let b = chrome_trace(&sample_events()).to_pretty();
+        assert_eq!(a, b);
+        assert_eq!(jsonl(&sample_events()), jsonl(&sample_events()));
+    }
+}

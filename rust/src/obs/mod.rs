@@ -1,0 +1,541 @@
+//! Span tracing + metrics registry (`pbng::obs`).
+//!
+//! PBNG's thesis is *where the time goes* — synchronization rounds in CD,
+//! workload redistribution in FD — yet `metrics::Meters` only reports
+//! per-phase totals. This module attributes wall time to individual CD
+//! rounds, FD partition tasks (with lane id, steal provenance, and
+//! workload), incremental re-peels, and counting kernels, RECEIPT-style
+//! (Lakhotia et al.), without perturbing the measured code:
+//!
+//! * **Disabled path is a branch + nothing.** Every recording call first
+//!   loads one relaxed global flag; when tracing is off there is no clock
+//!   read, no allocation, and no buffer write, so θ output is byte-
+//!   identical with tracing on or off (determinism is engine-guaranteed;
+//!   the overhead contract is obs's).
+//! * **Per-lane buffers, no cross-lane contention.** Each pool lane owns
+//!   a fixed-capacity event buffer written by the thread driving that
+//!   lane (workers tag themselves via [`set_lane`] — the `par::pool`
+//!   hook; the region caller is lane 0). A one-word per-lane spin lock
+//!   guards the slot write; with a single producer per lane — the
+//!   production shape — it never spins, so the enabled hot path is one
+//!   uncontended swap, a slot write, and a `Release` length store. Full
+//!   buffers drop new events (counted, never blocking).
+//! * **Typed spans.** [`Kind`] enumerates the instrumented operations;
+//!   every span carries three kind-specific `u64` attributes (see the
+//!   variant docs) plus a process-unique span id that pairs its enter and
+//!   exit events even when lanes interleave.
+//!
+//! Exporters live in [`export`] (Chrome `trace_event` JSON for
+//! `chrome://tracing` / Perfetto, and a self-describing JSONL log); the
+//! named counter/histogram [`registry`] backs the server `METRICS`
+//! command and `Recorder`'s phase-latency histograms.
+//!
+//! Drain discipline: [`take_events`] and [`clear`] are memory-safe at
+//! any time (the per-lane lock), but call them only after the
+//! decomposition returns — the pool's region barrier guarantees every
+//! worker's spans are complete and visible, so the window holds whole
+//! span trees rather than a mid-region cut.
+
+pub mod export;
+pub mod registry;
+
+pub use registry::{Histogram, Registry};
+
+use crate::par::RacyCell;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Events a single lane can hold per drain window. At two events per
+/// span this covers ~4k spans per lane — far above any decomposition on
+/// the bench suites (partitions are capped at 64); overflow increments
+/// [`dropped`] instead of blocking or reallocating.
+pub const RING_CAP: usize = 1 << 13;
+
+/// What a span measures. The `a`/`b`/`c` attribute meanings are fixed
+/// per kind so exports are self-describing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Kind {
+    /// One CD synchronization round (Alg. 4 inner iteration).
+    /// `a` = partition index, `b` = ρ epoch, `c` = active-set size.
+    #[default]
+    CdRound,
+    /// One FD per-partition peel task (Alg. 5).
+    /// `a` = partition id, `b` = workload proxy, `c` = 1 if claimed via
+    /// the steal path, 0 if from the lane's own queue.
+    FdTask,
+    /// One incremental re-peel ([`crate::engine::incremental`]).
+    /// `a` = affected entities (component union size), `b` = invalidated
+    /// partitions, `c` = 1 if the batch fell back to a full rebuild.
+    Repeel,
+    /// One counting kernel (BE-index / wedge-count construction).
+    /// `a` = entities indexed, `b` = reserved, `c` = reserved.
+    CountKernel,
+}
+
+impl Kind {
+    /// Stable export name (also the Chrome-trace event name).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::CdRound => "cd_round",
+            Kind::FdTask => "fd_task",
+            Kind::Repeel => "repeel",
+            Kind::CountKernel => "count_kernel",
+        }
+    }
+
+    /// Chrome-trace category.
+    pub fn cat(self) -> &'static str {
+        match self {
+            Kind::CdRound => "cd",
+            Kind::FdTask => "fd",
+            Kind::Repeel => "incremental",
+            Kind::CountKernel => "count",
+        }
+    }
+
+    /// Attribute names for `a`/`b`/`c`, in order (export key names).
+    pub fn attr_names(self) -> [&'static str; 3] {
+        match self {
+            Kind::CdRound => ["partition", "rho", "active"],
+            Kind::FdTask => ["partition", "workload", "steal"],
+            Kind::Repeel => ["affected", "invalidated", "fallback"],
+            Kind::CountKernel => ["entities", "b", "c"],
+        }
+    }
+
+    pub const ALL: [Kind; 4] = [Kind::CdRound, Kind::FdTask, Kind::Repeel, Kind::CountKernel];
+}
+
+/// One enter or exit record. Exit events repeat the span's attributes
+/// (possibly updated mid-span via [`Span::set_b`]/[`Span::set_c`]) so a
+/// lone half still carries context.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Event {
+    /// Nanoseconds since the process-wide trace epoch.
+    pub ts_ns: u64,
+    /// Process-unique span id pairing enter with exit.
+    pub span: u64,
+    /// Pool lane that recorded the event (`0` = region caller).
+    pub lane: u32,
+    pub kind: Kind,
+    pub is_exit: bool,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+}
+
+struct LaneBuf {
+    events: RacyCell<Vec<Event>>,
+    /// Published length: stored `Release` after the slot write so a
+    /// snapshot sees fully-written events.
+    len: AtomicUsize,
+    dropped: AtomicU64,
+    /// One-word spin lock around buffer access. In production each lane
+    /// has exactly one producer (pool workers are pinned to their lane,
+    /// the region caller is lane 0), so the swap never spins — but
+    /// threads outside the pool all map to lane 0 (e.g. the
+    /// multi-threaded `cargo test` harness), and the lock makes their
+    /// interleaved writes safe instead of undefined.
+    busy: AtomicBool,
+}
+
+impl LaneBuf {
+    fn new() -> LaneBuf {
+        LaneBuf {
+            events: RacyCell::new(vec![Event::default(); RING_CAP]),
+            len: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+            busy: AtomicBool::new(false),
+        }
+    }
+
+    fn lock(&self) {
+        while self.busy.swap(true, Ordering::Acquire) {
+            std::hint::spin_loop();
+        }
+    }
+
+    fn unlock(&self) {
+        self.busy.store(false, Ordering::Release);
+    }
+
+    fn push(&self, ev: Event) {
+        self.lock();
+        let n = self.len.load(Ordering::Relaxed);
+        if n >= RING_CAP {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        } else {
+            // SAFETY: the per-lane lock gives this thread exclusive
+            // access to the buffer for the duration of the write.
+            unsafe {
+                self.events.get_mut()[n] = ev;
+            }
+            self.len.store(n + 1, Ordering::Release);
+        }
+        self.unlock();
+    }
+
+    fn drain_into(&self, out: &mut Vec<Event>) {
+        self.lock();
+        let n = self.len.load(Ordering::Relaxed).min(RING_CAP);
+        // SAFETY: the per-lane lock excludes concurrent producers.
+        let evs = unsafe { self.events.get_mut() };
+        out.extend_from_slice(&evs[..n]);
+        self.len.store(0, Ordering::Relaxed);
+        self.unlock();
+    }
+
+    fn copy_into(&self, out: &mut Vec<Event>) {
+        self.lock();
+        let n = self.len.load(Ordering::Relaxed).min(RING_CAP);
+        // SAFETY: the per-lane lock excludes concurrent producers.
+        let evs = unsafe { self.events.get_mut() };
+        out.extend_from_slice(&evs[..n]);
+        self.unlock();
+    }
+}
+
+struct Buffers {
+    lanes: Vec<LaneBuf>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static BUFFERS: OnceLock<Buffers> = OnceLock::new();
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Pool lane driven by this thread; set once per worker by the
+    /// `par::pool` spawn hook, 0 for every other thread.
+    static LANE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Is tracing on? One relaxed load — the entirety of the disabled path.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on: allocates the per-lane buffers (sized to the pool
+/// capacity) on first use, clears any previous window, and resets the
+/// span-id counter so single-threaded traces are bit-reproducible
+/// modulo timestamps.
+pub fn enable() {
+    let cap = crate::par::pool_capacity();
+    BUFFERS.get_or_init(|| Buffers {
+        lanes: (0..cap.max(1)).map(|_| LaneBuf::new()).collect(),
+    });
+    let _ = EPOCH.get_or_init(Instant::now);
+    clear();
+    NEXT_SPAN.store(1, Ordering::Relaxed);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn tracing off. Already-buffered events stay until [`take_events`]
+/// or [`clear`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// `par::pool` lane hook: workers call this once at spawn so their
+/// events land in their own lane buffer.
+pub fn set_lane(lane: usize) {
+    LANE.with(|l| l.set(lane));
+}
+
+fn current_lane() -> usize {
+    LANE.with(|l| l.get())
+}
+
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+fn push(ev: Event) {
+    if let Some(bufs) = BUFFERS.get() {
+        let lane = (ev.lane as usize).min(bufs.lanes.len() - 1);
+        bufs.lanes[lane].push(ev);
+    }
+}
+
+/// RAII span: records an enter event now and the matching exit event on
+/// drop. When tracing is disabled this is an inert zero-field struct —
+/// constructing and dropping it costs one relaxed load and a branch.
+pub struct Span {
+    live: Option<LiveSpan>,
+}
+
+struct LiveSpan {
+    kind: Kind,
+    span: u64,
+    a: u64,
+    b: u64,
+    c: u64,
+}
+
+/// Open a span of `kind` with attributes `(a, b, c)` (meanings fixed per
+/// [`Kind`]).
+#[inline]
+pub fn span(kind: Kind, a: u64, b: u64, c: u64) -> Span {
+    if !enabled() {
+        return Span { live: None };
+    }
+    let id = NEXT_SPAN.fetch_add(1, Ordering::Relaxed);
+    push(Event {
+        ts_ns: now_ns(),
+        span: id,
+        lane: current_lane() as u32,
+        kind,
+        is_exit: false,
+        a,
+        b,
+        c,
+    });
+    Span {
+        live: Some(LiveSpan { kind, span: id, a, b, c }),
+    }
+}
+
+impl Span {
+    /// Update attribute `b` before the exit event is recorded.
+    pub fn set_b(&mut self, v: u64) {
+        if let Some(l) = &mut self.live {
+            l.b = v;
+        }
+    }
+
+    /// Update attribute `c` before the exit event is recorded.
+    pub fn set_c(&mut self, v: u64) {
+        if let Some(l) = &mut self.live {
+            l.c = v;
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(l) = self.live.take() {
+            push(Event {
+                ts_ns: now_ns(),
+                span: l.span,
+                lane: current_lane() as u32,
+                kind: l.kind,
+                is_exit: true,
+                a: l.a,
+                b: l.b,
+                c: l.c,
+            });
+        }
+    }
+}
+
+/// Drain every lane buffer into one list ordered by `(ts_ns, span,
+/// is_exit)`. Must not race an in-flight region (see module docs).
+pub fn take_events() -> Vec<Event> {
+    let mut out = Vec::new();
+    if let Some(bufs) = BUFFERS.get() {
+        for lane in &bufs.lanes {
+            lane.drain_into(&mut out);
+        }
+    }
+    out.sort_by_key(|e| (e.ts_ns, e.span, e.is_exit));
+    out
+}
+
+/// Copy every buffered event without draining, same order as
+/// [`take_events`]. Must not race an in-flight region (see module docs).
+/// Used where a reader wants a mid-stream view that leaves the window
+/// intact for a later exporter (e.g. the bench runner's balance summary
+/// under an outer `--trace`).
+pub fn snapshot_events() -> Vec<Event> {
+    let mut out = Vec::new();
+    if let Some(bufs) = BUFFERS.get() {
+        for lane in &bufs.lanes {
+            lane.copy_into(&mut out);
+        }
+    }
+    out.sort_by_key(|e| (e.ts_ns, e.span, e.is_exit));
+    out
+}
+
+/// Discard buffered events and reset the overflow counter.
+pub fn clear() {
+    if let Some(bufs) = BUFFERS.get() {
+        for lane in &bufs.lanes {
+            let mut sink = Vec::new();
+            lane.drain_into(&mut sink);
+            lane.dropped.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Events discarded because a lane buffer filled up since the last
+/// [`clear`]/[`enable`].
+pub fn dropped() -> u64 {
+    BUFFERS
+        .get()
+        .map(|b| b.lanes.iter().map(|l| l.dropped.load(Ordering::Relaxed)).sum())
+        .unwrap_or(0)
+}
+
+/// Number of per-lane buffers (0 until tracing is first enabled). Every
+/// recorded `Event.lane` is strictly below this.
+pub fn lane_count() -> usize {
+    BUFFERS.get().map(|b| b.lanes.len()).unwrap_or(0)
+}
+
+/// Serialize unit tests (across this crate's modules) that enable or
+/// assert on the global tracing window — `cargo test` runs tests
+/// concurrently in one process, and two overlapping windows would
+/// cross-contaminate.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<std::sync::Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| std::sync::Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Validate span-tree well-formedness: every span id has exactly one
+/// enter and one exit, kinds match, exit does not precede enter, and
+/// every lane id is within the buffer range.
+pub fn check_spans(events: &[Event]) -> Result<(), String> {
+    let lanes = lane_count();
+    let mut open: std::collections::HashMap<u64, Event> = std::collections::HashMap::new();
+    for e in events {
+        if lanes > 0 && e.lane as usize >= lanes {
+            return Err(format!("event lane {} out of range (< {lanes})", e.lane));
+        }
+        if !e.is_exit {
+            if open.insert(e.span, *e).is_some() {
+                return Err(format!("span {} entered twice", e.span));
+            }
+        } else {
+            let enter = open
+                .remove(&e.span)
+                .ok_or_else(|| format!("span {} exited without an enter", e.span))?;
+            if enter.kind != e.kind {
+                return Err(format!(
+                    "span {} kind mismatch: enter {:?} vs exit {:?}",
+                    e.span, enter.kind, e.kind
+                ));
+            }
+            if e.ts_ns < enter.ts_ns {
+                return Err(format!("span {} exits before it enters", e.span));
+            }
+        }
+    }
+    if let Some(id) = open.keys().min() {
+        return Err(format!("span {id} never exited"));
+    }
+    Ok(())
+}
+
+/// Paired (enter, exit) events per completed span, in enter order.
+/// Unpaired halves (dropped under overflow) are skipped.
+pub fn pair_spans(events: &[Event]) -> Vec<(Event, Event)> {
+    let mut open: std::collections::HashMap<u64, Event> = std::collections::HashMap::new();
+    let mut pairs = Vec::new();
+    for e in events {
+        if !e.is_exit {
+            open.insert(e.span, *e);
+        } else if let Some(enter) = open.remove(&e.span) {
+            pairs.push((enter, *e));
+        }
+    }
+    pairs.sort_by_key(|(en, _)| (en.ts_ns, en.span));
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(span: u64, kind: Kind, is_exit: bool, ts: u64) -> Event {
+        Event {
+            ts_ns: ts,
+            span,
+            lane: 0,
+            kind,
+            is_exit,
+            a: 0,
+            b: 0,
+            c: 0,
+        }
+    }
+
+    #[test]
+    fn check_spans_accepts_matched_pairs() {
+        let evs = vec![
+            ev(1, Kind::CdRound, false, 0),
+            ev(2, Kind::FdTask, false, 1),
+            ev(2, Kind::FdTask, true, 5),
+            ev(1, Kind::CdRound, true, 9),
+        ];
+        assert!(check_spans(&evs).is_ok());
+        assert_eq!(pair_spans(&evs).len(), 2);
+    }
+
+    #[test]
+    fn check_spans_rejects_unbalanced() {
+        let evs = vec![ev(1, Kind::CdRound, false, 0)];
+        assert!(check_spans(&evs).is_err());
+        let evs = vec![ev(1, Kind::CdRound, true, 0)];
+        assert!(check_spans(&evs).is_err());
+    }
+
+    #[test]
+    fn check_spans_rejects_kind_mismatch() {
+        let evs = vec![ev(3, Kind::CdRound, false, 0), ev(3, Kind::FdTask, true, 1)];
+        assert!(check_spans(&evs).is_err());
+    }
+
+    #[test]
+    fn lane_buf_drops_on_overflow() {
+        let b = LaneBuf::new();
+        for i in 0..(RING_CAP as u64 + 10) {
+            b.push(ev(i, Kind::FdTask, false, i));
+        }
+        assert_eq!(b.len.load(Ordering::Relaxed), RING_CAP);
+        assert_eq!(b.dropped.load(Ordering::Relaxed), 10);
+        let mut out = Vec::new();
+        b.drain_into(&mut out);
+        assert_eq!(out.len(), RING_CAP);
+        assert_eq!(b.len.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        let _g = test_guard();
+        // Construct/drop a span with tracing off: must not touch buffers.
+        disable();
+        assert!(!enabled());
+        let before = BUFFERS.get().map(|b| {
+            b.lanes
+                .iter()
+                .map(|l| l.len.load(Ordering::Relaxed))
+                .sum::<usize>()
+        });
+        {
+            let mut s = span(Kind::FdTask, 1, 2, 3);
+            s.set_c(9);
+        }
+        let after = BUFFERS.get().map(|b| {
+            b.lanes
+                .iter()
+                .map(|l| l.len.load(Ordering::Relaxed))
+                .sum::<usize>()
+        });
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn kind_names_are_stable() {
+        for k in Kind::ALL {
+            assert!(!k.name().is_empty());
+            assert_eq!(k.attr_names().len(), 3);
+        }
+    }
+}

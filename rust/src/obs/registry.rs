@@ -1,0 +1,237 @@
+//! Named counter/histogram registry — hand-rolled, no deps.
+//!
+//! A process-wide [`Registry`] owns named [`crate::par::Counter`]s and
+//! log-scale [`Histogram`]s behind `Arc`s, so call sites cache a handle
+//! once and then update it with a single relaxed atomic op. `metrics::
+//! Meters` / `PeelStats` publish into it as thin views (see
+//! `metrics::publish_*`), and `index::server` reads it live for the
+//! `METRICS` line-protocol command.
+
+use crate::jsonio::Value;
+use crate::par::Counter;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Power-of-two latency histogram: bucket `i` counts samples `v` with
+/// `⌊log2 v⌋ = i` (bucket 0 additionally holds `v == 0`). 64 buckets
+/// cover the full `u64` nanosecond range with 16 words of state and a
+/// branch-free record path — no float math, no allocation.
+pub struct Histogram {
+    buckets: [AtomicU64; 64],
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            buckets: [ZERO; 64],
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index for a sample value.
+    #[inline]
+    fn bucket(v: u64) -> usize {
+        (63 - (v | 1).leading_zeros()) as usize
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds.
+    #[inline]
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Upper bound (exclusive, power of two) of the highest non-empty
+    /// bucket; 0 when empty.
+    pub fn max_bound(&self) -> u64 {
+        for i in (0..64).rev() {
+            if self.buckets[i].load(Ordering::Relaxed) > 0 {
+                return if i >= 63 { u64::MAX } else { 1u64 << (i + 1) };
+            }
+        }
+        0
+    }
+
+    /// `{"count":…,"sum":…,"buckets":[{"pow2":i,"n":…},…]}` with only
+    /// non-empty buckets, in ascending order — deterministic for a given
+    /// set of samples.
+    pub fn to_json(&self) -> Value {
+        let mut buckets = Vec::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                buckets.push(Value::obj().with("pow2", i as u64).with("n", n));
+            }
+        }
+        Value::obj()
+            .with("count", self.count())
+            .with("sum", self.sum())
+            .with("buckets", buckets)
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: Vec<(String, Arc<Counter>)>,
+    histograms: Vec<(String, Arc<Histogram>)>,
+}
+
+/// Named metric store. Lookup is a short linear scan under a mutex
+/// (done once per call site, the handle is then lock-free); snapshots
+/// are emitted in sorted-name order for deterministic output.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The process-wide registry (server counters, phase histograms).
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Get-or-create the counter named `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut g = self.lock();
+        if let Some((_, c)) = g.counters.iter().find(|(n, _)| n == name) {
+            return Arc::clone(c);
+        }
+        let c = Arc::new(Counter::new());
+        g.counters.push((name.to_string(), Arc::clone(&c)));
+        c
+    }
+
+    /// Get-or-create the histogram named `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut g = self.lock();
+        if let Some((_, h)) = g.histograms.iter().find(|(n, _)| n == name) {
+            return Arc::clone(h);
+        }
+        let h = Arc::new(Histogram::new());
+        g.histograms.push((name.to_string(), Arc::clone(&h)));
+        h
+    }
+
+    /// `(name, value)` for every counter, sorted by name.
+    pub fn counter_snapshot(&self) -> Vec<(String, u64)> {
+        let mut out: Vec<(String, u64)> = self
+            .lock()
+            .counters
+            .iter()
+            .map(|(n, c)| (n.clone(), c.get()))
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// `{"counters":{…},"histograms":{…}}`, names sorted.
+    pub fn to_json(&self) -> Value {
+        let mut counters = Value::obj();
+        for (n, v) in self.counter_snapshot() {
+            counters = counters.with(n.as_str(), v);
+        }
+        let mut hists: Vec<(String, Value)> = self
+            .lock()
+            .histograms
+            .iter()
+            .map(|(n, h)| (n.clone(), h.to_json()))
+            .collect();
+        hists.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut histograms = Value::obj();
+        for (n, v) in hists {
+            histograms = histograms.with(n.as_str(), v);
+        }
+        Value::obj().with("counters", counters).with("histograms", histograms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_by_log2() {
+        assert_eq!(Histogram::bucket(0), 0);
+        assert_eq!(Histogram::bucket(1), 0);
+        assert_eq!(Histogram::bucket(2), 1);
+        assert_eq!(Histogram::bucket(3), 1);
+        assert_eq!(Histogram::bucket(4), 2);
+        assert_eq!(Histogram::bucket(1023), 9);
+        assert_eq!(Histogram::bucket(1024), 10);
+        assert_eq!(Histogram::bucket(u64::MAX), 63);
+    }
+
+    #[test]
+    fn histogram_counts_and_sums() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 700, 700, 5000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 6403);
+        assert_eq!(h.max_bound(), 8192);
+        let j = h.to_json();
+        assert_eq!(j.req_u64("count").unwrap(), 6);
+        // buckets: pow2 0 holds {0,1}, pow2 1 holds {2}, pow2 9 holds
+        // {700,700}, pow2 12 holds {5000}
+        let b = j.req_arr("buckets").unwrap();
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn registry_reuses_named_handles() {
+        let r = Registry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        a.add(3);
+        b.add(4);
+        assert_eq!(r.counter("x").get(), 7);
+        let snap = r.counter_snapshot();
+        assert_eq!(snap, vec![("x".to_string(), 7)]);
+    }
+
+    #[test]
+    fn registry_json_is_sorted() {
+        let r = Registry::new();
+        r.counter("zeta").add(1);
+        r.counter("alpha").add(2);
+        r.histogram("lat").record(100);
+        let j = r.to_json();
+        let text = j.to_pretty();
+        let za = text.find("zeta").unwrap();
+        let al = text.find("alpha").unwrap();
+        assert!(al < za);
+        assert!(text.contains("histograms"));
+    }
+}

@@ -214,6 +214,10 @@ impl Counter {
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
+    /// Overwrite the value (registry publishing of snapshot views).
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
     pub fn reset(&self) {
         self.0.store(0, Ordering::Relaxed);
     }

@@ -223,6 +223,10 @@ impl Drop for RegionWait<'_> {
 }
 
 fn worker_loop(sh: &Shared, lane: usize) {
+    // Tag this worker's thread with its lane id so obs events it records
+    // land in the lane's own lock-free buffer (the `pbng::obs` hook; a
+    // one-time thread-local store, nothing on the region hot path).
+    crate::obs::set_lane(lane);
     let mut seen = 0u64;
     loop {
         // Bounded spin before parking: catch an imminent next region

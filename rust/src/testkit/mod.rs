@@ -162,6 +162,71 @@ where
     }
 }
 
+/// Validate a Chrome `trace_event` JSON document (the object flavour
+/// [`crate::obs::export::chrome_trace`] emits): `traceEvents` must be an
+/// array of events each carrying `name`/`cat`/`ph`/`ts`/`pid`/`tid`, and
+/// every `ph: "B"` must have a matching `"E"` (paired through
+/// `args.span`). Backs `pbng trace --verify` and the CI trace-smoke step.
+pub fn check_trace_json(text: &str) -> Result<(), String> {
+    let v = crate::jsonio::Value::parse(text).map_err(|e| format!("not valid JSON: {e}"))?;
+    let events = v
+        .req_arr("traceEvents")
+        .map_err(|e| format!("missing traceEvents array: {e}"))?;
+    let mut open: std::collections::HashSet<u64> = std::collections::HashSet::new();
+    for (i, e) in events.iter().enumerate() {
+        let ctx = |err: anyhow::Error| format!("traceEvents[{i}]: {err}");
+        e.req_str("name").map_err(ctx)?;
+        e.req_str("cat").map_err(ctx)?;
+        e.req_f64("ts").map_err(ctx)?;
+        e.req_u64("pid").map_err(ctx)?;
+        e.req_u64("tid").map_err(ctx)?;
+        let ph = e.req_str("ph").map_err(ctx)?;
+        let span = e
+            .get("args")
+            .and_then(|a| a.req_u64("span").ok())
+            .ok_or_else(|| format!("traceEvents[{i}] missing args.span"))?;
+        match ph {
+            "B" => {
+                if !open.insert(span) {
+                    return Err(format!("span {span} opened twice"));
+                }
+            }
+            "E" => {
+                if !open.remove(&span) {
+                    return Err(format!("span {span} closed without opening"));
+                }
+            }
+            other => return Err(format!("traceEvents[{i}] has ph '{other}' (want B or E)")),
+        }
+    }
+    if let Some(span) = open.iter().min() {
+        return Err(format!("span {span} never closed"));
+    }
+    Ok(())
+}
+
+/// Validate a JSONL trace ([`crate::obs::export::jsonl`]): a schema
+/// header line followed by one parseable JSON object per event.
+pub fn check_trace_jsonl(text: &str) -> Result<(), String> {
+    let mut lines = text.lines().enumerate();
+    let (_, header) = lines.next().ok_or("empty trace")?;
+    let h = crate::jsonio::Value::parse(header).map_err(|e| format!("bad header: {e}"))?;
+    h.req_str("schema").map_err(|e| format!("header missing schema: {e}"))?;
+    for (i, line) in lines {
+        let v = crate::jsonio::Value::parse(line)
+            .map_err(|e| format!("line {}: not valid JSON: {e}", i + 1))?;
+        for key in ["ts_ns", "span", "lane", "a", "b", "c"] {
+            v.req_u64(key).map_err(|e| format!("line {}: {e}", i + 1))?;
+        }
+        v.req_str("kind").map_err(|e| format!("line {}: {e}", i + 1))?;
+        let phase = v.req_str("phase").map_err(|e| format!("line {}: {e}", i + 1))?;
+        if phase != "enter" && phase != "exit" {
+            return Err(format!("line {}: phase '{phase}' (want enter|exit)", i + 1));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,5 +304,42 @@ mod tests {
     #[should_panic(expected = "property 'always-fails'")]
     fn check_property_reports_seed() {
         check_property("always-fails", 1, 4, |_| Err("boom".into()));
+    }
+
+    fn sample_trace_events() -> Vec<crate::obs::Event> {
+        use crate::obs::{Event, Kind};
+        let ev = |span, is_exit, ts| Event {
+            ts_ns: ts,
+            span,
+            lane: 0,
+            kind: Kind::FdTask,
+            is_exit,
+            a: 1,
+            b: 2,
+            c: 0,
+        };
+        vec![ev(1, false, 10), ev(2, false, 20), ev(2, true, 30), ev(1, true, 40)]
+    }
+
+    #[test]
+    fn trace_checker_accepts_exporter_output() {
+        let evs = sample_trace_events();
+        let chrome = crate::obs::export::chrome_trace(&evs).to_pretty();
+        check_trace_json(&chrome).unwrap();
+        let jsonl = crate::obs::export::jsonl(&evs);
+        check_trace_jsonl(&jsonl).unwrap();
+    }
+
+    #[test]
+    fn trace_checker_rejects_malformed() {
+        assert!(check_trace_json("not json").is_err());
+        assert!(check_trace_json("{\"other\": 1}").is_err());
+        // drop the closing E of span 1: unbalanced
+        let mut evs = sample_trace_events();
+        evs.pop();
+        let chrome = crate::obs::export::chrome_trace(&evs).to_pretty();
+        assert!(check_trace_json(&chrome).unwrap_err().contains("never closed"));
+        assert!(check_trace_jsonl("").is_err());
+        assert!(check_trace_jsonl("{\"schema\":\"x\"}\nnot json\n").is_err());
     }
 }

@@ -64,7 +64,10 @@ pub fn tip_pbng(g: &BipartiteGraph, side: Side, cfg: TipConfig) -> Decomposition
     let meters = Meters::new();
     let mut rec = Recorder::new(&meters);
     rec.enter(Phase::Count);
-    let per_u = count_side(&g, cfg.threads, &meters);
+    let per_u = {
+        let _sp = crate::obs::span(crate::obs::Kind::CountKernel, g.nu() as u64, 0, 0);
+        count_side(&g, cfg.threads, &meters)
+    };
     let mut dom = TipDomain::new(&g, &per_u);
     engine::decompose(&mut dom, &cfg, rec).into_decomposition()
 }

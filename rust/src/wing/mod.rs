@@ -45,7 +45,10 @@ pub fn wing_pbng(g: &BipartiteGraph, cfg: PbngConfig) -> Decomposition {
     let meters = Meters::new();
     let mut rec = Recorder::new(&meters);
     rec.enter(Phase::Count);
-    let (idx, per_edge) = BeIndex::build(g, cfg.threads);
+    let (idx, per_edge) = {
+        let _sp = crate::obs::span(crate::obs::Kind::CountKernel, g.m() as u64, 0, 0);
+        BeIndex::build(g, cfg.threads)
+    };
     let mut dom = WingDomain::new(&idx, &per_edge, &cfg);
     engine::decompose(&mut dom, &cfg, rec).into_decomposition()
 }

@@ -56,6 +56,7 @@ fn same_seed_runs_have_byte_identical_counter_sections() {
             e.wall_ms.min = 0.0;
             e.wall_ms.mean = 0.0;
             e.wall_ms.max = 0.0;
+            e.rep_ms.clear();
             e.phases.clear();
         }
         back.to_json().to_pretty()
