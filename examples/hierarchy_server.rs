@@ -1,7 +1,8 @@
 //! Hierarchy serving end to end: decompose once, persist the
 //! nested-component forest, reload it, and answer queries — first through
-//! the in-process engine, then over a real TCP session speaking the
-//! `pbng serve` line protocol.
+//! the in-process engine, then over a real TCP session against the
+//! poll-based reactor (`pbng::serve`, protocol v2), including a live
+//! snapshot hot-swap mid-session.
 //!
 //! This is the ROADMAP "serve hierarchy queries, don't recompute them"
 //! workload: the decomposition runs once at build time; every query after
@@ -12,9 +13,10 @@
 use pbng::beindex::BeIndex;
 use pbng::graph::gen;
 use pbng::index::{build_wing_forest, codec, query::QueryEngine, server};
+use pbng::serve::{Server, ServerConfig, SnapshotStore};
 use pbng::wing::{wing_pbng, PbngConfig};
 use std::io::{BufRead, BufReader, Write};
-use std::sync::Arc;
+use std::sync::atomic::Ordering;
 
 fn main() {
     // --- build: decompose + forest ------------------------------------
@@ -47,7 +49,7 @@ fn main() {
     println!("persisted to {} ({} bytes), reloaded identically", path.display(), bytes);
 
     // --- in-process queries --------------------------------------------
-    let engine = Arc::new(QueryEngine::new(reloaded));
+    let engine = QueryEngine::new(reloaded);
     let deepest = *engine.forest().levels.last().unwrap();
     println!("\nin-process session:");
     for cmd in [
@@ -73,27 +75,48 @@ fn main() {
         engine.meters.queries.get()
     );
 
-    // --- the same over TCP ---------------------------------------------
+    // --- the same over TCP, through the reactor ------------------------
+    // One thread serves every connection; sessions pin the snapshot that
+    // was current when they connected (MVCC), so a publish mid-session
+    // never disturbs them.
+    let store = SnapshotStore::new(engine);
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
-    let srv = {
-        let engine = engine.clone();
-        std::thread::spawn(move || {
-            let (stream, _) = listener.accept().unwrap();
-            server::handle_connection(&engine, stream).unwrap();
-        })
-    };
-    println!("\nTCP session against {addr}:");
+    let server = Server::new(ServerConfig::new().max_conns(64).per_ip(16), store.clone());
+    let stop = server.stop_handle();
+    let srv = std::thread::spawn(move || server.run_on(listener).unwrap());
+
+    println!("\nTCP session against {addr} (protocol v2):");
     let mut stream = std::net::TcpStream::connect(addr).unwrap();
-    writeln!(stream, "membership 0\nkwing {deepest}\nquit").unwrap();
+    writeln!(stream, "membership 0\nkwing {deepest}\nstats\nquit").unwrap();
     let reader = BufReader::new(stream.try_clone().unwrap());
     for line in reader.lines() {
         let line = line.unwrap();
-        if line.starts_with("READY") || line == "END" || line == "BYE" || line.starts_with("components")
+        if line.starts_with("OK ")
+            || line.starts_with("ERR ")
+            || line.starts_with("proto ")
+            || line.starts_with("epoch ")
+            || line.starts_with("components")
         {
             println!("  < {line}");
         }
     }
+
+    // --- hot swap: publish a new epoch while the server runs -----------
+    let engine2 = QueryEngine::new(codec::load(&path).unwrap());
+    let epoch = store.publish(engine2);
+    let mut s2 = std::net::TcpStream::connect(addr).unwrap();
+    let mut greeting = String::new();
+    let mut r2 = BufReader::new(s2.try_clone().unwrap());
+    r2.read_line(&mut greeting).unwrap(); // OK hello
+    greeting.clear();
+    r2.read_line(&mut greeting).unwrap(); // proto 2 … epoch N
+    println!("\nafter publish (epoch {epoch}), a new session greets with:");
+    println!("  < {}", greeting.trim_end());
+    assert!(greeting.contains(&format!("epoch {epoch}")));
+    writeln!(s2, "quit").unwrap();
+
+    stop.store(true, Ordering::Release);
     srv.join().unwrap();
     println!("\ndone: one decomposition, arbitrarily many queries.");
 }

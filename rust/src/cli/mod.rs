@@ -81,6 +81,15 @@ impl Args {
         }
     }
 
+    pub fn get_u16(&self, key: &str, default: u16) -> Result<u16> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects a 16-bit integer, got '{v}'")),
+        }
+    }
+
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -135,10 +144,14 @@ mod tests {
 
     #[test]
     fn typed_getters() {
-        let a = parse(&["--tau", "0.02", "--p", "64"]);
+        let a = parse(&["--tau", "0.02", "--p", "64", "--port", "7878"]);
         assert_eq!(a.get_f64("tau", 1.0).unwrap(), 0.02);
         assert_eq!(a.get_usize("p", 1).unwrap(), 64);
         assert!(a.get_usize("absent", 7).unwrap() == 7);
+        assert_eq!(a.get_u16("port", 0).unwrap(), 7878);
+        assert_eq!(a.get_u16("missing-port", 0).unwrap(), 0);
+        let b = parse(&["--port", "70000"]);
+        assert!(b.get_u16("port", 0).is_err(), "out of u16 range");
     }
 
     #[test]

@@ -627,6 +627,79 @@ impl TipIncremental {
     }
 }
 
+// ----------------------------------------------------- kind erasure
+
+/// Kind-erased incremental state — wing or tip picked at runtime.
+///
+/// Callers that choose the decomposition from configuration (the `pbng
+/// update` CLI, the [`crate::serve`] delta-log updater) hold one of
+/// these instead of matching on [`WingIncremental`] / [`TipIncremental`]
+/// themselves. The kind vocabulary is
+/// [`ForestKind`](crate::index::ForestKind) so an updated state maps
+/// directly onto the hierarchy index it refreshes.
+pub enum IncrementalState {
+    Wing(Box<WingIncremental>),
+    Tip(Box<TipIncremental>),
+}
+
+impl IncrementalState {
+    /// Build the state with one full decomposition of `g`.
+    pub fn new(
+        g: &BipartiteGraph,
+        kind: crate::index::ForestKind,
+        cfg: IncrementalConfig,
+    ) -> IncrementalState {
+        match kind {
+            crate::index::ForestKind::Wing => {
+                IncrementalState::Wing(Box::new(WingIncremental::new(g, cfg)))
+            }
+            crate::index::ForestKind::TipU => {
+                IncrementalState::Tip(Box::new(TipIncremental::new(g, Side::U, cfg)))
+            }
+            crate::index::ForestKind::TipV => {
+                IncrementalState::Tip(Box::new(TipIncremental::new(g, Side::V, cfg)))
+            }
+        }
+    }
+
+    pub fn kind(&self) -> crate::index::ForestKind {
+        match self {
+            IncrementalState::Wing(_) => crate::index::ForestKind::Wing,
+            IncrementalState::Tip(s) => match s.side() {
+                Side::U => crate::index::ForestKind::TipU,
+                Side::V => crate::index::ForestKind::TipV,
+            },
+        }
+    }
+
+    /// Apply one batch (original orientation; tip states transpose
+    /// internally). Afterwards [`IncrementalState::theta`] equals a
+    /// from-scratch decomposition of the updated graph.
+    pub fn apply(&mut self, batch: &DeltaBatch) -> UpdateStats {
+        match self {
+            IncrementalState::Wing(s) => s.apply(batch),
+            IncrementalState::Tip(s) => s.apply(batch),
+        }
+    }
+
+    /// θ per current entity (edge for wing, peel-side vertex for tip).
+    pub fn theta(&self) -> &[u64] {
+        match self {
+            IncrementalState::Wing(s) => s.theta(),
+            IncrementalState::Tip(s) => s.theta(),
+        }
+    }
+
+    /// Current graph; for tip states it is oriented with the peel side
+    /// as U (so `tip_pbng(graph, Side::U, ..)` verifies either side).
+    pub fn graph(&self) -> &BipartiteGraph {
+        match self {
+            IncrementalState::Wing(s) => s.graph(),
+            IncrementalState::Tip(s) => s.graph(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -709,6 +782,29 @@ mod tests {
                 Side::V => inc.graph().transposed(),
             };
             assert_eq!(inc.theta(), &tip_bup(&updated, side).theta[..]);
+        }
+    }
+
+    #[test]
+    fn kind_erased_state_matches_scratch_for_every_kind() {
+        use crate::index::ForestKind;
+        let g = gen::zipf(16, 14, 90, 1.2, 1.2, 11);
+        let ops = vec![
+            DeltaOp::Insert(0, 0),
+            DeltaOp::Insert(1, 13),
+            DeltaOp::Remove(g.edge(2).0, g.edge(2).1),
+        ];
+        for kind in [ForestKind::Wing, ForestKind::TipU, ForestKind::TipV] {
+            let mut st = IncrementalState::new(&g, kind, cfg(3, 1, 1.0));
+            assert_eq!(st.kind(), kind);
+            st.apply(&DeltaBatch::new(ops.clone()));
+            // the state's graph is oriented peel-side-as-U, so one
+            // comparison shape covers all three kinds
+            let fresh = match kind {
+                ForestKind::Wing => wing_bup(st.graph()).theta,
+                ForestKind::TipU | ForestKind::TipV => tip_bup(st.graph(), Side::U).theta,
+            };
+            assert_eq!(st.theta(), &fresh[..], "{}", kind.name());
         }
     }
 

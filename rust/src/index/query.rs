@@ -185,6 +185,22 @@ impl QueryEngine {
         self.meters.queries.add(1);
         super::forest_level_summaries(&self.forest)
     }
+
+    /// Pre-materialize the `n` deepest stored levels into the LRU cache.
+    ///
+    /// The serving layer ([`crate::serve`]) calls this on a freshly built
+    /// engine *before* publishing it as a snapshot, so the hot levels of
+    /// a new epoch don't all cold-miss at swap time. Bypasses the query/
+    /// cache meters: warming is build work, not traffic.
+    pub fn warm_deepest(&self, n: usize) {
+        for &k in self.forest.levels.iter().rev().take(n) {
+            let mut cache = self.cache.lock().unwrap();
+            if cache.get(k).is_none() {
+                let comps = Arc::new(self.forest.components(k));
+                cache.put(k, comps);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -244,6 +260,21 @@ mod tests {
         let _ = e.components(2); // miss again
         assert_eq!(e.meters.cache_hits.get(), 1);
         assert_eq!(e.meters.cache_misses.get(), 4);
+    }
+
+    #[test]
+    fn warm_deepest_primes_cache_without_touching_meters() {
+        let e = engine();
+        e.warm_deepest(2);
+        assert_eq!(e.meters.queries.get(), 0);
+        assert_eq!(e.meters.cache_misses.get(), 0);
+        // the two deepest levels now hit; warming again is idempotent
+        e.warm_deepest(2);
+        let deepest = *e.forest().levels.last().unwrap();
+        let _ = e.components(deepest);
+        let _ = e.components(deepest - 1);
+        assert_eq!(e.meters.cache_hits.get(), 2);
+        assert_eq!(e.meters.cache_misses.get(), 0);
     }
 
     #[test]

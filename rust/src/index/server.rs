@@ -1,9 +1,13 @@
-//! Line-protocol serving of hierarchy queries.
+//! Line-protocol command handling for hierarchy queries (protocol v1).
 //!
 //! One command per line, one multi-line response terminated by `END`.
-//! The same handler backs three transports: the `pbng query` one-shot
-//! CLI, the `pbng serve` stdin loop, and the `pbng serve --port` TCP
-//! listener (thread per connection over a shared [`QueryEngine`]).
+//! [`dispatch`] is the transport-agnostic core: it parses one line,
+//! executes the verb against a [`QueryEngine`], and reports the verb,
+//! the body (or error reason), and whether the session should close.
+//! Three transports reuse it: the `pbng query` one-shot CLI, the v1
+//! stdin/TCP loops below, and the poll-based reactor in
+//! [`crate::serve`] (which adds the v2 `OK <verb>`/`ERR <reason>`
+//! framing, admission control, and hot-swappable snapshots).
 //!
 //! ```text
 //! components <k>      k-level components (kwing/ktip aliases check kind)
@@ -20,8 +24,15 @@
 //! `metrics` reads the process-wide [`crate::obs::Registry`]: the
 //! engine's [`crate::metrics::IndexMeters`] are published into it on
 //! every call (so they are readable, not write-only), alongside the
-//! always-on `server.connections` / `server.commands` counters bumped
-//! by the session loop itself.
+//! always-on `server.connections` / `server.commands` counters.
+//! `server.commands` counts real commands only — empty lines and
+//! `quit`/`exit` are session plumbing, not queries, and are excluded
+//! (see [`Dispatch::counted`]).
+//!
+//! The thread-per-connection entry points ([`serve_stdin`],
+//! [`serve_tcp`], [`serve_listener`]) are deprecated in favor of the
+//! reactor behind [`crate::serve::ServerConfig`] / [`crate::serve::Server`];
+//! they remain as thin wrappers for one release.
 
 use super::query::{NodeInfo, QueryEngine};
 use super::ForestKind;
@@ -33,6 +44,20 @@ use std::sync::Arc;
 pub enum Reply {
     Body(String),
     Quit,
+}
+
+/// Result of [`dispatch`]ing one protocol line, before any wire framing.
+pub struct Dispatch {
+    /// Lower-cased verb token (empty for a blank line).
+    pub verb: String,
+    /// `Ok(body)` or `Err(reason)`; the v1 wire format renders errors as
+    /// `ERR <reason>`, v2 ([`crate::serve::proto`]) adds `OK <verb>`.
+    pub body: Result<String, String>,
+    /// The session should close after replying (`quit` / `exit`).
+    pub quit: bool,
+    /// Whether this line was counted in `server.commands` (real commands
+    /// only; empty lines and `quit` are excluded).
+    pub counted: bool,
 }
 
 fn node_line(info: &NodeInfo) -> String {
@@ -72,17 +97,33 @@ fn components_reply(engine: &QueryEngine, k: u64) -> String {
     out
 }
 
-/// Execute one protocol line. Never panics on malformed input; errors
-/// come back as `ERR <reason>` bodies.
-pub fn handle_command(engine: &QueryEngine, line: &str) -> Reply {
+/// Execute one protocol line against the engine. Never panics on
+/// malformed input; errors come back as `Err(reason)` bodies. This is
+/// the transport-agnostic core shared by the v1 wrappers here and the
+/// v2 framing in [`crate::serve::proto`].
+pub fn dispatch(engine: &QueryEngine, line: &str) -> Dispatch {
     let mut toks = line.split_whitespace();
     let verb = match toks.next() {
         Some(v) => v.to_ascii_lowercase(),
-        None => return Reply::Body("ERR empty command (try: help)".to_string()),
+        None => {
+            return Dispatch {
+                verb: String::new(),
+                body: Err("empty command (try: help)".to_string()),
+                quit: false,
+                counted: false,
+            }
+        }
     };
+    if verb == "quit" || verb == "exit" {
+        return Dispatch {
+            verb: "quit".to_string(),
+            body: Ok(String::new()),
+            quit: true,
+            counted: false,
+        };
+    }
     crate::obs::Registry::global().counter("server.commands").add(1);
     let body = match verb.as_str() {
-        "quit" | "exit" => return Reply::Quit,
         "help" => Ok(concat!(
             "commands:\n",
             "  components <k>   k-level components (aliases: kwing, ktip)\n",
@@ -188,7 +229,22 @@ pub fn handle_command(engine: &QueryEngine, line: &str) -> Reply {
         }
         other => Err(format!("unknown command '{other}' (try: help)")),
     };
-    Reply::Body(match body {
+    Dispatch {
+        verb,
+        body,
+        quit: false,
+        counted: true,
+    }
+}
+
+/// [`dispatch`] rendered in the v1 wire shape: errors prefixed with
+/// `ERR `, `quit` collapsed to [`Reply::Quit`].
+pub fn handle_command(engine: &QueryEngine, line: &str) -> Reply {
+    let d = dispatch(engine, line);
+    if d.quit {
+        return Reply::Quit;
+    }
+    Reply::Body(match d.body {
         Ok(b) => b,
         Err(e) => format!("ERR {e}"),
     })
@@ -223,36 +279,70 @@ fn session<R: BufRead, W: Write>(engine: &QueryEngine, reader: R, mut writer: W)
     Ok(())
 }
 
-/// Serve queries over stdin/stdout until EOF or `quit`.
+/// Serve queries over stdin/stdout until EOF or `quit` (protocol v1).
+#[deprecated(
+    note = "use pbng::serve::ServerConfig / Server::run (protocol v2, admission \
+            control, hot-swappable snapshots); this v1 wrapper serves one release"
+)]
 pub fn serve_stdin(engine: &QueryEngine) -> std::io::Result<()> {
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     session(engine, stdin.lock(), stdout.lock())
 }
 
-/// Serve one accepted TCP connection to completion.
+/// Serve one accepted TCP connection to completion (protocol v1).
 pub fn handle_connection(engine: &QueryEngine, stream: TcpStream) -> std::io::Result<()> {
     let reader = BufReader::new(stream.try_clone()?);
     session(engine, reader, stream)
 }
 
 /// Bind `addr` (e.g. `127.0.0.1:7878`) and serve forever, one thread per
-/// connection.
+/// connection (protocol v1).
+#[deprecated(
+    note = "use pbng::serve::ServerConfig / Server::run (protocol v2, admission \
+            control, hot-swappable snapshots); this v1 wrapper serves one release"
+)]
 pub fn serve_tcp(engine: Arc<QueryEngine>, addr: &str) -> std::io::Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!("pbng index server listening on {}", listener.local_addr()?);
+    #[allow(deprecated)]
     serve_listener(engine, listener)
 }
 
-/// Accept-loop over an already-bound listener (lets callers pick
-/// ephemeral ports; used by the example and tests).
+/// Accept-loop over an already-bound listener, one thread per connection
+/// (protocol v1; lets callers pick ephemeral ports).
+///
+/// Session failures — IO errors *and* handler panics, which a detached
+/// thread would otherwise swallow silently — are logged and counted in
+/// the `server.session_errors` registry counter, matching the reactor's
+/// accounting.
+#[deprecated(
+    note = "use pbng::serve::ServerConfig / Server::run (protocol v2, admission \
+            control, hot-swappable snapshots); this v1 wrapper serves one release"
+)]
 pub fn serve_listener(engine: Arc<QueryEngine>, listener: TcpListener) -> std::io::Result<()> {
+    let errors = crate::obs::Registry::global().counter("server.session_errors");
     for stream in listener.incoming() {
         let stream = stream?;
         let engine = engine.clone();
+        let errors = errors.clone();
         std::thread::spawn(move || {
-            if let Err(e) = handle_connection(&engine, stream) {
-                eprintln!("connection error: {e}");
+            let peer = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "<unknown>".to_string());
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                handle_connection(&engine, stream)
+            })) {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    errors.add(1);
+                    eprintln!("pbng serve: session error from {peer}: {e}");
+                }
+                Err(_) => {
+                    errors.add(1);
+                    eprintln!("pbng serve: session thread panicked for {peer}");
+                }
             }
         });
     }
@@ -349,6 +439,29 @@ mod tests {
         let mut sorted = names.clone();
         sorted.sort_unstable();
         assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn dispatch_classifies_quit_and_empty_as_uncounted() {
+        let e = engine();
+        // real commands are counted in server.commands, session plumbing
+        // (quit/exit aliases, blank lines) is not — `counted` carries the
+        // classification so tests stay independent of the global registry
+        for (line, counted, quit) in [
+            ("stats", true, false),
+            ("help", true, false),
+            ("frobnicate", true, false), // unknown but still a command
+            ("", false, false),
+            ("   ", false, false),
+            ("quit", false, true),
+            ("exit", false, true),
+        ] {
+            let d = dispatch(&e, line);
+            assert_eq!(d.counted, counted, "line {line:?}");
+            assert_eq!(d.quit, quit, "line {line:?}");
+        }
+        assert_eq!(dispatch(&e, "exit").verb, "quit");
+        assert!(dispatch(&e, "").body.is_err());
     }
 
     #[test]

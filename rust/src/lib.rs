@@ -38,6 +38,7 @@ pub mod par;
 pub mod hierarchy;
 pub mod peel;
 pub mod runtime;
+pub mod serve;
 pub mod testkit;
 pub mod tip;
 pub mod wing;

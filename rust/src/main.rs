@@ -57,7 +57,13 @@ USAGE: pbng <command> [args]
   index <graph.tsv> --out <index.idx> [--kind wing|tip-u|tip-v]
                     [--theta numbers.txt] [--p P] [--threads T]
   query <index.idx> <command ...>        (e.g. `query g.idx kwing 3`)
-  serve <index.idx> [--port N]           (stdin line protocol without --port)
+  serve <index.idx> [--port N] [--max-conns N] [--per-ip N]
+        [--idle-timeout SECS] [--proto v1|v2] [--watch-interval MS]
+        (stdin session without --port; --port 0 picks an ephemeral port;
+         the index file is re-served on rewrite or on the `reload` verb)
+  serve <graph.tsv> --watch <deltas.txt> [--kind wing|tip-u|tip-v]
+        [--batch N] [--fallback F] [--p P] [--threads T] [serve flags]
+        (live snapshots: deltas drain through the incremental engine)
   bench [--suite smoke] [--repetitions N] [--warmup N] [--threads T]
         [--out FILE] [--list]
   bench compare <baseline.json> <current.json> [--counter-tolerance F]
@@ -71,7 +77,10 @@ wing/tip/update/bench also take --trace [--trace-out FILE] to write a
 Chrome trace (trace.json) of the run.
 
 Index line protocol: components/kwing/ktip <k>, membership <id>,
-densest <id>, top <n>, summary, stats, metrics, help, quit.
+densest <id>, top <n>, summary, stats, metrics, help, quit
+(+ reload under protocol v2). v2 frames every reply as `OK <verb>` /
+`ERR <reason>` … `END`; `--proto v1` keeps the legacy READY/BYE format
+for one release.
 
 <graph.tsv> may also be a preset name.
 Presets: {}",
@@ -342,7 +351,7 @@ fn cmd_tip(args: &Args) -> Result<()> {
 /// `engine::incremental`, keeping θ consistent without from-scratch
 /// recomputation (with `--verify` proving it at the end).
 fn cmd_update(args: &Args) -> Result<()> {
-    use pbng::engine::incremental::{IncrementalConfig, TipIncremental, WingIncremental};
+    use pbng::engine::incremental::{IncrementalConfig, IncrementalState};
     use pbng::graph::dynamic::{load_deltas, DeltaBatch};
     let g = load_graph(args)?;
     let delta_path = args
@@ -372,25 +381,18 @@ fn cmd_update(args: &Args) -> Result<()> {
         );
     }
     let icfg = IncrementalConfig { engine, fallback_fraction: fallback };
-
-    enum State {
-        Wing(Box<WingIncremental>),
-        Tip(Box<TipIncremental>),
-    }
-    let mut st = match kind.as_str() {
-        "wing" => State::Wing(Box::new(WingIncremental::new(&g, icfg))),
-        "tip-u" => State::Tip(Box::new(TipIncremental::new(&g, Side::U, icfg))),
-        "tip-v" => State::Tip(Box::new(TipIncremental::new(&g, Side::V, icfg))),
+    let fkind = match kind.as_str() {
+        "wing" => pbng::index::ForestKind::Wing,
+        "tip-u" => pbng::index::ForestKind::TipU,
+        "tip-v" => pbng::index::ForestKind::TipV,
         k => bail!("unknown --kind '{k}' (wing | tip-u | tip-v)"),
     };
+    let mut st = IncrementalState::new(&g, fkind, icfg);
     let chunk = if batch_size == 0 { ops.len().max(1) } else { batch_size };
     println!("applying {} delta ops in batches of {chunk} ({kind})", ops.len());
     for (i, ops) in ops.chunks(chunk).enumerate() {
         let batch = DeltaBatch::new(ops.to_vec());
-        let up = match &mut st {
-            State::Wing(s) => s.apply(&batch),
-            State::Tip(s) => s.apply(&batch),
-        };
+        let up = st.apply(&batch);
         println!(
             "batch {i}: +{} -{} edges, butterflies +{}/-{}, affected {}/{}, \
              invalidated {}/{} partitions{} ({:?})",
@@ -408,15 +410,12 @@ fn cmd_update(args: &Args) -> Result<()> {
     }
     // finish before --verify so the trace covers only the delta stream
     trace_finish(trace)?;
-    let theta: Vec<u64> = match &st {
-        State::Wing(s) => s.theta().to_vec(),
-        State::Tip(s) => s.theta().to_vec(),
-    };
+    let theta: Vec<u64> = st.theta().to_vec();
     if verify {
-        let fresh = match &st {
-            State::Wing(s) => pbng::wing::wing_pbng(s.graph(), engine).theta,
+        let fresh = match st.kind() {
+            pbng::index::ForestKind::Wing => pbng::wing::wing_pbng(st.graph(), engine).theta,
             // the state's graph is already oriented with the peel side as U
-            State::Tip(s) => pbng::tip::tip_pbng(s.graph(), Side::U, engine).theta,
+            _ => pbng::tip::tip_pbng(st.graph(), Side::U, engine).theta,
         };
         anyhow::ensure!(
             theta == fresh,
@@ -530,18 +529,86 @@ fn cmd_query(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `pbng serve`: the poll-based reactor over hot-swappable snapshots.
+///
+/// Default mode serves a persisted index file; a background updater
+/// re-reads it when the file changes on disk or a client sends
+/// `reload`. With `--watch <deltas>` the positional is a graph (file or
+/// preset) and the updater instead drains the delta log through the
+/// incremental engine, republishing a fresh snapshot per batch.
 fn cmd_serve(args: &Args) -> Result<()> {
-    let engine = load_engine(args)?;
-    let port = args.get("port").map(|p| p.parse::<u16>()).transpose()
-        .context("--port expects a TCP port number")?;
-    args.check_unknown()?;
-    match port {
-        Some(p) => {
-            let engine = std::sync::Arc::new(engine);
-            pbng::index::server::serve_tcp(engine, &format!("127.0.0.1:{p}"))?;
+    use pbng::serve::{ProtoVersion, Server, ServerConfig, SnapshotSource, SnapshotStore, Updater};
+    let proto = {
+        let s = args.get_or("proto", "v2");
+        ProtoVersion::parse(s).with_context(|| format!("--proto expects v1 or v2, got '{s}'"))?
+    };
+    let port = if args.get("port").is_some() {
+        Some(args.get_u16("port", 0)?)
+    } else {
+        None
+    };
+    let max_conns = args.get_usize("max-conns", 1024)?;
+    let per_ip = args.get_usize("per-ip", 32)?;
+    let idle_secs = args.get_u64("idle-timeout", 300)?;
+    let interval = std::time::Duration::from_millis(args.get_u64("watch-interval", 500)?);
+    let watch = args.get("watch").map(str::to_string);
+    let (store, _updater) = match watch {
+        None => {
+            let path = args
+                .positional
+                .first()
+                .context("expected an index file argument (built with `pbng index`)")?
+                .clone();
+            let engine = load_engine(args)?;
+            let store = SnapshotStore::new(engine);
+            let upd = Updater::spawn(
+                SnapshotSource::IndexFile(path.into()),
+                store.clone(),
+                interval,
+            );
+            (store, upd)
         }
-        None => pbng::index::server::serve_stdin(&engine)?,
+        Some(deltas) => {
+            use pbng::engine::incremental::{IncrementalConfig, IncrementalState};
+            let g = load_graph(args)?;
+            let kind = args.get_or("kind", "wing").to_string();
+            let fkind = match kind.as_str() {
+                "wing" => pbng::index::ForestKind::Wing,
+                "tip-u" => pbng::index::ForestKind::TipU,
+                "tip-v" => pbng::index::ForestKind::TipV,
+                k => bail!("unknown --kind '{k}' (wing | tip-u | tip-v)"),
+            };
+            let batch = args.get_usize("batch", 256)?;
+            let fallback = args.get_f64("fallback", 0.25)?;
+            let ecfg = engine_cfg(args, if kind == "wing" { 64 } else { 32 })?;
+            let threads = ecfg.threads;
+            let icfg = IncrementalConfig { engine: ecfg, fallback_fraction: fallback };
+            let state = IncrementalState::new(&g, fkind, icfg);
+            let engine = pbng::serve::updater::engine_from_state(&state, threads);
+            let store = SnapshotStore::new(engine);
+            let upd = Updater::spawn(
+                SnapshotSource::DeltaLog {
+                    state,
+                    path: deltas.into(),
+                    batch,
+                    threads,
+                },
+                store.clone(),
+                interval,
+            );
+            (store, upd)
+        }
+    };
+    args.check_unknown()?;
+    let mut cfg = ServerConfig::new()
+        .max_conns(max_conns)
+        .per_ip(per_ip)
+        .idle_timeout(std::time::Duration::from_secs(idle_secs))
+        .proto(proto);
+    if let Some(p) = port {
+        cfg = cfg.addr(format!("127.0.0.1:{p}"));
     }
+    Server::new(cfg, store).run()?;
     Ok(())
 }
 

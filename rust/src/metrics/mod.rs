@@ -321,6 +321,19 @@ impl IndexMeters {
             reg.counter(&format!("index.{n}")).set(v);
         }
     }
+
+    /// Fold another meter set into this one (atomic adds).
+    ///
+    /// Each snapshot epoch owns a fresh [`crate::index::query::QueryEngine`]
+    /// with zeroed meters; the serving layer's
+    /// [`crate::serve::SnapshotStore`] absorbs a retiring engine's meters
+    /// into a lifetime accumulator at swap time so `stats`/`metrics`
+    /// report cumulative traffic, not just the live epoch's.
+    pub fn absorb(&self, other: &IndexMeters) {
+        self.queries.add(other.queries.get());
+        self.cache_hits.add(other.cache_hits.get());
+        self.cache_misses.add(other.cache_misses.get());
+    }
 }
 
 /// Human-size formatting for counters (paper prints billions).
@@ -426,6 +439,23 @@ mod tests {
         let j = snap.to_json();
         assert_eq!(j.req_u64("spawns").unwrap(), 4);
         assert_eq!(j.req_u64("invalidated_parts").unwrap(), 5);
+    }
+
+    #[test]
+    fn index_meters_absorb_accumulates() {
+        let life = IndexMeters::new();
+        let epoch1 = IndexMeters::new();
+        epoch1.queries.add(5);
+        epoch1.cache_hits.add(2);
+        life.absorb(&epoch1);
+        let epoch2 = IndexMeters::new();
+        epoch2.queries.add(1);
+        epoch2.cache_misses.add(3);
+        life.absorb(&epoch2);
+        assert_eq!(
+            life.pairs(),
+            [("queries", 6), ("cache_hits", 2), ("cache_misses", 3)]
+        );
     }
 
     #[test]

@@ -155,6 +155,21 @@ impl Registry {
         out
     }
 
+    /// `(name, count, sum, max_bound)` for every histogram, sorted by
+    /// name — the per-listener summary the serving layer's v2 `metrics`
+    /// verb dumps as `hist <name> count <c> sum <s> max <b>` lines
+    /// (reload latencies land here as `server.reload_ns`).
+    pub fn histogram_snapshot(&self) -> Vec<(String, u64, u64, u64)> {
+        let mut out: Vec<(String, u64, u64, u64)> = self
+            .lock()
+            .histograms
+            .iter()
+            .map(|(n, h)| (n.clone(), h.count(), h.sum(), h.max_bound()))
+            .collect();
+        out.sort();
+        out
+    }
+
     /// `{"counters":{…},"histograms":{…}}`, names sorted.
     pub fn to_json(&self) -> Value {
         let mut counters = Value::obj();
@@ -219,6 +234,19 @@ mod tests {
         assert_eq!(r.counter("x").get(), 7);
         let snap = r.counter_snapshot();
         assert_eq!(snap, vec![("x".to_string(), 7)]);
+    }
+
+    #[test]
+    fn histogram_snapshot_is_sorted_with_summaries() {
+        let r = Registry::new();
+        r.histogram("z.lat").record(100);
+        r.histogram("a.lat").record(3);
+        r.histogram("a.lat").record(5);
+        let snap = r.histogram_snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0, "a.lat");
+        assert_eq!((snap[0].1, snap[0].2), (2, 8));
+        assert_eq!(snap[1], ("z.lat".to_string(), 1, 100, 128));
     }
 
     #[test]

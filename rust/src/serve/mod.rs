@@ -1,0 +1,332 @@
+//! Async serving layer: poll-based reactor, admission control, and
+//! hot-swappable index snapshots.
+//!
+//! The thread-per-connection loops in [`crate::index::server`] scale to
+//! tens of sessions, not millions: every connection pins a thread, and
+//! the single immutable [`QueryEngine`] means any re-peel requires a
+//! restart. This module replaces them with:
+//!
+//! * **A single-threaded poll-based reactor** ([`reactor`]) — a
+//!   non-blocking `TcpListener` plus per-connection read/write buffers
+//!   and line framing, driven by a small readiness loop (no `libc`, no
+//!   new dependencies). One thread serves every session.
+//! * **Admission control** — global ([`ServerConfig::max_conns`]) and
+//!   per-IP ([`ServerConfig::per_ip`]) connection caps with graceful
+//!   `ERR busy` shedding (counted in `server.rejected`), idle timeouts
+//!   (`server.idle_closed`), and a bounded line length.
+//! * **MVCC snapshot serving** ([`snapshot`]) — queries run against an
+//!   immutable `Arc<QueryEngine>` loaded from an atomically swappable
+//!   slot; a background [`updater`] drains a delta file through
+//!   [`crate::engine::incremental`] (or re-reads a persisted index on
+//!   `reload`) and publishes a new epoch. Readers never block on
+//!   writes: a session pins its snapshot at accept time, in-flight
+//!   queries on the old `Arc` complete untouched, and new sessions see
+//!   the new epoch.
+//! * **Protocol v2** ([`proto`]) — every reply starts `OK <verb>` or
+//!   `ERR <reason>` and ends `END`; `stats` reports `protocol 2` and
+//!   the snapshot epoch. Protocol v1 stays available for one release
+//!   behind [`ServerConfig::proto`] (`--proto v1` on the CLI).
+//!
+//! # Quick start
+//!
+//! ```no_run
+//! use pbng::serve::{Server, ServerConfig, SnapshotStore};
+//! # let forest = pbng::index::codec::load(std::path::Path::new("g.idx")).unwrap();
+//! let store = SnapshotStore::new(pbng::index::query::QueryEngine::new(forest));
+//! let cfg = ServerConfig::new()
+//!     .addr("127.0.0.1:7878")
+//!     .max_conns(1024)
+//!     .per_ip(32)
+//!     .idle_timeout(std::time::Duration::from_secs(300));
+//! Server::new(cfg, store).run().unwrap();
+//! ```
+//!
+//! The old free functions (`serve_stdin` / `serve_tcp` /
+//! `serve_listener`) remain as deprecated thin wrappers over protocol
+//! v1 for one release.
+
+pub mod proto;
+pub mod reactor;
+pub mod snapshot;
+pub mod updater;
+
+pub use proto::ProtoVersion;
+pub use snapshot::{Snapshot, SnapshotStore};
+pub use updater::{SnapshotSource, Updater};
+
+use crate::index::query::QueryEngine;
+use std::io::{BufRead, Write};
+use std::net::TcpListener;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Builder-style server configuration: bind address, admission-control
+/// limits, timeouts, and the wire protocol version. Snapshot *sources*
+/// are configured separately (see [`SnapshotStore`] / [`Updater`]) so
+/// one store can outlive many listener configurations.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub(crate) addr: Option<String>,
+    pub(crate) max_conns: usize,
+    pub(crate) per_ip: usize,
+    pub(crate) idle_timeout: Duration,
+    pub(crate) poll_interval: Duration,
+    pub(crate) max_line: usize,
+    pub(crate) proto: ProtoVersion,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: None,
+            max_conns: 1024,
+            per_ip: 32,
+            idle_timeout: Duration::from_secs(300),
+            poll_interval: Duration::from_millis(1),
+            max_line: 64 * 1024,
+            proto: ProtoVersion::V2,
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn new() -> ServerConfig {
+        ServerConfig::default()
+    }
+
+    /// TCP bind address (e.g. `127.0.0.1:7878`; port `0` picks an
+    /// ephemeral port). Without an address, [`Server::run`] serves one
+    /// blocking session over stdin/stdout.
+    pub fn addr(mut self, addr: impl Into<String>) -> Self {
+        self.addr = Some(addr.into());
+        self
+    }
+
+    /// Global connection cap: connection `n+1` is shed with `ERR busy`
+    /// and counted in `server.rejected`. 0 disables the cap.
+    pub fn max_conns(mut self, n: usize) -> Self {
+        self.max_conns = n;
+        self
+    }
+
+    /// Per-IP connection cap (muta-style "limit connections from same
+    /// ip"); shed the same way as the global cap. 0 disables the cap.
+    pub fn per_ip(mut self, n: usize) -> Self {
+        self.per_ip = n;
+        self
+    }
+
+    /// Close connections with no complete command for this long
+    /// (counted in `server.idle_closed`). Zero disables the timeout.
+    pub fn idle_timeout(mut self, d: Duration) -> Self {
+        self.idle_timeout = d;
+        self
+    }
+
+    /// How long the reactor parks when no connection made progress.
+    pub fn poll_interval(mut self, d: Duration) -> Self {
+        self.poll_interval = d;
+        self
+    }
+
+    /// Reject (and close) connections that send a line longer than this
+    /// many bytes without a newline.
+    pub fn max_line(mut self, n: usize) -> Self {
+        self.max_line = n.max(1);
+        self
+    }
+
+    /// Wire protocol version served to every session (default v2).
+    pub fn proto(mut self, p: ProtoVersion) -> Self {
+        self.proto = p;
+        self
+    }
+}
+
+/// A configured server over a snapshot store. [`Server::run`] blocks on
+/// the reactor (or the stdin session); [`Server::stop_handle`] lets
+/// another thread request a graceful exit.
+pub struct Server {
+    cfg: ServerConfig,
+    store: Arc<SnapshotStore>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(cfg: ServerConfig, store: Arc<SnapshotStore>) -> Server {
+        Server {
+            cfg,
+            store,
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Flag checked once per reactor iteration; setting it makes
+    /// [`Server::run`] return after the current sweep.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Bind the configured address and serve until stopped (TCP), or
+    /// serve one session over stdin/stdout when no address is set.
+    /// Prints `LISTENING <addr>` on stdout once the socket is bound so
+    /// scripts can discover ephemeral ports.
+    pub fn run(self) -> std::io::Result<()> {
+        match self.cfg.addr.clone() {
+            Some(addr) => {
+                let listener = TcpListener::bind(&addr)?;
+                self.run_on(listener)
+            }
+            None => self.run_stdin(),
+        }
+    }
+
+    /// Serve an already-bound listener (tests and embedders pick their
+    /// own ephemeral ports).
+    pub fn run_on(self, listener: TcpListener) -> std::io::Result<()> {
+        let local = listener.local_addr()?;
+        println!("LISTENING {local}");
+        std::io::stdout().flush().ok();
+        reactor::run(&self.cfg, &self.store, listener, &self.stop)
+    }
+
+    /// One blocking session over stdin/stdout (the `pbng serve` default
+    /// without `--port`), speaking the configured protocol version. The
+    /// snapshot is pinned at session start, like any other session.
+    fn run_stdin(self) -> std::io::Result<()> {
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        let mut out = stdout.lock();
+        let snap = self.store.load();
+        crate::obs::Registry::global().counter("server.connections").add(1);
+        writeln!(out, "{}", proto::greeting(&snap, self.cfg.proto))?;
+        out.flush()?;
+        for line in stdin.lock().lines() {
+            let line = line?;
+            match proto::respond(&self.store, &snap, self.cfg.proto, &line) {
+                None => continue,
+                Some((reply, quit)) => {
+                    write!(out, "{reply}")?;
+                    out.flush()?;
+                    if quit {
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Session-level protocol driver shared by the stdin path and unit
+/// tests: runs a full session over any `BufRead`/`Write` pair against a
+/// pinned snapshot. The reactor inlines the same logic over its
+/// non-blocking buffers.
+pub fn session_over<R: BufRead, W: Write>(
+    store: &SnapshotStore,
+    proto_version: ProtoVersion,
+    reader: R,
+    mut writer: W,
+) -> std::io::Result<()> {
+    let snap = store.load();
+    crate::obs::Registry::global().counter("server.connections").add(1);
+    writeln!(writer, "{}", proto::greeting(&snap, proto_version))?;
+    writer.flush()?;
+    for line in reader.lines() {
+        let line = line?;
+        match proto::respond(store, &snap, proto_version, &line) {
+            None => continue,
+            Some((reply, quit)) => {
+                write!(writer, "{reply}")?;
+                writer.flush()?;
+                if quit {
+                    break;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Convenience for one-shot embedders: wrap an engine in a store and
+/// answer a single command in the configured protocol's framing.
+pub fn one_shot(engine: QueryEngine, proto_version: ProtoVersion, line: &str) -> String {
+    let store = SnapshotStore::new(engine);
+    let snap = store.load();
+    match proto::respond(&store, &snap, proto_version, line) {
+        None => String::new(),
+        Some((reply, _)) => reply,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::beindex::BeIndex;
+    use crate::graph::gen;
+    use crate::index::build_wing_forest;
+    use crate::peel::bup::wing_bup;
+
+    fn engine() -> QueryEngine {
+        let g = gen::paper_fig1();
+        let (idx, _) = BeIndex::build(&g, 1);
+        let theta = wing_bup(&g).theta;
+        QueryEngine::new(build_wing_forest(&g, &idx, &theta, 1))
+    }
+
+    #[test]
+    fn config_builder_chains() {
+        let cfg = ServerConfig::new()
+            .addr("127.0.0.1:0")
+            .max_conns(7)
+            .per_ip(2)
+            .idle_timeout(Duration::from_secs(9))
+            .max_line(128)
+            .proto(ProtoVersion::V1);
+        assert_eq!(cfg.addr.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(cfg.max_conns, 7);
+        assert_eq!(cfg.per_ip, 2);
+        assert_eq!(cfg.idle_timeout, Duration::from_secs(9));
+        assert_eq!(cfg.max_line, 128);
+        assert_eq!(cfg.proto, ProtoVersion::V1);
+    }
+
+    #[test]
+    fn session_over_in_memory_pipe_speaks_v2() {
+        let store = SnapshotStore::new(engine());
+        let input = b"stats\n\nkwing 2\nquit\nnever-reached\n".to_vec();
+        let mut out = Vec::new();
+        session_over(&store, ProtoVersion::V2, std::io::Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("OK hello"), "{text}");
+        // greeting + stats + kwing + quit = 4 frames; the blank line is
+        // ignored silently in v2
+        assert_eq!(text.matches("\nEND\n").count(), 4, "{text}");
+        assert!(text.contains("OK stats"), "{text}");
+        assert!(text.contains("protocol 2"), "{text}");
+        assert!(text.contains("epoch 1"), "{text}");
+        assert!(text.contains("OK kwing"), "{text}");
+        assert!(text.contains("OK quit"), "{text}");
+        assert!(!text.contains("never-reached"));
+    }
+
+    #[test]
+    fn session_over_in_memory_pipe_speaks_v1() {
+        let store = SnapshotStore::new(engine());
+        let input = b"stats\nquit\n".to_vec();
+        let mut out = Vec::new();
+        session_over(&store, ProtoVersion::V1, std::io::Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("READY kind=wing"), "{text}");
+        assert!(text.trim_end().ends_with("BYE"), "{text}");
+        assert!(!text.contains("protocol 2"), "{text}");
+    }
+
+    #[test]
+    fn one_shot_frames_a_single_reply() {
+        let r = one_shot(engine(), ProtoVersion::V2, "summary");
+        assert!(r.starts_with("OK summary\n"), "{r}");
+        assert!(r.ends_with("END\n"), "{r}");
+    }
+}

@@ -1,0 +1,278 @@
+//! Wire protocol framing for the serving layer.
+//!
+//! **v2** (default): every session starts with a greeting frame
+//! (`OK hello`, an info line, `END`), and every reply is one frame —
+//! first line `OK <verb>` (the verb as typed) or `ERR <reason>`, then
+//! the body, then `END` on its own line. Blank lines are ignored
+//! silently. `stats` appends `protocol 2` and the session's pinned
+//! snapshot `epoch`; `metrics` dumps the registry *including* histogram
+//! summaries (`hist <name> count <c> sum <s> max <b>`) and cumulative
+//! cross-epoch index meters; `reload` asks the attached [`super::Updater`]
+//! to rebuild the snapshot.
+//!
+//! **v1** (deprecated, one release): the exact wire format of the old
+//! `serve_*` functions — `READY …` greeting without `END`, bare bodies
+//! (errors as `ERR <reason>` body lines) followed by `END`, `BYE` on
+//! quit, and an `ERR` reply to blank lines. Byte-for-byte compatible so
+//! existing scripts keep working behind `--proto v1`.
+//!
+//! | | v1 | v2 |
+//! |---|---|---|
+//! | greeting | `READY kind=… …` (no END) | `OK hello` + info + `END` |
+//! | reply | body + `END` | `OK <verb>` + body + `END` |
+//! | error | `ERR <reason>` + `END` | `ERR <reason>` + `END` |
+//! | blank line | `ERR empty command` | ignored |
+//! | quit | `BYE`, close | `OK quit` + `END`, close |
+//! | reload | — | `OK reload` / `ERR reload unavailable` |
+
+use super::snapshot::{Snapshot, SnapshotStore};
+use crate::index::server::{dispatch, handle_command, Reply};
+use crate::obs::Registry;
+
+/// Wire protocol version of a session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtoVersion {
+    /// Legacy `READY`/`BYE` framing, kept for one release.
+    V1,
+    /// `OK <verb>`/`ERR <reason>` framed replies (default).
+    V2,
+}
+
+impl ProtoVersion {
+    /// Parse a CLI spelling (`v1`, `1`, `v2`, `2`; case-insensitive).
+    pub fn parse(s: &str) -> Option<ProtoVersion> {
+        match s.to_ascii_lowercase().as_str() {
+            "v1" | "1" => Some(ProtoVersion::V1),
+            "v2" | "2" => Some(ProtoVersion::V2),
+            _ => None,
+        }
+    }
+
+    pub fn number(self) -> u32 {
+        match self {
+            ProtoVersion::V1 => 1,
+            ProtoVersion::V2 => 2,
+        }
+    }
+}
+
+/// Session greeting, without the trailing newline (callers `writeln!`).
+pub fn greeting(snap: &Snapshot, proto: ProtoVersion) -> String {
+    let f = snap.engine.forest();
+    match proto {
+        ProtoVersion::V1 => format!(
+            "READY kind={} entities={} nodes={} levels={}",
+            f.kind.name(),
+            f.n_entities(),
+            f.n_nodes(),
+            f.levels.len()
+        ),
+        ProtoVersion::V2 => format!(
+            "OK hello\nproto 2 kind {} entities {} nodes {} levels {} epoch {}\nEND",
+            f.kind.name(),
+            f.n_entities(),
+            f.n_nodes(),
+            f.levels.len(),
+            snap.epoch
+        ),
+    }
+}
+
+/// Answer one protocol line against the session's pinned snapshot.
+/// Returns `None` for lines that get no reply (blank lines in v2), else
+/// the complete newline-terminated reply and whether the session should
+/// close after sending it.
+pub fn respond(
+    store: &SnapshotStore,
+    snap: &Snapshot,
+    proto: ProtoVersion,
+    line: &str,
+) -> Option<(String, bool)> {
+    match proto {
+        ProtoVersion::V1 => respond_v1(snap, line),
+        ProtoVersion::V2 => respond_v2(store, snap, line),
+    }
+}
+
+fn respond_v1(snap: &Snapshot, line: &str) -> Option<(String, bool)> {
+    match handle_command(&snap.engine, line) {
+        Reply::Quit => Some(("BYE\n".to_string(), true)),
+        Reply::Body(b) => Some((format!("{b}\nEND\n"), false)),
+    }
+}
+
+fn err_frame(reason: &str) -> String {
+    format!("ERR {reason}\nEND\n")
+}
+
+fn respond_v2(store: &SnapshotStore, snap: &Snapshot, line: &str) -> Option<(String, bool)> {
+    let trimmed = line.trim();
+    if trimmed.is_empty() {
+        return None;
+    }
+    // `reload` is a store-level verb (it concerns the *next* snapshot,
+    // not the pinned one), so it is intercepted before dispatch; it is
+    // still a real command and counts in `server.commands`.
+    if trimmed.eq_ignore_ascii_case("reload") {
+        Registry::global().counter("server.commands").add(1);
+        let reply = if store.request_reload() {
+            "OK reload\nreload requested; new sessions will see the next epoch\nEND\n"
+                .to_string()
+        } else {
+            err_frame("reload unavailable (no updater attached to this server)")
+        };
+        return Some((reply, false));
+    }
+    let d = dispatch(&snap.engine, line);
+    if d.quit {
+        return Some(("OK quit\nEND\n".to_string(), true));
+    }
+    Some(match d.body {
+        Err(e) => (err_frame(&e), false),
+        Ok(mut body) => {
+            match d.verb.as_str() {
+                "stats" => {
+                    body.push_str(&format!("\nprotocol 2\nepoch {}", snap.epoch));
+                }
+                "metrics" => {
+                    // dispatch published the live engine's meters; override
+                    // with the cumulative cross-epoch values and rebuild
+                    // the dump with histogram summaries appended
+                    let reg = Registry::global();
+                    store.publish_lifetime_meters(reg);
+                    let mut lines: Vec<String> = reg
+                        .counter_snapshot()
+                        .iter()
+                        .map(|(n, v)| format!("{n} {v}"))
+                        .collect();
+                    for (n, c, s, m) in reg.histogram_snapshot() {
+                        lines.push(format!("hist {n} count {c} sum {s} max {m}"));
+                    }
+                    body = lines.join("\n");
+                }
+                "help" => {
+                    body.push_str(
+                        "\n  reload           rebuild the snapshot from the attached source",
+                    );
+                }
+                _ => {}
+            }
+            (format!("OK {}\n{body}\nEND\n", d.verb), false)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::beindex::BeIndex;
+    use crate::graph::gen;
+    use crate::index::build_wing_forest;
+    use crate::index::query::QueryEngine;
+    use crate::peel::bup::wing_bup;
+    use std::sync::Arc;
+
+    fn store() -> Arc<SnapshotStore> {
+        let g = gen::paper_fig1();
+        let (idx, _) = BeIndex::build(&g, 1);
+        let theta = wing_bup(&g).theta;
+        SnapshotStore::new(QueryEngine::new(build_wing_forest(&g, &idx, &theta, 1)))
+    }
+
+    #[test]
+    fn parse_accepts_both_spellings() {
+        assert_eq!(ProtoVersion::parse("v1"), Some(ProtoVersion::V1));
+        assert_eq!(ProtoVersion::parse("1"), Some(ProtoVersion::V1));
+        assert_eq!(ProtoVersion::parse("V2"), Some(ProtoVersion::V2));
+        assert_eq!(ProtoVersion::parse("2"), Some(ProtoVersion::V2));
+        assert_eq!(ProtoVersion::parse("v3"), None);
+        assert_eq!(ProtoVersion::V1.number(), 1);
+        assert_eq!(ProtoVersion::V2.number(), 2);
+    }
+
+    #[test]
+    fn greetings_match_both_protocols() {
+        let s = store();
+        let snap = s.load();
+        let g1 = greeting(&snap, ProtoVersion::V1);
+        assert!(g1.starts_with("READY kind=wing entities="), "{g1}");
+        assert!(!g1.contains("END"), "{g1}");
+        let g2 = greeting(&snap, ProtoVersion::V2);
+        assert!(g2.starts_with("OK hello\nproto 2 kind wing"), "{g2}");
+        assert!(g2.ends_with("epoch 1\nEND"), "{g2}");
+    }
+
+    #[test]
+    fn v2_frames_ok_err_and_quit() {
+        let s = store();
+        let snap = s.load();
+        let (r, q) = respond(&s, &snap, ProtoVersion::V2, "kwing 2").unwrap();
+        assert!(r.starts_with("OK kwing\ncomponents "), "{r}");
+        assert!(r.ends_with("\nEND\n"), "{r}");
+        assert!(!q);
+        let (r, q) = respond(&s, &snap, ProtoVersion::V2, "frobnicate").unwrap();
+        assert!(r.starts_with("ERR unknown command"), "{r}");
+        assert!(r.ends_with("\nEND\n"), "{r}");
+        assert!(!q);
+        let (r, q) = respond(&s, &snap, ProtoVersion::V2, "quit").unwrap();
+        assert_eq!(r, "OK quit\nEND\n");
+        assert!(q);
+        assert!(respond(&s, &snap, ProtoVersion::V2, "   ").is_none());
+    }
+
+    #[test]
+    fn v2_stats_reports_protocol_and_epoch() {
+        let s = store();
+        let snap = s.load();
+        let (r, _) = respond(&s, &snap, ProtoVersion::V2, "stats").unwrap();
+        assert!(r.contains("\nprotocol 2\n"), "{r}");
+        assert!(r.contains("\nepoch 1\n"), "{r}");
+        let (h, _) = respond(&s, &snap, ProtoVersion::V2, "help").unwrap();
+        assert!(h.contains("reload"), "{h}");
+    }
+
+    #[test]
+    fn v2_metrics_includes_histogram_summaries() {
+        let s = store();
+        let snap = s.load();
+        Registry::global().histogram("test.proto.lat").record(640);
+        let (r, _) = respond(&s, &snap, ProtoVersion::V2, "metrics").unwrap();
+        assert!(r.starts_with("OK metrics\n"), "{r}");
+        assert!(r.contains("index.queries "), "{r}");
+        assert!(
+            r.lines().any(|l| l.starts_with("hist test.proto.lat count ")),
+            "{r}"
+        );
+    }
+
+    #[test]
+    fn v2_reload_requires_an_updater() {
+        let s = store();
+        let snap = s.load();
+        let (r, q) = respond(&s, &snap, ProtoVersion::V2, "reload").unwrap();
+        assert!(r.starts_with("ERR reload unavailable"), "{r}");
+        assert!(!q);
+        s.attach_updater();
+        let (r, _) = respond(&s, &snap, ProtoVersion::V2, "RELOAD").unwrap();
+        assert!(r.starts_with("OK reload\n"), "{r}");
+        assert!(s.take_reload_request());
+    }
+
+    #[test]
+    fn v1_is_byte_compatible_with_the_old_session_loop() {
+        let s = store();
+        let snap = s.load();
+        let (r, q) = respond(&s, &snap, ProtoVersion::V1, "").unwrap();
+        assert_eq!(r, "ERR empty command (try: help)\nEND\n");
+        assert!(!q);
+        let (r, q) = respond(&s, &snap, ProtoVersion::V1, "quit").unwrap();
+        assert_eq!(r, "BYE\n");
+        assert!(q);
+        let (r, _) = respond(&s, &snap, ProtoVersion::V1, "summary").unwrap();
+        assert!(r.starts_with("level "), "{r}");
+        assert!(r.ends_with("\nEND\n"), "{r}");
+        // v1 has no reload verb — it falls through to dispatch as unknown
+        let (r, _) = respond(&s, &snap, ProtoVersion::V1, "reload").unwrap();
+        assert!(r.starts_with("ERR unknown command"), "{r}");
+    }
+}

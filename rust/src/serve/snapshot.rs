@@ -1,0 +1,206 @@
+//! MVCC-style snapshot slot: an immutable `Arc<QueryEngine>` behind an
+//! atomically swappable cell, versioned by a monotonically increasing
+//! epoch.
+//!
+//! Readers call [`SnapshotStore::load`] — one short mutex lock to clone
+//! an `Arc` (arc-swap style; the lock is held for a pointer copy, never
+//! across a query, so readers never wait on a rebuild). Writers build
+//! the replacement engine entirely off to the side and then
+//! [`SnapshotStore::publish`] it: old snapshots stay alive for as long
+//! as any session holds their `Arc`, so in-flight queries on a retired
+//! epoch complete against exactly the data they started with.
+//!
+//! Query/cache meters are per-engine and would reset on every swap; the
+//! store absorbs each retiring engine's meters into a lifetime
+//! accumulator ([`SnapshotStore::lifetime_meters`]) so `stats` /
+//! `metrics` report cumulative traffic across epochs.
+
+use crate::index::query::QueryEngine;
+use crate::metrics::IndexMeters;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One immutable serving version: the engine plus its epoch number.
+pub struct Snapshot {
+    pub engine: Arc<QueryEngine>,
+    pub epoch: u64,
+}
+
+/// The swappable slot plus the updater rendezvous state (reload
+/// requests, attachment flag) and the cross-epoch meter accumulator.
+pub struct SnapshotStore {
+    slot: Mutex<Arc<Snapshot>>,
+    epoch: AtomicU64,
+    reload_requested: AtomicBool,
+    updater_attached: AtomicBool,
+    /// Meters of every *retired* engine, folded in at publish time.
+    retired: IndexMeters,
+}
+
+impl SnapshotStore {
+    /// Wrap an engine as epoch 1.
+    pub fn new(engine: QueryEngine) -> Arc<SnapshotStore> {
+        Arc::new(SnapshotStore {
+            slot: Mutex::new(Arc::new(Snapshot {
+                engine: Arc::new(engine),
+                epoch: 1,
+            })),
+            epoch: AtomicU64::new(1),
+            reload_requested: AtomicBool::new(false),
+            updater_attached: AtomicBool::new(false),
+            retired: IndexMeters::new(),
+        })
+    }
+
+    /// The current snapshot. Cheap (one `Arc` clone under a short lock);
+    /// hold the result for the duration of a session to get a stable
+    /// view across swaps.
+    pub fn load(&self) -> Arc<Snapshot> {
+        self.slot.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Epoch of the current snapshot without touching the slot.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Swap in a new engine as the next epoch; returns the new epoch.
+    /// The outgoing engine's meters are absorbed into the lifetime
+    /// accumulator before it retires. Existing `Arc<Snapshot>` holders
+    /// are untouched.
+    pub fn publish(&self, engine: QueryEngine) -> u64 {
+        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
+        let next = slot.epoch + 1;
+        self.retired.absorb(&slot.engine.meters);
+        *slot = Arc::new(Snapshot {
+            engine: Arc::new(engine),
+            epoch: next,
+        });
+        self.epoch.store(next, Ordering::Release);
+        next
+    }
+
+    /// Ask the attached updater (if any) to refresh its source now.
+    /// Returns whether an updater is attached to honor the request.
+    pub fn request_reload(&self) -> bool {
+        if !self.has_updater() {
+            return false;
+        }
+        self.reload_requested.store(true, Ordering::Release);
+        true
+    }
+
+    /// Consume a pending reload request (updater side).
+    pub fn take_reload_request(&self) -> bool {
+        self.reload_requested.swap(false, Ordering::AcqRel)
+    }
+
+    /// Mark that an [`super::Updater`] is polling this store.
+    pub fn attach_updater(&self) {
+        self.updater_attached.store(true, Ordering::Release);
+    }
+
+    pub fn has_updater(&self) -> bool {
+        self.updater_attached.load(Ordering::Acquire)
+    }
+
+    /// Cumulative `(queries, cache_hits, cache_misses)` across every
+    /// epoch: retired engines plus the live one.
+    pub fn lifetime_meters(&self) -> [(&'static str, u64); 3] {
+        let live = self.load();
+        let mut out = self.retired.pairs();
+        for (slot, (_, v)) in out.iter_mut().zip(live.engine.meters.pairs()) {
+            slot.1 += v;
+        }
+        out
+    }
+
+    /// Publish cumulative meters into a registry under `index.*` names
+    /// (the v2 `metrics` verb calls this instead of the live engine's
+    /// [`IndexMeters::publish`], which only sees its own epoch).
+    pub fn publish_lifetime_meters(&self, reg: &crate::obs::Registry) {
+        for (n, v) in self.lifetime_meters() {
+            reg.counter(&format!("index.{n}")).set(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::beindex::BeIndex;
+    use crate::graph::gen;
+    use crate::index::build_wing_forest;
+    use crate::peel::bup::wing_bup;
+
+    fn engine_for(seed: u64) -> QueryEngine {
+        let g = gen::zipf(24, 24, 140, 1.2, 1.2, seed);
+        let (idx, _) = BeIndex::build(&g, 1);
+        let theta = wing_bup(&g).theta;
+        QueryEngine::new(build_wing_forest(&g, &idx, &theta, 1))
+    }
+
+    fn body(engine: &QueryEngine, line: &str) -> String {
+        crate::index::server::dispatch(engine, line).body.unwrap()
+    }
+
+    #[test]
+    fn publish_bumps_epoch_and_new_loads_see_it() {
+        let store = SnapshotStore::new(engine_for(1));
+        assert_eq!(store.epoch(), 1);
+        assert_eq!(store.load().epoch, 1);
+        let e2 = store.publish(engine_for(2));
+        assert_eq!(e2, 2);
+        assert_eq!(store.epoch(), 2);
+        assert_eq!(store.load().epoch, 2);
+    }
+
+    #[test]
+    fn in_flight_snapshot_survives_a_publish_byte_identically() {
+        let store = SnapshotStore::new(engine_for(7));
+        let old = store.load(); // a session pins this epoch
+        let before = body(&old.engine, "components 1");
+        store.publish(engine_for(8));
+        // the retired snapshot still answers, byte-identical to a fresh
+        // engine over the same inputs
+        let after = body(&old.engine, "components 1");
+        assert_eq!(before, after);
+        let fresh = engine_for(7);
+        assert_eq!(after, body(&fresh, "components 1"));
+        // while new loads serve the new epoch's data
+        let newer = store.load();
+        assert_eq!(newer.epoch, 2);
+        let fresh8 = engine_for(8);
+        assert_eq!(
+            body(&newer.engine, "components 1"),
+            body(&fresh8, "components 1")
+        );
+    }
+
+    #[test]
+    fn lifetime_meters_accumulate_across_swaps() {
+        let store = SnapshotStore::new(engine_for(3));
+        // k=0 maps to the smallest existing level, so the miss/hit
+        // pattern below holds for any generated graph
+        let _ = store.load().engine.components(0); // 1 query, 1 miss
+        store.publish(engine_for(4));
+        let _ = store.load().engine.components(0);
+        let _ = store.load().engine.components(0); // hit on the live epoch
+        let pairs = store.lifetime_meters();
+        assert_eq!(pairs[0], ("queries", 3));
+        assert_eq!(pairs[1].0, "cache_hits");
+        assert_eq!(pairs[1].1, 1);
+        assert_eq!(pairs[2], ("cache_misses", 2));
+    }
+
+    #[test]
+    fn reload_requests_need_an_updater() {
+        let store = SnapshotStore::new(engine_for(5));
+        assert!(!store.request_reload());
+        assert!(!store.take_reload_request());
+        store.attach_updater();
+        assert!(store.request_reload());
+        assert!(store.take_reload_request());
+        assert!(!store.take_reload_request()); // consumed
+    }
+}

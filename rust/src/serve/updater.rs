@@ -1,0 +1,326 @@
+//! Background snapshot updater: turns an external source of change —
+//! a re-written index file or a growing delta log — into freshly built
+//! [`QueryEngine`]s published through a [`SnapshotStore`].
+//!
+//! The updater runs on its own thread and never touches live sessions:
+//! it builds the replacement engine completely off to the side (full
+//! codec reload, or [`crate::engine::incremental`] maintenance plus an
+//! index rebuild), pre-warms the deepest level caches, and only then
+//! swaps the store's slot. Readers keep answering on their pinned
+//! snapshot throughout; the swap is one `Arc` store.
+//!
+//! Refresh triggers: a `reload` protocol command
+//! ([`SnapshotStore::request_reload`]) forces a rebuild on the next
+//! poll; otherwise [`SnapshotSource::IndexFile`] rebuilds when the file
+//! changes on disk (length/mtime) and [`SnapshotSource::DeltaLog`]
+//! rebuilds when the log has grown past the ops already consumed.
+//!
+//! Outcomes are observable in the registry: `server.reloads` /
+//! `server.reload_errors` counters and the `server.reload_ns` build
+//! latency histogram. A failed reload keeps the previous snapshot
+//! serving — errors shed work, never availability.
+
+use super::snapshot::SnapshotStore;
+use crate::beindex::BeIndex;
+use crate::engine::incremental::IncrementalState;
+use crate::graph::dynamic::{load_deltas, DeltaBatch};
+use crate::index::query::QueryEngine;
+use crate::index::{build_tip_forest, build_wing_forest, codec, ForestKind};
+use crate::obs::Registry;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Where new snapshots come from.
+pub enum SnapshotSource {
+    /// A persisted index (`pbng index` output): re-loaded through
+    /// [`codec::load`] whenever the file changes or a reload is forced.
+    IndexFile(PathBuf),
+    /// A delta log (`+ u v` / `- u v` lines, see
+    /// [`crate::graph::dynamic::load_deltas`]) maintained through the
+    /// incremental engine; ops beyond the consumed prefix are applied in
+    /// batches of `batch` and the index is rebuilt from the maintained θ.
+    DeltaLog {
+        state: IncrementalState,
+        path: PathBuf,
+        batch: usize,
+        threads: usize,
+    },
+}
+
+/// Handle to the updater thread; dropping it (or calling
+/// [`Updater::stop`]) stops and joins the thread.
+pub struct Updater {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// How many deepest levels to pre-materialize before publishing, so the
+/// first queries after a swap don't pay the rebuild cost.
+const WARM_LEVELS: usize = 2;
+
+/// Rebuild a query engine from the incremental state's maintained θ.
+/// Public so `pbng serve --watch` can build the initial snapshot from
+/// the same state it hands to the updater.
+pub fn engine_from_state(state: &IncrementalState, threads: usize) -> QueryEngine {
+    match state.kind() {
+        ForestKind::Wing => {
+            let g = state.graph();
+            let (idx, _) = BeIndex::build(g, threads);
+            QueryEngine::new(build_wing_forest(g, &idx, state.theta(), threads))
+        }
+        // tip graphs are oriented peel-side-as-U; θ is per peel vertex
+        kind => QueryEngine::new(build_tip_forest(state.theta(), kind)),
+    }
+}
+
+/// `(len, mtime)` fingerprint used to detect index-file rewrites.
+fn fingerprint(path: &std::path::Path) -> Option<(u64, std::time::SystemTime)> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some((meta.len(), meta.modified().ok()?))
+}
+
+impl Updater {
+    /// Start polling `source` every `interval`, publishing into `store`.
+    /// Marks the store as having an updater, which enables the protocol
+    /// `reload` verb.
+    pub fn spawn(
+        mut source: SnapshotSource,
+        store: Arc<SnapshotStore>,
+        interval: Duration,
+    ) -> Updater {
+        store.attach_updater();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let reg = Registry::global();
+                let reloads = reg.counter("server.reloads");
+                let errors = reg.counter("server.reload_errors");
+                let latency = reg.histogram("server.reload_ns");
+                // baseline: the initial snapshot already reflects the
+                // current file state
+                let mut seen = match &source {
+                    SnapshotSource::IndexFile(p) => IndexSeen::File(fingerprint(p)),
+                    SnapshotSource::DeltaLog { path, .. } => {
+                        IndexSeen::Ops(load_deltas(path).map(|o| o.len()).unwrap_or(0))
+                    }
+                };
+                while !stop.load(Ordering::Acquire) {
+                    let forced = store.take_reload_request();
+                    let t0 = Instant::now();
+                    match refresh(&mut source, &mut seen, forced) {
+                        Ok(None) => {}
+                        Ok(Some(engine)) => {
+                            engine.warm_deepest(WARM_LEVELS);
+                            let epoch = store.publish(engine);
+                            reloads.add(1);
+                            latency.record_duration(t0.elapsed());
+                            eprintln!("pbng serve: published snapshot epoch {epoch}");
+                        }
+                        Err(e) => {
+                            errors.add(1);
+                            eprintln!("pbng serve: reload failed (keeping snapshot): {e:#}");
+                        }
+                    }
+                    std::thread::sleep(interval);
+                }
+            })
+        };
+        Updater {
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Stop and join the updater thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for Updater {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// What the updater last saw in its source.
+enum IndexSeen {
+    File(Option<(u64, std::time::SystemTime)>),
+    Ops(usize),
+}
+
+/// Check the source once; `Ok(Some)` is a freshly built engine to
+/// publish, `Ok(None)` means no change (and no forced reload).
+fn refresh(
+    source: &mut SnapshotSource,
+    seen: &mut IndexSeen,
+    forced: bool,
+) -> anyhow::Result<Option<QueryEngine>> {
+    match (source, seen) {
+        (SnapshotSource::IndexFile(path), IndexSeen::File(last)) => {
+            let now = fingerprint(path);
+            let changed = now.is_some() && now != *last;
+            if !(forced || changed) {
+                return Ok(None);
+            }
+            let forest = codec::load(path)?;
+            *last = now;
+            Ok(Some(QueryEngine::new(forest)))
+        }
+        (
+            SnapshotSource::DeltaLog {
+                state,
+                path,
+                batch,
+                threads,
+            },
+            IndexSeen::Ops(consumed),
+        ) => {
+            let ops = match load_deltas(path) {
+                Ok(ops) => ops,
+                // a missing/garbled log is only an error when the client
+                // explicitly asked for a reload; otherwise keep waiting
+                Err(e) if forced => return Err(e),
+                Err(_) => return Ok(None),
+            };
+            let fresh = ops.len().saturating_sub(*consumed);
+            if fresh == 0 && !forced {
+                return Ok(None);
+            }
+            let chunk = (*batch).max(1);
+            for ops in ops[*consumed..].chunks(chunk) {
+                state.apply(&DeltaBatch::new(ops.to_vec()));
+            }
+            *consumed = ops.len();
+            Ok(Some(engine_from_state(state, *threads)))
+        }
+        _ => unreachable!("seen state always matches the source variant"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::incremental::IncrementalConfig;
+    use crate::graph::gen;
+    use crate::peel::bup::wing_bup;
+    use crate::testkit::TempDir;
+
+    fn engine_for(g: &crate::graph::BipartiteGraph) -> QueryEngine {
+        let (idx, _) = BeIndex::build(g, 1);
+        let theta = wing_bup(g).theta;
+        QueryEngine::new(build_wing_forest(g, &idx, &theta, 1))
+    }
+
+    fn wait_for_epoch(store: &SnapshotStore, want: u64) {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while store.epoch() < want {
+            assert!(Instant::now() < deadline, "epoch never reached {want}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn index_file_source_reloads_on_request() {
+        let tmp = TempDir::new("serve-updater-idx");
+        let path = tmp.path().join("g.idx");
+        let g1 = gen::zipf(20, 20, 110, 1.2, 1.2, 5);
+        let (idx1, _) = BeIndex::build(&g1, 1);
+        let t1 = wing_bup(&g1).theta;
+        codec::save(&build_wing_forest(&g1, &idx1, &t1, 1), &path).unwrap();
+        let store = SnapshotStore::new(engine_for(&g1));
+        assert!(!store.has_updater());
+        let upd = Updater::spawn(
+            SnapshotSource::IndexFile(path.clone()),
+            store.clone(),
+            Duration::from_millis(5),
+        );
+        assert!(store.has_updater());
+        // overwrite the index with a different graph, then force a reload
+        let g2 = gen::zipf(22, 18, 120, 1.3, 1.1, 9);
+        let (idx2, _) = BeIndex::build(&g2, 1);
+        let t2 = wing_bup(&g2).theta;
+        codec::save(&build_wing_forest(&g2, &idx2, &t2, 1), &path).unwrap();
+        store.request_reload();
+        wait_for_epoch(&store, 2);
+        let snap = store.load();
+        assert_eq!(
+            snap.engine.forest().n_entities(),
+            g2.m(),
+            "new epoch serves the rewritten index"
+        );
+        upd.stop();
+    }
+
+    #[test]
+    fn delta_log_source_applies_new_ops_and_republishes() {
+        let tmp = TempDir::new("serve-updater-log");
+        let log = tmp.path().join("deltas.txt");
+        std::fs::write(&log, "").unwrap();
+        let g = gen::zipf(16, 14, 80, 1.2, 1.2, 3);
+        let state = IncrementalState::new(&g, ForestKind::Wing, IncrementalConfig::default());
+        let store = SnapshotStore::new(engine_for(&g));
+        let upd = Updater::spawn(
+            SnapshotSource::DeltaLog {
+                state,
+                path: log.clone(),
+                batch: 4,
+                threads: 1,
+            },
+            store.clone(),
+            Duration::from_millis(5),
+        );
+        // grow the log: the updater should pick it up without a reload
+        // command and publish a snapshot matching a from-scratch build
+        std::fs::write(&log, "+ 0 0\n+ 1 13\n+ 2 11\n").unwrap();
+        wait_for_epoch(&store, 2);
+        // GraphBuilder dedups, so edges already present in g are harmless
+        let g2 = crate::graph::GraphBuilder::new()
+            .nu(g.nu())
+            .nv(g.nv())
+            .edges(g.edges())
+            .edges(&[(0, 0), (1, 13), (2, 11)])
+            .build();
+        let snap = store.load();
+        let fresh = engine_for(&g2);
+        assert_eq!(
+            crate::index::server::dispatch(&snap.engine, "summary").body.unwrap(),
+            crate::index::server::dispatch(&fresh, "summary").body.unwrap(),
+            "incrementally republished snapshot answers like a fresh build"
+        );
+        upd.stop();
+    }
+
+    #[test]
+    fn failed_reload_keeps_the_old_snapshot() {
+        let tmp = TempDir::new("serve-updater-bad");
+        let path = tmp.path().join("missing.idx");
+        let g = gen::zipf(12, 12, 60, 1.2, 1.2, 2);
+        let store = SnapshotStore::new(engine_for(&g));
+        let errors = Registry::global().counter("server.reload_errors");
+        let before = errors.get();
+        let upd = Updater::spawn(
+            SnapshotSource::IndexFile(path),
+            store.clone(),
+            Duration::from_millis(5),
+        );
+        store.request_reload();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while errors.get() == before {
+            assert!(Instant::now() < deadline, "reload error never counted");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(store.epoch(), 1, "failed reload must not publish");
+        upd.stop();
+    }
+}

@@ -1,0 +1,252 @@
+//! Serving-layer integration: the poll-based reactor end to end over
+//! real TCP — concurrent v2 sessions answering byte-identically to the
+//! in-process dispatcher, admission-control shedding at the connection
+//! caps, MVCC snapshot hot-swaps (in-flight sessions keep their pinned
+//! epoch, new sessions see the new one), the `reload` verb driving the
+//! background updater, and protocol-v1 wire compatibility.
+
+use pbng::beindex::BeIndex;
+use pbng::graph::gen;
+use pbng::index::query::QueryEngine;
+use pbng::index::{build_wing_forest, codec, server::dispatch};
+use pbng::peel::bup::wing_bup;
+use pbng::serve::{ProtoVersion, Server, ServerConfig, SnapshotSource, SnapshotStore, Updater};
+use pbng::testkit::TempDir;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn graph_for(seed: u64) -> pbng::graph::BipartiteGraph {
+    gen::zipf(30, 28, 220, 1.2, 1.2, seed)
+}
+
+fn engine_for(g: &pbng::graph::BipartiteGraph) -> QueryEngine {
+    let (idx, _) = BeIndex::build(g, 1);
+    let theta = wing_bup(g).theta;
+    QueryEngine::new(build_wing_forest(g, &idx, &theta, 1))
+}
+
+fn spawn(
+    cfg: ServerConfig,
+    store: Arc<SnapshotStore>,
+) -> (SocketAddr, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = Server::new(cfg, store);
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run_on(listener).unwrap());
+    (addr, stop, handle)
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    /// Read one frame: lines up to (not including) `END`.
+    fn frame(&mut self) -> String {
+        let mut frame = String::new();
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line).unwrap() == 0 {
+                return frame;
+            }
+            if line.trim_end() == "END" {
+                return frame;
+            }
+            frame.push_str(&line);
+        }
+    }
+
+    /// Send one command, return its reply frame.
+    fn ask(&mut self, cmd: &str) -> String {
+        writeln!(self.stream, "{cmd}").unwrap();
+        self.frame()
+    }
+
+    /// `ask`, asserting the `OK <verb>` status line and stripping it.
+    fn body(&mut self, cmd: &str) -> String {
+        let frame = self.ask(cmd);
+        let verb = cmd.split_whitespace().next().unwrap();
+        let expect = format!("OK {verb}\n");
+        assert!(frame.starts_with(&expect), "cmd {cmd:?} got:\n{frame}");
+        frame[expect.len()..].trim_end_matches('\n').to_string()
+    }
+}
+
+/// Stable verbs whose replies must match the in-process dispatcher byte
+/// for byte (no cache/meter counters, which vary under concurrency).
+const STABLE_CMDS: &[&str] =
+    &["summary", "kwing 1", "components 2", "membership 0", "top 3", "densest 0"];
+
+#[test]
+fn concurrent_v2_sessions_answer_byte_identically() {
+    let g = graph_for(40);
+    let (addr, stop, handle) = spawn(ServerConfig::new(), SnapshotStore::new(engine_for(&g)));
+    let reference = engine_for(&g);
+    let expected: Vec<String> = STABLE_CMDS
+        .iter()
+        .map(|c| dispatch(&reference, c).body.unwrap())
+        .collect();
+    let workers: Vec<_> = (0..4)
+        .map(|w| {
+            let expected = expected.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let hello = c.frame();
+                assert!(hello.starts_with("OK hello"), "worker {w}: {hello}");
+                // interleave differently per worker to stress the reactor
+                for round in 0..3 {
+                    for k in 0..STABLE_CMDS.len() {
+                        let i = (k + w + round) % STABLE_CMDS.len();
+                        let got = c.body(STABLE_CMDS[i]);
+                        assert_eq!(got, expected[i], "worker {w} cmd {:?}", STABLE_CMDS[i]);
+                    }
+                }
+                let bye = c.ask("quit");
+                assert!(bye.starts_with("OK quit"), "worker {w}: {bye}");
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::Release);
+    handle.join().unwrap();
+}
+
+#[test]
+fn global_cap_sheds_connection_n_plus_one() {
+    let g = graph_for(41);
+    let (addr, stop, handle) = spawn(
+        ServerConfig::new().max_conns(2),
+        SnapshotStore::new(engine_for(&g)),
+    );
+    let mut c1 = Client::connect(addr);
+    assert!(c1.frame().starts_with("OK hello"));
+    let mut c2 = Client::connect(addr);
+    assert!(c2.frame().starts_with("OK hello"));
+    // connection 3 is over the cap: exactly one ERR busy frame, then EOF
+    let mut c3 = TcpStream::connect(addr).unwrap();
+    c3.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut text = String::new();
+    c3.read_to_string(&mut text).unwrap();
+    assert!(text.starts_with("ERR busy"), "{text}");
+    assert!(text.ends_with("END\n"), "{text}");
+    // the admitted sessions keep working
+    assert!(c1.body("summary").starts_with("level "));
+    assert!(c2.body("summary").starts_with("level "));
+    stop.store(true, Ordering::Release);
+    handle.join().unwrap();
+}
+
+#[test]
+fn hot_swap_keeps_in_flight_sessions_on_their_pinned_epoch() {
+    let ga = graph_for(42);
+    let gb = graph_for(43);
+    let store = SnapshotStore::new(engine_for(&ga));
+    let (addr, stop, handle) = spawn(ServerConfig::new(), store.clone());
+    // session A pins epoch 1
+    let mut a = Client::connect(addr);
+    let hello_a = a.frame();
+    assert!(hello_a.contains("epoch 1"), "{hello_a}");
+    let before = a.body("summary");
+    // publish a different graph's engine while A is mid-session
+    assert_eq!(store.publish(engine_for(&gb)), 2);
+    // A still answers from its pinned snapshot, byte-identical to a
+    // fresh engine over graph A
+    let after = a.body("summary");
+    assert_eq!(before, after);
+    let fresh_a = engine_for(&ga);
+    assert_eq!(after, dispatch(&fresh_a, "summary").body.unwrap());
+    let stats = a.body("stats");
+    assert!(stats.contains("\nepoch 1"), "pinned session reports its own epoch:\n{stats}");
+    // a new session sees epoch 2 and graph B's answers
+    let mut b = Client::connect(addr);
+    let hello_b = b.frame();
+    assert!(hello_b.contains("epoch 2"), "{hello_b}");
+    let fresh_b = engine_for(&gb);
+    assert_eq!(b.body("summary"), dispatch(&fresh_b, "summary").body.unwrap());
+    stop.store(true, Ordering::Release);
+    handle.join().unwrap();
+}
+
+#[test]
+fn reload_verb_publishes_a_new_epoch_from_the_index_file() {
+    let tmp = TempDir::new("serve-reload-e2e");
+    let path = tmp.path().join("g.idx");
+    let ga = graph_for(44);
+    let gb = graph_for(45);
+    let ea = engine_for(&ga);
+    codec::save(ea.forest(), &path).unwrap();
+    let store = SnapshotStore::new(engine_for(&ga));
+    let updater = Updater::spawn(
+        SnapshotSource::IndexFile(path.clone()),
+        store.clone(),
+        Duration::from_millis(10),
+    );
+    let (addr, stop, handle) = spawn(ServerConfig::new(), store.clone());
+    // rewrite the index on disk, then ask the server to reload it
+    let eb = engine_for(&gb);
+    codec::save(eb.forest(), &path).unwrap();
+    let mut c = Client::connect(addr);
+    assert!(c.frame().starts_with("OK hello"));
+    let reply = c.ask("reload");
+    assert!(reply.starts_with("OK reload"), "{reply}");
+    // new sessions eventually greet with the next epoch and serve B
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let fresh_b = engine_for(&gb);
+    loop {
+        let mut probe = Client::connect(addr);
+        let hello = probe.frame();
+        if !hello.contains("epoch 1") {
+            assert_eq!(
+                probe.body("summary"),
+                dispatch(&fresh_b, "summary").body.unwrap(),
+                "reloaded snapshot serves the rewritten index"
+            );
+            break;
+        }
+        probe.ask("quit");
+        assert!(Instant::now() < deadline, "reload never published a new epoch");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    stop.store(true, Ordering::Release);
+    handle.join().unwrap();
+    updater.stop();
+}
+
+#[test]
+fn proto_v1_stays_wire_compatible_over_the_reactor() {
+    let g = graph_for(46);
+    let reference = engine_for(&g);
+    let (addr, stop, handle) = spawn(
+        ServerConfig::new().proto(ProtoVersion::V1),
+        SnapshotStore::new(engine_for(&g)),
+    );
+    let mut c = Client::connect(addr);
+    let mut greeting = String::new();
+    c.reader.read_line(&mut greeting).unwrap();
+    assert!(greeting.starts_with("READY kind=wing"), "{greeting}");
+    // v1 frames carry the bare dispatcher body, no OK/ERR status line
+    let frame = c.ask("summary");
+    assert_eq!(frame.trim_end(), dispatch(&reference, "summary").body.unwrap());
+    let err = c.ask("frobnicate");
+    assert!(err.starts_with("ERR unknown command"), "{err}");
+    writeln!(c.stream, "quit").unwrap();
+    let mut rest = String::new();
+    c.reader.read_to_string(&mut rest).unwrap();
+    assert_eq!(rest.trim_end(), "BYE");
+    stop.store(true, Ordering::Release);
+    handle.join().unwrap();
+}
