@@ -10,7 +10,7 @@
 //! (Theorem 5).
 
 use super::BeIndex;
-use crate::par::RacyCell;
+use crate::par::RacyBuf;
 
 /// Per-partition BE-Index with global edge ids and local bloom ids.
 #[derive(Debug, Default)]
@@ -120,13 +120,11 @@ pub fn partition_be_index(idx: &BeIndex, part_of: &[u32], p: usize) -> Partition
     }
 
     // Build per-partition edge-side CSR in parallel (disjoint partitions).
-    let parts_cell = RacyCell::new((0..p).map(|_| PartIndex::default()).collect::<Vec<_>>());
+    let parts_buf = RacyBuf::new((0..p).map(|_| PartIndex::default()).collect::<Vec<_>>());
     let builders_ref = &builders;
     let edges_ref = &edges_of;
     let local_ref = &local_of;
     crate::par::parallel_for(p, 1, |_, i| {
-        // SAFETY: each index i is visited exactly once; parts are disjoint.
-        let parts = unsafe { parts_cell.get_mut() };
         let bld = &builders_ref[i];
         let n_local = edges_ref[i].len();
         let mut deg = vec![0usize; n_local];
@@ -147,15 +145,22 @@ pub fn partition_be_index(idx: &BeIndex, part_of: &[u32], p: usize) -> Partition
                 cur[le] += 1;
             }
         }
-        parts[i] = PartIndex {
-            bloom_k: bld.bloom_k.clone(),
-            bloom_offs: bld.bloom_offs.clone(),
-            bloom_entries: bld.bloom_entries.clone(),
-            edge_offs,
-            edge_links,
+        // SAFETY: each index `i` is visited exactly once, so element `i`
+        // of the shared buffer is exclusively this iteration's.
+        unsafe {
+            parts_buf.set(
+                i,
+                PartIndex {
+                    bloom_k: bld.bloom_k.clone(),
+                    bloom_offs: bld.bloom_offs.clone(),
+                    bloom_entries: bld.bloom_entries.clone(),
+                    edge_offs,
+                    edge_links,
+                },
+            )
         };
     });
-    let parts = parts_cell.into_inner();
+    let parts = parts_buf.into_inner();
 
     Partitioned {
         parts,

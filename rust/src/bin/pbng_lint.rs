@@ -1,0 +1,65 @@
+//! `pbng-lint` — the crate's concurrency-correctness lint.
+//!
+//! Thin CLI over [`pbng::check`]: scans a source tree (default `src`,
+//! so running it from `rust/` lints the crate), prints one
+//! `file:line [rule] msg` line per violation, and exits non-zero when
+//! anything fires. `--json` emits the machine-readable report instead.
+//! CI runs this in the lint job, right after clippy.
+
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from("src");
+    let mut json = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("pbng_lint: --root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--json" => json = true,
+            "--help" | "-h" => {
+                println!("usage: pbng_lint [--root PATH] [--json]");
+                println!("lints every .rs file under PATH (default: src)");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("pbng_lint: unknown argument {other:?}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let report = match pbng::check::check_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pbng_lint: cannot scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if json {
+        println!("{}", report.to_json().to_pretty());
+    } else {
+        for d in &report.violations {
+            println!("{}:{} [{}] {}", d.file, d.line, d.rule, d.msg);
+        }
+        println!(
+            "pbng_lint: {} file(s) scanned, {} violation(s)",
+            report.files_scanned,
+            report.violations.len()
+        );
+    }
+    if report.is_clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

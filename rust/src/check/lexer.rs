@@ -1,0 +1,261 @@
+//! Minimal Rust source scanner for `pbng-lint` (no syn, no deps).
+//!
+//! The lint rules only need token-level facts ("does this line *execute*
+//! an `unsafe` block / an `Ordering::` op / a `.unwrap()`?"), so this
+//! module does the one piece of real lexing those facts require:
+//! splitting each physical line into its **code** half and its
+//! **comment** half, with string/char literal *contents* stripped from
+//! the code so a `"contains unsafe"` literal can never trip a rule. The
+//! state machine understands line comments (`//`, `///`, `//!`), nested
+//! block comments, plain and raw strings (`r"…"`, `r#"…"#`, byte
+//! variants), char literals, and the char-vs-lifetime ambiguity of `'`.
+
+/// One physical source line. `code` holds everything outside comments,
+/// with literal contents blanked (delimiting quotes are kept so call
+/// shapes like `.expect(` stay recognizable); `comment` holds the text
+/// of every comment that touches the line.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct Line {
+    pub code: String,
+    pub comment: String,
+}
+
+enum St {
+    Code,
+    LineComment,
+    /// Nesting depth — Rust block comments nest.
+    BlockComment(u32),
+    Str,
+    /// Number of `#`s in the opening delimiter.
+    RawStr(u32),
+    Char,
+}
+
+fn is_word(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Detect a raw-string opener (`r"`, `r#"`, `br##"`, …) starting at `i`.
+/// Returns the hash count and the index just past the opening quote.
+fn raw_open(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+/// Split `src` into per-line (code, comment) halves; see [`Line`].
+pub fn split_lines(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut st = St::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(st, St::LineComment) {
+                st = St::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && (i == 0 || !is_word(chars[i - 1])) {
+                    if let Some((hashes, after)) = raw_open(&chars, i) {
+                        cur.code.push('"');
+                        st = St::RawStr(hashes);
+                        i = after;
+                    } else if c == 'b' && next == Some('"') {
+                        cur.code.push('b');
+                        cur.code.push('"');
+                        st = St::Str;
+                        i += 2;
+                    } else if c == 'b' && next == Some('\'') {
+                        cur.code.push('b');
+                        cur.code.push('\'');
+                        st = St::Char;
+                        i += 2;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: `'x'` / `'\n'` are chars;
+                    // `'a` followed by anything but a closing quote is a
+                    // lifetime (or loop label).
+                    let is_char = next == Some('\\')
+                        || (next.is_some() && chars.get(i + 2) == Some(&'\''));
+                    cur.code.push('\'');
+                    if is_char {
+                        st = St::Char;
+                    }
+                    i += 1;
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    st = St::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    st = if depth == 1 {
+                        St::Code
+                    } else {
+                        St::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' {
+                    let n = hashes as usize;
+                    let closed = (1..=n).all(|k| chars.get(i + k) == Some(&'#'));
+                    if closed {
+                        cur.code.push('"');
+                        st = St::Code;
+                        i += 1 + n;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            St::Char => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    cur.code.push('\'');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        split_lines(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn comments_split_from_code() {
+        let ls = split_lines("let x = 1; // trailing\n// full line\nlet y = 2;\n");
+        assert_eq!(ls.len(), 3);
+        assert_eq!(ls[0].code.trim(), "let x = 1;");
+        assert!(ls[0].comment.contains("trailing"));
+        assert!(ls[1].code.trim().is_empty());
+        assert!(ls[1].comment.contains("full line"));
+        assert_eq!(ls[2].code.trim(), "let y = 2;");
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let c = codes("let s = \"unsafe // not a comment\"; let t = 1;\n");
+        assert!(!c[0].contains("unsafe"));
+        assert!(c[0].contains("let t = 1;"));
+    }
+
+    #[test]
+    fn string_escapes_do_not_end_the_literal() {
+        let c = codes("let s = \"a\\\"unsafe\"; done();\n");
+        assert!(!c[0].contains("unsafe"));
+        assert!(c[0].contains("done();"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let c = codes("let s = r#\"unsafe \" quote\"#; let t = 1;\n");
+        assert!(!c[0].contains("unsafe"));
+        assert!(c[0].contains("let t = 1;"));
+        let c = codes("let b = br\"Mutex\"; ok();\n");
+        assert!(!c[0].contains("Mutex"));
+        assert!(c[0].contains("ok();"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let c = codes("fn f<'a>(x: &'a str) -> char { '\\'' }\nlet c = 'x'; let b = b'y';\n");
+        assert!(c[0].contains("'a str"), "{:?}", c[0]);
+        assert!(!c[1].contains('x'), "{:?}", c[1]);
+        assert!(!c[1].contains('y'), "{:?}", c[1]);
+        assert!(c[1].contains("let b = b'"), "{:?}", c[1]);
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let ls = split_lines("a /* c1 /* nested */ still */ b\n/* open\nclose */ c\n");
+        assert!(ls[0].code.contains('a') && ls[0].code.contains('b'));
+        assert!(!ls[0].code.contains("c1"));
+        assert!(ls[0].comment.contains("c1"));
+        assert!(ls[1].code.trim().is_empty());
+        assert!(ls[2].code.contains('c'));
+        assert!(!ls[2].code.contains("close"));
+    }
+
+    #[test]
+    fn last_line_without_newline_is_kept() {
+        let ls = split_lines("let a = 1;");
+        assert_eq!(ls.len(), 1);
+        assert_eq!(ls[0].code, "let a = 1;");
+    }
+}

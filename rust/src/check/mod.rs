@@ -1,0 +1,122 @@
+//! `check` — the crate's own static analyzer (`pbng-lint`).
+//!
+//! A dependency-free lint that enforces the concurrency-correctness
+//! conventions documented in `lib.rs` ("Unsafe policy"): SAFETY comments
+//! on every `unsafe` site, ORDERING justifications on every atomic in
+//! `par`/`obs`/`serve`, a one-entry `transmute` allowlist, no blocking
+//! locks in hot-path modules, and no `.unwrap()` on serving paths. The
+//! rules live in [`rules`], the comment/string-aware line splitter in
+//! [`lexer`], and the `pbng_lint` binary (`src/bin/pbng_lint.rs`) is a
+//! thin CLI over [`check_tree`]. CI runs it on every push; the fixture
+//! tree under `tests/fixtures/lint_violations/` proves each rule fires.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{check_source, Diagnostic};
+
+use crate::jsonio::Value;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// Result of scanning a source tree.
+pub struct Report {
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Every violation, in (file, line) order.
+    pub violations: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Machine-readable form, for `pbng_lint --json`.
+    pub fn to_json(&self) -> Value {
+        let mut viols = Vec::new();
+        for d in &self.violations {
+            let v = Value::obj()
+                .with("file", d.file.as_str())
+                .with("line", d.line as u64)
+                .with("rule", d.rule)
+                .with("msg", d.msg);
+            viols.push(v);
+        }
+        Value::obj()
+            .with("files_scanned", self.files_scanned as u64)
+            .with("count", self.violations.len() as u64)
+            .with("violations", viols)
+    }
+}
+
+/// Recursively lint every `.rs` file under `root`. Paths in the report
+/// are `/`-separated and relative to `root`, which is what scopes the
+/// per-module rules (see [`rules::check_source`]).
+pub fn check_tree(root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs_files(root, root, &mut files)?;
+    files.sort();
+    let mut violations = Vec::new();
+    for rel in &files {
+        let src = fs::read_to_string(root.join(rel))?;
+        violations.extend(check_source(rel, &src));
+    }
+    Ok(Report {
+        files_scanned: files.len(),
+        violations,
+    })
+}
+
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(root, &path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            let rel = path.strip_prefix(root).unwrap_or(&path);
+            let mut parts = Vec::new();
+            for c in rel.components() {
+                parts.push(c.as_os_str().to_string_lossy().into_owned());
+            }
+            out.push(parts.join("/"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_shape() {
+        let report = Report {
+            files_scanned: 3,
+            violations: vec![Diagnostic {
+                file: "par/x.rs".to_string(),
+                line: 7,
+                rule: rules::RULE_SAFETY,
+                msg: "m",
+            }],
+        };
+        let v = report.to_json();
+        assert_eq!(v.req_u64("files_scanned").unwrap(), 3);
+        assert_eq!(v.req_u64("count").unwrap(), 1);
+        let viols = v.req_arr("violations").unwrap();
+        assert_eq!(viols.len(), 1);
+        assert_eq!(viols[0].req_u64("line").unwrap(), 7);
+        assert!(!report.is_clean());
+    }
+
+    #[test]
+    fn empty_report_is_clean() {
+        let report = Report {
+            files_scanned: 0,
+            violations: Vec::new(),
+        };
+        assert!(report.is_clean());
+        assert_eq!(report.to_json().req_u64("count").unwrap(), 0);
+    }
+}

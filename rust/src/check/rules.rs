@@ -1,0 +1,386 @@
+//! The `pbng-lint` rule set: concurrency-correctness conventions the
+//! crate commits to (see `lib.rs` "Unsafe policy"), checked per file.
+//!
+//! Rules (all diagnostics carry these names):
+//!
+//! * `safety-comment` — every line that executes `unsafe` must be
+//!   justified by an adjacent `// SAFETY:` comment (or a `# Safety` doc
+//!   section on the item). Enforced everywhere, tests included.
+//! * `ordering-comment` — every `Ordering::` use in `par/`, `obs/`,
+//!   `serve/` must carry an `// ORDERING:` justification.
+//! * `transmute-allowlist` — `transmute` is forbidden outside the
+//!   allowlisted wrapper (`par/pool.rs::erase_lifetime`).
+//! * `hot-path-lock` — no `Mutex`/`RwLock` in the hot-path modules
+//!   (`engine/`, `wing/`, `tip/`, `count/`, `par/`); the pool's own
+//!   park/wake lock is allowlisted.
+//! * `serve-unwrap` — no `.unwrap()`/`.expect(` on serving paths
+//!   (`serve/`); shedding beats aborting.
+//!
+//! "Adjacent" means the justification survives this walk-up from the
+//! flagged line: same-line trailing comments count; pure comment lines,
+//! attribute lines, and lines belonging to the same cluster (another
+//! line of the same `unsafe` block / atomic group) are stepped over;
+//! any other code line or a blank line breaks the search.
+
+use super::lexer::{split_lines, Line};
+
+pub const RULE_SAFETY: &str = "safety-comment";
+pub const RULE_ORDERING: &str = "ordering-comment";
+pub const RULE_TRANSMUTE: &str = "transmute-allowlist";
+pub const RULE_LOCK: &str = "hot-path-lock";
+pub const RULE_UNWRAP: &str = "serve-unwrap";
+
+const MSG_SAFETY: &str = "`unsafe` without an adjacent `// SAFETY:` comment";
+const MSG_ORDERING: &str = "`Ordering::` use without an `// ORDERING:` justification";
+const MSG_TRANSMUTE: &str = "`transmute` outside the allowlist (par/pool.rs::erase_lifetime)";
+const MSG_LOCK: &str = "blocking lock (`Mutex`/`RwLock`) in a hot-path module";
+const MSG_UNWRAP: &str = "`.unwrap()`/`.expect()` on a serving path — shed, don't abort";
+
+/// Modules whose atomics must justify their memory ordering.
+const ORDERING_SCOPE: [&str; 3] = ["par/", "obs/", "serve/"];
+/// Hot-path modules where blocking locks are forbidden.
+const LOCK_SCOPE: [&str; 5] = ["engine/", "wing/", "tip/", "count/", "par/"];
+/// `(file suffix, enclosing fn)` pairs allowed to use `transmute`.
+const TRANSMUTE_ALLOWLIST: [(&str, &str); 1] = [("par/pool.rs", "erase_lifetime")];
+/// Files in `LOCK_SCOPE` allowed to name locks: the pool's park/wake
+/// machinery *is* a lock by design (Mutex + Condvar worker parking).
+const LOCK_ALLOWLIST: [&str; 1] = ["par/pool.rs"];
+
+/// Comment markers that justify an `unsafe` site.
+const SAFETY_MARKERS: [&str; 2] = ["SAFETY:", "# Safety"];
+/// Comment markers that justify an `Ordering::` site.
+const ORDERING_MARKERS: [&str; 1] = ["ORDERING:"];
+
+/// One lint violation, pointing at a 1-based line of `file`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: &'static str,
+}
+
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Word-boundary token search (so `unsafe_op_in_unsafe_fn` is not an
+/// `unsafe` token and `TRANSMUTE_ALLOWLIST` is not a `transmute` one).
+fn has_token(code: &str, tok: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut search = 0usize;
+    while let Some(pos) = code[search..].find(tok) {
+        let p = search + pos;
+        let before_ok = p == 0 || !is_word_byte(bytes[p - 1]);
+        let end = p + tok.len();
+        let after_ok = end >= bytes.len() || !is_word_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        search = p + 1;
+    }
+    false
+}
+
+fn contains_marker(comment: &str, markers: &[&str]) -> bool {
+    markers.iter().any(|m| comment.contains(m))
+}
+
+fn in_scope(path: &str, scope: &[&str]) -> bool {
+    scope.iter().any(|pre| path.starts_with(pre))
+}
+
+/// Is the `cluster`-bearing code on line `idx` justified by a marker
+/// comment? Implements the walk-up documented in the module header.
+fn justified(lines: &[Line], idx: usize, markers: &[&str], cluster: &str) -> bool {
+    if contains_marker(&lines[idx].comment, markers) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        if contains_marker(&l.comment, markers) {
+            return true;
+        }
+        let code = l.code.trim();
+        if code.is_empty() {
+            if l.comment.trim().is_empty() {
+                return false; // blank line breaks the cluster
+            }
+            continue; // pure comment without the marker — keep walking
+        }
+        if code.starts_with("#[") || code.starts_with("#![") {
+            continue; // attributes sit between a justification and its item
+        }
+        if code.contains(cluster) {
+            continue; // same cluster (e.g. the `unsafe {` opener) — keep walking
+        }
+        return false; // unrelated code breaks the search
+    }
+    false
+}
+
+/// Extract the name declared by a `fn` token on this line, if any.
+fn fn_decl_name(code: &str) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut search = 0usize;
+    while let Some(pos) = code[search..].find("fn") {
+        let p = search + pos;
+        let before_ok = p == 0 || !is_word_byte(bytes[p - 1]);
+        let end = p + 2;
+        let after_ok = end >= bytes.len() || !is_word_byte(bytes[end]);
+        if before_ok && after_ok {
+            let name: String = code[end..]
+                .trim_start()
+                .chars()
+                .take_while(|&c| c.is_ascii_alphanumeric() || c == '_')
+                .collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+        search = p + 2;
+    }
+    None
+}
+
+/// Run every rule over one file. `path` must be `/`-separated and
+/// relative to the scan root (e.g. `par/pool.rs`) for the scoped rules
+/// to apply.
+pub fn check_source(path: &str, src: &str) -> Vec<Diagnostic> {
+    let lines = split_lines(src);
+    let mut out = Vec::new();
+
+    let ordering_scoped = in_scope(path, &ORDERING_SCOPE);
+    let lock_scoped =
+        in_scope(path, &LOCK_SCOPE) && !LOCK_ALLOWLIST.iter().any(|p| path.ends_with(p));
+    let serve_scoped = in_scope(path, &["serve/"]);
+
+    // Brace-depth bookkeeping: `#[cfg(test)]`-gated regions are exempt
+    // from the scoped rules (ordering / lock / unwrap), and the name of
+    // the enclosing fn feeds the transmute allowlist.
+    let mut depth: i64 = 0;
+    let mut test_depth: Option<i64> = None;
+    let mut pending_test = false;
+    let mut fn_stack: Vec<(String, i64)> = Vec::new();
+    let mut pending_fn: Option<String> = None;
+
+    for (idx, line) in lines.iter().enumerate() {
+        let in_test = test_depth.is_some();
+        let code = line.code.as_str();
+        let lineno = idx + 1;
+        let mut diag = |rule: &'static str, msg: &'static str| {
+            out.push(Diagnostic {
+                file: path.to_string(),
+                line: lineno,
+                rule,
+                msg,
+            });
+        };
+
+        if has_token(code, "unsafe") && !justified(&lines, idx, &SAFETY_MARKERS, "unsafe") {
+            diag(RULE_SAFETY, MSG_SAFETY);
+        }
+        if ordering_scoped
+            && !in_test
+            && code.contains("Ordering::")
+            && !justified(&lines, idx, &ORDERING_MARKERS, "Ordering::")
+        {
+            diag(RULE_ORDERING, MSG_ORDERING);
+        }
+        if has_token(code, "transmute") {
+            let in_fn = fn_stack.last().map(|(n, _)| n.as_str()).unwrap_or("");
+            let cur_fn = pending_fn.as_deref().unwrap_or(in_fn);
+            let allowed = TRANSMUTE_ALLOWLIST
+                .iter()
+                .any(|(file, func)| path.ends_with(file) && cur_fn == *func);
+            if !allowed {
+                diag(RULE_TRANSMUTE, MSG_TRANSMUTE);
+            }
+        }
+        if lock_scoped && !in_test && (has_token(code, "Mutex") || has_token(code, "RwLock")) {
+            diag(RULE_LOCK, MSG_LOCK);
+        }
+        if serve_scoped && !in_test && (code.contains(".unwrap()") || code.contains(".expect(")) {
+            diag(RULE_UNWRAP, MSG_UNWRAP);
+        }
+
+        // --- region bookkeeping for the lines that follow ---
+        if code.contains("#[cfg(test)]") {
+            pending_test = true;
+        }
+        if let Some(name) = fn_decl_name(code) {
+            pending_fn = Some(name);
+        }
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending_test && test_depth.is_none() {
+                        test_depth = Some(depth);
+                        pending_test = false;
+                    }
+                    if let Some(name) = pending_fn.take() {
+                        fn_stack.push((name, depth));
+                    }
+                }
+                '}' => {
+                    if test_depth == Some(depth) {
+                        test_depth = None;
+                    }
+                    while fn_stack.last().is_some_and(|&(_, d)| d == depth) {
+                        fn_stack.pop();
+                    }
+                    depth -= 1;
+                }
+                ';' => {
+                    // A `;` at pending state means the attr / signature
+                    // never opened a body (`#[cfg(test)] mod tests;`,
+                    // trait method decls) — drop the pending flags.
+                    pending_fn = None;
+                    pending_test = false;
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(path: &str, src: &str) -> Vec<&'static str> {
+        check_source(path, src).into_iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let bad = "pub fn f(p: *mut u32) {\n    unsafe { *p = 1 };\n}\n";
+        assert_eq!(rules_fired("graph/x.rs", bad), vec![RULE_SAFETY]);
+        let good =
+            "pub fn f(p: *mut u32) {\n    // SAFETY: caller owns p.\n    unsafe { *p = 1 };\n}\n";
+        assert!(rules_fired("graph/x.rs", good).is_empty());
+        let trailing =
+            "pub fn f(p: *mut u32) {\n    unsafe { *p = 1 }; // SAFETY: caller owns p.\n}\n";
+        assert!(rules_fired("graph/x.rs", trailing).is_empty());
+    }
+
+    #[test]
+    fn safety_walkup_skips_attrs_comments_and_cluster_lines() {
+        let src = "// SAFETY: fine for both sites below.\n\
+                   #[allow(dead_code)]\n\
+                   unsafe fn g(p: *mut u32) {\n\
+                   \x20   unsafe { *p = 1 };\n\
+                   }\n";
+        assert!(rules_fired("graph/x.rs", src).is_empty());
+        // A blank line breaks the walk-up.
+        let broken =
+            "// SAFETY: too far away.\n\npub fn f(p: *mut u32) {\n    unsafe { *p = 1 };\n}\n";
+        assert_eq!(rules_fired("graph/x.rs", broken), vec![RULE_SAFETY]);
+    }
+
+    #[test]
+    fn safety_doc_heading_counts_for_unsafe_fns() {
+        let src = "/// Does things.\n\
+                   ///\n\
+                   /// # Safety\n\
+                   ///\n\
+                   /// Caller must own `p`.\n\
+                   pub unsafe fn f(p: *mut u32) {\n\
+                   \x20   // SAFETY: contract forwarded from the fn header.\n\
+                   \x20   unsafe { *p = 1 };\n\
+                   }\n";
+        assert!(rules_fired("graph/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn ordering_rule_is_scoped_and_test_exempt() {
+        let bad = "use std::sync::atomic::{AtomicU64, Ordering};\n\
+                   fn f(a: &AtomicU64) -> u64 {\n\
+                   \x20   a.load(Ordering::Relaxed)\n\
+                   }\n";
+        assert_eq!(rules_fired("par/x.rs", bad), vec![RULE_ORDERING]);
+        assert!(rules_fired("graph/x.rs", bad).is_empty(), "out of scope");
+        let good = "fn f(a: &A) -> u64 {\n\
+                    \x20   // ORDERING: Relaxed — standalone counter.\n\
+                    \x20   a.load(Ordering::Relaxed)\n\
+                    }\n";
+        assert!(rules_fired("obs/x.rs", good).is_empty());
+        let tested = "#[cfg(test)]\n\
+                      mod tests {\n\
+                      \x20   fn f(a: &A) -> u64 {\n\
+                      \x20       a.load(Ordering::Relaxed)\n\
+                      \x20   }\n\
+                      }\n";
+        assert!(rules_fired("serve/x.rs", tested).is_empty());
+    }
+
+    #[test]
+    fn ordering_cluster_covers_adjacent_atomic_lines() {
+        let src = "fn f(a: &A, b: &A) {\n\
+                   \x20   // ORDERING: Relaxed on both — monotonic stats.\n\
+                   \x20   a.store(1, Ordering::Relaxed);\n\
+                   \x20   b.store(2, Ordering::Relaxed);\n\
+                   }\n";
+        assert!(rules_fired("par/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn transmute_allowed_only_in_named_wrapper() {
+        let src = "// SAFETY: test stand-in for the pool's wrapper.\n\
+                   unsafe fn erase_lifetime(x: u8) -> i8 {\n\
+                   \x20   // SAFETY: same-size integer cast.\n\
+                   \x20   unsafe { std::mem::transmute::<u8, i8>(x) }\n\
+                   }\n";
+        assert!(rules_fired("par/pool.rs", src).is_empty());
+        assert_eq!(rules_fired("par/other.rs", src), vec![RULE_TRANSMUTE]);
+        assert_eq!(
+            rules_fired("par/pool.rs", &src.replace("erase_lifetime", "other_name")),
+            vec![RULE_TRANSMUTE]
+        );
+    }
+
+    #[test]
+    fn locks_forbidden_in_hot_paths_only() {
+        let src = "pub struct S {\n    m: std::sync::Mutex<u64>,\n}\n";
+        assert_eq!(rules_fired("wing/x.rs", src), vec![RULE_LOCK]);
+        assert_eq!(rules_fired("engine/x.rs", src), vec![RULE_LOCK]);
+        assert!(rules_fired("serve/x.rs", src).is_empty(), "out of scope");
+        assert!(rules_fired("par/pool.rs", src).is_empty(), "allowlisted");
+    }
+
+    #[test]
+    fn serve_unwrap_flagged_outside_tests() {
+        let src = "fn f(s: &str) -> u64 {\n    s.parse().unwrap()\n}\n";
+        assert_eq!(rules_fired("serve/x.rs", src), vec![RULE_UNWRAP]);
+        assert!(rules_fired("cli/x.rs", src).is_empty(), "out of scope");
+        let or_else = "fn f(s: &str) -> u64 {\n    s.parse().unwrap_or_else(|_| 0)\n}\n";
+        assert!(rules_fired("serve/x.rs", or_else).is_empty());
+        let expect = "fn f(s: &str) -> u64 {\n    s.parse().expect(\"k\")\n}\n";
+        assert_eq!(rules_fired("serve/x.rs", expect), vec![RULE_UNWRAP]);
+    }
+
+    #[test]
+    fn literals_and_comments_never_trip_rules() {
+        let src = "fn f() -> &'static str {\n\
+                   \x20   // unsafe Mutex Ordering::Relaxed .unwrap() transmute\n\
+                   \x20   \"unsafe Mutex Ordering::Relaxed .unwrap() transmute\"\n\
+                   }\n";
+        for path in ["par/x.rs", "serve/x.rs", "engine/x.rs"] {
+            assert!(rules_fired(path, src).is_empty(), "{path}");
+        }
+    }
+
+    #[test]
+    fn diagnostics_carry_file_and_line() {
+        let src = "fn f(p: *mut u32) {\n    unsafe { *p = 1 };\n}\n";
+        let ds = check_source("graph/x.rs", src);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].file, "graph/x.rs");
+        assert_eq!(ds[0].line, 2);
+        assert_eq!(ds[0].rule, RULE_SAFETY);
+    }
+}

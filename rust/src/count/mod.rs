@@ -132,8 +132,9 @@ pub fn pve_bcnt(
     parallel_for_chunked(nw, threads, 64, |t, lo, hi| {
         // SAFETY: the pool drives each lane id from at most one thread
         // per region, so slot `t` is exclusively ours inside this chunk.
-        let sc = unsafe { scratch[t].get_mut() };
-        let hv = unsafe { harvests[t].get_mut() };
+        let mut sc = unsafe { scratch[t].get_mut() };
+        // SAFETY: as above — harvest cell `t` is exclusively ours too.
+        let mut hv = unsafe { harvests[t].get_mut() };
         let mut local_total = 0u64;
         let mut local_wedges = 0u64;
         for start in lo..hi {
@@ -143,8 +144,8 @@ pub fn pve_bcnt(
                 &per_w,
                 &per_edge,
                 opts,
-                sc,
-                hv,
+                &mut sc,
+                &mut hv,
                 &mut local_total,
                 &mut local_wedges,
             );

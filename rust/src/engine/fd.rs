@@ -16,7 +16,7 @@
 use super::{CdOutput, EngineConfig, PeelDomain};
 use crate::metrics::Meters;
 use crate::obs;
-use crate::par::{spmd, RacyCell};
+use crate::par::{spmd, RacyBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 /// LPT task queue with greedy lane pre-assignment and work stealing.
@@ -104,21 +104,22 @@ pub fn fine_decompose<D: PeelDomain>(
     order.sort_unstable_by(|&a, &b| work[b].cmp(&work[a]));
     let queue = LaneQueue::new(order, &work, threads);
 
-    let theta_cell = RacyCell::new(vec![0u64; dom.n_entities()]);
+    // θ disjointness contract: CD assigns every entity to exactly one
+    // partition, the queue hands every partition to exactly one logical
+    // lane, and `peel_partition` only writes θ slots of its own
+    // partition's entities — so all element writes into this shared
+    // buffer are disjoint (the unsafe writes live in the domain impls,
+    // which cite this argument).
+    let theta = RacyBuf::new(vec![0u64; dom.n_entities()]);
     spmd(threads, |t| {
         while let Some((i, stolen)) = queue.next_task(t) {
             let _sp = obs::span(obs::Kind::FdTask, i as u64, work[i], u64::from(stolen));
-            // SAFETY: CD assigns every entity to exactly one partition,
-            // the queue hands every partition to exactly one logical
-            // lane, and `peel_partition` only writes θ slots of its own
-            // partition's entities — all θ writes are disjoint.
-            let theta = unsafe { theta_cell.get_mut() };
             let lo = cd.lowers.get(i).copied().unwrap_or(0);
             let hi = cd.lowers.get(i + 1).copied().unwrap_or(u64::MAX);
-            dom.peel_partition(i, (lo, hi), theta, cd, cfg, meters);
+            dom.peel_partition(i, (lo, hi), &theta, cd, cfg, meters);
         }
     });
-    theta_cell.into_inner()
+    theta.into_inner()
 }
 
 #[cfg(test)]

@@ -24,7 +24,7 @@
 //!   bookkeeping.
 //! * [`fd::fine_decompose`] — the FD driver: LPT ordering, a lane-affine
 //!   dynamic task queue on the persistent pool ([`crate::par::spmd`]),
-//!   and θ write-back through [`crate::par::RacyCell`].
+//!   and element-disjoint θ write-back through [`crate::par::RacyBuf`].
 //! * [`decompose`] / [`EngineReport`] — the phase-recorded Coarse →
 //!   Partition → Fine pipeline feeding [`crate::metrics::PeelStats`].
 //! * [`incremental`] — dynamic-graph maintenance on top of the same
@@ -165,12 +165,15 @@ pub trait PeelDomain: Sync {
 
     /// Sequentially peel partition `part` within `[bounds.0, bounds.1)`,
     /// writing final entity numbers into `theta`. Must only write θ slots
-    /// of entities owned by `part` (the FD driver's soundness contract).
+    /// of entities owned by `part` — that disjointness (CD assigns every
+    /// entity to exactly one partition, the FD queue claims every
+    /// partition exactly once) is what makes the shared
+    /// [`crate::par::RacyBuf`] scatter sound; see [`fd::fine_decompose`].
     fn peel_partition(
         &self,
         part: usize,
         bounds: (u64, u64),
-        theta: &mut [u64],
+        theta: &crate::par::RacyBuf<u64>,
         cd: &CdOutput,
         cfg: &EngineConfig,
         meters: &Meters,

@@ -31,7 +31,7 @@ pub mod server;
 use crate::beindex::BeIndex;
 use crate::graph::BipartiteGraph;
 use crate::hierarchy::{LevelSummary, UnionFind};
-use crate::par::{parallel_for_chunked, RacyCell};
+use crate::par::{parallel_for_chunked, RacyBuf, RacyCell};
 
 /// Sentinel for "no node / no parent".
 pub const NONE: u32 = u32::MAX;
@@ -547,7 +547,7 @@ pub fn build_wing_forest_opts(
     parallel_for_chunked(nb, threads, 64, |t, lo, hi| {
         // SAFETY: the pool drives each lane id from at most one thread
         // per region, so buffer `t` is exclusively ours in this chunk.
-        let buf = unsafe { buffers[t].get_mut() };
+        let mut buf = unsafe { buffers[t].get_mut() };
         for b in lo..hi {
             for &(e, tw) in idx.entries(b as u32) {
                 if e < tw {
@@ -648,8 +648,11 @@ fn compute_wing_stats(forest: &mut Forest, g: &BipartiteGraph, threads: usize) {
         return;
     }
     let threads = threads.max(1);
-    let sub_nu = RacyCell::new(vec![0u32; n]);
-    let sub_nv = RacyCell::new(vec![0u32; n]);
+    // Many lanes scatter into disjoint node indices of these shared
+    // buffers, so they are `RacyBuf`s (element-granular cells), not
+    // whole-value `RacyCell`s.
+    let sub_nu = RacyBuf::new(vec![0u32; n]);
+    let sub_nv = RacyBuf::new(vec![0u32; n]);
     let scratch: Vec<RacyCell<(Vec<u32>, Vec<u32>)>> = (0..crate::par::max_lanes(threads))
         .map(|_| RacyCell::new((vec![NONE; g.nu()], vec![NONE; g.nv()])))
         .collect();
@@ -657,7 +660,7 @@ fn compute_wing_stats(forest: &mut Forest, g: &BipartiteGraph, threads: usize) {
     parallel_for_chunked(n, threads, 8, |t, lo, hi| {
         // SAFETY: the pool drives each lane id from at most one thread
         // per region, so stamp pair `t` is exclusively ours in this chunk.
-        let sc = unsafe { scratch[t].get_mut() };
+        let mut sc = unsafe { scratch[t].get_mut() };
         let (stamp_u, stamp_v) = &mut *sc;
         for node in lo..hi {
             let mut cu = 0u32;
@@ -676,8 +679,8 @@ fn compute_wing_stats(forest: &mut Forest, g: &BipartiteGraph, threads: usize) {
             // SAFETY: each `node` index is visited by exactly one chunk,
             // so writes to sub_nu[node] / sub_nv[node] are disjoint.
             unsafe {
-                sub_nu.get_mut()[node] = cu;
-                sub_nv.get_mut()[node] = cv;
+                sub_nu.set(node, cu);
+                sub_nv.set(node, cv);
             }
         }
     });

@@ -23,22 +23,50 @@
 //! Both decompositions run on the generic two-phase engine
 //! ([`engine`]): wing and tip are thin [`engine::PeelDomain`] impls over
 //! one shared CD/FD driver pair.
+//!
+//! ## Unsafe policy
+//!
+//! Unsafe code is confined to the modules that implement the paper's
+//! shared-memory scatter patterns (`par`, and the domain/count/index
+//! layers built on [`par::RacyCell`]/[`par::RacyBuf`]); every other
+//! module carries `#[forbid(unsafe_code)]`. Every `unsafe` site must be
+//! preceded by a `// SAFETY:` comment and every atomic in `par`/`obs`/
+//! `serve` by an `// ORDERING:` justification — enforced by the
+//! `pbng_lint` binary ([`check`]), which CI runs on every push.
+
+// Unsafe fns get no implicit unsafe body: each pointer-deref or
+// aliasing-sensitive operation inside them needs its own `unsafe {}`
+// block (and its own SAFETY comment).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod beindex;
+#[forbid(unsafe_code)]
 pub mod bench;
+#[forbid(unsafe_code)]
+pub mod check;
+#[forbid(unsafe_code)]
 pub mod cli;
 pub mod count;
+#[forbid(unsafe_code)]
 pub mod engine;
+#[forbid(unsafe_code)]
 pub mod graph;
 pub mod index;
+#[forbid(unsafe_code)]
 pub mod jsonio;
+#[forbid(unsafe_code)]
 pub mod metrics;
 pub mod obs;
 pub mod par;
+#[forbid(unsafe_code)]
 pub mod hierarchy;
+#[forbid(unsafe_code)]
 pub mod peel;
+#[forbid(unsafe_code)]
 pub mod runtime;
+#[forbid(unsafe_code)]
 pub mod serve;
+#[forbid(unsafe_code)]
 pub mod testkit;
 pub mod tip;
 pub mod wing;

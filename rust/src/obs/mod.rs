@@ -18,8 +18,9 @@
 //!   hook; the region caller is lane 0). A one-word per-lane spin lock
 //!   guards the slot write; with a single producer per lane — the
 //!   production shape — it never spins, so the enabled hot path is one
-//!   uncontended swap, a slot write, and a `Release` length store. Full
-//!   buffers drop new events (counted, never blocking).
+//!   uncontended swap, a slot write, and a plain length bump (the
+//!   lock's `Release` unlock is what publishes both to the next
+//!   holder). Full buffers drop new events (counted, never blocking).
 //! * **Typed spans.** [`Kind`] enumerates the instrumented operations;
 //!   every span carries three kind-specific `u64` attributes (see the
 //!   variant docs) plus a process-unique span id that pairs its enter and
@@ -128,8 +129,11 @@ pub struct Event {
 
 struct LaneBuf {
     events: RacyCell<Vec<Event>>,
-    /// Published length: stored `Release` after the slot write so a
-    /// snapshot sees fully-written events.
+    /// Number of initialized events. Written and read only under
+    /// [`LaneBuf::busy`]; the lock's Acquire/Release pair is what makes
+    /// a drain see fully-written slots, so this counter needs no
+    /// ordering of its own (it is atomic only so cross-thread access is
+    /// defined at all).
     len: AtomicUsize,
     dropped: AtomicU64,
     /// One-word spin lock around buffer access. In production each lane
@@ -152,47 +156,64 @@ impl LaneBuf {
     }
 
     fn lock(&self) {
+        // ORDERING: Acquire on the winning swap pairs with the Release
+        // store in `unlock`, so every buffer/len write of the previous
+        // lock holder happens-before our access.
         while self.busy.swap(true, Ordering::Acquire) {
             std::hint::spin_loop();
         }
     }
 
     fn unlock(&self) {
+        // ORDERING: Release publishes all buffer/len writes made under
+        // the lock to the next Acquire winner in `lock`.
         self.busy.store(false, Ordering::Release);
     }
 
     fn push(&self, ev: Event) {
         self.lock();
+        // ORDERING: Relaxed — `len` is only accessed under the lock;
+        // the lock's Acquire/Release pair is the synchronization.
         let n = self.len.load(Ordering::Relaxed);
         if n >= RING_CAP {
+            // ORDERING: Relaxed — monotonic stat, read approximately.
             self.dropped.fetch_add(1, Ordering::Relaxed);
         } else {
             // SAFETY: the per-lane lock gives this thread exclusive
-            // access to the buffer for the duration of the write.
-            unsafe {
-                self.events.get_mut()[n] = ev;
-            }
-            self.len.store(n + 1, Ordering::Release);
+            // access to the buffer for the duration of the write (the
+            // guard is a temporary, dropped before `unlock`).
+            unsafe { self.events.get_mut() }[n] = ev;
+            // ORDERING: Relaxed — lock-protected; `unlock` publishes it.
+            self.len.store(n + 1, Ordering::Relaxed);
         }
         self.unlock();
     }
 
     fn drain_into(&self, out: &mut Vec<Event>) {
         self.lock();
+        // ORDERING: Relaxed — lock-protected, see `push`.
         let n = self.len.load(Ordering::Relaxed).min(RING_CAP);
-        // SAFETY: the per-lane lock excludes concurrent producers.
-        let evs = unsafe { self.events.get_mut() };
-        out.extend_from_slice(&evs[..n]);
+        {
+            // SAFETY: the per-lane lock excludes concurrent producers;
+            // the guard is dropped before `unlock` releases the lock.
+            let evs = unsafe { self.events.get_mut() };
+            out.extend_from_slice(&evs[..n]);
+        }
+        // ORDERING: Relaxed — lock-protected; `unlock` publishes it.
         self.len.store(0, Ordering::Relaxed);
         self.unlock();
     }
 
     fn copy_into(&self, out: &mut Vec<Event>) {
         self.lock();
+        // ORDERING: Relaxed — lock-protected, see `push`.
         let n = self.len.load(Ordering::Relaxed).min(RING_CAP);
-        // SAFETY: the per-lane lock excludes concurrent producers.
-        let evs = unsafe { self.events.get_mut() };
-        out.extend_from_slice(&evs[..n]);
+        {
+            // SAFETY: the per-lane lock excludes concurrent producers;
+            // the guard is dropped before `unlock` releases the lock.
+            let evs = unsafe { self.events.get_mut() };
+            out.extend_from_slice(&evs[..n]);
+        }
         self.unlock();
     }
 }
@@ -215,6 +236,8 @@ thread_local! {
 /// Is tracing on? One relaxed load — the entirety of the disabled path.
 #[inline]
 pub fn enabled() -> bool {
+    // ORDERING: Relaxed — a standalone on/off flag; callers that then
+    // record go through the per-lane lock, which orders buffer access.
     ENABLED.load(Ordering::Relaxed)
 }
 
@@ -229,6 +252,9 @@ pub fn enable() {
     });
     let _ = EPOCH.get_or_init(Instant::now);
     clear();
+    // ORDERING: Relaxed on both — enable() is called before the traced
+    // region starts; the pool's region barrier (not these stores)
+    // publishes the reset to workers.
     NEXT_SPAN.store(1, Ordering::Relaxed);
     ENABLED.store(true, Ordering::Relaxed);
 }
@@ -236,6 +262,8 @@ pub fn enable() {
 /// Turn tracing off. Already-buffered events stay until [`take_events`]
 /// or [`clear`].
 pub fn disable() {
+    // ORDERING: Relaxed — see `enabled`; callers drain only after the
+    // region barrier, which is the real synchronization point.
     ENABLED.store(false, Ordering::Relaxed);
 }
 
@@ -282,6 +310,8 @@ pub fn span(kind: Kind, a: u64, b: u64, c: u64) -> Span {
     if !enabled() {
         return Span { live: None };
     }
+    // ORDERING: Relaxed — the RMW is atomic, so ids are unique; nothing
+    // else is ordered against the id allocation.
     let id = NEXT_SPAN.fetch_add(1, Ordering::Relaxed);
     push(Event {
         ts_ns: now_ns(),
@@ -366,6 +396,7 @@ pub fn clear() {
         for lane in &bufs.lanes {
             let mut sink = Vec::new();
             lane.drain_into(&mut sink);
+            // ORDERING: Relaxed — monotonic stat reset, approximate.
             lane.dropped.store(0, Ordering::Relaxed);
         }
     }
@@ -374,10 +405,10 @@ pub fn clear() {
 /// Events discarded because a lane buffer filled up since the last
 /// [`clear`]/[`enable`].
 pub fn dropped() -> u64 {
-    BUFFERS
-        .get()
-        .map(|b| b.lanes.iter().map(|l| l.dropped.load(Ordering::Relaxed)).sum())
-        .unwrap_or(0)
+    let Some(bufs) = BUFFERS.get() else { return 0 };
+    // ORDERING: Relaxed — approximate stat; exact only after the region
+    // barrier, which already orders the producers' writes.
+    bufs.lanes.iter().map(|l| l.dropped.load(Ordering::Relaxed)).sum()
 }
 
 /// Number of per-lane buffers (0 until tracing is first enabled). Every
@@ -493,6 +524,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // fills an 8k-event ring — too slow under Miri
     fn lane_buf_drops_on_overflow() {
         let b = LaneBuf::new();
         for i in 0..(RING_CAP as u64 + 10) {

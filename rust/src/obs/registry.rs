@@ -45,6 +45,8 @@ impl Histogram {
 
     #[inline]
     pub fn record(&self, v: u64) {
+        // ORDERING: Relaxed — monotonic stats; readers tolerate a
+        // momentarily torn (count, sum) pair, see `count`/`sum`.
         self.buckets[Self::bucket(v)].fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(v, Ordering::Relaxed);
     }
@@ -56,10 +58,13 @@ impl Histogram {
     }
 
     pub fn count(&self) -> u64 {
+        // ORDERING: Relaxed — approximate live read; exact once all
+        // recorders have quiesced (e.g. after a region barrier).
         self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
     }
 
     pub fn sum(&self) -> u64 {
+        // ORDERING: Relaxed — approximate live read, see `count`.
         self.sum.load(Ordering::Relaxed)
     }
 
@@ -67,6 +72,7 @@ impl Histogram {
     /// bucket; 0 when empty.
     pub fn max_bound(&self) -> u64 {
         for i in (0..64).rev() {
+            // ORDERING: Relaxed — approximate live read, see `count`.
             if self.buckets[i].load(Ordering::Relaxed) > 0 {
                 return if i >= 63 { u64::MAX } else { 1u64 << (i + 1) };
             }
@@ -80,6 +86,7 @@ impl Histogram {
     pub fn to_json(&self) -> Value {
         let mut buckets = Vec::new();
         for (i, b) in self.buckets.iter().enumerate() {
+            // ORDERING: Relaxed — approximate live read, see `count`.
             let n = b.load(Ordering::Relaxed);
             if n > 0 {
                 buckets.push(Value::obj().with("pow2", i as u64).with("n", n));

@@ -75,6 +75,9 @@ where
     let grain = grain.max(1);
     let next = AtomicUsize::new(0);
     pool::Pool::global().run(threads, |t| loop {
+        // ORDERING: Relaxed — the fetch_add only needs atomicity (each
+        // chunk claimed exactly once); no data is published through it,
+        // and region entry/exit barriers order everything else.
         let start = next.fetch_add(grain, Ordering::Relaxed);
         if start >= n {
             break;
@@ -120,18 +123,22 @@ where
     }
     let grain = (n / (lanes * 8)).max(256);
     let next = AtomicUsize::new(0);
-    // Accumulators are pre-cloned on the caller (cloning inside a lane
-    // would need `A: Sync`) and handed to lanes through one cell per
-    // lane — per-slot cells, so no lane ever forms a reference to
-    // another lane's accumulator.
+    // Partials contract: accumulators are pre-cloned on the caller
+    // (cloning inside a lane would need `A: Sync`) and handed to lanes
+    // through one `RacyCell` per lane. Lane `t` may only ever borrow
+    // cell `t`, for the duration of its region body; the pool's
+    // completion barrier then orders all lane writes before the caller
+    // drains the cells below.
     let partials: Vec<RacyCell<Option<A>>> =
         (0..lanes).map(|_| RacyCell::new(Some(init.clone()))).collect();
     pool::Pool::global().run(lanes, |t| {
         // SAFETY: lane `t` runs exactly once per region and touches only
-        // cell `t` — disjoint.
-        let slot = unsafe { partials[t].get_mut() };
+        // cell `t` — disjoint (the partials contract above).
+        let mut slot = unsafe { partials[t].get_mut() };
         let mut acc = slot.take().expect("lane accumulator present");
         loop {
+            // ORDERING: Relaxed — chunk claiming only needs the RMW's
+            // atomicity; see `parallel_for_chunked`.
             let start = next.fetch_add(grain, Ordering::Relaxed);
             if start >= n {
                 break;
@@ -169,33 +176,212 @@ where
     });
 }
 
-/// Shared mutable cell for provably disjoint parallel writes.
+/// Shared mutable cell for whole-value hand-off to exactly one lane.
 ///
-/// Graph peeling mutates per-bloom / per-vertex slices that a parallel
-/// loop partitions disjointly (each bloom is owned by exactly one task in
-/// a phase). Rust cannot see that disjointness, so this cell provides the
-/// escape hatch; every use site documents its disjointness argument.
-pub struct RacyCell<T: ?Sized>(std::cell::UnsafeCell<T>);
+/// Parallel regions hand per-lane state (scratch slots, reduce
+/// accumulators, partition indexes) to worker lanes through a shared
+/// borrow. Rust cannot see that each cell is touched by exactly one lane,
+/// so this cell provides the escape hatch.
+///
+/// # Caller obligations (the `get_mut` contract)
+///
+/// At any instant at most one live [`RacyRef`] may exist per cell, and
+/// the access must be region-scoped: the cell is created before the
+/// parallel region, each lane borrows *its own* cell (never another
+/// lane's) for the duration of its region body, and the region's
+/// completion barrier orders all lane writes before the caller collects
+/// results with [`RacyCell::as_mut`] / [`RacyCell::into_inner`]. Every
+/// use site documents which of these facts makes its access exclusive.
+/// For buffers that many lanes scatter into at *element* granularity,
+/// use [`RacyBuf`] instead — overlapping `&mut` views of one value are
+/// undefined behavior even when the element writes are disjoint.
+///
+/// Debug builds enforce the single-borrow rule with a per-cell borrow
+/// flag: a second `get_mut` while a `RacyRef` is live panics instead of
+/// being silent UB. Release builds compile the flag away.
+pub struct RacyCell<T: ?Sized> {
+    #[cfg(debug_assertions)]
+    borrowed: std::sync::atomic::AtomicBool,
+    cell: std::cell::UnsafeCell<T>,
+}
 
+// SAFETY: the cell hands out `&mut T` across threads only through the
+// unsafe `get_mut`, whose callers promise exclusivity (see the contract
+// above); with that upheld the cell is just a `T` moved between threads,
+// so `T: Send` suffices.
 unsafe impl<T: ?Sized + Send> Sync for RacyCell<T> {}
 
 impl<T> RacyCell<T> {
     pub fn new(v: T) -> Self {
-        RacyCell(std::cell::UnsafeCell::new(v))
+        RacyCell {
+            #[cfg(debug_assertions)]
+            borrowed: std::sync::atomic::AtomicBool::new(false),
+            cell: std::cell::UnsafeCell::new(v),
+        }
     }
+    /// Exclusive access through a shared reference.
+    ///
     /// # Safety
-    /// Caller must guarantee no concurrent aliasing access to the parts
-    /// of `T` it mutates.
-    #[allow(clippy::mut_from_ref)]
-    pub unsafe fn get_mut(&self) -> &mut T {
-        &mut *self.0.get()
+    /// Caller must uphold the cell contract above: no other live
+    /// [`RacyRef`] to this cell, and no concurrent access of any kind to
+    /// the contained value while the returned guard is live.
+    #[inline]
+    pub unsafe fn get_mut(&self) -> RacyRef<'_, T> {
+        #[cfg(debug_assertions)]
+        {
+            // ORDERING: Acquire on the winning swap pairs with the
+            // Release store in `RacyRef::drop`, so the check synchronizes
+            // with the previous holder's writes when the flag bounces
+            // between threads. The flag is debug-only bookkeeping; real
+            // cross-lane publication is the pool's region barrier.
+            if self.borrowed.swap(true, Ordering::Acquire) {
+                panic!("RacyCell::get_mut: cell already borrowed (aliasing bug)");
+            }
+        }
+        RacyRef {
+            #[cfg(debug_assertions)]
+            flag: &self.borrowed,
+            // SAFETY: exclusivity is the caller's promise (checked by the
+            // borrow flag in debug builds), so forming `&mut` is sound.
+            val: unsafe { &mut *self.cell.get() },
+        }
     }
     /// Safe exclusive access (post-region collection sweeps).
     pub fn as_mut(&mut self) -> &mut T {
-        self.0.get_mut()
+        self.cell.get_mut()
     }
     pub fn into_inner(self) -> T {
-        self.0.into_inner()
+        self.cell.into_inner()
+    }
+}
+
+/// Guard returned by [`RacyCell::get_mut`]; derefs to the contained
+/// value. In debug builds dropping it clears the cell's borrow flag; in
+/// release builds it is a zero-cost wrapper around the `&mut T`.
+pub struct RacyRef<'a, T: ?Sized> {
+    #[cfg(debug_assertions)]
+    flag: &'a std::sync::atomic::AtomicBool,
+    val: &'a mut T,
+}
+
+impl<T: ?Sized> std::ops::Deref for RacyRef<'_, T> {
+    type Target = T;
+    #[inline]
+    fn deref(&self) -> &T {
+        self.val
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for RacyRef<'_, T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        self.val
+    }
+}
+
+#[cfg(debug_assertions)]
+impl<T: ?Sized> Drop for RacyRef<'_, T> {
+    fn drop(&mut self) {
+        // ORDERING: Release pairs with the Acquire swap in `get_mut` so
+        // the next borrower (possibly another thread, across a region
+        // boundary) observes this holder's writes before reusing the cell.
+        self.flag.store(false, Ordering::Release);
+    }
+}
+
+/// Shared buffer for provably disjoint parallel writes at *element*
+/// granularity.
+///
+/// Several kernels scatter into disjoint elements or sub-ranges of one
+/// shared buffer from many lanes at once (θ write-back in the FD driver,
+/// bloom entry compaction, per-node stats). [`RacyCell`] cannot express
+/// that: materializing overlapping `&mut Vec<T>` views per lane is
+/// undefined behavior even when the element writes never collide. This
+/// buffer keeps the aliasing legal by wrapping every element in its own
+/// `UnsafeCell` and only forming `&mut` at the granularity the caller
+/// claims (one element via [`RacyBuf::set`], one range via
+/// [`RacyBuf::slice_mut`]).
+///
+/// # Caller obligations
+/// For every element, at most one lane may access it while the buffer is
+/// shared; the parallel region's completion barrier orders all lane
+/// writes before [`RacyBuf::into_inner`] collects the result. Every use
+/// site documents its disjointness argument (e.g. "CD assigns each
+/// entity to exactly one partition").
+pub struct RacyBuf<T> {
+    data: Vec<std::cell::UnsafeCell<T>>,
+}
+
+// SAFETY: lanes only touch disjoint elements (the caller contract
+// above), so sharing the buffer is equivalent to partitioning a `Vec<T>`
+// into per-lane chunks and sending each to one thread — `T: Send`
+// suffices.
+unsafe impl<T: Send> Sync for RacyBuf<T> {}
+
+impl<T> RacyBuf<T> {
+    pub fn new(v: Vec<T>) -> Self {
+        RacyBuf {
+            data: v.into_iter().map(std::cell::UnsafeCell::new).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Write element `i`.
+    ///
+    /// # Safety
+    /// No other access to element `i` may happen concurrently (the
+    /// disjointness contract above).
+    #[inline]
+    pub unsafe fn set(&self, i: usize, v: T) {
+        // SAFETY: element `i` is exclusively this lane's by the caller
+        // contract, so the raw write cannot race or alias a live `&mut`.
+        unsafe { *self.data[i].get() = v }
+    }
+
+    /// Read element `i`.
+    ///
+    /// # Safety
+    /// No concurrent *write* to element `i` (concurrent reads are fine
+    /// for the owning lane only — the contract gives the element to one
+    /// lane, which may freely mix its own reads and writes).
+    #[inline]
+    pub unsafe fn get(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        // SAFETY: as for `set` — the element belongs to this lane.
+        unsafe { *self.data[i].get() }
+    }
+
+    /// Exclusive view of the sub-range `lo..hi`.
+    ///
+    /// # Safety
+    /// No other access to any element of `lo..hi` may happen while the
+    /// returned slice is live.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &mut [T] {
+        let cells = &self.data[lo..hi];
+        // SAFETY: `UnsafeCell<T>` is `repr(transparent)` over `T`, so the
+        // cell slice and a `T` slice share layout; exclusivity over the
+        // range is the caller's promise, so the `&mut` cannot alias.
+        unsafe { std::slice::from_raw_parts_mut(cells.as_ptr() as *mut T, cells.len()) }
+    }
+
+    /// Collect the buffer back into a plain `Vec` (after the region's
+    /// completion barrier has ordered all lane writes).
+    pub fn into_inner(self) -> Vec<T> {
+        self.data
+            .into_iter()
+            .map(std::cell::UnsafeCell::into_inner)
+            .collect()
     }
 }
 
@@ -209,16 +395,26 @@ impl Counter {
     }
     #[inline]
     pub fn add(&self, x: u64) {
+        // ORDERING: Relaxed — metrics counters are monotonic tallies
+        // with no data published alongside them; readers tolerate
+        // momentarily stale values, and region barriers make end-of-run
+        // reads exact.
         self.0.fetch_add(x, Ordering::Relaxed);
     }
     pub fn get(&self) -> u64 {
+        // ORDERING: Relaxed — see `add`; a mid-run read is a statistical
+        // snapshot, an end-of-run read is ordered by the region barrier.
         self.0.load(Ordering::Relaxed)
     }
     /// Overwrite the value (registry publishing of snapshot views).
     pub fn set(&self, v: u64) {
+        // ORDERING: Relaxed — see `add`; publishing a snapshot view is a
+        // single-word overwrite with no cross-data dependency.
         self.0.store(v, Ordering::Relaxed);
     }
     pub fn reset(&self) {
+        // ORDERING: Relaxed — see `add`; resets happen between runs,
+        // outside any parallel region.
         self.0.store(0, Ordering::Relaxed);
     }
 }
@@ -229,6 +425,7 @@ mod tests {
     use std::sync::atomic::AtomicU64;
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 10k-element sweep is too slow interpreted
     fn parallel_for_covers_all_indices() {
         let hits: Vec<AtomicU64> = (0..10_000).map(|_| AtomicU64::new(0)).collect();
         parallel_for(hits.len(), 4, |_, i| {
@@ -247,6 +444,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 100k folds are too slow interpreted
     fn parallel_reduce_sums() {
         let n = 100_000usize;
         let s = parallel_reduce(n, 4, 0u64, |acc, i| acc + i as u64, |a, b| a + b);
@@ -254,6 +452,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 5k-element sweep is too slow interpreted
     fn chunked_is_disjoint_and_complete() {
         let n = 5_000;
         let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
@@ -294,6 +493,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 64×20k-iteration regions are too slow interpreted
     fn regions_reuse_pool_workers() {
         // Force the pool into existence, then run many regions: no new
         // OS threads may appear (spawns bounded by pool size, not by the
@@ -310,6 +510,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 2k-element nested regions are too slow interpreted
     fn nested_regions_fall_back_sequentially() {
         let hits: Vec<AtomicU64> = (0..2_000).map(|_| AtomicU64::new(0)).collect();
         parallel_for_chunked(2, 2, 1, |_, lo, hi| {
@@ -328,11 +529,13 @@ mod tests {
     #[test]
     fn scratch_set_recycles_slots() {
         let mut s = ScratchSet::take(2);
-        // SAFETY: single-threaded test; lanes accessed one at a time.
+        // SAFETY: single-threaded test; one lane guard live at a time
+        // (each statement's guard is dropped before the next borrow).
         unsafe {
             s.lane(0).a.push(7);
             s.lane(1).b.push(9);
-            let (cnt, _, _) = s.lane(1).split(16);
+            let mut l1 = s.lane(1);
+            let (cnt, _, _) = l1.split(16);
             cnt[3] += 1;
             cnt[3] = 0; // restore the zero invariant
         }
@@ -347,5 +550,69 @@ mod tests {
             let (cnt, _, _) = sl.split(16);
             assert!(cnt.iter().all(|&c| c == 0));
         });
+    }
+
+    /// Miri-sized broadcast check: one small multi-lane region must run
+    /// every lane body exactly once (the RegionWait hand-shake under the
+    /// interpreter's weak-memory exploration).
+    #[test]
+    fn pool_broadcast_reaches_every_lane_once() {
+        let lanes = max_lanes(2);
+        let hits: Vec<AtomicU64> = (0..lanes).map(|_| AtomicU64::new(0)).collect();
+        pool::Pool::global().run(2, |t| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        let ran: u64 = hits.iter().map(|h| h.load(Ordering::Relaxed)).sum();
+        assert_eq!(ran, 2.min(lanes) as u64);
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) <= 1));
+    }
+
+    #[test]
+    fn racy_buf_disjoint_parallel_writes() {
+        let buf = RacyBuf::new(vec![0u64; 1024]);
+        assert_eq!(buf.len(), 1024);
+        assert!(!buf.is_empty());
+        parallel_for(1024, 4, |_, i| {
+            // SAFETY: parallel_for visits each index exactly once, so
+            // element `i` is exclusively this lane's.
+            unsafe { buf.set(i, i as u64 + 1) };
+        });
+        let v = buf.into_inner();
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i as u64 + 1));
+    }
+
+    #[test]
+    fn racy_buf_slice_mut_and_get() {
+        let buf = RacyBuf::new(vec![0u32; 8]);
+        // SAFETY: single-threaded; the slice is dropped before `get`.
+        unsafe {
+            let s = buf.slice_mut(2, 5);
+            s.copy_from_slice(&[7, 8, 9]);
+        }
+        // SAFETY: single-threaded — no concurrent writers.
+        assert_eq!(unsafe { buf.get(4) }, 9);
+        assert_eq!(buf.into_inner(), vec![0, 0, 7, 8, 9, 0, 0, 0]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn racy_cell_detects_aliased_get_mut() {
+        let c = RacyCell::new(0u32);
+        // SAFETY: single-threaded; this is the only live guard.
+        let g1 = unsafe { c.get_mut() };
+        let second = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // SAFETY: intentionally violates the contract to exercise the
+            // debug borrow flag; the call must panic before forming the
+            // second `&mut`.
+            let _g2 = unsafe { c.get_mut() };
+        }));
+        assert!(second.is_err(), "aliased get_mut must panic in debug builds");
+        drop(g1);
+        // the flag is cleared on drop, so borrowing again works
+        // SAFETY: single-threaded; the previous guard is dropped.
+        let mut g3 = unsafe { c.get_mut() };
+        *g3 = 7;
+        drop(g3);
+        assert_eq!(c.into_inner(), 7);
     }
 }

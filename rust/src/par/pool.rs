@@ -49,6 +49,9 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock, TryLockError};
 static TOTAL_SPAWNS: AtomicU64 = AtomicU64::new(0);
 
 pub fn total_spawns() -> u64 {
+    // ORDERING: Relaxed — a monotonic diagnostic tally; readers compare
+    // before/after deltas around fully-barriered runs, so no ordering is
+    // carried by the counter itself.
     TOTAL_SPAWNS.load(Ordering::Relaxed)
 }
 
@@ -129,6 +132,7 @@ impl Pool {
                 .name(format!("pbng-worker-{lane}"))
                 .spawn(move || worker_loop(&sh, lane))
                 .expect("spawning pbng pool worker");
+            // ORDERING: Relaxed — see `total_spawns`.
             TOTAL_SPAWNS.fetch_add(1, Ordering::Relaxed);
         }
         Pool {
@@ -178,8 +182,9 @@ impl Pool {
         // workers only run it between the publish below and their
         // `remaining` decrement, and `RegionWait` blocks (even during
         // unwinding of `body(0)`) until `remaining == 0` — so every use
-        // ends before `body` can be dropped.
-        let job: &'static Body = unsafe { std::mem::transmute::<&Body, &'static Body>(wide) };
+        // ends before `body` can be dropped, which is exactly
+        // `erase_lifetime`'s contract.
+        let job: &'static Body = unsafe { erase_lifetime(wide) };
         {
             let mut st = lock_state(&self.shared);
             st.epoch += 1;
@@ -188,6 +193,12 @@ impl Pool {
             st.job = Some(job);
             // publish the epoch to spinning workers before (and in
             // addition to) the condvar wake-up for parked ones
+            // ORDERING: Release — pairs with the Acquire spin in
+            // `worker_loop`; a worker that spots the new epoch through the
+            // hint must also see the `State` writes above once it takes
+            // the mutex (the hint alone never carries the job — it only
+            // short-circuits parking — but Release keeps the mirror
+            // coherent with the locked state it advertises).
             self.shared.epoch_hint.store(st.epoch, Ordering::Release);
             self.shared.start.notify_all();
         }
@@ -195,6 +206,26 @@ impl Pool {
         body(0);
         // `_wait` drops here: barrier, then worker-panic propagation.
     }
+}
+
+/// Erase the lifetime of a borrowed region job so it can sit in the
+/// pool's `'static` [`State`]. This is the crate's only `transmute`; it
+/// is allowlisted by name in `pbng-lint` (`check::rules`), so any new
+/// transmute must land in its own reviewed, named wrapper to pass CI.
+///
+/// # Safety
+/// The caller must guarantee that every dereference of the returned
+/// borrow happens before `body`'s real lifetime ends. [`Pool::run`]
+/// upholds this with its completion barrier: workers only run the job
+/// between the epoch publish and their `remaining` decrement, and
+/// [`RegionWait`] blocks the caller — even while unwinding — until
+/// `remaining == 0`, so every use strictly precedes the drop of the
+/// borrowed closure.
+unsafe fn erase_lifetime(body: &Body) -> &'static Body {
+    // SAFETY: only the lifetime is rewritten (`&Body` and
+    // `&'static Body` have identical layout); validity past the true
+    // lifetime is the caller's contract above.
+    unsafe { std::mem::transmute::<&Body, &'static Body>(body) }
 }
 
 /// Blocks until the current region's workers are done — including on the
@@ -235,6 +266,9 @@ fn worker_loop(sh: &Shared, lane: usize) {
         // condvar exactly as before, and one that spots a new epoch just
         // reaches the (unchanged) locked hand-off a bit sooner.
         let mut spins = 0u32;
+        // ORDERING: Acquire — pairs with the Release store of
+        // `epoch_hint` in `Pool::run`; see that site. The job itself is
+        // still handed off under the state mutex below.
         while spins < SPIN_ITERS && sh.epoch_hint.load(Ordering::Acquire) == seen {
             std::hint::spin_loop();
             spins += 1;
@@ -325,12 +359,16 @@ impl ScratchSet {
     /// The slot for lane `t`.
     ///
     /// # Safety
-    /// Caller must be inside a region whose lane `t` it currently drives
-    /// (the pool's lane contract makes slot access race-free), and must
-    /// not hold two references to the same lane's slot at once.
-    #[allow(clippy::mut_from_ref)]
-    pub unsafe fn lane(&self, t: usize) -> &mut ScratchSlot {
-        self.slots[t].get_mut()
+    /// Caller must currently drive lane `t` of a parallel region that
+    /// sized this set with at least `t + 1` lanes — the pool's lane
+    /// contract (each lane id runs on exactly one thread per region)
+    /// then makes slot `t` exclusively this thread's — and must not hold
+    /// two live guards to the same lane's slot at once. Debug builds
+    /// enforce the single-guard rule through the slot's borrow flag.
+    #[inline]
+    pub unsafe fn lane(&self, t: usize) -> super::RacyRef<'_, ScratchSlot> {
+        // SAFETY: exclusivity of slot `t` is the caller's contract above.
+        unsafe { self.slots[t].get_mut() }
     }
 
     /// Exclusive post-region sweep over every slot (result collection).

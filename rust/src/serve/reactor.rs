@@ -204,6 +204,9 @@ pub(crate) fn run(
     listener.set_nonblocking(true)?;
     let counters = Counters::new();
     let mut conns: Vec<Conn> = Vec::new();
+    // ORDERING: Acquire pairs with the Release store made by whoever
+    // holds `Server::stop_handle`, so a shutdown requested from
+    // another thread is seen along with its preceding writes.
     while !stop.load(Ordering::Acquire) {
         let mut progress = false;
         // accept burst
@@ -333,6 +336,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // real TCP sockets — unsupported under Miri
     fn reactor_round_trip_v2() {
         let (addr, stop, handle) = spawn_reactor(ServerConfig::new());
         let mut s = client(addr);
@@ -353,6 +357,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // real TCP sockets — unsupported under Miri
     fn reactor_sheds_over_global_cap() {
         let (addr, stop, handle) = spawn_reactor(ServerConfig::new().max_conns(1));
         let rejected = Registry::global().counter("server.rejected");
@@ -373,6 +378,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // real TCP sockets — unsupported under Miri
     fn reactor_sheds_over_per_ip_cap() {
         let (addr, stop, handle) =
             spawn_reactor(ServerConfig::new().max_conns(64).per_ip(1));
@@ -389,6 +395,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // real TCP sockets — unsupported under Miri
     fn reactor_closes_idle_connections() {
         let (addr, stop, handle) = spawn_reactor(
             ServerConfig::new().idle_timeout(Duration::from_millis(50)),
@@ -407,6 +414,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // real TCP sockets — unsupported under Miri
     fn reactor_rejects_overlong_lines() {
         let (addr, stop, handle) = spawn_reactor(ServerConfig::new().max_line(64));
         let mut s = client(addr);

@@ -61,6 +61,11 @@ impl SnapshotStore {
 
     /// Epoch of the current snapshot without touching the slot.
     pub fn epoch(&self) -> u64 {
+        // ORDERING: Acquire pairs with the Release store in `publish`,
+        // so a caller that observes epoch N and then calls `load` is
+        // guaranteed a snapshot at least that new (the slot mutex alone
+        // already orders slot access; the pair keeps the lock-free
+        // epoch probe consistent with it).
         self.epoch.load(Ordering::Acquire)
     }
 
@@ -76,6 +81,9 @@ impl SnapshotStore {
             engine: Arc::new(engine),
             epoch: next,
         });
+        // ORDERING: Release pairs with the Acquire load in `epoch`;
+        // stored after the slot swap (under the mutex) so an observed
+        // epoch never runs ahead of the published snapshot.
         self.epoch.store(next, Ordering::Release);
         next
     }
@@ -86,21 +94,32 @@ impl SnapshotStore {
         if !self.has_updater() {
             return false;
         }
+        // ORDERING: Release pairs with the AcqRel swap in
+        // `take_reload_request`, so work the requester did before
+        // asking (e.g. writing the new index file) is visible to the
+        // updater that honors the request.
         self.reload_requested.store(true, Ordering::Release);
         true
     }
 
     /// Consume a pending reload request (updater side).
     pub fn take_reload_request(&self) -> bool {
+        // ORDERING: AcqRel — Acquire pairs with the Release store in
+        // `request_reload` (see there); Release keeps the consuming RMW
+        // ordered before the updater's subsequent publish.
         self.reload_requested.swap(false, Ordering::AcqRel)
     }
 
     /// Mark that an [`super::Updater`] is polling this store.
     pub fn attach_updater(&self) {
+        // ORDERING: Release pairs with the Acquire in `has_updater`,
+        // so a requester that sees the flag also sees the updater's
+        // initialization.
         self.updater_attached.store(true, Ordering::Release);
     }
 
     pub fn has_updater(&self) -> bool {
+        // ORDERING: Acquire pairs with the Release in `attach_updater`.
         self.updater_attached.load(Ordering::Acquire)
     }
 
@@ -144,7 +163,35 @@ mod tests {
         crate::index::server::dispatch(engine, line).body.unwrap()
     }
 
+    /// Small enough (K_{2,2}) to run under Miri: exercises the
+    /// publish/epoch/pin protocol without the zipf generators.
     #[test]
+    fn pinned_snapshot_keeps_its_epoch_across_publish() {
+        fn tiny_engine() -> QueryEngine {
+            let g = gen::biclique(2, 2);
+            let (idx, _) = BeIndex::build(&g, 1);
+            let theta = wing_bup(&g).theta;
+            QueryEngine::new(build_wing_forest(&g, &idx, &theta, 1))
+        }
+        let store = SnapshotStore::new(tiny_engine());
+        let pinned = store.load();
+        assert_eq!(pinned.epoch, 1);
+        let e2 = store.publish(tiny_engine());
+        assert_eq!(e2, 2);
+        assert_eq!(store.epoch(), 2);
+        // the pinned session still sees epoch 1; fresh loads see 2
+        assert_eq!(pinned.epoch, 1);
+        assert_eq!(store.load().epoch, 2);
+        // updater rendezvous flags round-trip
+        assert!(!store.request_reload());
+        store.attach_updater();
+        assert!(store.request_reload());
+        assert!(store.take_reload_request());
+        assert!(!store.take_reload_request());
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // zipf graph + full forest build — too slow under Miri
     fn publish_bumps_epoch_and_new_loads_see_it() {
         let store = SnapshotStore::new(engine_for(1));
         assert_eq!(store.epoch(), 1);
@@ -156,6 +203,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // zipf graph + full forest build — too slow under Miri
     fn in_flight_snapshot_survives_a_publish_byte_identically() {
         let store = SnapshotStore::new(engine_for(7));
         let old = store.load(); // a session pins this epoch
@@ -178,6 +226,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // zipf graph + full forest build — too slow under Miri
     fn lifetime_meters_accumulate_across_swaps() {
         let store = SnapshotStore::new(engine_for(3));
         // k=0 maps to the smallest existing level, so the miss/hit
@@ -194,6 +243,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // zipf graph + full forest build — too slow under Miri
     fn reload_requests_need_an_updater() {
         let store = SnapshotStore::new(engine_for(5));
         assert!(!store.request_reload());

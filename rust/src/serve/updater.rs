@@ -107,6 +107,8 @@ impl Updater {
                         IndexSeen::Ops(load_deltas(path).map(|o| o.len()).unwrap_or(0))
                     }
                 };
+                // ORDERING: Acquire pairs with the Release store in
+                // `shutdown`, giving the loop a clean exit hand-off.
                 while !stop.load(Ordering::Acquire) {
                     let forced = store.take_reload_request();
                     let t0 = Instant::now();
@@ -140,6 +142,8 @@ impl Updater {
     }
 
     fn shutdown(&mut self) {
+        // ORDERING: Release pairs with the Acquire load in the poll
+        // loop; the join below is the full synchronization point.
         self.stop.store(true, Ordering::Release);
         if let Some(h) = self.handle.take() {
             h.join().ok();

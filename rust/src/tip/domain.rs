@@ -118,7 +118,7 @@ impl PeelDomain for TipDomain<'_> {
         &self,
         part: usize,
         bounds: (u64, u64),
-        theta: &mut [u64],
+        theta: &crate::par::RacyBuf<u64>,
         cd: &CdOutput,
         cfg: &EngineConfig,
         meters: &Meters,
@@ -139,7 +139,7 @@ fn peel_induced(
     s: &InducedSubgraph,
     sup_init: &[u64],
     (range_lo, range_hi): (u64, u64),
-    theta: &mut [u64],
+    theta: &crate::par::RacyBuf<u64>,
     dynamic_deletes: bool,
     meters: &Meters,
 ) {
@@ -175,7 +175,11 @@ fn peel_induced(
             .expect("induced heap exhausted early");
         let lu = lu as usize;
         level = level.max(su);
-        theta[s.users[lu] as usize] = level;
+        // SAFETY: CD assigns every vertex to exactly one partition and
+        // this task owns its partition exclusively, so no other lane
+        // touches θ[users[lu]] (the FD driver's disjointness contract,
+        // `engine::fd::fine_decompose`).
+        unsafe { theta.set(s.users[lu] as usize, level) };
         peeled[lu] = true;
         remaining -= 1;
         // wedge traversal within the induced subgraph

@@ -98,7 +98,7 @@ pub fn peel_batch_tip(
     parallel_for_chunked(active.len(), threads, 8, |t, lo, hi| {
         // SAFETY: the pool drives each lane id from at most one thread
         // per region, so slot `t` is exclusively ours inside this chunk.
-        let sc = unsafe { scratch.lane(t) };
+        let mut sc = unsafe { scratch.lane(t) };
         let (cnt, wedge_ends, out) = sc.split(g.nu());
         let mut wedges = 0u64;
         let mut updates = 0u64;

@@ -13,16 +13,19 @@ use crate::beindex::partition::{partition_be_index, PartIndex};
 use crate::beindex::BeIndex;
 use crate::engine::{CdOutput, EngineConfig, PeelDomain, PeelOutcome};
 use crate::metrics::Meters;
+use crate::par::{RacyBuf, RacyCell};
 use crate::peel::BucketQueue;
 use crate::wing::state::{peel_set_batch, peel_set_single, WingState};
-use std::sync::Mutex;
 
 pub struct WingDomain<'a> {
     st: WingState<'a>,
     /// FD substrate (set by `build_substrate`). Each partition's index is
-    /// handed off exclusively to one FD task; the Mutex realizes that
-    /// hand-off safely.
-    parts: Vec<Mutex<PartIndex>>,
+    /// handed off exclusively to the one FD task that claims the
+    /// partition (the queue's `taken` flags in [`crate::engine::fd`]
+    /// claim each exactly once), so a lock would only re-prove what the
+    /// claim already guarantees; the cell keeps the hot path lock-free
+    /// and its debug borrow flag asserts the hand-off.
+    parts: Vec<RacyCell<PartIndex>>,
     edges_of: Vec<Vec<u32>>,
     local_of: Vec<u32>,
 }
@@ -76,7 +79,7 @@ impl PeelDomain for WingDomain<'_> {
 
     fn build_substrate(&mut self, cd: &CdOutput, _cfg: &EngineConfig) {
         let pt = partition_be_index(self.st.idx, &cd.part_of, cd.n_parts);
-        self.parts = pt.parts.into_iter().map(Mutex::new).collect();
+        self.parts = pt.parts.into_iter().map(RacyCell::new).collect();
         self.edges_of = pt.edges_of;
         self.local_of = pt.local_of;
     }
@@ -93,12 +96,17 @@ impl PeelDomain for WingDomain<'_> {
         &self,
         part: usize,
         bounds: (u64, u64),
-        theta: &mut [u64],
+        theta: &RacyBuf<u64>,
         cd: &CdOutput,
         cfg: &EngineConfig,
         meters: &Meters,
     ) {
-        let mut idx = self.parts[part].lock().unwrap();
+        // SAFETY: the FD queue's claim flags hand partition `part` to
+        // exactly one logical lane per run (`engine::fd::LaneQueue`), and
+        // the pool's region protocol orders `build_substrate`'s writes
+        // before any lane body — so this is the only live access to
+        // `parts[part]`.
+        let mut idx = unsafe { self.parts[part].get_mut() };
         peel_one_partition(
             part as u32,
             &mut idx,
@@ -124,7 +132,7 @@ fn peel_one_partition(
     part_of: &[u32],
     sup_init: &[u64],
     (range_lo, range_hi): (u64, u64),
-    theta: &mut [u64],
+    theta: &RacyBuf<u64>,
     dynamic_deletes: bool,
     meters: &Meters,
 ) {
@@ -161,7 +169,11 @@ fn peel_one_partition(
         let le = le as usize;
         level = level.max(s);
         let e_glob = edges[le];
-        theta[e_glob as usize] = level;
+        // SAFETY: CD assigns every edge to exactly one partition and this
+        // task owns partition `part_id` exclusively, so no other lane
+        // touches θ[e_glob] (the FD driver's disjointness contract,
+        // `engine::fd::fine_decompose`).
+        unsafe { theta.set(e_glob as usize, level) };
         peeled[le] = true;
         remaining -= 1;
         // Alg. 3 over the partitioned index.

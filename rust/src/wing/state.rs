@@ -21,7 +21,7 @@
 
 use crate::beindex::BeIndex;
 use crate::metrics::Meters;
-use crate::par::{parallel_for_chunked, RacyCell, SupportCell};
+use crate::par::{parallel_for_chunked, RacyBuf, SupportCell};
 use std::sync::atomic::{AtomicU32, Ordering};
 
 /// Epoch value meaning "not peeled".
@@ -36,10 +36,14 @@ pub struct WingState<'a> {
     pub epoch: Vec<AtomicU32>,
     /// Working copy of bloom numbers.
     bloom_k: Vec<AtomicU32>,
-    /// Working copy of bloom entry lists (compacted under dynamic deletes).
-    entries: RacyCell<Vec<(u32, u32)>>,
-    /// Active length per bloom.
-    bloom_len: RacyCell<Vec<u32>>,
+    /// Working copy of bloom entry lists (compacted under dynamic
+    /// deletes). Element-granular shared mutation: phase 2 of
+    /// [`peel_set_batch`] rewrites each dirty bloom's sub-range from
+    /// exactly one lane, so a [`RacyBuf`] (per-element `UnsafeCell`)
+    /// keeps the concurrent disjoint writes legal.
+    entries: RacyBuf<(u32, u32)>,
+    /// Active length per bloom (same per-bloom ownership as `entries`).
+    bloom_len: RacyBuf<u32>,
     /// Per-bloom batch counters (zeroed between iterations).
     count: Vec<AtomicU32>,
     /// §5.2 optimization toggle.
@@ -53,8 +57,8 @@ impl<'a> WingState<'a> {
             sup: per_edge.iter().map(|&s| SupportCell::new(s)).collect(),
             epoch: (0..per_edge.len()).map(|_| AtomicU32::new(ALIVE)).collect(),
             bloom_k: idx.bloom_k.iter().map(|&k| AtomicU32::new(k)).collect(),
-            entries: RacyCell::new(idx.bloom_entries.clone()),
-            bloom_len: RacyCell::new(idx.bloom_len.clone()),
+            entries: RacyBuf::new(idx.bloom_entries.clone()),
+            bloom_len: RacyBuf::new(idx.bloom_len.clone()),
             count: (0..idx.n_blooms()).map(|_| AtomicU32::new(0)).collect(),
             dynamic_deletes,
         }
@@ -99,7 +103,8 @@ pub fn peel_set_batch(
     parallel_for_chunked(active.len(), threads, 64, |t, lo, hi| {
         // SAFETY: the pool drives each lane id from at most one thread
         // per region, so slot `t` is exclusively ours inside this chunk.
-        let sc = unsafe { scratch.lane(t) };
+        let mut sc = unsafe { scratch.lane(t) };
+        let sc = &mut *sc;
         let (dirty, touched) = (&mut sc.a, &mut sc.b);
         let mut wedges = 0u64;
         let mut updates = 0u64;
@@ -145,11 +150,11 @@ pub fn peel_set_batch(
 
     // Phase 2: per dirty bloom, decrement the bloom number and apply the
     // aggregated −count[B] to live edges with live twins. Disjoint blooms
-    // → RacyCell writes are race-free. Lane slots (`b`) are reused as the
-    // phase-local touched collectors.
+    // → element-disjoint `RacyBuf` writes are race-free. Lane slots (`b`)
+    // are reused as the phase-local touched collectors.
     parallel_for_chunked(dirty.len(), threads, 16, |t, lo, hi| {
         // SAFETY: lane-exclusive slot (see phase 1).
-        let sc = unsafe { scratch.lane(t) };
+        let mut sc = unsafe { scratch.lane(t) };
         let touched = &mut sc.b;
         let mut wedges = 0u64;
         let mut updates = 0u64;
@@ -159,14 +164,14 @@ pub fn peel_set_batch(
             let k = st.bloom_k[b as usize].load(Ordering::Relaxed);
             debug_assert!(k >= c, "bloom {b}: k={k} < c={c}");
             st.bloom_k[b as usize].store(k - c, Ordering::Relaxed);
-            // SAFETY: each dirty bloom appears exactly once in `dirty`
-            // (guarded by the fetch_add(0→1) push) and slices per bloom
-            // are disjoint.
-            let entries = unsafe { st.entries.get_mut() };
-            let bloom_len = unsafe { st.bloom_len.get_mut() };
             let s = st.idx.bloom_offs[b as usize];
-            let len = bloom_len[b as usize] as usize;
-            let slice = &mut entries[s..s + len];
+            // SAFETY: each dirty bloom appears exactly once in `dirty`
+            // (guarded by the fetch_add(0→1) push), so this lane owns
+            // bloom `b`'s length slot and entry range exclusively; ranges
+            // of distinct blooms are disjoint by construction.
+            let len = unsafe { st.bloom_len.get(b as usize) } as usize;
+            // SAFETY: as above — bloom `b`'s range is exclusively ours.
+            let slice = unsafe { st.entries.slice_mut(s, s + len) };
             let mut w = 0usize; // compaction write cursor
             for r in 0..len {
                 wedges += 1;
@@ -188,7 +193,8 @@ pub fn peel_set_batch(
                 w += 1;
             }
             if st.dynamic_deletes {
-                bloom_len[b as usize] = w as u32;
+                // SAFETY: as above — bloom `b` is exclusively ours.
+                unsafe { st.bloom_len.set(b as usize, w as u32) };
             }
         }
         meters.wedges.add(wedges);
@@ -235,12 +241,12 @@ pub fn peel_set_single(
             touched.push(tw);
             kb.store(k - 1, Ordering::Relaxed);
             // one traversal of the bloom per peeled edge (no aggregation)
-            // SAFETY: sequential loop — exclusive access.
-            let entries = unsafe { st.entries.get_mut() };
-            let bloom_len = unsafe { st.bloom_len.get_mut() };
             let s = st.idx.bloom_offs[b as usize];
-            let len = bloom_len[b as usize] as usize;
-            let slice = &mut entries[s..s + len];
+            // SAFETY: this engine is sequential — no other thread touches
+            // the state during the loop, so every element is ours.
+            let len = unsafe { st.bloom_len.get(b as usize) } as usize;
+            // SAFETY: as above — sequential, exclusive access.
+            let slice = unsafe { st.entries.slice_mut(s, s + len) };
             let mut w = 0usize;
             for r in 0..len {
                 wedges += 1;
@@ -261,7 +267,8 @@ pub fn peel_set_single(
                 w += 1;
             }
             if st.dynamic_deletes {
-                bloom_len[b as usize] = w as u32;
+                // SAFETY: as above — sequential, exclusive access.
+                unsafe { st.bloom_len.set(b as usize, w as u32) };
             }
         }
     }
@@ -408,7 +415,8 @@ mod tests {
         st.mark_peeled(&[0], 1, 1);
         peel_set_batch(&st, &[0], 0, 1, 1, &m);
         // bloom 0 lost edge 0's wedge: entries shrink by 2 (both orientations)
-        let len = unsafe { st.bloom_len.get_mut() }[0];
+        // SAFETY: single-threaded test — no concurrent writers.
+        let len = unsafe { st.bloom_len.get(0) };
         assert_eq!(len as usize, idx.entries(0).len() - 2);
     }
 }

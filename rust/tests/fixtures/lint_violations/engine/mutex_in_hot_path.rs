@@ -1,0 +1,5 @@
+// Lint fixture (never compiled): a blocking lock declared in a
+// hot-path module. Must fire `hot-path-lock` exactly once.
+pub struct Slot {
+    pub inner: std::sync::Mutex<u64>,
+}

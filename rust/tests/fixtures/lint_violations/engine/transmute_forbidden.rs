@@ -1,0 +1,7 @@
+// Lint fixture (never compiled): a transmute outside the allowlisted
+// wrapper. Must fire `transmute-allowlist` exactly once (the SAFETY
+// comment below keeps `safety-comment` quiet so only one rule fires).
+pub fn reinterpret(x: u32) -> i32 {
+    // SAFETY: fixture only — never executed; same-size integer cast.
+    unsafe { std::mem::transmute::<u32, i32>(x) }
+}

@@ -1,0 +1,8 @@
+// Lint fixture (never compiled): an atomic op in an ORDERING-scoped
+// module with no justification. Must fire `ordering-comment` exactly
+// once.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) -> u64 {
+    c.fetch_add(1, Ordering::Relaxed)
+}

@@ -1,0 +1,5 @@
+// Lint fixture (never compiled): an unwrap on a serving path. Must
+// fire `serve-unwrap` exactly once.
+pub fn parse_k(arg: &str) -> u64 {
+    arg.parse().unwrap()
+}

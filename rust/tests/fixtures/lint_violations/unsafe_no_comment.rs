@@ -1,0 +1,7 @@
+// Lint fixture (never compiled): an unsafe block with no adjacent
+// SAFETY comment. Must fire `safety-comment` exactly once.
+pub fn touch(v: &mut [u64]) {
+    let p = v.as_mut_ptr();
+
+    unsafe { *p = 1 };
+}

@@ -1,0 +1,84 @@
+//! Integration tests for the `pbng-lint` analyzer (`pbng::check` +
+//! the `pbng_lint` binary): the real source tree must be clean, and the
+//! fixture tree under `tests/fixtures/lint_violations/` must trip every
+//! rule exactly once.
+
+use std::process::Command;
+
+fn lint(args: &[&str]) -> std::process::Output {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_pbng_lint"));
+    cmd.args(args);
+    cmd.output().expect("running pbng_lint")
+}
+
+fn src_root() -> String {
+    format!("{}/src", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture_root() -> String {
+    format!("{}/tests/fixtures/lint_violations", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+#[cfg_attr(miri, ignore)] // spawns the lint binary — no subprocesses under Miri
+fn real_tree_is_clean() {
+    let out = lint(&["--root", &src_root()]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "violations in the real tree:\n{stdout}");
+    assert!(stdout.contains("0 violation(s)"), "{stdout}");
+}
+
+#[test]
+#[cfg_attr(miri, ignore)] // spawns the lint binary — no subprocesses under Miri
+fn fixture_trips_every_rule_exactly_once() {
+    let out = lint(&["--root", &fixture_root()]);
+    assert!(!out.status.success(), "the fixtures must fail the lint");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for rule in [
+        "safety-comment",
+        "ordering-comment",
+        "transmute-allowlist",
+        "hot-path-lock",
+        "serve-unwrap",
+    ] {
+        let n = stdout.matches(&format!("[{rule}]")).count();
+        assert_eq!(n, 1, "rule {rule} fired {n} times, want 1:\n{stdout}");
+    }
+    assert!(stdout.contains("5 violation(s)"), "{stdout}");
+}
+
+#[test]
+#[cfg_attr(miri, ignore)] // spawns the lint binary — no subprocesses under Miri
+fn fixture_violations_name_file_and_line() {
+    let out = lint(&["--root", &fixture_root()]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("unsafe_no_comment.rs:6 [safety-comment]"), "{stdout}");
+    assert!(stdout.contains("par/ordering_no_comment.rs:7 [ordering-comment]"), "{stdout}");
+    assert!(stdout.contains("serve/unwrap_in_session.rs:4 [serve-unwrap]"), "{stdout}");
+}
+
+#[test]
+#[cfg_attr(miri, ignore)] // spawns the lint binary — no subprocesses under Miri
+fn json_report_is_parseable() {
+    let out = lint(&["--root", &fixture_root(), "--json"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let v = pbng::jsonio::Value::parse(&stdout).expect("valid JSON report");
+    assert_eq!(v.req_u64("count").unwrap(), 5);
+    assert_eq!(v.req_u64("files_scanned").unwrap(), 5);
+    let viols = v.req_arr("violations").unwrap();
+    assert_eq!(viols.len(), 5);
+    for d in viols {
+        assert!(d.req_u64("line").unwrap() >= 1);
+        assert!(!d.req_str("rule").unwrap().is_empty());
+        assert!(!d.req_str("file").unwrap().is_empty());
+    }
+}
+
+#[test]
+#[cfg_attr(miri, ignore)] // spawns the lint binary — no subprocesses under Miri
+fn bad_arguments_exit_with_usage_error() {
+    let out = lint(&["--bogus"]);
+    assert_eq!(out.status.code(), Some(2));
+    let out = lint(&["--root", "/nonexistent/definitely-not-here"]);
+    assert_eq!(out.status.code(), Some(2));
+}
