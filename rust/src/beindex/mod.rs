@@ -97,14 +97,28 @@ impl BeIndex {
         }
     }
 
-    /// Build directly from a graph (counting pass included).
+    /// Build directly from a graph (counting pass included) with the
+    /// default counting kernel.
     pub fn build(g: &BipartiteGraph, threads: usize) -> (BeIndex, Vec<u64>) {
+        Self::build_with(g, threads, crate::count::KernelConfig::default())
+    }
+
+    /// Build directly from a graph with an explicit counting-kernel
+    /// configuration (wedge-side policy, SIMD policy). The index is valid
+    /// for any wedge-side order — bloom partitions differ across orders,
+    /// but `Σ_B C(k_B, 2)` and the per-edge counts are invariant.
+    pub fn build_with(
+        g: &BipartiteGraph,
+        threads: usize,
+        kernel: crate::count::KernelConfig,
+    ) -> (BeIndex, Vec<u64>) {
         let (counts, raw) = crate::count::pve_bcnt(
             g,
             crate::count::CountOptions {
                 per_edge: true,
                 build_blooms: true,
                 threads,
+                kernel,
             },
             None,
         );
@@ -249,6 +263,7 @@ mod tests {
                 per_edge: true,
                 build_blooms: true,
                 threads: 1,
+                kernel: crate::count::KernelConfig::default(),
             },
             None,
         );
@@ -258,6 +273,7 @@ mod tests {
                 per_edge: true,
                 build_blooms: true,
                 threads: 4,
+                kernel: crate::count::KernelConfig::default(),
             },
             None,
         );

@@ -70,6 +70,20 @@ pub enum Algo {
     TipIncr,
     /// From-scratch tip re-decomposition after every batch.
     TipIncrScratch,
+    /// Counting only, forced-scalar intersection kernel.
+    KernCountScalar,
+    /// Counting only, SIMD intersection when compiled in (`Auto`).
+    KernCountSimd,
+    /// Counting only, auto wedge-side cost model + `Auto` SIMD.
+    KernCountAuto,
+    /// Wing peel with scattered (per-hit atomic) support updates.
+    KernPeelScatter,
+    /// Wing peel with aggregated (sort-then-flush) support updates.
+    KernPeelAgg,
+    /// Tip peel with scattered support updates.
+    KernTipScatter,
+    /// Tip peel with aggregated support updates.
+    KernTipAgg,
 }
 
 impl Algo {
@@ -90,6 +104,13 @@ impl Algo {
             Algo::WingIncrScratch => "wing/incr-scratch",
             Algo::TipIncr => "tip/incr",
             Algo::TipIncrScratch => "tip/incr-scratch",
+            Algo::KernCountScalar => "kern/count-scalar",
+            Algo::KernCountSimd => "kern/count-simd",
+            Algo::KernCountAuto => "kern/count-auto",
+            Algo::KernPeelScatter => "kern/peel-scatter",
+            Algo::KernPeelAgg => "kern/peel-agg",
+            Algo::KernTipScatter => "kern/tip-scatter",
+            Algo::KernTipAgg => "kern/tip-agg",
         }
     }
 
@@ -98,11 +119,22 @@ impl Algo {
     }
 
     pub fn run(self, g: &BipartiteGraph, threads: usize) -> Decomposition {
+        use crate::count::{KernelConfig, OrderPolicy, SimdPolicy, UpdateKernel};
         let wing_cfg = |batch, dynamic_deletes| crate::engine::EngineConfig {
             p: (g.m() / 500).clamp(4, 64),
             threads,
             batch,
             dynamic_deletes,
+            ..Default::default()
+        };
+        let kern_wing = |updates| crate::engine::EngineConfig {
+            kernel: KernelConfig { updates, ..Default::default() },
+            ..wing_cfg(true, true)
+        };
+        let kern_tip = |updates| crate::engine::EngineConfig {
+            p: (g.nu() / 100).clamp(4, 32),
+            threads,
+            kernel: KernelConfig { updates, ..Default::default() },
             ..Default::default()
         };
         match self {
@@ -127,8 +159,58 @@ impl Algo {
             Algo::WingIncrScratch => incr::run_wing_scratch(g, threads),
             Algo::TipIncr => incr::run_tip_incremental(g, threads),
             Algo::TipIncrScratch => incr::run_tip_scratch(g, threads),
+            Algo::KernCountScalar => run_count_only(
+                g,
+                threads,
+                KernelConfig { simd: SimdPolicy::Scalar, ..Default::default() },
+            ),
+            Algo::KernCountSimd => run_count_only(
+                g,
+                threads,
+                KernelConfig { simd: SimdPolicy::Auto, ..Default::default() },
+            ),
+            Algo::KernCountAuto => run_count_only(
+                g,
+                threads,
+                KernelConfig { order: OrderPolicy::Auto, ..Default::default() },
+            ),
+            Algo::KernPeelScatter => {
+                crate::wing::wing_pbng(g, kern_wing(UpdateKernel::Scattered))
+            }
+            Algo::KernPeelAgg => crate::wing::wing_pbng(g, kern_wing(UpdateKernel::Aggregated)),
+            Algo::KernTipScatter => {
+                crate::tip::tip_pbng(g, Side::U, kern_tip(UpdateKernel::Scattered))
+            }
+            Algo::KernTipAgg => {
+                crate::tip::tip_pbng(g, Side::U, kern_tip(UpdateKernel::Aggregated))
+            }
         }
     }
+}
+
+/// Counting-only cell for the `kernels` suite: one `pve_bcnt` pass with
+/// the given kernel config, reported as a Decomposition whose "θ" is the
+/// per-U butterfly count vector — so the θ checksum in the committed
+/// report doubles as the scalar-vs-SIMD byte-equality gate.
+fn run_count_only(
+    g: &BipartiteGraph,
+    threads: usize,
+    kernel: crate::count::KernelConfig,
+) -> Decomposition {
+    let meters = crate::metrics::Meters::new();
+    let mut rec = crate::metrics::Recorder::new(&meters);
+    rec.enter(crate::metrics::Phase::Count);
+    let (c, _) = crate::count::pve_bcnt(
+        g,
+        crate::count::CountOptions {
+            per_edge: false,
+            build_blooms: false,
+            threads,
+            kernel,
+        },
+        Some(&meters),
+    );
+    Decomposition { theta: c.per_u, stats: rec.finish() }
 }
 
 /// Incremental-suite drivers: a pinned mixed update stream applied either
@@ -330,6 +412,15 @@ const SMOKE_DATASETS: &[DatasetSpec] = &[
     DatasetSpec { name: "grid-s", seed: 23, gen_fn: grid_smoke },
 ];
 
+/// Kernel-suite datasets: one skewed (power-law — lopsided adjacency
+/// lists, galloping-heavy intersections) and one flat (grid — uniform
+/// short lists), the two shapes that stress the kernels differently.
+/// Same specs as the smoke entries of the same names.
+const KERNEL_DATASETS: &[DatasetSpec] = &[
+    DatasetSpec { name: "pl-s", seed: 21, gen_fn: pl_smoke },
+    DatasetSpec { name: "grid-s", seed: 23, gen_fn: grid_smoke },
+];
+
 const STANDARD_DATASETS: &[DatasetSpec] = &[
     DatasetSpec { name: "di-af-s", seed: 101, gen_fn: preset_di_af_s },
     DatasetSpec { name: "tr-s", seed: 106, gen_fn: preset_tr_s },
@@ -368,6 +459,21 @@ const INCR_ALGOS: &[Algo] = &[
     Algo::TipIncrScratch,
 ];
 
+/// Kernel-engineering cells: counting-only (scalar vs SIMD vs auto
+/// side-choice — θ checksums of the `count-*` triple must match exactly)
+/// and peel-only (scattered vs aggregated support updates — each pair
+/// must match its sibling's checksum, with the aggregated wall time
+/// expected at or below the scattered one).
+const KERNEL_ALGOS: &[Algo] = &[
+    Algo::KernCountScalar,
+    Algo::KernCountSimd,
+    Algo::KernCountAuto,
+    Algo::KernPeelScatter,
+    Algo::KernPeelAgg,
+    Algo::KernTipScatter,
+    Algo::KernTipAgg,
+];
+
 pub const SUITES: &[Suite] = &[
     Suite {
         name: "micro",
@@ -399,6 +505,12 @@ pub const SUITES: &[Suite] = &[
         datasets: MICRO_DATASETS,
         algos: INCR_ALGOS,
     },
+    Suite {
+        name: "kernels",
+        description: "counting/peel kernel configs: scalar vs SIMD vs auto side-choice, scattered vs aggregated updates",
+        datasets: KERNEL_DATASETS,
+        algos: KERNEL_ALGOS,
+    },
 ];
 
 pub fn find_suite(name: &str) -> Option<&'static Suite> {
@@ -429,6 +541,7 @@ mod tests {
         let mut names: Vec<&str> = FULL_ALGOS
             .iter()
             .chain(INCR_ALGOS.iter())
+            .chain(KERNEL_ALGOS.iter())
             .map(|a| a.name())
             .collect();
         names.sort_unstable();
@@ -438,6 +551,33 @@ mod tests {
         for a in FULL_ALGOS.iter().chain(INCR_ALGOS.iter()) {
             assert!(a.name().starts_with(if a.is_wing() { "wing/" } else { "tip/" }));
         }
+        for a in KERNEL_ALGOS {
+            assert!(a.name().starts_with("kern/"), "{}", a.name());
+        }
+    }
+
+    #[test]
+    fn kernel_count_variants_are_byte_identical() {
+        // ISSUE acceptance: θ checksums byte-identical scalar vs SIMD vs
+        // auto side-choice. The count-only cells report per-U counts as θ.
+        let g = MICRO_DATASETS[0].build(); // pl-micro: skewed lists
+        let scalar = Algo::KernCountScalar.run(&g, 2).theta;
+        let simd = Algo::KernCountSimd.run(&g, 2).theta;
+        let auto = Algo::KernCountAuto.run(&g, 2).theta;
+        assert_eq!(scalar, simd, "scalar vs simd counts diverged");
+        assert_eq!(scalar, auto, "degree vs auto side-choice counts diverged");
+        assert_eq!(scalar.len(), g.nu());
+    }
+
+    #[test]
+    fn kernel_peel_variants_match_reference_theta() {
+        let g = MICRO_DATASETS[2].build(); // grid-micro, the smallest
+        let wing_ref = Algo::WingPbng.run(&g, 1).theta;
+        assert_eq!(Algo::KernPeelScatter.run(&g, 1).theta, wing_ref);
+        assert_eq!(Algo::KernPeelAgg.run(&g, 1).theta, wing_ref);
+        let tip_ref = Algo::TipPbng.run(&g, 1).theta;
+        assert_eq!(Algo::KernTipScatter.run(&g, 1).theta, tip_ref);
+        assert_eq!(Algo::KernTipAgg.run(&g, 1).theta, tip_ref);
     }
 
     #[test]

@@ -101,6 +101,9 @@ pub struct Entry {
     /// Per-partition FD balance summary of the recorded repetition
     /// (informational, never gated).
     pub fd_balance: FdBalance,
+    /// Counting-kernel side-choice / SIMD mix of the recorded repetition
+    /// (informational, never gated).
+    pub count_side: CountSide,
     pub phases: Vec<PhaseRow>,
 }
 
@@ -175,6 +178,64 @@ impl FdBalance {
             max_ms: v.req_f64("max_ms")?,
             mean_ms: v.req_f64("mean_ms")?,
             stddev_ms: v.req_f64("stddev_ms")?,
+        })
+    }
+}
+
+/// Wedge-side / SIMD mix of the counting kernel calls in the recorded
+/// repetition, distilled from the obs `count_kernel` spans (`b` = the
+/// resolved wedge side, `c` = SIMD active). Like [`FdBalance`] it is
+/// informational only — `bench compare` never gates on it — but it makes
+/// the side-choice cost model auditable from committed reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CountSide {
+    /// Counting-kernel invocations observed.
+    pub calls: u64,
+    /// Calls that resolved to the degree-descending order.
+    pub degree: u64,
+    /// Calls that resolved to the U-side-major order.
+    pub side_u: u64,
+    /// Calls that resolved to the V-side-major order.
+    pub side_v: u64,
+    /// Calls that ran the SIMD intersection path.
+    pub simd: u64,
+}
+
+impl CountSide {
+    /// Summarize the `count_kernel` spans in an obs event drain.
+    pub fn from_events(events: &[crate::obs::Event]) -> CountSide {
+        let mut cs = CountSide::default();
+        for e in events {
+            if e.kind != crate::obs::Kind::CountKernel || e.is_exit {
+                continue;
+            }
+            cs.calls += 1;
+            match e.b {
+                1 => cs.side_u += 1,
+                2 => cs.side_v += 1,
+                _ => cs.degree += 1,
+            }
+            cs.simd += u64::from(e.c != 0);
+        }
+        cs
+    }
+
+    fn to_json(self) -> Value {
+        Value::obj()
+            .with("calls", self.calls)
+            .with("degree", self.degree)
+            .with("side_u", self.side_u)
+            .with("side_v", self.side_v)
+            .with("simd", self.simd)
+    }
+
+    fn from_json(v: &Value) -> Result<CountSide> {
+        Ok(CountSide {
+            calls: v.req_u64("calls")?,
+            degree: v.req_u64("degree")?,
+            side_u: v.req_u64("side_u")?,
+            side_v: v.req_u64("side_v")?,
+            simd: v.req_u64("simd")?,
         })
     }
 }
@@ -408,6 +469,7 @@ impl Entry {
             .with("rep_ms", rep_ms)
             .with("counters", self.counters.to_json())
             .with("fd_balance", self.fd_balance.to_json())
+            .with("count_side", self.count_side.to_json())
             .with("phases", phases)
     }
 
@@ -435,6 +497,10 @@ impl Entry {
             Some(b) => FdBalance::from_json(b).context("fd_balance")?,
             None => FdBalance::default(),
         };
+        let count_side = match v.get("count_side") {
+            Some(b) => CountSide::from_json(b).context("count_side")?,
+            None => CountSide::default(),
+        };
         Ok(Entry {
             dataset: v.req_str("dataset")?.to_string(),
             seed: v.req_u64("seed")?,
@@ -450,6 +516,7 @@ impl Entry {
             rep_ms,
             counters: Counters::from_json(v.req("counters")?).context("counters")?,
             fd_balance,
+            count_side,
             phases,
         })
     }
@@ -477,6 +544,7 @@ pub(super) mod tests {
                 mean_ms: 0.25,
                 stddev_ms: 0.125,
             },
+            count_side: CountSide { calls: 2, degree: 1, side_u: 1, side_v: 0, simd: 1 },
             counters: Counters {
                 updates,
                 wedges: 2 * updates,
@@ -545,21 +613,65 @@ pub(super) mod tests {
 
     #[test]
     fn entries_without_new_fields_still_load() {
-        // Reports written before rep_ms / fd_balance existed must load
-        // with defaults (additive schema evolution, no version bump).
+        // Reports written before rep_ms / fd_balance / count_side existed
+        // must load with defaults (additive schema evolution, no version
+        // bump).
         let r = sample_report(vec![sample_entry("a", "wing/pbng", 10)]);
         let mut v = r.to_json();
         if let Value::Obj(kv) = &mut v {
             let entries = kv.iter_mut().find(|(k, _)| k == "entries").unwrap();
             if let Value::Arr(es) = &mut entries.1 {
                 if let Value::Obj(e) = &mut es[0] {
-                    e.retain(|(k, _)| k != "rep_ms" && k != "fd_balance");
+                    e.retain(|(k, _)| k != "rep_ms" && k != "fd_balance" && k != "count_side");
                 }
             }
         }
         let back = Report::from_json(&v).unwrap();
         assert!(back.entries[0].rep_ms.is_empty());
         assert_eq!(back.entries[0].fd_balance, FdBalance::default());
+        assert_eq!(back.entries[0].count_side, CountSide::default());
+    }
+
+    #[test]
+    fn count_side_round_trips_and_summarizes_events() {
+        let r = sample_report(vec![sample_entry("a", "kern/count-auto", 10)]);
+        let back = Report::parse(&r.to_json().to_pretty()).unwrap();
+        assert_eq!(back.entries[0].count_side, r.entries[0].count_side);
+        use crate::obs::{Event, Kind};
+        let call = |span: u64, side: u64, simd: u64| {
+            [
+                Event {
+                    ts_ns: 0,
+                    span,
+                    lane: 0,
+                    kind: Kind::CountKernel,
+                    is_exit: false,
+                    a: 100,
+                    b: side,
+                    c: simd,
+                },
+                Event {
+                    ts_ns: 1,
+                    span,
+                    lane: 0,
+                    kind: Kind::CountKernel,
+                    is_exit: true,
+                    a: 100,
+                    b: side,
+                    c: simd,
+                },
+            ]
+        };
+        let mut evs = Vec::new();
+        evs.extend(call(1, 0, 1)); // degree order, SIMD
+        evs.extend(call(2, 1, 0)); // side-U order, scalar
+        evs.extend(call(3, 2, 0)); // side-V order, scalar
+        let cs = CountSide::from_events(&evs);
+        assert_eq!(
+            cs,
+            CountSide { calls: 3, degree: 1, side_u: 1, side_v: 1, simd: 1 }
+        );
+        assert_eq!(CountSide::from_events(&[]), CountSide::default());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //!
 //! [`PeelStats::total`]: crate::metrics::PeelStats
 
-use super::report::{Counters, Entry, Env, FdBalance, PhaseRow, Report, WallMs};
+use super::report::{Counters, CountSide, Entry, Env, FdBalance, PhaseRow, Report, WallMs};
 use super::{Algo, DatasetSpec, Suite};
 use crate::graph::BipartiteGraph;
 use crate::obs;
@@ -69,6 +69,7 @@ fn run_cell(ds: &DatasetSpec, g: &BipartiteGraph, algo: Algo, opts: &BenchOption
     // and does not touch the gated counters at all.
     let collect = obs::enabled();
     let mut balance = FdBalance::default();
+    let mut count_side = CountSide::default();
     for _ in 0..reps {
         if collect {
             obs::clear();
@@ -79,7 +80,9 @@ fn run_cell(ds: &DatasetSpec, g: &BipartiteGraph, algo: Algo, opts: &BenchOption
             // like the counters: the balance describes the recorded
             // (last) repetition; a snapshot (not a drain) leaves the
             // window in place for `pbng bench --trace` to export
-            balance = FdBalance::from_events(&obs::snapshot_events());
+            let events = obs::snapshot_events();
+            balance = FdBalance::from_events(&events);
+            count_side = CountSide::from_events(&events);
         }
         last = Some(d);
     }
@@ -108,6 +111,7 @@ fn run_cell(ds: &DatasetSpec, g: &BipartiteGraph, algo: Algo, opts: &BenchOption
         rep_ms,
         counters: Counters::from_decomposition(&d),
         fd_balance: balance,
+        count_side,
         phases,
     }
 }
@@ -171,6 +175,12 @@ mod tests {
         assert!(e.rep_ms.iter().all(|&t| t >= 0.0));
         assert!(e.fd_balance.tasks > 0, "wing/pbng ran FD tasks");
         assert!(e.fd_balance.lanes >= 1);
+        // the counting phase emits exactly one count_kernel span per run
+        assert_eq!(e.count_side.calls, 1, "wing/pbng counts once");
+        assert_eq!(
+            e.count_side.degree + e.count_side.side_u + e.count_side.side_v,
+            e.count_side.calls
+        );
         // repetitions are normalized, and the env stanza reflects that
         let zero = BenchOptions { repetitions: 0, ..opts };
         let r0 = run_suite(&suite, &zero);

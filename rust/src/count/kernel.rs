@@ -1,0 +1,433 @@
+//! Cache- and SIMD-conscious kernel primitives shared by the counting
+//! and peeling hot loops.
+//!
+//! Three building blocks live here:
+//!
+//! - [`KernelConfig`] — the knob set plumbed through
+//!   [`crate::engine::EngineConfig`]: wedge-order policy
+//!   ([`OrderPolicy`]), SIMD dispatch ([`SimdPolicy`]), and the
+//!   support-update strategy ([`UpdateKernel`]).
+//! - Sorted-intersection kernels ([`intersect_values`],
+//!   [`intersect_pairs`]) over strictly-increasing label lists: scalar
+//!   two-pointer merge, galloping when the lengths are lopsided, and an
+//!   AVX2 8×8 block kernel (compiled only under
+//!   `target_feature = "avx2"`, with the scalar path as the mandatory
+//!   fallback and a `PBNG_SIMD=scalar` runtime override).
+//! - [`flush_runs`] — the per-lane sort-then-aggregate flush that
+//!   replaces scattered atomic `sub_clamped` storms in the batch
+//!   peeling kernels: each lane's `(entity, delta)` log is sorted,
+//!   equal-key runs are summed, and one atomic update per distinct
+//!   entity is applied. Correct because clamped subtraction to a common
+//!   floor is associative *and* commutative:
+//!   `max(max(x-a, f)-b, f) = max(x-a-b, f)`.
+
+use super::order::OrderPolicy;
+use crate::par::{spmd, Counter, ScratchSet};
+use std::sync::{Arc, OnceLock};
+
+/// SIMD dispatch policy for the sorted-intersection inner loop.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimdPolicy {
+    /// Use AVX2 when compiled in (`target_feature = "avx2"`) and not
+    /// overridden by `PBNG_SIMD=scalar`; otherwise scalar.
+    #[default]
+    Auto,
+    /// Always the scalar kernel, even when AVX2 is compiled in.
+    Scalar,
+}
+
+/// How batch peeling applies support updates.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum UpdateKernel {
+    /// Per-lane `(entity, delta)` logs, sorted and run-summed, flushed
+    /// once per batch ([`flush_runs`]) — one atomic op per distinct
+    /// entity per lane.
+    #[default]
+    Aggregated,
+    /// One atomic `sub_clamped` per discovered update (the pre-kernel
+    /// behavior; kept as the measurable baseline).
+    Scattered,
+}
+
+/// Kernel selection, plumbed from [`crate::engine::EngineConfig`] down
+/// into counting ([`super::CountOptions::kernel`]) and batch peeling.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Wedge-enumeration order ([`super::order`] cost model).
+    pub order: OrderPolicy,
+    /// SIMD dispatch for sorted intersections.
+    pub simd: SimdPolicy,
+    /// Support-update strategy for the batch peel kernels.
+    pub updates: UpdateKernel,
+}
+
+/// Whether the AVX2 kernel exists in this build.
+pub fn simd_compiled() -> bool {
+    cfg!(all(target_arch = "x86_64", target_feature = "avx2"))
+}
+
+/// `PBNG_SIMD=scalar` forces the scalar kernel at runtime (read once).
+fn forced_scalar() -> bool {
+    static F: OnceLock<bool> = OnceLock::new();
+    *F.get_or_init(|| {
+        std::env::var("PBNG_SIMD")
+            .map(|v| v.eq_ignore_ascii_case("scalar"))
+            .unwrap_or(false)
+    })
+}
+
+/// Resolve a [`SimdPolicy`] against the build and the environment.
+pub fn simd_active(policy: SimdPolicy) -> bool {
+    match policy {
+        SimdPolicy::Scalar => false,
+        SimdPolicy::Auto => simd_compiled() && !forced_scalar(),
+    }
+}
+
+/// When one list is at least this factor shorter, binary-search it into
+/// the longer one instead of merging.
+const GALLOP_FACTOR: usize = 16;
+
+/// Intersect two strictly-increasing `u32` slices, calling `f` once per
+/// common value, in ascending order. `simd` selects the AVX2 block
+/// kernel when it is compiled in (pass [`simd_active`]'s verdict).
+pub fn intersect_values(a: &[u32], b: &[u32], simd: bool, mut f: impl FnMut(u32)) {
+    if simd {
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+        {
+            avx2::intersect(a, b, &mut f);
+            return;
+        }
+    }
+    scalar_intersect(a, b, &mut f);
+}
+
+fn scalar_intersect(a: &[u32], b: &[u32], f: &mut impl FnMut(u32)) {
+    if a.len() > b.len() {
+        scalar_intersect(b, a, f);
+        return;
+    }
+    if a.is_empty() {
+        return;
+    }
+    if a.len() * GALLOP_FACTOR < b.len() {
+        // gallop: binary-search each short-side value into the suffix
+        // of the long side that can still contain it
+        let mut rest = b;
+        for &x in a {
+            let p = rest.partition_point(|&y| y < x);
+            if p == rest.len() {
+                return;
+            }
+            if rest[p] == x {
+                f(x);
+                rest = &rest[p + 1..];
+            } else {
+                rest = &rest[p..];
+            }
+        }
+        return;
+    }
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                f(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+}
+
+/// Intersect two strictly-increasing label lists carrying positional
+/// edge ids, calling `f(label, a_eid, b_eid)` once per common label in
+/// ascending order. Positional payloads keep this kernel scalar (the
+/// documented dispatch policy: SIMD applies to the label-only path).
+pub fn intersect_pairs(
+    a_lab: &[u32],
+    a_eid: &[u32],
+    b_lab: &[u32],
+    b_eid: &[u32],
+    f: &mut impl FnMut(u32, u32, u32),
+) {
+    debug_assert_eq!(a_lab.len(), a_eid.len());
+    debug_assert_eq!(b_lab.len(), b_eid.len());
+    if a_lab.len() * GALLOP_FACTOR < b_lab.len() {
+        let mut j = 0usize;
+        for (i, &x) in a_lab.iter().enumerate() {
+            j += b_lab[j..].partition_point(|&y| y < x);
+            if j == b_lab.len() {
+                return;
+            }
+            if b_lab[j] == x {
+                f(x, a_eid[i], b_eid[j]);
+                j += 1;
+            }
+        }
+        return;
+    }
+    if b_lab.len() * GALLOP_FACTOR < a_lab.len() {
+        let mut i = 0usize;
+        for (j, &y) in b_lab.iter().enumerate() {
+            i += a_lab[i..].partition_point(|&x| x < y);
+            if i == a_lab.len() {
+                return;
+            }
+            if a_lab[i] == y {
+                f(y, a_eid[i], b_eid[j]);
+                i += 1;
+            }
+        }
+        return;
+    }
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a_lab.len() && j < b_lab.len() {
+        match a_lab[i].cmp(&b_lab[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                f(a_lab[i], a_eid[i], b_eid[j]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// 8×8 block intersection of strictly-increasing `u32` slices:
+    /// compare an 8-lane block of `a` against all 8 rotations of an
+    /// 8-lane block of `b`, collect the match mask, then advance the
+    /// block whose maximum is exhausted. Each common value is emitted
+    /// exactly once, ascending (matches of the current block pair lie
+    /// below `min(amax, bmax)`; both cursors only move forward).
+    pub fn intersect(a: &[u32], b: &[u32], f: &mut impl FnMut(u32)) {
+        let (mut i, mut j) = (0usize, 0usize);
+        while i + 8 <= a.len() && j + 8 <= b.len() {
+            // disjoint block ranges: skip without comparing
+            if a[i + 7] < b[j] {
+                i += 8;
+                continue;
+            }
+            if b[j + 7] < a[i] {
+                j += 8;
+                continue;
+            }
+            // SAFETY: this module only compiles when AVX2 is statically
+            // enabled (the `target_feature = "avx2"` cfg on `mod avx2`),
+            // so every intrinsic's CPU requirement holds; the two
+            // unaligned loads read exactly 8 u32s each, in bounds by the
+            // loop conditions `i + 8 <= a.len()` and `j + 8 <= b.len()`.
+            let mask = unsafe {
+                let va = _mm256_loadu_si256(a.as_ptr().add(i).cast());
+                let vb = _mm256_loadu_si256(b.as_ptr().add(j).cast());
+                let rot1 = _mm256_setr_epi32(1, 2, 3, 4, 5, 6, 7, 0);
+                // lane k of `hits` becomes all-ones iff a[i+k] occurs
+                // anywhere in the b block
+                let mut rot = vb;
+                let mut hits = _mm256_cmpeq_epi32(va, rot);
+                for _ in 0..7 {
+                    rot = _mm256_permutevar8x32_epi32(rot, rot1);
+                    hits = _mm256_or_si256(hits, _mm256_cmpeq_epi32(va, rot));
+                }
+                _mm256_movemask_ps(_mm256_castsi256_ps(hits)) as u32 & 0xff
+            };
+            let mut m = mask;
+            while m != 0 {
+                let k = m.trailing_zeros() as usize;
+                f(a[i + k]);
+                m &= m - 1;
+            }
+            let (amax, bmax) = (a[i + 7], b[j + 7]);
+            // no remaining element of an exhausted block can match a
+            // later block of the other list (strict monotonicity)
+            if amax <= bmax {
+                i += 8;
+            }
+            if bmax <= amax {
+                j += 8;
+            }
+        }
+        super::scalar_intersect(&a[i..], &b[j..], f);
+    }
+}
+
+/// Cached handle for the aggregation-flush batch-size histogram (the
+/// registry lookup scans under a lock; resolve it once per process).
+fn flush_hist() -> &'static Arc<crate::obs::Histogram> {
+    static H: OnceLock<Arc<crate::obs::Histogram>> = OnceLock::new();
+    H.get_or_init(|| crate::obs::Registry::global().histogram("kernel.flush_batch"))
+}
+
+/// Cached side-choice counters, indexed by [`OrderPolicy::side_code`].
+fn side_counters() -> &'static [Arc<Counter>; 3] {
+    static C: OnceLock<[Arc<Counter>; 3]> = OnceLock::new();
+    C.get_or_init(|| {
+        let r = crate::obs::Registry::global();
+        [
+            r.counter("kernel.side.degree"),
+            r.counter("kernel.side.u"),
+            r.counter("kernel.side.v"),
+        ]
+    })
+}
+
+/// Record one counting call's resolved side choice into the global
+/// registry (`kernel.side.{degree,u,v}`).
+pub fn note_side_choice(code: u64) {
+    side_counters()[code as usize].add(1);
+}
+
+/// Flush every lane's `(entity, delta)` log: sort by entity, sum
+/// equal-key runs, and `apply` one aggregate per distinct entity per
+/// lane. Lanes flush in parallel; cross-lane duplicates are fine
+/// because the underlying clamped subtraction commutes (module docs).
+/// Logs are cleared; batch sizes land in the `kernel.flush_batch`
+/// histogram.
+pub fn flush_runs(scratch: &ScratchSet, apply: impl Fn(u32, u64) + Sync) {
+    let lanes = scratch.lanes();
+    spmd(lanes, |t| {
+        // SAFETY: `spmd(lanes, ..)` drives each lane id `t < lanes` on
+        // exactly one thread per region and this set holds `lanes`
+        // slots, so slot `t` is exclusively this thread's; no other
+        // guard to it is live.
+        let mut sc = unsafe { scratch.lane(t) };
+        if sc.pairs.is_empty() {
+            return;
+        }
+        flush_hist().record(sc.pairs.len() as u64);
+        sc.pairs.sort_unstable_by_key(|&(e, _)| e);
+        let mut i = 0usize;
+        while i < sc.pairs.len() {
+            let key = sc.pairs[i].0;
+            let mut sum = 0u64;
+            while i < sc.pairs.len() && sc.pairs[i].0 == key {
+                sum += sc.pairs[i].1;
+                i += 1;
+            }
+            apply(key, sum);
+        }
+        sc.pairs.clear();
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn naive_intersect(a: &[u32], b: &[u32]) -> Vec<u32> {
+        a.iter().filter(|x| b.contains(x)).copied().collect()
+    }
+
+    fn sorted_set(rng: &mut crate::testkit::Rng, n: usize, universe: usize) -> Vec<u32> {
+        let mut v: Vec<u32> = (0..n).map(|_| rng.usize_below(universe) as u32).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    #[test]
+    fn intersect_values_matches_naive_scalar_and_simd() {
+        let mut rng = crate::testkit::Rng::new(0x51AD);
+        for _ in 0..40 {
+            let a = sorted_set(&mut rng, 1 + rng.usize_below(60), 90);
+            let b = sorted_set(&mut rng, 1 + rng.usize_below(60), 90);
+            let want = naive_intersect(&a, &b);
+            for simd in [false, simd_active(SimdPolicy::Auto)] {
+                let mut got = Vec::new();
+                intersect_values(&a, &b, simd, |x| got.push(x));
+                assert_eq!(got, want, "simd={simd} a={a:?} b={b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn intersect_values_handles_lopsided_gallop() {
+        let a: Vec<u32> = vec![7, 500, 900];
+        let b: Vec<u32> = (0..1000).collect();
+        let mut got = Vec::new();
+        intersect_values(&a, &b, false, |x| got.push(x));
+        assert_eq!(got, vec![7, 500, 900]);
+        // and with the roles swapped
+        let mut got = Vec::new();
+        intersect_values(&b, &a, false, |x| got.push(x));
+        assert_eq!(got, vec![7, 500, 900]);
+    }
+
+    #[test]
+    fn intersect_pairs_reports_positions_from_both_sides() {
+        let a_lab = [2u32, 4, 9, 30];
+        let a_eid = [20u32, 40, 90, 300];
+        let b_lab = [4u32, 9, 10, 31];
+        let b_eid = [104u32, 109, 110, 131];
+        let mut got = Vec::new();
+        intersect_pairs(&a_lab, &a_eid, &b_lab, &b_eid, &mut |l, ea, eb| {
+            got.push((l, ea, eb));
+        });
+        assert_eq!(got, vec![(4, 40, 104), (9, 90, 109)]);
+    }
+
+    #[test]
+    fn intersect_pairs_gallops_both_directions() {
+        let long_lab: Vec<u32> = (0..800).map(|x| x * 2).collect();
+        let long_eid: Vec<u32> = (0..800).collect();
+        let short_lab = [6u32, 700, 1400];
+        let short_eid = [1u32, 2, 3];
+        let mut ab = Vec::new();
+        intersect_pairs(&short_lab, &short_eid, &long_lab, &long_eid, &mut |l, ea, eb| {
+            ab.push((l, ea, eb));
+        });
+        assert_eq!(ab, vec![(6, 1, 3), (700, 2, 350), (1400, 3, 700)]);
+        let mut ba = Vec::new();
+        intersect_pairs(&long_lab, &long_eid, &short_lab, &short_eid, &mut |l, ea, eb| {
+            ba.push((l, ea, eb));
+        });
+        assert_eq!(ba, vec![(6, 3, 1), (700, 350, 2), (1400, 700, 3)]);
+    }
+
+    #[test]
+    fn flush_runs_aggregates_per_entity() {
+        let mut scratch = ScratchSet::take(2);
+        let mut lane = 0;
+        scratch.for_each(|sl| {
+            if lane == 0 {
+                sl.pairs.extend([(3u32, 5u64), (1, 2), (3, 7), (0, 0)]);
+            } else {
+                sl.pairs.extend([(1u32, 1u64), (1, 1)]);
+            }
+            lane += 1;
+        });
+        let acc: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        let applies = AtomicU64::new(0);
+        flush_runs(&scratch, |k, d| {
+            // ORDERING: Relaxed — test-local accumulation, joined below.
+            acc[k as usize].fetch_add(d, Ordering::Relaxed);
+            applies.fetch_add(1, Ordering::Relaxed);
+        });
+        let got: Vec<u64> = acc.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        assert_eq!(got, vec![0, 4, 0, 12]);
+        // one apply per distinct key per lane: {0,1,3} + {1}
+        assert_eq!(applies.load(Ordering::Relaxed), 4);
+        // logs cleared for freelist reuse
+        scratch.for_each(|sl| assert!(sl.pairs.is_empty()));
+    }
+
+    #[test]
+    fn simd_policy_resolution() {
+        assert!(!simd_active(SimdPolicy::Scalar));
+        if simd_active(SimdPolicy::Auto) {
+            assert!(simd_compiled());
+        }
+        let d = KernelConfig::default();
+        assert_eq!(d.order, OrderPolicy::Degree);
+        assert_eq!(d.simd, SimdPolicy::Auto);
+        assert_eq!(d.updates, UpdateKernel::Aggregated);
+    }
+}

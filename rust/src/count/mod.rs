@@ -2,17 +2,27 @@
 //! Wang et al. [66] / Shi–Shun [54]) with optional embedded bloom
 //! discovery for the BE-Index (§2.3).
 //!
-//! Vertices are relabeled in decreasing order of degree (label 0 = highest
+//! Vertices are relabeled by a priority order (label 0 = highest
 //! priority); adjacency is sorted by increasing label; a wedge
 //! `start → mid → last` is traversed iff `label(last) < label(mid)` and
 //! `label(last) < label(start)`. Wedges sharing endpoints `(start, last)`
 //! combine into `C(c, 2)` butterflies, and each such endpoint pair with
 //! `c ≥ 2` is exactly one *maximal priority bloom*.
 //!
-//! Complexity: `O(Σ_{(u,v)∈E} min(du, dv)) = O(α·m)` wedges.
+//! The traversal is correct under any total vertex order (each butterfly
+//! retires at the pair whose `last` has the globally minimal label);
+//! [`order`] exploits that with a per-graph cost model, and [`kernel`]
+//! supplies the blocked/SIMD intersection and aggregated-update
+//! primitives. Under the default degree order the complexity is
+//! `O(Σ_{(u,v)∈E} min(du, dv)) = O(α·m)` wedges.
 
 pub mod brute;
 pub mod dense;
+pub mod kernel;
+pub mod order;
+
+pub use kernel::{KernelConfig, SimdPolicy, UpdateKernel};
+pub use order::OrderPolicy;
 
 use crate::graph::BipartiteGraph;
 use crate::metrics::Meters;
@@ -55,6 +65,9 @@ pub struct CountOptions {
     pub per_edge: bool,
     pub build_blooms: bool,
     pub threads: usize,
+    /// Kernel selection (order policy / SIMD dispatch); the update
+    /// strategy member only affects the peeling kernels.
+    pub kernel: KernelConfig,
 }
 
 impl Default for CountOptions {
@@ -63,23 +76,28 @@ impl Default for CountOptions {
             per_edge: true,
             build_blooms: false,
             threads: 1,
+            kernel: KernelConfig::default(),
         }
     }
 }
 
-/// Relabeled view used by the wedge traversal: vertex id == priority rank.
+/// Relabeled view used by the wedge traversal: vertex id == priority
+/// rank. Struct-of-arrays: the discovery loop scans only the contiguous
+/// `labels` array (cache-resident, SIMD-friendly); `eids` is touched
+/// only by the positional intersection paths.
 struct Relabeled {
     /// CSR offsets per label.
     offs: Vec<usize>,
-    /// `(nbr_label, edge_id)`, ascending by label.
-    adj: Vec<(u32, u32)>,
+    /// Neighbor labels, ascending within each list.
+    labels: Vec<u32>,
+    /// Edge id carried by the same-index `labels` slot.
+    eids: Vec<u32>,
     /// label -> wid (to map counts back).
     unlab: Vec<u32>,
 }
 
-fn relabel(g: &BipartiteGraph) -> Relabeled {
+fn relabel(g: &BipartiteGraph, lab: &[u32]) -> Relabeled {
     let nw = g.nw();
-    let lab = g.priority_labels();
     let mut unlab = vec![0u32; nw];
     for (w, &l) in lab.iter().enumerate() {
         unlab[l as usize] = w as u32;
@@ -88,17 +106,26 @@ fn relabel(g: &BipartiteGraph) -> Relabeled {
     for l in 0..nw {
         offs[l + 1] = offs[l] + g.deg_w(unlab[l] as usize);
     }
-    let mut adj = vec![(0u32, 0u32); g.m() * 2];
+    let mut labels = vec![0u32; g.m() * 2];
+    let mut eids = vec![0u32; g.m() * 2];
+    let mut tmp: Vec<(u32, u32)> = Vec::new();
     for l in 0..nw {
         let w = unlab[l] as usize;
         let (nbrs, wid_base) = g.nbrs_w(w);
-        let dst = &mut adj[offs[l]..offs[l + 1]];
-        for (i, &(n, e)) in nbrs.iter().enumerate() {
-            dst[i] = (lab[wid_base + n as usize], e);
+        tmp.clear();
+        tmp.extend(nbrs.iter().map(|&(n, e)| (lab[wid_base + n as usize], e)));
+        tmp.sort_unstable();
+        for (i, &(nl, e)) in tmp.iter().enumerate() {
+            labels[offs[l] + i] = nl;
+            eids[offs[l] + i] = e;
         }
-        dst.sort_unstable();
     }
-    Relabeled { offs, adj, unlab }
+    Relabeled {
+        offs,
+        labels,
+        eids,
+        unlab,
+    }
 }
 
 /// Per-vertex (and optionally per-edge) butterfly counting; optionally
@@ -109,7 +136,18 @@ pub fn pve_bcnt(
     meters: Option<&Meters>,
 ) -> (Counts, RawBlooms) {
     let nw = g.nw();
-    let r = relabel(g);
+    let resolved = opts.kernel.order.resolve(g);
+    kernel::note_side_choice(resolved.side_code());
+    // SIMD serves the label-only path; positional edge payloads
+    // (per-edge counts, bloom harvest) keep the pairs path scalar.
+    let simd = kernel::simd_active(opts.kernel.simd) && !opts.per_edge && !opts.build_blooms;
+    let _span = crate::obs::span(
+        crate::obs::Kind::CountKernel,
+        nw as u64,
+        resolved.side_code(),
+        simd as u64,
+    );
+    let r = relabel(g, &order::labels(g, resolved));
     let per_w: Vec<SupportCell> = (0..nw).map(|_| SupportCell::new(0)).collect();
     let per_edge: Vec<SupportCell> = if opts.per_edge {
         (0..g.m()).map(|_| SupportCell::new(0)).collect()
@@ -144,6 +182,7 @@ pub fn pve_bcnt(
                 &per_w,
                 &per_edge,
                 opts,
+                simd,
                 &mut sc,
                 &mut hv,
                 &mut local_total,
@@ -217,10 +256,6 @@ struct Scratch {
     wedge_count: Vec<u32>,
     /// distinct `last` labels touched for the current start
     touched: Vec<u32>,
-    /// wedge list: (mid, last, e1, e2)
-    nzw: Vec<(u32, u32, u32, u32)>,
-    /// per-last local bloom slot (index into this start's bloom list)
-    bloom_slot: Vec<u32>,
 }
 
 impl Scratch {
@@ -228,8 +263,6 @@ impl Scratch {
         Scratch {
             wedge_count: vec![0; nw],
             touched: Vec::new(),
-            nzw: Vec::new(),
-            bloom_slot: vec![u32::MAX; nw],
         }
     }
 }
@@ -241,17 +274,21 @@ fn process_start(
     per_w: &[SupportCell],
     per_edge: &[SupportCell],
     opts: CountOptions,
+    simd: bool,
     sc: &mut Scratch,
     hv: &mut RawBloomsLocal,
     local_total: &mut u64,
     local_wedges: &mut u64,
 ) {
     sc.touched.clear();
-    sc.nzw.clear();
     let s = start as usize;
-    for &(mid, e1) in &r.adj[r.offs[s]..r.offs[s + 1]] {
+    let s_labs = &r.labels[r.offs[s]..r.offs[s + 1]];
+    // Wedge discovery: one contiguous label scan per mid, counting
+    // wedges per `last` endpoint. The wedge meter ticks once per probe,
+    // including the probe that breaks.
+    for &mid in s_labs {
         let m = mid as usize;
-        for &(last, e2) in &r.adj[r.offs[m]..r.offs[m + 1]] {
+        for &last in &r.labels[r.offs[m]..r.offs[m + 1]] {
             *local_wedges += 1;
             // adjacency ascends by label: once last >= min(mid, start),
             // every further neighbor fails the priority test too.
@@ -263,102 +300,65 @@ fn process_start(
                 sc.touched.push(last);
             }
             sc.wedge_count[l] += 1;
-            sc.nzw.push((mid, last, e1, e2));
         }
     }
-    // per-vertex endpoint contributions + total + bloom allocation
-    for (ti, &last) in sc.touched.iter().enumerate() {
-        let c = sc.wedge_count[last as usize] as u64;
-        if c >= 2 {
-            let bcnt = c * (c - 1) / 2;
-            *local_total += bcnt;
-            per_w[s].add(bcnt);
-            per_w[last as usize].add(bcnt);
+    // Harvest per endpoint pair: the qualifying mids of `(start, last)`
+    // are exactly the common neighbors with label > last — a suffix
+    // intersection of the two sorted adjacency lists, which replaces
+    // the scattered wedge-list sweep with blocked sequential scans.
+    let pairs_path = opts.per_edge || opts.build_blooms;
+    let s_eids = &r.eids[r.offs[s]..r.offs[s + 1]];
+    for &last in &sc.touched {
+        let l = last as usize;
+        let c = sc.wedge_count[l] as u64;
+        sc.wedge_count[l] = 0; // restore the slot's zero invariant
+        if c < 2 {
+            continue;
+        }
+        let bcnt = c * (c - 1) / 2;
+        *local_total += bcnt;
+        per_w[s].add(bcnt);
+        per_w[l].add(bcnt);
+        let l_labs = &r.labels[r.offs[l]..r.offs[l + 1]];
+        let ps = s_labs.partition_point(|&x| x <= last);
+        let pl = l_labs.partition_point(|&x| x <= last);
+        let mut found = 0u64;
+        if pairs_path {
+            let l_eids = &r.eids[r.offs[l]..r.offs[l + 1]];
             if opts.build_blooms {
                 hv.ensure_init();
-                sc.bloom_slot[last as usize] = hv.ks.len() as u32;
                 hv.ks.push(c as u32);
-                // reserve: pairs appended in the nzw sweep below
-                let _ = ti;
             }
-        }
-    }
-    // mid + edge contributions; bloom pair harvest
-    if opts.build_blooms {
-        // two-pass: group pairs per bloom. Count first (already have c),
-        // then append in bloom order using cursors.
-        // Simpler: append into per-bloom Vecs is costly; instead sort-free
-        // approach: iterate touched lasts in order, scan nzw once per
-        // start collecting into a staging buffer bucketed by last.
-        // nzw is small (bounded by wedges of this start), so an extra
-        // pass is fine.
-    }
-    for &(mid, last, e1, e2) in &sc.nzw {
-        let c = sc.wedge_count[last as usize] as u64;
-        if c >= 2 {
-            per_w[mid as usize].add(c - 1);
-            if opts.per_edge {
-                per_edge[e1 as usize].add(c - 1);
-                per_edge[e2 as usize].add(c - 1);
+            kernel::intersect_pairs(
+                &s_labs[ps..],
+                &s_eids[ps..],
+                &l_labs[pl..],
+                &l_eids[pl..],
+                &mut |mid, e1, e2| {
+                    found += 1;
+                    per_w[mid as usize].add(c - 1);
+                    if opts.per_edge {
+                        per_edge[e1 as usize].add(c - 1);
+                        per_edge[e2 as usize].add(c - 1);
+                    }
+                    if opts.build_blooms {
+                        hv.pairs.push((e1, e2));
+                    }
+                },
+            );
+            if opts.build_blooms {
+                hv.offs.push(hv.pairs.len());
             }
+        } else {
+            kernel::intersect_values(&s_labs[ps..], &l_labs[pl..], simd, |mid| {
+                found += 1;
+                per_w[mid as usize].add(c - 1);
+            });
         }
-    }
-    if opts.build_blooms && !sc.nzw.is_empty() {
-        hv.ensure_init();
-        // Stable bucket append: blooms for this start were allocated in
-        // `touched` order; nzw pairs are appended per bloom via slots.
-        // We need contiguous pairs per bloom in hv.pairs; collect counts
-        // then place with cursors.
-        let base_pairs = hv.pairs.len();
-        let first_new_bloom = hv.offs.len() - 1;
-        let mut new_pairs = 0usize;
-        for &last in &sc.touched {
-            let c = sc.wedge_count[last as usize] as usize;
-            if c >= 2 {
-                new_pairs += c;
-            }
-        }
-        hv.pairs
-            .resize(base_pairs + new_pairs, (u32::MAX, u32::MAX));
-        // cursor per bloom: reuse bloom_slot -> running index
-        let mut cursors: Vec<usize> = Vec::new();
-        {
-            let mut acc = base_pairs;
-            for &last in &sc.touched {
-                let c = sc.wedge_count[last as usize] as usize;
-                if c >= 2 {
-                    cursors.push(acc);
-                    acc += c;
-                }
-            }
-        }
-        // map bloom slot -> cursor index: slots were assigned in touched
-        // order counting only c>=2 blooms, so the k-th qualifying touched
-        // last has slot (first_new_bloom + k).
-        for &(_, last, e1, e2) in &sc.nzw {
-            let slot = sc.bloom_slot[last as usize];
-            if slot == u32::MAX {
-                continue; // c < 2, no bloom
-            }
-            let k = slot as usize - first_new_bloom;
-            hv.pairs[cursors[k]] = (e1, e2);
-            cursors[k] += 1;
-        }
-        // close offsets
-        let mut acc = base_pairs;
-        for &last in &sc.touched {
-            let c = sc.wedge_count[last as usize] as usize;
-            if c >= 2 {
-                acc += c;
-                hv.offs.push(acc);
-            }
-        }
-        debug_assert_eq!(acc, hv.pairs.len());
-    }
-    // reset scratch
-    for &last in &sc.touched {
-        sc.wedge_count[last as usize] = 0;
-        sc.bloom_slot[last as usize] = u32::MAX;
+        debug_assert_eq!(
+            found, c,
+            "pair (start={start}, last={last}): intersection disagrees with discovery"
+        );
     }
 }
 
@@ -370,6 +370,7 @@ pub fn total_butterflies(g: &BipartiteGraph, threads: usize) -> u64 {
             per_edge: false,
             build_blooms: false,
             threads,
+            kernel: KernelConfig::default(),
         },
         None,
     )
@@ -390,6 +391,7 @@ mod tests {
                 per_edge: true,
                 build_blooms: false,
                 threads: 2,
+                kernel: KernelConfig::default(),
             },
             None,
         );
@@ -447,6 +449,7 @@ mod tests {
                     per_edge: true,
                     build_blooms: false,
                     threads: 2,
+                    kernel: KernelConfig::default(),
                 },
                 None,
             );
@@ -480,6 +483,7 @@ mod tests {
                 per_edge: true,
                 build_blooms: false,
                 threads: 1,
+                kernel: KernelConfig::default(),
             },
             None,
         );
@@ -489,6 +493,7 @@ mod tests {
                 per_edge: true,
                 build_blooms: false,
                 threads: 4,
+                kernel: KernelConfig::default(),
             },
             None,
         );
@@ -507,6 +512,7 @@ mod tests {
                 per_edge: false,
                 build_blooms: false,
                 threads: 1,
+                kernel: KernelConfig::default(),
             },
             Some(&meters),
         );
@@ -529,6 +535,7 @@ mod tests {
                 per_edge: true,
                 build_blooms: true,
                 threads: 2,
+                kernel: KernelConfig::default(),
             },
             None,
         );
@@ -540,7 +547,58 @@ mod tests {
             })
             .sum();
         assert_eq!(total, c.total);
-        // no pair slot left unfilled
-        assert!(raw.pairs.iter().all(|&(a, b)| a != u32::MAX && b != u32::MAX));
+        // every pair slot was filled by the intersection harvest
+        assert_eq!(*raw.offs.last().unwrap(), raw.pairs.len());
+    }
+
+    #[test]
+    fn order_policies_agree_on_counts() {
+        let g = gen::zipf(45, 55, 350, 1.25, 1.2, 13);
+        let base = pve_bcnt(&g, CountOptions::default(), None).0;
+        for order in [OrderPolicy::SideU, OrderPolicy::SideV, OrderPolicy::Auto] {
+            let opts = CountOptions {
+                kernel: KernelConfig {
+                    order,
+                    ..KernelConfig::default()
+                },
+                ..CountOptions::default()
+            };
+            let c = pve_bcnt(&g, opts, None).0;
+            assert_eq!(c.total, base.total, "{order:?} total");
+            assert_eq!(c.per_u, base.per_u, "{order:?} per-u");
+            assert_eq!(c.per_v, base.per_v, "{order:?} per-v");
+            assert_eq!(c.per_edge, base.per_edge, "{order:?} per-edge");
+        }
+    }
+
+    #[test]
+    fn side_orders_harvest_valid_blooms() {
+        // The bloom *partition* legitimately differs per order (each
+        // order retires butterflies at different endpoint pairs), but
+        // every harvest must satisfy Σ_blooms C(k,2) == total and agree
+        // on the order-independent counts.
+        let g = gen::zipf(40, 40, 260, 1.2, 1.3, 31);
+        let opts = |order| CountOptions {
+            per_edge: true,
+            build_blooms: true,
+            threads: 2,
+            kernel: KernelConfig {
+                order,
+                ..KernelConfig::default()
+            },
+        };
+        let (cd, _) = pve_bcnt(&g, opts(OrderPolicy::Degree), None);
+        for order in [OrderPolicy::SideU, OrderPolicy::SideV] {
+            let (c, r) = pve_bcnt(&g, opts(order), None);
+            assert_eq!(c.total, cd.total);
+            assert_eq!(c.per_edge, cd.per_edge);
+            let bloom_total: u64 = (0..r.n_blooms())
+                .map(|b| {
+                    let k = (r.offs[b + 1] - r.offs[b]) as u64;
+                    k * (k - 1) / 2
+                })
+                .sum();
+            assert_eq!(bloom_total, c.total, "{order:?} bloom sum");
+        }
     }
 }

@@ -1,0 +1,174 @@
+//! Wedge-enumeration side selection for [`super::pve_bcnt`].
+//!
+//! The vertex-priority traversal is correct under *any* total vertex
+//! order: a butterfly is counted exactly once, at the endpoint pair
+//! whose `last` carries the globally minimal label, and every per-entity
+//! contribution is an order-independent sum. That freedom is what a
+//! cost model can exploit (Shi & Shun, "Parallel Algorithms for
+//! Butterfly Computations"):
+//!
+//! - [`OrderPolicy::Degree`] — the paper's whole-`W` degree order
+//!   ([`BipartiteGraph::priority_labels`]); wedge work is bounded by
+//!   `Σ_e min(du, dv)` (Chiba–Nishizeki).
+//! - [`OrderPolicy::SideU`] / [`OrderPolicy::SideV`] — *side-major*
+//!   orders: every vertex of the chosen endpoint side gets a lower
+//!   label than any vertex of the other side (degree-descending within
+//!   each side). Wedges then always retire at endpoint pairs on the
+//!   chosen side, the other side's starts break after one probe per
+//!   mid, and the real wedge work is exactly
+//!   [`BipartiteGraph::wedge_count`] for that side.
+//! - [`OrderPolicy::Auto`] — pick whichever of the three bounds is
+//!   smallest for this graph.
+
+use crate::graph::{BipartiteGraph, Side};
+
+/// Which total vertex order the counting traversal uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OrderPolicy {
+    /// Whole-`W` degree-descending priority order (the paper's Alg. 1).
+    #[default]
+    Degree,
+    /// Side-major order with U as the endpoint (retirement) side.
+    SideU,
+    /// Side-major order with V as the endpoint (retirement) side.
+    SideV,
+    /// Choose per graph by the cost model in [`OrderPolicy::resolve`].
+    Auto,
+}
+
+impl OrderPolicy {
+    /// Resolve `Auto` against the graph's wedge-work bounds; concrete
+    /// policies pass through unchanged. Never returns `Auto`.
+    ///
+    /// Ties prefer `Degree` (the paper's order, tightest constant in
+    /// practice), then `SideU`, for determinism.
+    pub fn resolve(self, g: &BipartiteGraph) -> OrderPolicy {
+        match self {
+            OrderPolicy::Auto => {
+                let degree = g.count_workload_bound();
+                let side_u = g.wedge_count(Side::U);
+                let side_v = g.wedge_count(Side::V);
+                if degree <= side_u && degree <= side_v {
+                    OrderPolicy::Degree
+                } else if side_u <= side_v {
+                    OrderPolicy::SideU
+                } else {
+                    OrderPolicy::SideV
+                }
+            }
+            p => p,
+        }
+    }
+
+    /// Stable numeric code for observability (span attribute / bench
+    /// side-mix field): 0 = degree, 1 = side-U, 2 = side-V.
+    ///
+    /// # Panics
+    /// On `Auto` — call [`OrderPolicy::resolve`] first.
+    pub fn side_code(self) -> u64 {
+        match self {
+            OrderPolicy::Degree => 0,
+            OrderPolicy::SideU => 1,
+            OrderPolicy::SideV => 2,
+            OrderPolicy::Auto => panic!("side_code on unresolved OrderPolicy::Auto"),
+        }
+    }
+}
+
+/// Priority labels for a *resolved* policy: `label[wid]`, label 0 =
+/// highest priority. For the side-major orders the endpoint side
+/// occupies labels `0..n_side` (degree-descending, wid-ascending ties
+/// within the side) and the mid side the rest, so the traversal retires
+/// every wedge at an endpoint pair on the chosen side.
+pub fn labels(g: &BipartiteGraph, policy: OrderPolicy) -> Vec<u32> {
+    let nw = g.nw();
+    match policy {
+        OrderPolicy::Degree => g.priority_labels(),
+        OrderPolicy::Auto => panic!("labels on unresolved OrderPolicy::Auto"),
+        OrderPolicy::SideU | OrderPolicy::SideV => {
+            // Side-major: sort each side by degree desc (wid-asc ties),
+            // then concatenate low side first.
+            let nu = g.nu();
+            let mut order: Vec<u32> = (0..nw as u32).collect();
+            let low_is_u = policy == OrderPolicy::SideU;
+            order.sort_unstable_by(|&a, &b| {
+                let (au, bu) = ((a as usize) < nu, (b as usize) < nu);
+                // chosen endpoint side sorts strictly first
+                (au != low_is_u)
+                    .cmp(&(bu != low_is_u))
+                    .then_with(|| g.deg_w(b as usize).cmp(&g.deg_w(a as usize)))
+                    .then(a.cmp(&b))
+            });
+            let mut label = vec![0u32; nw];
+            for (rank, &w) in order.iter().enumerate() {
+                label[w as usize] = rank as u32;
+            }
+            label
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, GraphBuilder};
+
+    #[test]
+    fn resolve_picks_cheapest_bound() {
+        // Star from one U hub: SideU wedges route through V mids (all
+        // degree 1 → cost 0); SideV routes through the hub (C(12,2) =
+        // 66); the degree bound is Σ_e min(du, dv) = m = 12. Auto must
+        // take the free SideU order.
+        let edges: Vec<(u32, u32)> = (0..12).map(|v| (0, v)).collect();
+        let g = GraphBuilder::new().edges(&edges).build();
+        assert_eq!(g.wedge_count(Side::U), 0);
+        assert!(g.wedge_count(Side::V) > 0);
+        assert!(g.count_workload_bound() > 0);
+        assert_eq!(OrderPolicy::Auto.resolve(&g), OrderPolicy::SideU);
+        // concrete policies pass through
+        assert_eq!(OrderPolicy::SideV.resolve(&g), OrderPolicy::SideV);
+        assert_eq!(OrderPolicy::Degree.resolve(&g), OrderPolicy::Degree);
+    }
+
+    #[test]
+    fn side_major_labels_partition_sides() {
+        let g = gen::zipf(30, 40, 150, 1.2, 1.2, 9);
+        let nu = g.nu();
+        let lab_u = labels(&g, OrderPolicy::SideU);
+        for w in 0..g.nw() {
+            if w < nu {
+                assert!((lab_u[w] as usize) < nu, "U wid {w} got high label");
+            } else {
+                assert!((lab_u[w] as usize) >= nu, "V wid {w} got low label");
+            }
+        }
+        let lab_v = labels(&g, OrderPolicy::SideV);
+        for w in 0..g.nw() {
+            if w < nu {
+                assert!((lab_v[w] as usize) >= g.nv(), "U wid {w} got low label");
+            } else {
+                assert!((lab_v[w] as usize) < g.nv(), "V wid {w} got high label");
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_a_permutation() {
+        let g = gen::zipf(25, 25, 120, 1.3, 1.3, 4);
+        for p in [OrderPolicy::Degree, OrderPolicy::SideU, OrderPolicy::SideV] {
+            let lab = labels(&g, p);
+            let mut seen = vec![false; g.nw()];
+            for &l in &lab {
+                assert!(!seen[l as usize], "duplicate label under {p:?}");
+                seen[l as usize] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn side_codes_are_stable() {
+        assert_eq!(OrderPolicy::Degree.side_code(), 0);
+        assert_eq!(OrderPolicy::SideU.side_code(), 1);
+        assert_eq!(OrderPolicy::SideV.side_code(), 2);
+    }
+}

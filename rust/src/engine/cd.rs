@@ -13,6 +13,11 @@
 //! the cumulative effect of peeling all lower partitions), and the range
 //! bounds — everything [`super::fd::fine_decompose`] needs to peel
 //! partitions independently.
+//!
+//! Kernel selection ([`EngineConfig::kernel`]: wedge-side cost model,
+//! SIMD dispatch, scattered vs aggregated support updates) rides along
+//! in `cfg` — the domain's peel/recount hooks consume it, so this
+//! driver stays kernel-agnostic.
 
 use super::range::{find_range, AdaptiveTarget};
 use super::{CdOutput, EngineConfig, PeelDomain, PeelOutcome};

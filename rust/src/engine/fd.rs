@@ -12,6 +12,10 @@
 //! then steals from the global LPT order. Affinity keeps a lane on
 //! substrate it already pulled into cache; stealing keeps the schedule
 //! dynamic, so a mis-estimated heavy partition cannot strand idle lanes.
+//!
+//! Like the CD driver, kernel selection ([`EngineConfig::kernel`]) is
+//! carried opaquely in `cfg` and consumed by the domain's partition
+//! peel kernels.
 
 use super::{CdOutput, EngineConfig, PeelDomain};
 use crate::metrics::Meters;

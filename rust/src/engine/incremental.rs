@@ -193,10 +193,8 @@ impl WingIncremental {
     fn rebuild_full(&mut self, mut rec: Recorder<'_>) -> PeelStats {
         let threads = self.cfg.engine.threads;
         rec.enter(Phase::Count);
-        let (idx, per_edge) = {
-            let _sp = crate::obs::span(crate::obs::Kind::CountKernel, self.graph.m() as u64, 0, 0);
-            BeIndex::build(&self.graph, threads)
-        };
+        let (idx, per_edge) =
+            BeIndex::build_with(&self.graph, threads, self.cfg.engine.kernel);
         let m = self.graph.m();
         // butterfly components: all edges of a k >= 2 bloom are pairwise
         // butterfly-adjacent (Property 1)
@@ -371,10 +369,8 @@ impl WingIncremental {
         let sub = GraphBuilder::new().nu(us.len()).nv(vs.len()).edges(&sub_edges).build();
         debug_assert_eq!(sub.m(), affected.len());
         rec.enter(Phase::Count);
-        let (idx, per_edge) = {
-            let _sp = crate::obs::span(crate::obs::Kind::CountKernel, sub.m() as u64, 0, 0);
-            BeIndex::build(&sub, self.cfg.engine.threads)
-        };
+        let (idx, per_edge) =
+            BeIndex::build_with(&sub, self.cfg.engine.threads, self.cfg.engine.kernel);
         let sub_theta = {
             let mut dom = WingDomain::new(&idx, &per_edge, &self.cfg.engine);
             let r = decompose(&mut dom, &self.cfg.engine, rec);
@@ -467,6 +463,7 @@ impl TipIncremental {
                 per_edge: false,
                 build_blooms: true,
                 threads,
+                kernel: self.cfg.engine.kernel,
             },
             Some(rec.meters()),
         );

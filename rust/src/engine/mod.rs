@@ -63,6 +63,10 @@ pub struct EngineConfig {
     pub dynamic_deletes: bool,
     /// Adaptive range-targeting knobs (§3.1.3).
     pub adaptive: AdaptiveConfig,
+    /// Counting/peel kernel selection (wedge-side cost model, SIMD
+    /// intersection policy, scattered vs aggregated support updates); see
+    /// [`crate::count::KernelConfig`].
+    pub kernel: crate::count::KernelConfig,
 }
 
 impl Default for EngineConfig {
@@ -73,6 +77,7 @@ impl Default for EngineConfig {
             batch: true,
             dynamic_deletes: true,
             adaptive: AdaptiveConfig::default(),
+            kernel: crate::count::KernelConfig::default(),
         }
     }
 }

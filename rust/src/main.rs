@@ -169,6 +169,7 @@ fn cmd_count(args: &Args) -> Result<()> {
             per_edge: true,
             build_blooms: false,
             threads,
+            kernel: pbng::count::KernelConfig::default(),
         },
         None,
     );

@@ -70,8 +70,10 @@ pub enum Kind {
     /// `a` = affected entities (component union size), `b` = invalidated
     /// partitions, `c` = 1 if the batch fell back to a full rebuild.
     Repeel,
-    /// One counting kernel (BE-index / wedge-count construction).
-    /// `a` = entities indexed, `b` = reserved, `c` = reserved.
+    /// One counting kernel pass ([`crate::count::pve_bcnt`]).
+    /// `a` = entities indexed, `b` = resolved wedge side
+    /// ([`crate::count::OrderPolicy::side_code`]: 0 degree / 1 side-U /
+    /// 2 side-V), `c` = 1 if the SIMD intersection path is active.
     CountKernel,
 }
 
@@ -102,7 +104,7 @@ impl Kind {
             Kind::CdRound => ["partition", "rho", "active"],
             Kind::FdTask => ["partition", "workload", "steal"],
             Kind::Repeel => ["affected", "invalidated", "fallback"],
-            Kind::CountKernel => ["entities", "b", "c"],
+            Kind::CountKernel => ["entities", "side", "simd"],
         }
     }
 

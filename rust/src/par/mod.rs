@@ -534,20 +534,21 @@ mod tests {
         unsafe {
             s.lane(0).a.push(7);
             s.lane(1).b.push(9);
+            s.lane(1).pairs.push((3, 12));
             let mut l1 = s.lane(1);
-            let (cnt, _, _) = l1.split(16);
+            let (cnt, _, _, _) = l1.split(16);
             cnt[3] += 1;
             cnt[3] = 0; // restore the zero invariant
         }
         let mut seen = Vec::new();
-        s.for_each(|sl| seen.push((sl.a.len(), sl.b.len())));
-        assert_eq!(seen, vec![(1, 0), (0, 1)]);
+        s.for_each(|sl| seen.push((sl.a.len(), sl.b.len(), sl.pairs.len())));
+        assert_eq!(seen, vec![(1, 0, 0), (0, 1, 1)]);
         drop(s);
         // recycled slots come back empty
         let mut s2 = ScratchSet::take(2);
         s2.for_each(|sl| {
-            assert!(sl.a.is_empty() && sl.b.is_empty());
-            let (cnt, _, _) = sl.split(16);
+            assert!(sl.a.is_empty() && sl.b.is_empty() && sl.pairs.is_empty());
+            let (cnt, _, _, _) = sl.split(16);
             assert!(cnt.iter().all(|&c| c == 0));
         });
     }

@@ -314,18 +314,26 @@ pub struct ScratchSlot {
     pub a: Vec<u32>,
     /// Second id collector (wing/tip: touched entities).
     pub b: Vec<u32>,
+    /// `(entity, delta)` update log for the aggregated peel kernels
+    /// ([`crate::count::kernel::flush_runs`]); `u64` deltas because tip
+    /// deltas are `C(c, 2)` counts that can exceed `u32`.
+    pub pairs: Vec<(u32, u64)>,
     cnt: Vec<u32>,
 }
 
 impl ScratchSlot {
-    /// `(cnt[..n], a, b)` with `cnt` zero-extended to at least `n`
-    /// entries. Callers must restore the zeros they overwrite before the
-    /// region ends.
-    pub fn split(&mut self, n: usize) -> (&mut [u32], &mut Vec<u32>, &mut Vec<u32>) {
+    /// `(cnt[..n], a, b, pairs)` with `cnt` zero-extended to at least
+    /// `n` entries. Callers must restore the zeros they overwrite before
+    /// the region ends.
+    #[allow(clippy::type_complexity)]
+    pub fn split(
+        &mut self,
+        n: usize,
+    ) -> (&mut [u32], &mut Vec<u32>, &mut Vec<u32>, &mut Vec<(u32, u64)>) {
         if self.cnt.len() < n {
             self.cnt.resize(n, 0);
         }
-        (&mut self.cnt[..n], &mut self.a, &mut self.b)
+        (&mut self.cnt[..n], &mut self.a, &mut self.b, &mut self.pairs)
     }
 }
 
@@ -387,6 +395,7 @@ impl Drop for ScratchSet {
             let mut s = s.into_inner();
             s.a.clear();
             s.b.clear();
+            s.pairs.clear();
             if unwinding {
                 // A panicking kernel may have died between bumping `cnt`
                 // and re-zeroing it; sanitize rather than poisoning the

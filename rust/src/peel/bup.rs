@@ -20,6 +20,7 @@ pub fn wing_bup(g: &BipartiteGraph) -> Decomposition {
             per_edge: true,
             build_blooms: false,
             threads: 1,
+            kernel: crate::count::KernelConfig::default(),
         },
         Some(&meters),
     );

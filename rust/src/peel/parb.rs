@@ -32,6 +32,7 @@ pub fn wing_parb(g: &BipartiteGraph, threads: usize) -> Decomposition {
             per_edge: true,
             build_blooms: false,
             threads,
+            kernel: crate::count::KernelConfig::default(),
         },
         Some(&meters),
     );

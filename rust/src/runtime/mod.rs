@@ -274,6 +274,7 @@ mod tests {
                     per_edge: true,
                     build_blooms: false,
                     threads: 1,
+                    kernel: crate::count::KernelConfig::default(),
                 },
                 None,
             );

@@ -88,7 +88,14 @@ impl PeelDomain for TipDomain<'_> {
             && remaining > 0
             && peel_workload(self.g, &self.vadj, active) > self.lambda_cnt;
         if use_recount {
-            self.vadj = recount(self.g, &self.epoch, &self.sup, cfg.threads, meters);
+            self.vadj = recount(
+                self.g,
+                &self.epoch,
+                &self.sup,
+                cfg.threads,
+                cfg.kernel,
+                meters,
+            );
             PeelOutcome::Recounted
         } else {
             PeelOutcome::Touched(peel_batch_tip(
@@ -100,6 +107,7 @@ impl PeelDomain for TipDomain<'_> {
                 &self.sup,
                 cfg.threads,
                 cfg.dynamic_deletes,
+                cfg.kernel.updates,
                 meters,
             ))
         }
@@ -252,6 +260,7 @@ mod tests {
                 per_edge: false,
                 build_blooms: false,
                 threads: 1,
+                kernel: crate::count::KernelConfig::default(),
             },
             None,
         )

@@ -22,6 +22,7 @@
 pub mod domain;
 pub mod peel;
 
+use crate::count::{KernelConfig, UpdateKernel};
 use crate::engine::{self, EngineConfig};
 use crate::graph::{BipartiteGraph, Side};
 use crate::metrics::{Meters, Phase, Recorder};
@@ -43,13 +44,19 @@ fn oriented(g: &BipartiteGraph, side: Side) -> std::borrow::Cow<'_, BipartiteGra
     }
 }
 
-fn count_side(g: &BipartiteGraph, threads: usize, meters: &Meters) -> Vec<u64> {
+fn count_side(
+    g: &BipartiteGraph,
+    threads: usize,
+    kernel: KernelConfig,
+    meters: &Meters,
+) -> Vec<u64> {
     crate::count::pve_bcnt(
         g,
         crate::count::CountOptions {
             per_edge: false,
             build_blooms: false,
             threads,
+            kernel,
         },
         Some(meters),
     )
@@ -64,10 +71,9 @@ pub fn tip_pbng(g: &BipartiteGraph, side: Side, cfg: TipConfig) -> Decomposition
     let meters = Meters::new();
     let mut rec = Recorder::new(&meters);
     rec.enter(Phase::Count);
-    let per_u = {
-        let _sp = crate::obs::span(crate::obs::Kind::CountKernel, g.nu() as u64, 0, 0);
-        count_side(&g, cfg.threads, &meters)
-    };
+    // the counting kernel emits its own CountKernel span (with the
+    // resolved wedge side and SIMD flag) from inside pve_bcnt
+    let per_u = count_side(&g, cfg.threads, cfg.kernel, &meters);
     let mut dom = TipDomain::new(&g, &per_u);
     engine::decompose(&mut dom, &cfg, rec).into_decomposition()
 }
@@ -78,7 +84,7 @@ pub fn tip_bup(g: &BipartiteGraph, side: Side) -> Decomposition {
     let meters = Meters::new();
     let mut rec = Recorder::new(&meters);
     rec.enter(Phase::Count);
-    let per_u = count_side(&g, 1, &meters);
+    let per_u = count_side(&g, 1, KernelConfig::default(), &meters);
     rec.enter(Phase::Fine);
     let nu = g.nu();
     let sup: Vec<crate::par::SupportCell> = per_u
@@ -107,7 +113,18 @@ pub fn tip_bup(g: &BipartiteGraph, side: Side) -> Decomposition {
         ep += 1;
         epoch[u as usize].store(ep, Ordering::Relaxed);
         remaining -= 1;
-        let touched = peel_batch_tip(&g, &mut vadj, &[u], level, &epoch, &sup, 1, false, &meters);
+        let touched = peel_batch_tip(
+            &g,
+            &mut vadj,
+            &[u],
+            level,
+            &epoch,
+            &sup,
+            1,
+            false,
+            UpdateKernel::Scattered,
+            &meters,
+        );
         for t in touched {
             if epoch[t as usize].load(Ordering::Relaxed) == ALIVE {
                 heap.push(sup[t as usize].get(), t);
@@ -129,7 +146,7 @@ pub fn tip_parb(g: &BipartiteGraph, side: Side, threads: usize) -> Decomposition
     let meters = Meters::new();
     let mut rec = Recorder::new(&meters);
     rec.enter(Phase::Count);
-    let per_u = count_side(&g, threads, &meters);
+    let per_u = count_side(&g, threads, KernelConfig::default(), &meters);
     rec.enter(Phase::Fine);
     let nu = g.nu();
     let sup: Vec<crate::par::SupportCell> = per_u
@@ -175,8 +192,18 @@ pub fn tip_parb(g: &BipartiteGraph, side: Side, threads: usize) -> Decomposition
                 epoch[u as usize].store(ep, Ordering::Relaxed);
             }
             remaining -= active.len();
-            let mut touched =
-                peel_batch_tip(&g, &mut vadj, &active, k, &epoch, &sup, 1, false, &meters);
+            let mut touched = peel_batch_tip(
+                &g,
+                &mut vadj,
+                &active,
+                k,
+                &epoch,
+                &sup,
+                1,
+                false,
+                UpdateKernel::Scattered,
+                &meters,
+            );
             touched.sort_unstable();
             touched.dedup();
             let mut next = Vec::new();

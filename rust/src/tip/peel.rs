@@ -10,6 +10,7 @@
 //! The V-side adjacency is kept in a compactable structure ([`VAdj`]) so
 //! the §5.2 dynamic-deletes optimization can drop peeled endpoints.
 
+use crate::count::{KernelConfig, UpdateKernel};
 use crate::graph::BipartiteGraph;
 use crate::metrics::Meters;
 use crate::par::{parallel_for_chunked, SupportCell};
@@ -75,6 +76,14 @@ impl VAdj {
 ///
 /// If `deletes` is set, V-lists touched by the batch are compacted after
 /// updates (disjoint parallel pass).
+///
+/// `upd` selects the support-update kernel: `Scattered` = one atomic
+/// `sub_clamped` per wedge-end hit; `Aggregated` = per-lane
+/// `(vertex, C(c,2))` logs flushed once per batch
+/// ([`crate::count::kernel::flush_runs`]). Value-equivalent because
+/// supports are write-only during the batch and clamped subtraction to
+/// the common `floor` commutes; `updates`/touched bookkeeping happens at
+/// hit time in both modes.
 #[allow(clippy::too_many_arguments)]
 pub fn peel_batch_tip(
     g: &BipartiteGraph,
@@ -85,6 +94,7 @@ pub fn peel_batch_tip(
     sup: &[SupportCell],
     threads: usize,
     deletes: bool,
+    upd: UpdateKernel,
     meters: &Meters,
 ) -> Vec<u32> {
     let threads = threads.max(1);
@@ -99,7 +109,7 @@ pub fn peel_batch_tip(
         // SAFETY: the pool drives each lane id from at most one thread
         // per region, so slot `t` is exclusively ours inside this chunk.
         let mut sc = unsafe { scratch.lane(t) };
-        let (cnt, wedge_ends, out) = sc.split(g.nu());
+        let (cnt, wedge_ends, out, pairs) = sc.split(g.nu());
         let mut wedges = 0u64;
         let mut updates = 0u64;
         for &u in &active[lo..hi] {
@@ -119,7 +129,12 @@ pub fn peel_batch_tip(
                 let c = cnt[u2 as usize] as u64;
                 cnt[u2 as usize] = 0; // restore the all-zero invariant
                 if c >= 2 {
-                    sup[u2 as usize].sub_clamped(c * (c - 1) / 2, floor);
+                    match upd {
+                        UpdateKernel::Scattered => {
+                            sup[u2 as usize].sub_clamped(c * (c - 1) / 2, floor);
+                        }
+                        UpdateKernel::Aggregated => pairs.push((u2, c * (c - 1) / 2)),
+                    }
                     updates += 1;
                     out.push(u2);
                 }
@@ -135,6 +150,13 @@ pub fn peel_batch_tip(
         touched.extend_from_slice(&sc.b);
         sc.b.clear();
     });
+    if upd == UpdateKernel::Aggregated {
+        // one flush per batch: per-lane sort + run-sum, one atomic op
+        // per distinct wedge-end vertex per lane
+        crate::count::kernel::flush_runs(&scratch, |u2, d| {
+            sup[u2 as usize].sub_clamped(d, floor);
+        });
+    }
 
     if deletes {
         // compact every V list adjacent to a peeled vertex (disjoint v's)
@@ -173,6 +195,7 @@ pub fn recount(
     epoch: &[AtomicU32],
     sup: &[SupportCell],
     threads: usize,
+    kernel: KernelConfig,
     meters: &Meters,
 ) -> VAdj {
     // remaining graph: edges of alive U vertices
@@ -195,6 +218,7 @@ pub fn recount(
             per_edge: false,
             build_blooms: false,
             threads,
+            kernel,
         },
         Some(meters),
     );
@@ -219,6 +243,7 @@ mod tests {
                 per_edge: false,
                 build_blooms: false,
                 threads: 1,
+                kernel: KernelConfig::default(),
             },
             None,
         );
@@ -237,7 +262,18 @@ mod tests {
         let before = sup[1].get();
         let m = Meters::new();
         epoch[0].store(1, Ordering::Relaxed);
-        peel_batch_tip(&g, &mut vadj, &[0], 0, &epoch, &sup, 1, true, &m);
+        peel_batch_tip(
+            &g,
+            &mut vadj,
+            &[0],
+            0,
+            &epoch,
+            &sup,
+            1,
+            true,
+            UpdateKernel::Aggregated,
+            &m,
+        );
         // butterflies between u0 and u1: C(3,2) = 3
         assert_eq!(sup[1].get(), before - 3);
         assert_eq!(sup[2].get(), before - 3);
@@ -263,7 +299,14 @@ mod tests {
             for &u in &active {
                 epoch[u as usize].store(1, Ordering::Relaxed);
             }
-            peel_batch_tip(&g, &mut vadj, &active, 0, &epoch, &sup, 2, true, &m);
+            // alternate update kernels across iterations: both must match
+            // the brute-force oracle
+            let upd = if seed % 2 == 0 {
+                UpdateKernel::Aggregated
+            } else {
+                UpdateKernel::Scattered
+            };
+            peel_batch_tip(&g, &mut vadj, &active, 0, &epoch, &sup, 2, true, upd, &m);
             let alive: Vec<bool> = (0..g.nu())
                 .map(|u| epoch[u].load(Ordering::Relaxed) == ALIVE)
                 .collect();
@@ -293,8 +336,19 @@ mod tests {
             epoch_a[u as usize].store(1, Ordering::Relaxed);
             epoch_b[u as usize].store(1, Ordering::Relaxed);
         }
-        peel_batch_tip(&g, &mut vadj_a, &active, 0, &epoch_a, &sup_a, 2, true, &m);
-        recount(&g, &epoch_b, &sup_b, 1, &m);
+        peel_batch_tip(
+            &g,
+            &mut vadj_a,
+            &active,
+            0,
+            &epoch_a,
+            &sup_a,
+            2,
+            true,
+            UpdateKernel::Aggregated,
+            &m,
+        );
+        recount(&g, &epoch_b, &sup_b, 1, KernelConfig::default(), &m);
         for u in 10..g.nu() {
             assert_eq!(sup_a[u].get(), sup_b[u].get(), "u{u}");
         }
@@ -306,7 +360,18 @@ mod tests {
         let (sup, epoch, mut vadj) = setup(&g);
         let m = Meters::new();
         epoch[0].store(1, Ordering::Relaxed);
-        peel_batch_tip(&g, &mut vadj, &[0], 0, &epoch, &sup, 1, true, &m);
+        peel_batch_tip(
+            &g,
+            &mut vadj,
+            &[0],
+            0,
+            &epoch,
+            &sup,
+            1,
+            true,
+            UpdateKernel::Scattered,
+            &m,
+        );
         for v in 0..3u32 {
             assert_eq!(vadj.live_len(v), 2);
         }
@@ -321,7 +386,18 @@ mod tests {
         assert_eq!(w0, 4 * 4 * 4); // 4 us × 4 vs × 4 per list
         let m = Meters::new();
         epoch[0].store(1, Ordering::Relaxed);
-        peel_batch_tip(&g, &mut vadj, &[0], 0, &epoch, &sup, 1, true, &m);
+        peel_batch_tip(
+            &g,
+            &mut vadj,
+            &[0],
+            0,
+            &epoch,
+            &sup,
+            1,
+            true,
+            UpdateKernel::Aggregated,
+            &m,
+        );
         let w1 = peel_workload(&g, &vadj, &all[1..]);
         assert_eq!(w1, 3 * 4 * 3);
     }

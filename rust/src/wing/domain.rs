@@ -69,7 +69,15 @@ impl PeelDomain for WingDomain<'_> {
     ) -> PeelOutcome {
         let touched = if cfg.batch {
             self.st.mark_peeled(active, epoch, cfg.threads);
-            peel_set_batch(&self.st, active, lower, epoch, cfg.threads, meters)
+            peel_set_batch(
+                &self.st,
+                active,
+                lower,
+                epoch,
+                cfg.threads,
+                cfg.kernel.updates,
+                meters,
+            )
         } else {
             // Alg. 3 semantics: peel_set_single marks one edge at a time
             peel_set_single(&self.st, active, lower, epoch, meters)

@@ -45,10 +45,9 @@ pub fn wing_pbng(g: &BipartiteGraph, cfg: PbngConfig) -> Decomposition {
     let meters = Meters::new();
     let mut rec = Recorder::new(&meters);
     rec.enter(Phase::Count);
-    let (idx, per_edge) = {
-        let _sp = crate::obs::span(crate::obs::Kind::CountKernel, g.m() as u64, 0, 0);
-        BeIndex::build(g, cfg.threads)
-    };
+    // the counting kernel emits its own CountKernel span (with the
+    // resolved wedge side and SIMD flag) from inside pve_bcnt
+    let (idx, per_edge) = BeIndex::build_with(g, cfg.threads, cfg.kernel);
     let mut dom = WingDomain::new(&idx, &per_edge, &cfg);
     engine::decompose(&mut dom, &cfg, rec).into_decomposition()
 }
@@ -93,7 +92,15 @@ pub fn wing_be_batch(g: &BipartiteGraph, threads: usize) -> Decomposition {
             }
             remaining -= active.len();
             st.mark_peeled(&active, epoch, threads);
-            let mut touched = peel_set_batch(&st, &active, k, epoch, threads, &meters);
+            let mut touched = peel_set_batch(
+                &st,
+                &active,
+                k,
+                epoch,
+                threads,
+                crate::count::UpdateKernel::Scattered,
+                &meters,
+            );
             touched.sort_unstable();
             touched.dedup();
             let mut next = Vec::new();

@@ -20,6 +20,7 @@
 //! state owns working copies of the bloom numbers and entry lists.
 
 use crate::beindex::BeIndex;
+use crate::count::UpdateKernel;
 use crate::metrics::Meters;
 use crate::par::{parallel_for_chunked, RacyBuf, SupportCell};
 use std::sync::atomic::{AtomicU32, Ordering};
@@ -84,12 +85,24 @@ impl<'a> WingState<'a> {
 /// Batch peel (Alg. 6). `active` must already be marked at `epoch`
 /// via [`WingState::mark_peeled`]. Returns live edges whose support
 /// changed (with duplicates; callers dedup).
+///
+/// `upd` selects the support-update kernel: `Scattered` issues one
+/// atomic `sub_clamped` per hit (the measurable baseline), `Aggregated`
+/// logs `(edge, delta)` per lane and flushes once per batch via
+/// [`crate::count::kernel::flush_runs`]. The two are value-equivalent:
+/// supports are write-only for the duration of the batch and clamped
+/// subtraction to the common `floor` is associative and commutative
+/// (`max(max(x-a, f)-b, f) = max(x-a-b, f)`), so per-entity aggregation
+/// and arbitrary flush order cannot change the result. The `updates`
+/// and `touched` bookkeeping is recorded at hit time in both modes, so
+/// gated meters are identical too.
 pub fn peel_set_batch(
     st: &WingState,
     active: &[u32],
     floor: u64,
     epoch: u32,
     threads: usize,
+    upd: UpdateKernel,
     meters: &Meters,
 ) -> Vec<u32> {
     let threads = threads.max(1);
@@ -105,7 +118,7 @@ pub fn peel_set_batch(
         // per region, so slot `t` is exclusively ours inside this chunk.
         let mut sc = unsafe { scratch.lane(t) };
         let sc = &mut *sc;
-        let (dirty, touched) = (&mut sc.a, &mut sc.b);
+        let (dirty, touched, pairs) = (&mut sc.a, &mut sc.b, &mut sc.pairs);
         let mut wedges = 0u64;
         let mut updates = 0u64;
         for &e in &active[lo..hi] {
@@ -125,7 +138,14 @@ pub fn peel_set_batch(
                     // twin is live: it loses all its k−1 butterflies in B
                     let k = st.bloom_k[b as usize].load(Ordering::Relaxed) as u64;
                     if k >= 1 {
-                        st.sup[tw as usize].sub_clamped(k - 1, floor);
+                        match upd {
+                            UpdateKernel::Scattered => {
+                                st.sup[tw as usize].sub_clamped(k - 1, floor);
+                            }
+                            // delta 0 still logged: sub_clamped(0, floor)
+                            // lifts to the floor exactly like Scattered
+                            UpdateKernel::Aggregated => pairs.push((tw, k - 1)),
+                        }
                         updates += 1;
                         touched.push(tw);
                     }
@@ -155,7 +175,8 @@ pub fn peel_set_batch(
     parallel_for_chunked(dirty.len(), threads, 16, |t, lo, hi| {
         // SAFETY: lane-exclusive slot (see phase 1).
         let mut sc = unsafe { scratch.lane(t) };
-        let touched = &mut sc.b;
+        let sc = &mut *sc;
+        let (touched, pairs) = (&mut sc.b, &mut sc.pairs);
         let mut wedges = 0u64;
         let mut updates = 0u64;
         for &b in &dirty[lo..hi] {
@@ -186,7 +207,12 @@ pub fn peel_set_batch(
                     }
                     continue;
                 }
-                st.sup[e2 as usize].sub_clamped(c as u64, floor);
+                match upd {
+                    UpdateKernel::Scattered => {
+                        st.sup[e2 as usize].sub_clamped(c as u64, floor);
+                    }
+                    UpdateKernel::Aggregated => pairs.push((e2, c as u64)),
+                }
                 updates += 1;
                 touched.push(e2);
                 slice[w] = slice[r];
@@ -204,6 +230,13 @@ pub fn peel_set_batch(
         touched.extend_from_slice(&sc.b);
         sc.b.clear();
     });
+    if upd == UpdateKernel::Aggregated {
+        // One flush for both phases: per-lane sort + run-sum, one atomic
+        // op per distinct edge per lane (commutes — doc on `upd` above).
+        crate::count::kernel::flush_runs(&scratch, |e, d| {
+            st.sup[e as usize].sub_clamped(d, floor);
+        });
+    }
     touched
 }
 
@@ -294,7 +327,7 @@ mod tests {
         let m = Meters::new();
         // peel edge 0: the other three edges' support must drop to 0
         st.mark_peeled(&[0], 1, 1);
-        peel_set_batch(&st, &[0], 0, 1, 1, &m);
+        peel_set_batch(&st, &[0], 0, 1, 1, UpdateKernel::Aggregated, &m);
         let sup = st.support_snapshot();
         assert_eq!(sup[0], 1); // peeled edge keeps its value
         assert_eq!(&sup[1..], &[0, 0, 0]);
@@ -309,7 +342,7 @@ mod tests {
         // the bloom's entries tell us the twin pairing
         let (e, t) = idx.entries(0)[0];
         st.mark_peeled(&[e, t], 1, 1);
-        peel_set_batch(&st, &[e, t], 0, 1, 1, &m);
+        peel_set_batch(&st, &[e, t], 0, 1, 1, UpdateKernel::Scattered, &m);
         let sup = st.support_snapshot();
         for x in 0..4u32 {
             if x != e && x != t {
@@ -335,7 +368,7 @@ mod tests {
         let m = Meters::new();
         let active = vec![0u32, 3, 7];
         stb.mark_peeled(&active, 1, 1);
-        peel_set_batch(&stb, &active, 0, 1, 2, &m);
+        peel_set_batch(&stb, &active, 0, 1, 2, UpdateKernel::Aggregated, &m);
         peel_set_single(&sts, &active, 0, 1, &m);
         assert_eq!(live_supports(&stb, g.m()), live_supports(&sts, g.m()));
     }
@@ -357,8 +390,13 @@ mod tests {
             let m = Meters::new();
             let stb = WingState::new(&idx, &per_edge, true);
             let sts = WingState::new(&idx, &per_edge, false);
+            let upd = if rng.chance(0.5) {
+                UpdateKernel::Aggregated
+            } else {
+                UpdateKernel::Scattered
+            };
             stb.mark_peeled(&active, 1, 1);
-            peel_set_batch(&stb, &active, 0, 1, 3, &m);
+            peel_set_batch(&stb, &active, 0, 1, 3, upd, &m);
             peel_set_single(&sts, &active, 0, 1, &m);
             if live_supports(&stb, g.m()) != live_supports(&sts, g.m()) {
                 return Err("batch vs single support divergence".into());
@@ -383,7 +421,7 @@ mod tests {
             let m = Meters::new();
             let st = WingState::new(&idx, &per_edge, true);
             st.mark_peeled(&active, 1, 1);
-            peel_set_batch(&st, &active, 0, 1, 2, &m);
+            peel_set_batch(&st, &active, 0, 1, 2, UpdateKernel::Aggregated, &m);
             // oracle: recount supports on the graph minus active edges
             let mut alive = vec![true; g.m()];
             for &e in &active {
@@ -407,13 +445,54 @@ mod tests {
     }
 
     #[test]
+    fn aggregated_matches_scattered_updates_and_meters() {
+        crate::testkit::check_property("agg-vs-scatter", 0xA66, 8, |seed| {
+            let mut rng = crate::testkit::Rng::new(seed);
+            let g = gen::erdos(
+                8 + rng.usize_below(12),
+                8 + rng.usize_below(12),
+                30 + rng.usize_below(70),
+                seed,
+            );
+            if g.m() == 0 {
+                return Ok(());
+            }
+            let (idx, per_edge) = setup(&g);
+            let active: Vec<u32> = (0..g.m() as u32).filter(|_| rng.chance(0.3)).collect();
+            if active.is_empty() {
+                return Ok(());
+            }
+            let (ma, ms) = (Meters::new(), Meters::new());
+            let sta = WingState::new(&idx, &per_edge, true);
+            let sts = WingState::new(&idx, &per_edge, true);
+            sta.mark_peeled(&active, 1, 2);
+            sts.mark_peeled(&active, 1, 2);
+            let mut ta = peel_set_batch(&sta, &active, 1, 1, 2, UpdateKernel::Aggregated, &ma);
+            let mut ts = peel_set_batch(&sts, &active, 1, 1, 2, UpdateKernel::Scattered, &ms);
+            if sta.support_snapshot() != sts.support_snapshot() {
+                return Err("support divergence".into());
+            }
+            ta.sort_unstable();
+            ts.sort_unstable();
+            if ta != ts {
+                return Err("touched-set divergence".into());
+            }
+            let (sa, ss) = (ma.snapshot(), ms.snapshot());
+            if sa.updates != ss.updates || sa.wedges != ss.wedges {
+                return Err(format!("meter divergence: {sa:?} vs {ss:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn dynamic_deletes_compact_entries() {
         let g = gen::biclique(2, 4);
         let (idx, per_edge) = setup(&g);
         let st = WingState::new(&idx, &per_edge, true);
         let m = Meters::new();
         st.mark_peeled(&[0], 1, 1);
-        peel_set_batch(&st, &[0], 0, 1, 1, &m);
+        peel_set_batch(&st, &[0], 0, 1, 1, UpdateKernel::Aggregated, &m);
         // bloom 0 lost edge 0's wedge: entries shrink by 2 (both orientations)
         // SAFETY: single-threaded test — no concurrent writers.
         let len = unsafe { st.bloom_len.get(0) };

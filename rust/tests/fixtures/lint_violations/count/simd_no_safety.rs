@@ -1,0 +1,8 @@
+// Lint fixture (never compiled): a SIMD intersection call whose
+// `unsafe` has no adjacent SAFETY comment. Must fire `safety-comment`
+// exactly once — the coverage the real count::kernel AVX2 path carries.
+pub fn intersect_block(a: &[u32], b: &[u32]) -> u32 {
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+
+    unsafe { cmpeq8(pa, pb, a.len().min(b.len())) }
+}

@@ -154,6 +154,46 @@ fn committed_incremental_baseline_parses_and_gates() {
 }
 
 #[test]
+fn committed_kernels_baseline_parses_and_gates() {
+    // Same contract as the smoke/incremental baselines, for the kernel
+    // suite CI arms: registered keys only, opt-in full gate.
+    let base = Report::load(Path::new("../BENCH_kernels.json")).unwrap();
+    assert_eq!(base.suite, "kernels");
+    let suite = find_suite("kernels").unwrap();
+    for e in &base.entries {
+        assert!(
+            suite.datasets.iter().any(|d| d.name == e.dataset),
+            "baseline references unregistered dataset '{}'",
+            e.dataset
+        );
+        assert!(
+            suite.algos.iter().any(|a| a.name() == e.algo),
+            "baseline references unregistered algo '{}'",
+            e.algo
+        );
+    }
+    // Armed baselines must show the count-only triple byte-identical
+    // (scalar vs SIMD vs auto side-choice) per dataset.
+    for ds in suite.datasets {
+        let fnvs: Vec<u64> = ["kern/count-scalar", "kern/count-simd", "kern/count-auto"]
+            .iter()
+            .filter_map(|a| base.entry(ds.name, a))
+            .map(|e| e.counters.theta_fnv)
+            .collect();
+        assert!(
+            fnvs.windows(2).all(|w| w[0] == w[1]),
+            "count kernel θ checksums diverge on {}: {fnvs:?}",
+            ds.name
+        );
+    }
+    if !base.entries.is_empty() && std::env::var("PBNG_BENCH_GATE").is_ok() {
+        let cur = run_suite(suite, &one_rep());
+        let cmp = compare(&base, &cur, &counters_only()).unwrap();
+        assert!(cmp.passed(), "{}", cmp.render());
+    }
+}
+
+#[test]
 fn theta_checksum_distinguishes_algo_outputs_only_when_different() {
     let g = find_suite("micro").unwrap().datasets[0].build();
     let a = Algo::WingBup.run(&g, 1);

@@ -1,0 +1,187 @@
+//! Kernel equivalence integration tests (ISSUE 9 satellite): butterfly
+//! counts and decomposition outputs must be byte-identical across every
+//! kernel configuration — wedge-side order policy (scalar cost model),
+//! SIMD dispatch, scattered vs aggregated support updates, and thread
+//! counts — and must match the brute-force reference on small random
+//! graphs. Any divergence here means a kernel produced *different
+//! numbers*, not just different performance.
+
+use pbng::count::{
+    brute, pve_bcnt, CountOptions, Counts, KernelConfig, OrderPolicy, SimdPolicy, UpdateKernel,
+};
+use pbng::engine::EngineConfig;
+use pbng::graph::{gen, BipartiteGraph, Side};
+use pbng::tip::tip_pbng;
+use pbng::wing::wing_pbng;
+
+const ORDERS: [OrderPolicy; 4] = [
+    OrderPolicy::Degree,
+    OrderPolicy::SideU,
+    OrderPolicy::SideV,
+    OrderPolicy::Auto,
+];
+const SIMDS: [SimdPolicy; 2] = [SimdPolicy::Scalar, SimdPolicy::Auto];
+const THREADS: [usize; 2] = [1, 8];
+
+fn count_with(g: &BipartiteGraph, kernel: KernelConfig, threads: usize, per_edge: bool) -> Counts {
+    let opts = CountOptions {
+        per_edge,
+        build_blooms: false,
+        threads,
+        kernel,
+    };
+    pve_bcnt(g, opts, None).0
+}
+
+#[test]
+fn counting_matches_brute_force_across_all_policies() {
+    // count::brute differential: every order × SIMD × thread combination
+    // reproduces the quadratic reference exactly, on both the label-only
+    // path (SIMD-eligible) and the per-edge path (always scalar).
+    for seed in [3u64, 17, 40] {
+        let g = gen::erdos(24, 30, 140, seed);
+        let want = brute::brute_counts(&g);
+        for order in ORDERS {
+            for simd in SIMDS {
+                let kernel = KernelConfig {
+                    order,
+                    simd,
+                    ..Default::default()
+                };
+                for threads in THREADS {
+                    let fast = count_with(&g, kernel, threads, false);
+                    assert_eq!(fast.total, want.total, "total ({order:?}/{simd:?}/t{threads})");
+                    assert_eq!(fast.per_u, want.per_u, "per_u ({order:?}/{simd:?}/t{threads})");
+                    assert_eq!(fast.per_v, want.per_v, "per_v ({order:?}/{simd:?}/t{threads})");
+                    let edged = count_with(&g, kernel, threads, true);
+                    assert_eq!(
+                        edged.per_edge, want.per_edge,
+                        "per_edge ({order:?}/{simd:?}/t{threads})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn per_entity_counts_byte_identical_scalar_vs_simd_vs_auto() {
+    // ISSUE satellite: θ and per-entity counts byte-identical across
+    // {scalar, SIMD, auto side-choice} × threads {1, 8} on zipf/grid.
+    // The scalar degree-order single-thread run is the reference; every
+    // other cell must reproduce its vectors bit for bit.
+    let graphs = [
+        gen::zipf(300, 260, 2400, 1.1, 0.9, 71),
+        gen::grid(240, 240, 10, 0.5, 72),
+    ];
+    for g in &graphs {
+        let reference = count_with(
+            g,
+            KernelConfig {
+                order: OrderPolicy::Degree,
+                simd: SimdPolicy::Scalar,
+                ..Default::default()
+            },
+            1,
+            false,
+        );
+        for order in ORDERS {
+            for simd in SIMDS {
+                for threads in THREADS {
+                    let kernel = KernelConfig {
+                        order,
+                        simd,
+                        ..Default::default()
+                    };
+                    let got = count_with(g, kernel, threads, false);
+                    assert_eq!(got.total, reference.total, "{order:?}/{simd:?}/t{threads}");
+                    assert_eq!(got.per_u, reference.per_u, "{order:?}/{simd:?}/t{threads}");
+                    assert_eq!(got.per_v, reference.per_v, "{order:?}/{simd:?}/t{threads}");
+                }
+            }
+        }
+    }
+}
+
+/// Every kernel configuration the engine can be asked to run with:
+/// SIMD on/off × scattered/aggregated updates × degree/auto side-choice.
+fn kernel_grid() -> Vec<KernelConfig> {
+    let mut out = Vec::new();
+    for simd in SIMDS {
+        for updates in [UpdateKernel::Scattered, UpdateKernel::Aggregated] {
+            for order in [OrderPolicy::Degree, OrderPolicy::Auto] {
+                out.push(KernelConfig {
+                    order,
+                    simd,
+                    updates,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn wing_theta_invariant_under_kernel_configs() {
+    let g = gen::zipf(140, 120, 900, 1.0, 0.8, 81);
+    let reference = wing_pbng(
+        &g,
+        EngineConfig {
+            p: 6,
+            threads: 1,
+            ..Default::default()
+        },
+    )
+    .theta;
+    for kernel in kernel_grid() {
+        for threads in THREADS {
+            let got = wing_pbng(
+                &g,
+                EngineConfig {
+                    p: 6,
+                    threads,
+                    kernel,
+                    ..Default::default()
+                },
+            )
+            .theta;
+            assert_eq!(got, reference, "wing θ diverged under {kernel:?} t{threads}");
+        }
+    }
+}
+
+#[test]
+fn tip_theta_invariant_under_kernel_configs() {
+    let g = gen::grid(120, 130, 8, 0.45, 91);
+    for side in [Side::U, Side::V] {
+        let reference = tip_pbng(
+            &g,
+            side,
+            EngineConfig {
+                p: 4,
+                threads: 1,
+                ..Default::default()
+            },
+        )
+        .theta;
+        for kernel in kernel_grid() {
+            for threads in THREADS {
+                let got = tip_pbng(
+                    &g,
+                    side,
+                    EngineConfig {
+                        p: 4,
+                        threads,
+                        kernel,
+                        ..Default::default()
+                    },
+                )
+                .theta;
+                assert_eq!(
+                    got, reference,
+                    "tip θ ({side:?}) diverged under {kernel:?} t{threads}"
+                );
+            }
+        }
+    }
+}
