@@ -84,6 +84,14 @@ pub enum Algo {
     KernTipScatter,
     /// Tip peel with aggregated support updates.
     KernTipAgg,
+    /// Durable ingestion: the update stream fsynced through the WAL,
+    /// then replayed through the staging pool into the incremental
+    /// engine (append + replay + coalesce + apply, the `--wal` path).
+    IngestWal,
+    /// The same stream applied straight to the incremental engine with
+    /// no durability — the latency floor `ingest/wal` is measured
+    /// against, and its θ twin (the WAL round-trip must not change θ).
+    IngestDirect,
 }
 
 impl Algo {
@@ -111,6 +119,8 @@ impl Algo {
             Algo::KernPeelAgg => "kern/peel-agg",
             Algo::KernTipScatter => "kern/tip-scatter",
             Algo::KernTipAgg => "kern/tip-agg",
+            Algo::IngestWal => "ingest/wal",
+            Algo::IngestDirect => "ingest/direct",
         }
     }
 
@@ -184,6 +194,8 @@ impl Algo {
             Algo::KernTipAgg => {
                 crate::tip::tip_pbng(g, Side::U, kern_tip(UpdateKernel::Aggregated))
             }
+            Algo::IngestWal => ingest_cell::run_wal(g, threads),
+            Algo::IngestDirect => ingest_cell::run_direct(g, threads),
         }
     }
 }
@@ -233,7 +245,7 @@ mod incr {
 
     /// Deterministic mixed stream: alternating random-pair inserts and
     /// removals of original edges (no-ops allowed — set semantics).
-    fn update_stream(g: &BipartiteGraph) -> Vec<DeltaBatch> {
+    pub(super) fn update_stream(g: &BipartiteGraph) -> Vec<DeltaBatch> {
         let mut rng = crate::testkit::Rng::new(STREAM_SEED);
         let es = g.edges();
         (0..ROUNDS)
@@ -256,7 +268,7 @@ mod incr {
             .collect()
     }
 
-    fn wing_cfg(g: &BipartiteGraph, threads: usize) -> EngineConfig {
+    pub(super) fn wing_cfg(g: &BipartiteGraph, threads: usize) -> EngineConfig {
         EngineConfig {
             p: (g.m() / 500).clamp(4, 64),
             threads,
@@ -272,7 +284,7 @@ mod incr {
         }
     }
 
-    fn merge_stats(acc: &mut PeelStats, s: PeelStats) {
+    pub(super) fn merge_stats(acc: &mut PeelStats, s: PeelStats) {
         acc.updates += s.updates;
         acc.wedges += s.wedges;
         acc.rho += s.rho;
@@ -332,6 +344,77 @@ mod incr {
             merge_stats(&mut stats, std::mem::take(&mut last.stats));
         }
         Decomposition { theta: last.theta, stats }
+    }
+}
+
+/// Ingest-suite drivers: the same pinned update stream as the
+/// `incremental` suite, but routed through the durability stack — each
+/// round fsynced into a WAL record, then tailed back through the
+/// staging pool (coalescing + cancellation) into the incremental
+/// engine. The `ingest/direct` cell skips the log and pool entirely, so
+/// the pair's wall-time delta is the price of durability and its θ
+/// checksums must match entry for entry (the WAL round-trip and pool
+/// reordering are invisible under set semantics).
+mod ingest_cell {
+    use super::{incr, BipartiteGraph};
+    use crate::engine::incremental::{IncrementalConfig, WingIncremental};
+    use crate::ingest::{AdaptiveFallback, Pool, PoolConfig};
+    use crate::peel::Decomposition;
+    use crate::wal;
+    use std::time::Instant;
+
+    fn state_for(g: &BipartiteGraph, threads: usize) -> WingIncremental {
+        let cfg = IncrementalConfig {
+            engine: incr::wing_cfg(g, threads),
+            ..Default::default()
+        };
+        WingIncremental::new(g, cfg)
+    }
+
+    /// Durable path: append every stream round as one fsynced record,
+    /// replay the log, and drain each record through the pool with a
+    /// forced flush (the serve path's per-poll behavior).
+    pub fn run_wal(g: &BipartiteGraph, threads: usize) -> Decomposition {
+        let dir = crate::testkit::TempDir::new("bench-ingest").expect("tempdir");
+        let log = dir.file("stream.wal");
+        let mut w = wal::Writer::create(&log).expect("wal create");
+        for batch in incr::update_stream(g) {
+            w.append(&batch.ops).expect("wal append");
+        }
+        drop(w);
+        let tail = wal::replay(&log).expect("wal replay");
+        let mut st = state_for(g, threads);
+        let mut ctl = AdaptiveFallback::new(st.fallback_fraction());
+        let mut stats = st.init_stats().clone();
+        let mut pool = Pool::new(PoolConfig {
+            max_batch: 24,
+            max_delay: std::time::Duration::ZERO,
+        });
+        let t0 = Instant::now();
+        for rec in &tail.records {
+            for &op in &rec.ops {
+                pool.push(op, t0);
+            }
+            if let Some((batches, _lag)) = pool.take_ready(t0, true) {
+                for b in batches {
+                    let up = st.apply(&b);
+                    st.set_fallback_fraction(ctl.observe(&up));
+                    incr::merge_stats(&mut stats, up.stats);
+                }
+            }
+        }
+        Decomposition { theta: st.theta().to_vec(), stats }
+    }
+
+    /// Durability-free twin: the same stream applied straight to the
+    /// incremental engine (no log, no pool, fixed fallback threshold).
+    pub fn run_direct(g: &BipartiteGraph, threads: usize) -> Decomposition {
+        let mut st = state_for(g, threads);
+        let mut stats = st.init_stats().clone();
+        for batch in incr::update_stream(g) {
+            incr::merge_stats(&mut stats, st.apply(&batch).stats);
+        }
+        Decomposition { theta: st.theta().to_vec(), stats }
     }
 }
 
@@ -474,6 +557,11 @@ const KERNEL_ALGOS: &[Algo] = &[
     Algo::KernTipAgg,
 ];
 
+/// Durability cells: each `ingest/wal` entry's θ checksum must equal its
+/// `ingest/direct` sibling (same stream, same final graph — the WAL and
+/// pool must be semantically invisible).
+const INGEST_ALGOS: &[Algo] = &[Algo::IngestWal, Algo::IngestDirect];
+
 pub const SUITES: &[Suite] = &[
     Suite {
         name: "micro",
@@ -511,6 +599,12 @@ pub const SUITES: &[Suite] = &[
         datasets: KERNEL_DATASETS,
         algos: KERNEL_ALGOS,
     },
+    Suite {
+        name: "ingest",
+        description: "durable ingestion: WAL append + replay + pool coalescing vs direct incremental application",
+        datasets: MICRO_DATASETS,
+        algos: INGEST_ALGOS,
+    },
 ];
 
 pub fn find_suite(name: &str) -> Option<&'static Suite> {
@@ -542,6 +636,7 @@ mod tests {
             .iter()
             .chain(INCR_ALGOS.iter())
             .chain(KERNEL_ALGOS.iter())
+            .chain(INGEST_ALGOS.iter())
             .map(|a| a.name())
             .collect();
         names.sort_unstable();
@@ -554,6 +649,23 @@ mod tests {
         for a in KERNEL_ALGOS {
             assert!(a.name().starts_with("kern/"), "{}", a.name());
         }
+        for a in INGEST_ALGOS {
+            assert!(a.name().starts_with("ingest/"), "{}", a.name());
+        }
+    }
+
+    #[test]
+    fn ingest_wal_and_direct_agree_on_final_theta() {
+        // the WAL round-trip + pool coalescing must be semantically
+        // invisible: both cells end on the same graph, so same θ
+        let s = find_suite("ingest").unwrap();
+        assert_eq!(s.algos.len(), 2);
+        let g = MICRO_DATASETS[2].build(); // grid-micro, the smallest
+        let wal = Algo::IngestWal.run(&g, 1);
+        let direct = Algo::IngestDirect.run(&g, 1);
+        assert_eq!(wal.theta, direct.theta, "wal ingest != direct");
+        // and the reference: direct matches the incremental cell exactly
+        assert_eq!(direct.theta, Algo::WingIncr.run(&g, 1).theta);
     }
 
     #[test]

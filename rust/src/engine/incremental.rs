@@ -188,6 +188,17 @@ impl WingIncremental {
         &self.init_stats
     }
 
+    /// Current full-rebuild threshold.
+    pub fn fallback_fraction(&self) -> f64 {
+        self.cfg.fallback_fraction
+    }
+
+    /// Retune the full-rebuild threshold (the ingestion pipeline's
+    /// adaptive controller calls this after every applied batch).
+    pub fn set_fallback_fraction(&mut self, f: f64) {
+        self.cfg.fallback_fraction = f.clamp(0.0, 1.0);
+    }
+
     /// Full decomposition of `self.graph`, refreshing θ, counts,
     /// component labels, and partition bounds.
     fn rebuild_full(&mut self, mut rec: Recorder<'_>) -> PeelStats {
@@ -454,6 +465,16 @@ impl TipIncremental {
         &self.init_stats
     }
 
+    /// Current full-rebuild threshold.
+    pub fn fallback_fraction(&self) -> f64 {
+        self.cfg.fallback_fraction
+    }
+
+    /// Retune the full-rebuild threshold (see [`WingIncremental::set_fallback_fraction`]).
+    pub fn set_fallback_fraction(&mut self, f: f64) {
+        self.cfg.fallback_fraction = f.clamp(0.0, 1.0);
+    }
+
     fn rebuild_full(&mut self, mut rec: Recorder<'_>) -> PeelStats {
         let threads = self.cfg.engine.threads;
         rec.enter(Phase::Count);
@@ -693,6 +714,36 @@ impl IncrementalState {
         match self {
             IncrementalState::Wing(s) => s.graph(),
             IncrementalState::Tip(s) => s.graph(),
+        }
+    }
+
+    /// Current full-rebuild threshold.
+    pub fn fallback_fraction(&self) -> f64 {
+        match self {
+            IncrementalState::Wing(s) => s.fallback_fraction(),
+            IncrementalState::Tip(s) => s.fallback_fraction(),
+        }
+    }
+
+    /// Retune the full-rebuild threshold.
+    pub fn set_fallback_fraction(&mut self, f: f64) {
+        match self {
+            IncrementalState::Wing(s) => s.set_fallback_fraction(f),
+            IncrementalState::Tip(s) => s.set_fallback_fraction(f),
+        }
+    }
+
+    /// `(nu, nv)` in the *original* (caller-visible) orientation —
+    /// the bounds incoming deltas must respect. Tip-V states keep
+    /// their graph transposed internally, so the oriented dims are
+    /// swapped back here.
+    pub fn universe(&self) -> (usize, usize) {
+        match self {
+            IncrementalState::Wing(s) => (s.graph().nu(), s.graph().nv()),
+            IncrementalState::Tip(s) => match s.side() {
+                Side::U => (s.graph().nu(), s.graph().nv()),
+                Side::V => (s.graph().nv(), s.graph().nu()),
+            },
         }
     }
 }

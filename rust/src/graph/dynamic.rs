@@ -48,11 +48,51 @@ pub enum DeltaOp {
 }
 
 impl DeltaOp {
+    /// On-wire size of one encoded op (see [`DeltaOp::encode_into`]).
+    pub const WIRE_LEN: usize = 9;
+
     /// Swap the U/V roles (used to orient deltas for tip side V).
     pub fn transposed(self) -> DeltaOp {
         match self {
             DeltaOp::Insert(u, v) => DeltaOp::Insert(v, u),
             DeltaOp::Remove(u, v) => DeltaOp::Remove(v, u),
+        }
+    }
+
+    /// The edge this op concerns, regardless of direction.
+    pub fn key(self) -> (u32, u32) {
+        match self {
+            DeltaOp::Insert(u, v) | DeltaOp::Remove(u, v) => (u, v),
+        }
+    }
+
+    /// Append the 9-byte wire form: tag (0 insert / 1 remove), then both
+    /// endpoints as `u32` little-endian — the record payload unit of
+    /// [`crate::wal`].
+    pub fn encode_into(self, out: &mut Vec<u8>) {
+        let (tag, u, v) = match self {
+            DeltaOp::Insert(u, v) => (0u8, u, v),
+            DeltaOp::Remove(u, v) => (1u8, u, v),
+        };
+        out.push(tag);
+        out.extend_from_slice(&u.to_le_bytes());
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Decode one 9-byte wire op; rejects unknown tags.
+    pub fn decode(b: &[u8]) -> Result<DeltaOp> {
+        anyhow::ensure!(
+            b.len() == Self::WIRE_LEN,
+            "delta op wire form is {} bytes, got {}",
+            Self::WIRE_LEN,
+            b.len()
+        );
+        let u = u32::from_le_bytes([b[1], b[2], b[3], b[4]]);
+        let v = u32::from_le_bytes([b[5], b[6], b[7], b[8]]);
+        match b[0] {
+            0 => Ok(DeltaOp::Insert(u, v)),
+            1 => Ok(DeltaOp::Remove(u, v)),
+            t => anyhow::bail!("unknown delta op tag {t}"),
         }
     }
 }
@@ -500,6 +540,28 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn delta_op_wire_roundtrip_and_rejects() {
+        let ops = [
+            DeltaOp::Insert(0, 0),
+            DeltaOp::Remove(7, 3),
+            DeltaOp::Insert(u32::MAX, 1),
+        ];
+        for op in ops {
+            let mut buf = Vec::new();
+            op.encode_into(&mut buf);
+            assert_eq!(buf.len(), DeltaOp::WIRE_LEN);
+            assert_eq!(DeltaOp::decode(&buf).unwrap(), op);
+        }
+        // bad tag and bad length are rejected
+        let mut buf = Vec::new();
+        DeltaOp::Insert(1, 2).encode_into(&mut buf);
+        buf[0] = 9;
+        assert!(DeltaOp::decode(&buf).is_err());
+        assert!(DeltaOp::decode(&buf[..5]).is_err());
+        assert_eq!(DeltaOp::Remove(4, 5).key(), (4, 5));
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Mempool-style ingestion staging: the in-memory half of the streaming
+//! pipeline (the durable half is [`crate::wal`]).
+//!
+//! Ops arriving over the wire (or tailed from the WAL) are not applied
+//! one by one — the incremental engine amortizes much better over
+//! batches, and live streams are full of redundancy: the same edge
+//! re-inserted, an insert immediately followed by its remove. The
+//! [`Pool`] stages pending ops keyed by edge, so at most one op per
+//! edge survives (*last-op-wins*, which is exact under set semantics:
+//! the final presence of an edge depends only on the last op that
+//! touched it, and θ depends only on the final graph). Batches are
+//! formed when either a size target or a latency deadline is hit —
+//! the same two triggers muta's `core/mempool` uses for block package
+//! formation.
+//!
+//! [`AdaptiveFallback`] closes the control loop on the incremental
+//! engine's rebuild heuristic: it tracks an EWMA of the observed
+//! invalidated-partition fraction and lowers the fallback threshold
+//! while the stream is churning wide swaths of the hierarchy (full
+//! rebuilds are then cheaper than many near-total incremental passes),
+//! drifting back toward the configured base as the stream quiets.
+
+use crate::engine::incremental::UpdateStats;
+use crate::graph::dynamic::{DeltaBatch, DeltaOp};
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Batch-formation policy.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    /// Form a batch as soon as this many distinct edges are staged;
+    /// also the chunk size when draining.
+    pub max_batch: usize,
+    /// Form a batch once the oldest staged op has waited this long.
+    /// `Duration::ZERO` means "drain whenever non-empty".
+    pub max_delay: Duration,
+}
+
+impl Default for PoolConfig {
+    fn default() -> PoolConfig {
+        PoolConfig {
+            max_batch: 256,
+            max_delay: Duration::from_millis(200),
+        }
+    }
+}
+
+/// What [`Pool::push`] did with an op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Staged {
+    /// First pending op for this edge.
+    New,
+    /// Replaced an identical pending op (duplicate submission).
+    Coalesced,
+    /// Replaced the opposing op for this edge (insert↔remove).
+    Cancelled,
+}
+
+/// Cumulative pool activity, kept local (not in the global registry) so
+/// tests stay deterministic; the serving layer mirrors these into
+/// `pbng::obs` counters after each drain.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Ops accepted by [`Pool::push`].
+    pub staged: u64,
+    /// Duplicate submissions absorbed.
+    pub coalesced: u64,
+    /// Opposing insert/remove pairs collapsed.
+    pub cancelled: u64,
+    /// Batches emitted by [`Pool::take_ready`].
+    pub batches: u64,
+}
+
+/// Staging pool: at most one pending op per edge, drained in
+/// deterministic (sorted edge key) order.
+pub struct Pool {
+    cfg: PoolConfig,
+    staged: BTreeMap<(u32, u32), DeltaOp>,
+    /// When the pool last became non-empty (the latency-deadline anchor).
+    since: Option<Instant>,
+    stats: PoolStats,
+}
+
+impl Pool {
+    pub fn new(cfg: PoolConfig) -> Pool {
+        Pool {
+            cfg,
+            staged: BTreeMap::new(),
+            since: None,
+            stats: PoolStats::default(),
+        }
+    }
+
+    /// Number of distinct edges currently staged.
+    pub fn len(&self) -> usize {
+        self.staged.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.staged.is_empty()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    /// Stage one op, coalescing against any pending op on the same edge.
+    pub fn push(&mut self, op: DeltaOp, now: Instant) -> Staged {
+        if self.staged.is_empty() {
+            self.since = Some(now);
+        }
+        self.stats.staged += 1;
+        match self.staged.insert(op.key(), op) {
+            None => Staged::New,
+            Some(prev) if prev == op => {
+                self.stats.coalesced += 1;
+                Staged::Coalesced
+            }
+            Some(_) => {
+                self.stats.cancelled += 1;
+                Staged::Cancelled
+            }
+        }
+    }
+
+    /// Would [`Pool::take_ready`] emit batches right now?
+    pub fn ready(&self, now: Instant, forced: bool) -> bool {
+        if self.staged.is_empty() {
+            return false;
+        }
+        if forced || self.staged.len() >= self.cfg.max_batch {
+            return true;
+        }
+        self.since
+            .is_some_and(|s| now.saturating_duration_since(s) >= self.cfg.max_delay)
+    }
+
+    /// Drain every staged op into `max_batch`-sized [`DeltaBatch`]es if
+    /// a formation trigger (size, deadline, or `forced`) has fired.
+    /// Returns the batches plus the staging lag — how long the oldest
+    /// op waited in the pool.
+    pub fn take_ready(
+        &mut self,
+        now: Instant,
+        forced: bool,
+    ) -> Option<(Vec<DeltaBatch>, Duration)> {
+        if !self.ready(now, forced) {
+            return None;
+        }
+        let lag = self
+            .since
+            .take()
+            .map_or(Duration::ZERO, |s| now.saturating_duration_since(s));
+        let ops: Vec<DeltaOp> = std::mem::take(&mut self.staged).into_values().collect();
+        let batches: Vec<DeltaBatch> = ops
+            .chunks(self.cfg.max_batch.max(1))
+            .map(|c| DeltaBatch::new(c.to_vec()))
+            .collect();
+        self.stats.batches += batches.len() as u64;
+        Some((batches, lag))
+    }
+}
+
+/// EWMA controller for the incremental engine's full-rebuild threshold.
+///
+/// `observe` folds one apply's invalidated-partition fraction into the
+/// running average and returns the threshold to install before the next
+/// apply: `base · (1 − 0.8·ewma)`, clamped to `[min(0.05, base), base]`.
+/// A quiet stream (ewma → 0) keeps the configured base; a stream that
+/// keeps invalidating most partitions drives the threshold down so the
+/// engine flips to (cheaper) full rebuilds sooner.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveFallback {
+    base: f64,
+    ewma: f64,
+    alpha: f64,
+}
+
+impl AdaptiveFallback {
+    pub fn new(base: f64) -> AdaptiveFallback {
+        AdaptiveFallback {
+            base: base.clamp(0.0, 1.0),
+            ewma: 0.0,
+            alpha: 0.3,
+        }
+    }
+
+    /// Current threshold without new evidence.
+    pub fn threshold(&self) -> f64 {
+        let t = self.base * (1.0 - 0.8 * self.ewma);
+        t.clamp(0.05_f64.min(self.base), self.base)
+    }
+
+    /// Fold in one apply's stats; returns the updated threshold.
+    pub fn observe(&mut self, up: &UpdateStats) -> f64 {
+        let frac = if up.total_partitions == 0 {
+            0.0
+        } else {
+            up.invalidated_partitions as f64 / up.total_partitions as f64
+        };
+        self.ewma = self.alpha * frac + (1.0 - self.alpha) * self.ewma;
+        self.threshold()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn coalesces_duplicates_and_cancels_opposing_ops() {
+        let mut p = Pool::new(PoolConfig {
+            max_batch: 16,
+            max_delay: Duration::ZERO,
+        });
+        let now = t0();
+        assert_eq!(p.push(DeltaOp::Insert(1, 2), now), Staged::New);
+        assert_eq!(p.push(DeltaOp::Insert(1, 2), now), Staged::Coalesced);
+        assert_eq!(p.push(DeltaOp::Remove(1, 2), now), Staged::Cancelled);
+        assert_eq!(p.push(DeltaOp::Remove(3, 0), now), Staged::New);
+        assert_eq!(p.len(), 2);
+        let (batches, _) = p.take_ready(now, false).unwrap();
+        assert_eq!(batches.len(), 1);
+        // last-op-wins, drained in sorted edge order
+        assert_eq!(
+            batches[0].ops,
+            vec![DeltaOp::Remove(1, 2), DeltaOp::Remove(3, 0)]
+        );
+        let st = p.stats();
+        assert_eq!(
+            st,
+            PoolStats { staged: 4, coalesced: 1, cancelled: 1, batches: 1 }
+        );
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn size_trigger_fires_without_deadline() {
+        let mut p = Pool::new(PoolConfig {
+            max_batch: 3,
+            max_delay: Duration::from_secs(3600),
+        });
+        let now = t0();
+        p.push(DeltaOp::Insert(0, 0), now);
+        p.push(DeltaOp::Insert(0, 1), now);
+        assert!(!p.ready(now, false));
+        assert!(p.take_ready(now, false).is_none());
+        p.push(DeltaOp::Insert(0, 2), now);
+        assert!(p.ready(now, false));
+        let (batches, _) = p.take_ready(now, false).unwrap();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].ops.len(), 3);
+    }
+
+    #[test]
+    fn deadline_trigger_uses_oldest_staged_age() {
+        let mut p = Pool::new(PoolConfig {
+            max_batch: 100,
+            max_delay: Duration::from_millis(50),
+        });
+        let start = t0();
+        p.push(DeltaOp::Insert(0, 0), start);
+        assert!(!p.ready(start, false));
+        // later pushes do not reset the anchor
+        p.push(DeltaOp::Insert(1, 1), start + Duration::from_millis(40));
+        let late = start + Duration::from_millis(55);
+        assert!(p.ready(late, false));
+        let (batches, lag) = p.take_ready(late, false).unwrap();
+        assert_eq!(batches[0].ops.len(), 2);
+        assert_eq!(lag, Duration::from_millis(55));
+        // after a drain the anchor resets
+        let now2 = late + Duration::from_millis(1);
+        p.push(DeltaOp::Insert(2, 2), now2);
+        assert!(!p.ready(now2, false));
+    }
+
+    #[test]
+    fn forced_drains_any_nonempty_pool_and_chunks_batches() {
+        let mut p = Pool::new(PoolConfig {
+            max_batch: 4,
+            max_delay: Duration::from_secs(3600),
+        });
+        let now = t0();
+        assert!(p.take_ready(now, true).is_none()); // forced + empty = nothing
+        for i in 0..10u32 {
+            p.push(DeltaOp::Insert(i, i), now);
+        }
+        let (batches, _) = p.take_ready(now, true).unwrap();
+        assert_eq!(
+            batches.iter().map(|b| b.ops.len()).collect::<Vec<_>>(),
+            vec![4, 4, 2]
+        );
+        assert_eq!(p.stats().batches, 3);
+    }
+
+    #[test]
+    fn adaptive_fallback_tracks_invalidation_and_clamps() {
+        let mut ctl = AdaptiveFallback::new(0.25);
+        assert!((ctl.threshold() - 0.25).abs() < 1e-12);
+        let mut quiet = UpdateStats::default();
+        quiet.total_partitions = 10;
+        quiet.invalidated_partitions = 0;
+        assert!((ctl.observe(&quiet) - 0.25).abs() < 1e-12);
+
+        let mut noisy = UpdateStats::default();
+        noisy.total_partitions = 10;
+        noisy.invalidated_partitions = 10;
+        let mut last = ctl.threshold();
+        for _ in 0..20 {
+            let t = ctl.observe(&noisy);
+            assert!(t <= last + 1e-12);
+            last = t;
+        }
+        // converges toward base·0.2 but never below the floor
+        assert!(last >= 0.05 - 1e-12);
+        assert!(last < 0.25);
+
+        // zero denominators are treated as "no evidence"
+        let empty = UpdateStats::default();
+        let before = ctl.threshold();
+        let after = ctl.observe(&empty);
+        assert!(after >= before); // ewma decays toward zero → threshold rises
+
+        // a tiny base clamps to itself, not to 0.05
+        let ctl2 = AdaptiveFallback::new(0.01);
+        assert!((ctl2.threshold() - 0.01).abs() < 1e-12);
+    }
+}

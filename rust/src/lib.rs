@@ -53,6 +53,8 @@ pub mod engine;
 pub mod graph;
 pub mod index;
 #[forbid(unsafe_code)]
+pub mod ingest;
+#[forbid(unsafe_code)]
 pub mod jsonio;
 #[forbid(unsafe_code)]
 pub mod metrics;
@@ -69,4 +71,6 @@ pub mod serve;
 #[forbid(unsafe_code)]
 pub mod testkit;
 pub mod tip;
+#[forbid(unsafe_code)]
+pub mod wal;
 pub mod wing;

@@ -64,6 +64,16 @@ USAGE: pbng <command> [args]
   serve <graph.tsv> --watch <deltas.txt> [--kind wing|tip-u|tip-v]
         [--batch N] [--fallback F] [--p P] [--threads T] [serve flags]
         (live snapshots: deltas drain through the incremental engine)
+  serve <graph.tsv> --wal <log.wal> [--checkpoint <file>] [--delay-ms MS]
+        [--kind wing|tip-u|tip-v] [--batch N] [--fallback F] [serve flags]
+        (durable ingestion: recover from checkpoint + log replay, accept
+         `ingest` over the wire, batch through the coalescing pool)
+  wal init <log.wal>
+  wal append <log.wal> <deltas.txt> [--batch N]
+  wal replay <log.wal> [--quiet]
+  wal compact <log.wal> --graph <graph.tsv> [--kind wing|tip-u|tip-v]
+              [--checkpoint <file>]        (fold the log into a checkpoint)
+  wal compact <log.wal> --keep-after N     (drop records with seq <= N)
   bench [--suite smoke] [--repetitions N] [--warmup N] [--threads T]
         [--out FILE] [--list]
   bench compare <baseline.json> <current.json> [--counter-tolerance F]
@@ -78,7 +88,9 @@ Chrome trace (trace.json) of the run.
 
 Index line protocol: components/kwing/ktip <k>, membership <id>,
 densest <id>, top <n>, summary, stats, metrics, help, quit
-(+ reload under protocol v2). v2 frames every reply as `OK <verb>` /
+(+ reload and `ingest (+|-) u v ...` under protocol v2; ingest needs a
+--wal server and acks with the record's durable sequence number).
+v2 frames every reply as `OK <verb>` /
 `ERR <reason>` … `END`; `--proto v1` keeps the legacy READY/BYE format
 for one release.
 
@@ -106,6 +118,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "index" => cmd_index(&args),
         "query" => cmd_query(&args),
         "serve" => cmd_serve(&args),
+        "wal" => cmd_wal(&args),
         "bench" => cmd_bench(&args),
         "trace" => cmd_trace(&args),
         "verify" => cmd_verify(&args),
@@ -530,13 +543,28 @@ fn cmd_query(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--kind wing|tip-u|tip-v` into a [`pbng::index::ForestKind`].
+fn forest_kind(kind: &str) -> Result<pbng::index::ForestKind> {
+    match kind {
+        "wing" => Ok(pbng::index::ForestKind::Wing),
+        "tip-u" => Ok(pbng::index::ForestKind::TipU),
+        "tip-v" => Ok(pbng::index::ForestKind::TipV),
+        k => bail!("unknown --kind '{k}' (wing | tip-u | tip-v)"),
+    }
+}
+
 /// `pbng serve`: the poll-based reactor over hot-swappable snapshots.
 ///
 /// Default mode serves a persisted index file; a background updater
 /// re-reads it when the file changes on disk or a client sends
 /// `reload`. With `--watch <deltas>` the positional is a graph (file or
 /// preset) and the updater instead drains the delta log through the
-/// incremental engine, republishing a fresh snapshot per batch.
+/// incremental engine, republishing a fresh snapshot per batch. With
+/// `--wal <log>` the positional is the base graph and the updater tails
+/// a durable write-ahead log: startup recovers from the last checkpoint
+/// plus log replay, sessions may submit deltas with the `ingest` verb
+/// (acked only after fsync), and the staging pool coalesces them into
+/// batches by size or latency deadline.
 fn cmd_serve(args: &Args) -> Result<()> {
     use pbng::serve::{ProtoVersion, Server, ServerConfig, SnapshotSource, SnapshotStore, Updater};
     let proto = {
@@ -553,8 +581,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let idle_secs = args.get_u64("idle-timeout", 300)?;
     let interval = std::time::Duration::from_millis(args.get_u64("watch-interval", 500)?);
     let watch = args.get("watch").map(str::to_string);
-    let (store, _updater) = match watch {
-        None => {
+    let wal_path = args.get("wal").map(str::to_string);
+    anyhow::ensure!(
+        watch.is_none() || wal_path.is_none(),
+        "--watch and --wal are mutually exclusive (the wal IS the delta log)"
+    );
+    let (store, _updater) = match (watch, wal_path) {
+        (None, None) => {
             let path = args
                 .positional
                 .first()
@@ -569,16 +602,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
             (store, upd)
         }
-        Some(deltas) => {
+        (Some(deltas), None) => {
             use pbng::engine::incremental::{IncrementalConfig, IncrementalState};
             let g = load_graph(args)?;
             let kind = args.get_or("kind", "wing").to_string();
-            let fkind = match kind.as_str() {
-                "wing" => pbng::index::ForestKind::Wing,
-                "tip-u" => pbng::index::ForestKind::TipU,
-                "tip-v" => pbng::index::ForestKind::TipV,
-                k => bail!("unknown --kind '{k}' (wing | tip-u | tip-v)"),
-            };
+            let fkind = forest_kind(&kind)?;
             let batch = args.get_usize("batch", 256)?;
             let fallback = args.get_f64("fallback", 0.25)?;
             let ecfg = engine_cfg(args, if kind == "wing" { 64 } else { 32 })?;
@@ -599,6 +627,122 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
             (store, upd)
         }
+        (None, Some(walp)) => {
+            use pbng::engine::incremental::{IncrementalConfig, IncrementalState};
+            use pbng::graph::dynamic::DeltaBatch;
+            use pbng::ingest::{AdaptiveFallback, Pool, PoolConfig};
+            let g = load_graph(args)?;
+            let kind = args.get_or("kind", "wing").to_string();
+            let fkind = forest_kind(&kind)?;
+            let batch = args.get_usize("batch", 256)?.max(1);
+            let delay_ms = args.get_u64("delay-ms", 200)?;
+            let fallback = args.get_f64("fallback", 0.25)?;
+            let ecfg = engine_cfg(args, if kind == "wing" { 64 } else { 32 })?;
+            let threads = ecfg.threads;
+            let icfg = IncrementalConfig { engine: ecfg, fallback_fraction: fallback };
+            let ckpt_path = match args.get("checkpoint") {
+                Some(c) => std::path::PathBuf::from(c),
+                None => std::path::PathBuf::from(format!("{walp}.ckpt")),
+            };
+            // recovery anchor: the checkpoint (if any) replaces the
+            // positional graph and names the sequence replay starts after
+            let (base, start_seq) = if ckpt_path.exists() {
+                let ck = pbng::wal::checkpoint::Checkpoint::load(&ckpt_path)?;
+                anyhow::ensure!(
+                    ck.kind == fkind,
+                    "checkpoint {} holds a {} state, --kind asked for {}",
+                    ckpt_path.display(),
+                    ck.kind.name(),
+                    fkind.name()
+                );
+                anyhow::ensure!(
+                    ck.nu == g.nu() && ck.nv == g.nv(),
+                    "checkpoint universe {}x{} does not match the graph's {}x{}",
+                    ck.nu,
+                    ck.nv,
+                    g.nu(),
+                    g.nv()
+                );
+                eprintln!(
+                    "pbng serve: recovering from checkpoint {} (seq {})",
+                    ckpt_path.display(),
+                    ck.seq
+                );
+                (ck.graph(), ck.seq)
+            } else {
+                (g, 0)
+            };
+            let (mut writer, tail) =
+                pbng::wal::Writer::open_or_create(Path::new(&walp)).map_err(anyhow::Error::new)?;
+            if tail.torn_bytes > 0 {
+                eprintln!(
+                    "pbng serve: truncated {} torn tail byte(s) from {walp} (crash mid-append)",
+                    tail.torn_bytes
+                );
+            }
+            let mut state = IncrementalState::new(&base, fkind, icfg);
+            let (nu, nv) = state.universe();
+            let mut pending = Vec::new();
+            let mut next = start_seq + 1;
+            let mut skipped = 0usize;
+            for rec in &tail.records {
+                if rec.seq <= start_seq {
+                    continue; // already folded into the checkpoint
+                }
+                anyhow::ensure!(
+                    rec.seq == next,
+                    "wal sequence gap during recovery: record {} where {} expected",
+                    rec.seq,
+                    next
+                );
+                for &op in &rec.ops {
+                    let (u, v) = op.key();
+                    if (u as usize) < nu && (v as usize) < nv {
+                        pending.push(op);
+                    } else {
+                        skipped += 1;
+                    }
+                }
+                next += 1;
+            }
+            if skipped > 0 {
+                eprintln!("pbng serve: skipped {skipped} out-of-universe op(s) during replay");
+            }
+            let replayed = pending.len();
+            for ops in pending.chunks(batch) {
+                state.apply(&DeltaBatch::new(ops.to_vec()));
+            }
+            // a fully compacted log must not restart the numbering the
+            // checkpoint already burned
+            writer.ensure_next_seq(next);
+            let start_offset = writer.end_offset();
+            let applied_seq = writer.next_seq() - 1;
+            eprintln!(
+                "pbng serve: wal recovery replayed {replayed} op(s), resuming at seq {}",
+                applied_seq + 1
+            );
+            let engine = pbng::serve::updater::engine_from_state(&state, threads);
+            let store = SnapshotStore::new(engine);
+            store.attach_ingest(pbng::serve::WalSink::new(writer, nu, nv));
+            let upd = Updater::spawn(
+                SnapshotSource::Wal {
+                    state,
+                    path: walp.into(),
+                    pool: Pool::new(PoolConfig {
+                        max_batch: batch,
+                        max_delay: std::time::Duration::from_millis(delay_ms),
+                    }),
+                    ctl: AdaptiveFallback::new(fallback),
+                    threads,
+                    start_offset,
+                    start_seq: applied_seq,
+                },
+                store.clone(),
+                interval,
+            );
+            (store, upd)
+        }
+        (Some(_), Some(_)) => unreachable!("rejected above"),
     };
     args.check_unknown()?;
     let mut cfg = ServerConfig::new()
@@ -611,6 +755,162 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     Server::new(cfg, store).run()?;
     Ok(())
+}
+
+/// `pbng wal`: offline tooling for the durable write-ahead delta log.
+///
+/// * `init <log>` — create (truncate) an empty log with a valid header.
+/// * `append <log> <deltas.txt> [--batch N]` — append a text delta file
+///   as durable records (one record per batch; `--batch 0` = one record
+///   for the whole file).
+/// * `replay <log> [--quiet]` — decode and print every record; exits
+///   non-zero on mid-log corruption (a torn tail is only a warning).
+/// * `compact <log> --graph <g> [--kind K] [--checkpoint C]` — fold the
+///   whole log into a checkpoint of the base graph and drop the folded
+///   records; or `compact <log> --keep-after N` to drop records with
+///   `seq <= N` without writing a checkpoint.
+fn cmd_wal(args: &Args) -> Result<()> {
+    use pbng::wal;
+    let sub = args
+        .positional
+        .first()
+        .context("expected a wal subcommand: init | append | replay | compact")?
+        .clone();
+    match sub.as_str() {
+        "init" => {
+            let log = args.positional.get(1).context("expected a log path")?;
+            args.check_unknown()?;
+            wal::Writer::create(Path::new(log)).map_err(anyhow::Error::new)?;
+            println!("initialized empty wal at {log}");
+            Ok(())
+        }
+        "append" => {
+            use pbng::graph::dynamic::load_deltas;
+            let log = args.positional.get(1).context("expected a log path")?.clone();
+            let deltas = args
+                .positional
+                .get(2)
+                .context("expected a delta file (lines `+ u v` / `- u v`)")?
+                .clone();
+            let batch = args.get_usize("batch", 0)?;
+            args.check_unknown()?;
+            let ops = load_deltas(Path::new(&deltas))?;
+            let (mut w, tail) = wal::Writer::open(Path::new(&log)).map_err(anyhow::Error::new)?;
+            if tail.torn_bytes > 0 {
+                eprintln!("warning: truncated {} torn tail byte(s) from {log}", tail.torn_bytes);
+            }
+            let chunk = if batch == 0 { ops.len().max(1) } else { batch };
+            let mut first = None;
+            let mut last = 0;
+            for part in ops.chunks(chunk) {
+                let seq = w.append(part).map_err(anyhow::Error::new)?;
+                first.get_or_insert(seq);
+                last = seq;
+            }
+            match first {
+                Some(f) => println!(
+                    "appended {} op(s) as {} record(s), seq {f}..={last}",
+                    ops.len(),
+                    last - f + 1
+                ),
+                None => println!("no ops in {deltas}; log unchanged"),
+            }
+            println!("log ends at byte {}", w.end_offset());
+            Ok(())
+        }
+        "replay" => {
+            let log = args.positional.get(1).context("expected a log path")?.clone();
+            let quiet = args.flag("quiet");
+            args.check_unknown()?;
+            let tail = wal::replay(Path::new(&log)).map_err(anyhow::Error::new)?;
+            let mut total_ops = 0usize;
+            for rec in &tail.records {
+                total_ops += rec.ops.len();
+                if !quiet {
+                    println!("seq {} ops {}", rec.seq, rec.ops.len());
+                }
+            }
+            println!(
+                "{} record(s), {} op(s), log ends at byte {}",
+                tail.records.len(),
+                total_ops,
+                tail.end_offset
+            );
+            if tail.torn_bytes > 0 {
+                eprintln!(
+                    "warning: {} torn tail byte(s) after the last valid record \
+                     (a writer will truncate them on open)",
+                    tail.torn_bytes
+                );
+            }
+            Ok(())
+        }
+        "compact" => {
+            let log = args.positional.get(1).context("expected a log path")?.clone();
+            if let Some(keep_after) = args.get("keep-after") {
+                let keep_after: u64 = keep_after
+                    .parse()
+                    .with_context(|| format!("--keep-after expects a sequence number, got '{keep_after}'"))?;
+                args.check_unknown()?;
+                let st = wal::compact(Path::new(&log), keep_after).map_err(anyhow::Error::new)?;
+                println!("kept {} record(s), dropped {}", st.kept, st.dropped);
+                return Ok(());
+            }
+            let graph = args
+                .get("graph")
+                .context("compact needs --graph <base graph> (or --keep-after N)")?
+                .to_string();
+            let fkind = forest_kind(args.get_or("kind", "wing"))?;
+            let ckpt = match args.get("checkpoint") {
+                Some(c) => std::path::PathBuf::from(c),
+                None => std::path::PathBuf::from(format!("{log}.ckpt")),
+            };
+            args.check_unknown()?;
+            let base = match gen::Preset::from_name(&graph) {
+                Some(p) => p.build(),
+                None => io::load(Path::new(&graph))?,
+            };
+            let tail = wal::replay(Path::new(&log)).map_err(anyhow::Error::new)?;
+            // fold every record into a plain dynamic graph (original
+            // orientation; IncrementalState re-orients on recovery)
+            let mut dg = pbng::graph::dynamic::DynGraph::from_graph(&base);
+            let mut skipped = 0usize;
+            let mut final_seq = 0u64;
+            for rec in &tail.records {
+                final_seq = rec.seq;
+                for &op in &rec.ops {
+                    let (u, v) = op.key();
+                    if (u as usize) >= base.nu() || (v as usize) >= base.nv() {
+                        skipped += 1;
+                        continue;
+                    }
+                    match op {
+                        pbng::graph::dynamic::DeltaOp::Insert(u, v) => {
+                            dg.insert(u, v);
+                        }
+                        pbng::graph::dynamic::DeltaOp::Remove(u, v) => {
+                            dg.remove(u, v);
+                        }
+                    }
+                }
+            }
+            if skipped > 0 {
+                eprintln!("warning: skipped {skipped} op(s) outside the graph's vertex universe");
+            }
+            wal::checkpoint::Checkpoint::from_graph(&dg.snapshot(), fkind, final_seq)
+                .save(&ckpt)?;
+            let st = wal::compact(Path::new(&log), final_seq).map_err(anyhow::Error::new)?;
+            println!(
+                "checkpoint {} at seq {final_seq} ({} kind); kept {} record(s), dropped {}",
+                ckpt.display(),
+                fkind.name(),
+                st.kept,
+                st.dropped
+            );
+            Ok(())
+        }
+        other => bail!("unknown wal subcommand '{other}' (init | append | replay | compact)"),
+    }
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {

@@ -52,7 +52,7 @@ pub mod updater;
 
 pub use proto::ProtoVersion;
 pub use snapshot::{Snapshot, SnapshotStore};
-pub use updater::{SnapshotSource, Updater};
+pub use updater::{SnapshotSource, Updater, WalSink};
 
 use crate::index::query::QueryEngine;
 use std::io::{BufRead, Write};

@@ -105,6 +105,27 @@ fn err_frame(reason: &str) -> String {
     format!("ERR {reason}\nEND\n")
 }
 
+/// Parse `ingest (+|-) <u> <v> [(+|-) <u> <v> ...]` into delta ops.
+fn parse_ingest_ops(trimmed: &str) -> Result<Vec<crate::graph::dynamic::DeltaOp>, String> {
+    use crate::graph::dynamic::DeltaOp;
+    let usage = "usage: ingest (+|-) <u> <v> [(+|-) <u> <v> ...]";
+    let rest: Vec<&str> = trimmed.split_whitespace().skip(1).collect();
+    if rest.is_empty() || rest.len() % 3 != 0 {
+        return Err(usage.to_string());
+    }
+    let mut ops = Vec::with_capacity(rest.len() / 3);
+    for t in rest.chunks_exact(3) {
+        let u: u32 = t[1].parse().map_err(|_| format!("bad u '{}' ({usage})", t[1]))?;
+        let v: u32 = t[2].parse().map_err(|_| format!("bad v '{}' ({usage})", t[2]))?;
+        match t[0] {
+            "+" => ops.push(DeltaOp::Insert(u, v)),
+            "-" => ops.push(DeltaOp::Remove(u, v)),
+            s => return Err(format!("bad op sign '{s}' ({usage})")),
+        }
+    }
+    Ok(ops)
+}
+
 fn respond_v2(store: &SnapshotStore, snap: &Snapshot, line: &str) -> Option<(String, bool)> {
     let trimmed = line.trim();
     if trimmed.is_empty() {
@@ -120,6 +141,24 @@ fn respond_v2(store: &SnapshotStore, snap: &Snapshot, line: &str) -> Option<(Str
                 .to_string()
         } else {
             err_frame("reload unavailable (no updater attached to this server)")
+        };
+        return Some((reply, false));
+    }
+    // `ingest` writes to the durable log (the next snapshot), not the
+    // pinned one, so it is intercepted before dispatch too.
+    let verb = trimmed.split_whitespace().next().unwrap_or("");
+    if verb.eq_ignore_ascii_case("ingest") {
+        Registry::global().counter("server.commands").add(1);
+        let reply = match store.ingest_sink() {
+            None => err_frame("ingest unavailable (serve with --wal)"),
+            Some(sink) => match parse_ingest_ops(trimmed) {
+                Err(e) => err_frame(&e),
+                Ok(ops) => match sink.submit(&ops) {
+                    Err(e) => err_frame(&format!("ingest rejected: {e:#}")),
+                    // the reply is the durability ack: seq is on disk
+                    Ok(seq) => format!("OK ingest\nseq {seq} ops {}\nEND\n", ops.len()),
+                },
+            },
         };
         return Some((reply, false));
     }
@@ -153,6 +192,9 @@ fn respond_v2(store: &SnapshotStore, snap: &Snapshot, line: &str) -> Option<(Str
                 "help" => {
                     body.push_str(
                         "\n  reload           rebuild the snapshot from the attached source",
+                    );
+                    body.push_str(
+                        "\n  ingest (+|-) <u> <v> ...   durably append edge deltas (--wal servers)",
                     );
                 }
                 _ => {}
@@ -256,6 +298,54 @@ mod tests {
         let (r, _) = respond(&s, &snap, ProtoVersion::V2, "RELOAD").unwrap();
         assert!(r.starts_with("OK reload\n"), "{r}");
         assert!(s.take_reload_request());
+    }
+
+    #[test]
+    fn v2_ingest_requires_a_wal_sink_and_validates_grammar() {
+        let s = store();
+        let snap = s.load();
+        // no sink attached: shed with a pointer at --wal
+        let (r, q) = respond(&s, &snap, ProtoVersion::V2, "ingest + 0 0").unwrap();
+        assert!(r.starts_with("ERR ingest unavailable"), "{r}");
+        assert!(!q);
+        // attach a sink over a real wal file (paper_fig1 is 9x12)
+        let tmp = crate::testkit::TempDir::new("proto-ingest").unwrap();
+        let log = tmp.path().join("g.wal");
+        let w = crate::wal::Writer::create(&log).unwrap();
+        s.attach_ingest(super::super::updater::WalSink::new(w, 9, 12));
+        // bad grammar never reaches the log
+        let (r, _) = respond(&s, &snap, ProtoVersion::V2, "ingest + 0").unwrap();
+        assert!(r.starts_with("ERR usage: ingest"), "{r}");
+        let (r, _) = respond(&s, &snap, ProtoVersion::V2, "ingest * 0 0").unwrap();
+        assert!(r.starts_with("ERR bad op sign"), "{r}");
+        // out-of-universe ops are rejected before becoming durable
+        let (r, _) = respond(&s, &snap, ProtoVersion::V2, "ingest + 500 0").unwrap();
+        assert!(r.starts_with("ERR ingest rejected:"), "{r}");
+        assert!(crate::wal::replay(&log).unwrap().records.is_empty());
+        // a good batch is acked with its durable sequence number
+        let (r, q) = respond(&s, &snap, ProtoVersion::V2, "ingest + 0 0 - 1 2").unwrap();
+        assert_eq!(r, "OK ingest\nseq 1 ops 2\nEND\n");
+        assert!(!q);
+        let tail = crate::wal::replay(&log).unwrap();
+        assert_eq!(tail.records.len(), 1);
+        assert_eq!(
+            tail.records[0].ops,
+            vec![
+                crate::graph::dynamic::DeltaOp::Insert(0, 0),
+                crate::graph::dynamic::DeltaOp::Remove(1, 2),
+            ]
+        );
+        // help mentions the verb
+        let (h, _) = respond(&s, &snap, ProtoVersion::V2, "help").unwrap();
+        assert!(h.contains("ingest"), "{h}");
+    }
+
+    #[test]
+    fn v1_has_no_ingest_verb() {
+        let s = store();
+        let snap = s.load();
+        let (r, _) = respond(&s, &snap, ProtoVersion::V1, "ingest + 0 0").unwrap();
+        assert!(r.starts_with("ERR unknown command"), "{r}");
     }
 
     #[test]

@@ -35,6 +35,9 @@ pub struct SnapshotStore {
     updater_attached: AtomicBool,
     /// Meters of every *retired* engine, folded in at publish time.
     retired: IndexMeters,
+    /// Durable ingestion sink (set when serving with `--wal`); protocol
+    /// sessions route the `ingest` verb here.
+    ingest: Mutex<Option<Arc<super::updater::WalSink>>>,
 }
 
 impl SnapshotStore {
@@ -49,7 +52,18 @@ impl SnapshotStore {
             reload_requested: AtomicBool::new(false),
             updater_attached: AtomicBool::new(false),
             retired: IndexMeters::new(),
+            ingest: Mutex::new(None),
         })
+    }
+
+    /// Attach the durable ingestion sink (serve `--wal` startup).
+    pub fn attach_ingest(&self, sink: Arc<super::updater::WalSink>) {
+        *self.ingest.lock().unwrap_or_else(|e| e.into_inner()) = Some(sink);
+    }
+
+    /// The attached ingestion sink, if serving with `--wal`.
+    pub fn ingest_sink(&self) -> Option<Arc<super::updater::WalSink>> {
+        self.ingest.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// The current snapshot. Cheap (one `Arc` clone under a short lock);

@@ -1,6 +1,7 @@
 //! Background snapshot updater: turns an external source of change —
-//! a re-written index file or a growing delta log — into freshly built
-//! [`QueryEngine`]s published through a [`SnapshotStore`].
+//! a re-written index file, a growing delta log, or a durable WAL —
+//! into freshly built [`QueryEngine`]s published through a
+//! [`SnapshotStore`].
 //!
 //! The updater runs on its own thread and never touches live sessions:
 //! it builds the replacement engine completely off to the side (full
@@ -12,24 +13,35 @@
 //! Refresh triggers: a `reload` protocol command
 //! ([`SnapshotStore::request_reload`]) forces a rebuild on the next
 //! poll; otherwise [`SnapshotSource::IndexFile`] rebuilds when the file
-//! changes on disk (length/mtime) and [`SnapshotSource::DeltaLog`]
-//! rebuilds when the log has grown past the ops already consumed.
+//! changes on disk (length/mtime/content checksum),
+//! [`SnapshotSource::DeltaLog`] rebuilds when the log has grown past
+//! the ops already consumed, and [`SnapshotSource::Wal`] tails the
+//! binary log from a committed byte offset, stages fresh ops in a
+//! coalescing [`Pool`], and rebuilds when a batch-formation trigger
+//! (size, latency deadline, or forced reload) fires.
 //!
 //! Outcomes are observable in the registry: `server.reloads` /
-//! `server.reload_errors` counters and the `server.reload_ns` build
-//! latency histogram. A failed reload keeps the previous snapshot
-//! serving — errors shed work, never availability.
+//! `server.reload_errors` / `server.log_rotated` counters, the
+//! `server.reload_ns` build latency histogram, and the `ingest.*`
+//! family for the WAL path. A failed reload keeps the previous
+//! snapshot serving — errors shed work, never availability. Source
+//! errors on unforced polls are rate-limited to one count per distinct
+//! error, so a persistently garbled log is visible without flooding
+//! the counter.
 
 use super::snapshot::SnapshotStore;
 use crate::beindex::BeIndex;
 use crate::engine::incremental::IncrementalState;
-use crate::graph::dynamic::{load_deltas, DeltaBatch};
+use crate::graph::dynamic::{load_deltas, DeltaBatch, DeltaOp};
 use crate::index::query::QueryEngine;
 use crate::index::{build_tip_forest, build_wing_forest, codec, ForestKind};
+use crate::ingest::{AdaptiveFallback, Pool};
 use crate::obs::Registry;
+use crate::par::Counter;
+use crate::wal;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Where new snapshots come from.
@@ -46,6 +58,23 @@ pub enum SnapshotSource {
         path: PathBuf,
         batch: usize,
         threads: usize,
+    },
+    /// A durable binary write-ahead log ([`crate::wal`]): tailed from a
+    /// committed byte offset (no re-parse of consumed records), staged
+    /// through a coalescing [`Pool`], applied with the full-rebuild
+    /// threshold steered by an [`AdaptiveFallback`] controller.
+    Wal {
+        state: IncrementalState,
+        path: PathBuf,
+        pool: Pool,
+        ctl: AdaptiveFallback,
+        threads: usize,
+        /// Byte offset of the first unconsumed record (recovery hands
+        /// the updater the position just past everything it replayed).
+        start_offset: u64,
+        /// Sequence number of the last record already folded into
+        /// `state` (0 when starting from scratch).
+        start_seq: u64,
     },
 }
 
@@ -75,10 +104,77 @@ pub fn engine_from_state(state: &IncrementalState, threads: usize) -> QueryEngin
     }
 }
 
-/// `(len, mtime)` fingerprint used to detect index-file rewrites.
-fn fingerprint(path: &std::path::Path) -> Option<(u64, std::time::SystemTime)> {
+/// `(len, mtime, fnv64(content))` fingerprint used to detect index-file
+/// rewrites. The content checksum is what catches a same-length rewrite
+/// landing within the filesystem's mtime granularity — `(len, mtime)`
+/// alone missed those, leaving a stale snapshot serving indefinitely.
+fn fingerprint(path: &std::path::Path) -> Option<(u64, std::time::SystemTime, u64)> {
     let meta = std::fs::metadata(path).ok()?;
-    Some((meta.len(), meta.modified().ok()?))
+    let sum = codec::fnv64(&std::fs::read(path).ok()?);
+    Some((meta.len(), meta.modified().ok()?, sum))
+}
+
+/// Count a source error once per distinct message: repeating the same
+/// failure on every poll would make the counter useless as a rate
+/// signal, but the *first* occurrence must be visible so operators can
+/// tell a wedged pipeline from a quiet one.
+fn note_reload_error(errors: &Counter, msg: &str, last: &mut Option<String>) {
+    if last.as_deref() == Some(msg) {
+        return;
+    }
+    errors.add(1);
+    eprintln!("pbng serve: source error (keeping snapshot): {msg}");
+    *last = Some(msg.to_string());
+}
+
+/// Durable ingestion handle shared with protocol sessions: the `ingest`
+/// verb appends client batches here, and the [`SnapshotSource::Wal`]
+/// updater picks them up by tailing the same file. `Ok(seq)` is the
+/// durability acknowledgment — the record is fsynced before it returns.
+pub struct WalSink {
+    writer: Mutex<wal::Writer>,
+    nu: usize,
+    nv: usize,
+}
+
+impl WalSink {
+    pub fn new(writer: wal::Writer, nu: usize, nv: usize) -> Arc<WalSink> {
+        Arc::new(WalSink {
+            writer: Mutex::new(writer),
+            nu,
+            nv,
+        })
+    }
+
+    /// `(nu, nv)` bounds enforced on submitted ops.
+    pub fn universe(&self) -> (usize, usize) {
+        (self.nu, self.nv)
+    }
+
+    /// Validate and durably append one client batch. Validation happens
+    /// *before* the append so a bad op is never made durable — the WAL
+    /// only ever holds ops the engine will accept on replay.
+    pub fn submit(&self, ops: &[DeltaOp]) -> anyhow::Result<u64> {
+        for &op in ops {
+            let (u, v) = op.key();
+            anyhow::ensure!(
+                (u as usize) < self.nu && (v as usize) < self.nv,
+                "op ({u}, {v}) outside universe {}x{}",
+                self.nu,
+                self.nv
+            );
+        }
+        let t0 = Instant::now();
+        let seq = {
+            let mut w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
+            w.append(ops).map_err(anyhow::Error::new)?
+        };
+        let reg = Registry::global();
+        reg.counter("ingest.records").add(1);
+        reg.counter("ingest.ops").add(ops.len() as u64);
+        reg.histogram("ingest.append_ns").record_duration(t0.elapsed());
+        Ok(seq)
+    }
 }
 
 impl Updater {
@@ -100,12 +196,22 @@ impl Updater {
                 let errors = reg.counter("server.reload_errors");
                 let latency = reg.histogram("server.reload_ns");
                 // baseline: the initial snapshot already reflects the
-                // current file state
+                // current source state
                 let mut seen = match &source {
                     SnapshotSource::IndexFile(p) => IndexSeen::File(fingerprint(p)),
-                    SnapshotSource::DeltaLog { path, .. } => {
-                        IndexSeen::Ops(load_deltas(path).map(|o| o.len()).unwrap_or(0))
-                    }
+                    SnapshotSource::DeltaLog { path, .. } => IndexSeen::Ops {
+                        consumed: load_deltas(path).map(|o| o.len()).unwrap_or(0),
+                        last_error: None,
+                    },
+                    SnapshotSource::Wal {
+                        start_offset,
+                        start_seq,
+                        ..
+                    } => IndexSeen::Wal {
+                        offset: *start_offset,
+                        next_seq: *start_seq + 1,
+                        last_error: None,
+                    },
                 };
                 // ORDERING: Acquire pairs with the Release store in
                 // `shutdown`, giving the loop a clean exit hand-off.
@@ -159,8 +265,18 @@ impl Drop for Updater {
 
 /// What the updater last saw in its source.
 enum IndexSeen {
-    File(Option<(u64, std::time::SystemTime)>),
-    Ops(usize),
+    File(Option<(u64, std::time::SystemTime, u64)>),
+    Ops {
+        consumed: usize,
+        last_error: Option<String>,
+    },
+    Wal {
+        /// Byte offset of the first unconsumed record.
+        offset: u64,
+        /// Sequence number the next fresh record must carry.
+        next_seq: u64,
+        last_error: Option<String>,
+    },
 }
 
 /// Check the source once; `Ok(Some)` is a freshly built engine to
@@ -188,16 +304,42 @@ fn refresh(
                 batch,
                 threads,
             },
-            IndexSeen::Ops(consumed),
+            IndexSeen::Ops {
+                consumed,
+                last_error,
+            },
         ) => {
             let ops = match load_deltas(path) {
-                Ok(ops) => ops,
-                // a missing/garbled log is only an error when the client
-                // explicitly asked for a reload; otherwise keep waiting
+                Ok(ops) => {
+                    *last_error = None;
+                    ops
+                }
+                // a missing/garbled log is fatal only when the client
+                // explicitly asked for a reload; otherwise surface it
+                // (once per distinct error) and keep serving
                 Err(e) if forced => return Err(e),
-                Err(_) => return Ok(None),
+                Err(e) => {
+                    note_reload_error(
+                        &Registry::global().counter("server.reload_errors"),
+                        &format!("{e:#}"),
+                        last_error,
+                    );
+                    return Ok(None);
+                }
             };
-            let fresh = ops.len().saturating_sub(*consumed);
+            if ops.len() < *consumed {
+                // the log shrank under us (truncated or rotated):
+                // re-sync to its new length instead of slicing out of
+                // bounds on `ops[*consumed..]`
+                Registry::global().counter("server.log_rotated").add(1);
+                eprintln!(
+                    "pbng serve: delta log truncated/rotated ({} ops on disk, {} consumed); re-syncing",
+                    ops.len(),
+                    *consumed
+                );
+                *consumed = ops.len();
+            }
+            let fresh = ops.len() - *consumed;
             if fresh == 0 && !forced {
                 return Ok(None);
             }
@@ -208,6 +350,135 @@ fn refresh(
             *consumed = ops.len();
             Ok(Some(engine_from_state(state, *threads)))
         }
+        (
+            SnapshotSource::Wal {
+                state,
+                path,
+                pool,
+                ctl,
+                threads,
+                ..
+            },
+            IndexSeen::Wal {
+                offset,
+                next_seq,
+                last_error,
+            },
+        ) => {
+            let reg = Registry::global();
+            let now = Instant::now();
+            match wal::read_from(path, *offset) {
+                Ok(tail) => {
+                    // records at or below the applied sequence are
+                    // replayed history (post-rotation catch-up); the
+                    // rest must continue the numbering exactly — a gap
+                    // means records were lost and replaying past it
+                    // would silently diverge θ
+                    let mut fresh: Vec<DeltaOp> = Vec::new();
+                    let mut expect = *next_seq;
+                    let mut stale = 0u64;
+                    let mut gap = None;
+                    for rec in &tail.records {
+                        if rec.seq < expect {
+                            stale += 1;
+                            continue;
+                        }
+                        if rec.seq != expect {
+                            gap = Some((rec.seq, expect));
+                            break;
+                        }
+                        fresh.extend_from_slice(&rec.ops);
+                        expect += 1;
+                    }
+                    if let Some((got, want)) = gap {
+                        let msg =
+                            format!("wal sequence gap: found record {got} where {want} expected");
+                        if forced {
+                            anyhow::bail!(msg);
+                        }
+                        note_reload_error(
+                            &reg.counter("server.reload_errors"),
+                            &msg,
+                            last_error,
+                        );
+                        // do not advance: the next poll re-examines the
+                        // same region, so nothing is skipped silently
+                        return Ok(None);
+                    }
+                    if stale > 0 {
+                        reg.counter("ingest.stale_records").add(stale);
+                    }
+                    // the WAL is validated on append, but a foreign log
+                    // could carry out-of-universe ops; the engine would
+                    // assert on them, so shed instead
+                    let (nu, nv) = state.universe();
+                    let mut rejected = 0u64;
+                    for op in fresh {
+                        let (u, v) = op.key();
+                        if (u as usize) < nu && (v as usize) < nv {
+                            pool.push(op, now);
+                        } else {
+                            rejected += 1;
+                        }
+                    }
+                    if rejected > 0 {
+                        reg.counter("ingest.rejected").add(rejected);
+                        eprintln!(
+                            "pbng serve: dropped {rejected} wal op(s) outside universe {nu}x{nv}"
+                        );
+                    }
+                    *offset = tail.end_offset;
+                    *next_seq = expect;
+                    *last_error = None;
+                }
+                Err(wal::WalError::Rotated { offset: at, len }) => {
+                    // compacted/replaced under us: restart from the
+                    // head; already-applied records are skipped by
+                    // sequence number on the next poll
+                    reg.counter("server.log_rotated").add(1);
+                    eprintln!(
+                        "pbng serve: wal rotated (offset {at} past length {len}); re-reading from head"
+                    );
+                    *offset = wal::HEADER_LEN;
+                    *last_error = None;
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    if forced {
+                        return Err(anyhow::Error::new(e));
+                    }
+                    note_reload_error(&reg.counter("server.reload_errors"), &msg, last_error);
+                    return Ok(None);
+                }
+            }
+            match pool.take_ready(now, forced) {
+                Some((batches, lag)) => {
+                    reg.histogram("ingest.lag_ns").record_duration(lag);
+                    let batch_ops = reg.histogram("ingest.batch_ops");
+                    let batches_ctr = reg.counter("ingest.batches");
+                    let rebuilds = reg.counter("ingest.full_rebuilds");
+                    for b in &batches {
+                        batch_ops.record(b.ops.len() as u64);
+                        let up = state.apply(b);
+                        let t = ctl.observe(&up);
+                        state.set_fallback_fraction(t);
+                        batches_ctr.add(1);
+                        if up.full_rebuild {
+                            rebuilds.add(1);
+                        }
+                    }
+                    let st = pool.stats();
+                    reg.counter("ingest.staged").set(st.staged);
+                    reg.counter("ingest.coalesced").set(st.coalesced);
+                    reg.counter("ingest.cancelled").set(st.cancelled);
+                    Ok(Some(engine_from_state(state, *threads)))
+                }
+                // a forced reload always republishes, even with nothing
+                // staged (parity with the other sources)
+                None if forced => Ok(Some(engine_from_state(state, *threads))),
+                None => Ok(None),
+            }
+        }
         _ => unreachable!("seen state always matches the source variant"),
     }
 }
@@ -217,8 +488,10 @@ mod tests {
     use super::*;
     use crate::engine::incremental::IncrementalConfig;
     use crate::graph::gen;
+    use crate::ingest::PoolConfig;
     use crate::peel::bup::wing_bup;
     use crate::testkit::TempDir;
+    use std::io::Write as _;
 
     fn engine_for(g: &crate::graph::BipartiteGraph) -> QueryEngine {
         let (idx, _) = BeIndex::build(g, 1);
@@ -236,7 +509,7 @@ mod tests {
 
     #[test]
     fn index_file_source_reloads_on_request() {
-        let tmp = TempDir::new("serve-updater-idx");
+        let tmp = TempDir::new("serve-updater-idx").unwrap();
         let path = tmp.path().join("g.idx");
         let g1 = gen::zipf(20, 20, 110, 1.2, 1.2, 5);
         let (idx1, _) = BeIndex::build(&g1, 1);
@@ -268,7 +541,7 @@ mod tests {
 
     #[test]
     fn delta_log_source_applies_new_ops_and_republishes() {
-        let tmp = TempDir::new("serve-updater-log");
+        let tmp = TempDir::new("serve-updater-log").unwrap();
         let log = tmp.path().join("deltas.txt");
         std::fs::write(&log, "").unwrap();
         let g = gen::zipf(16, 14, 80, 1.2, 1.2, 3);
@@ -307,7 +580,7 @@ mod tests {
 
     #[test]
     fn failed_reload_keeps_the_old_snapshot() {
-        let tmp = TempDir::new("serve-updater-bad");
+        let tmp = TempDir::new("serve-updater-bad").unwrap();
         let path = tmp.path().join("missing.idx");
         let g = gen::zipf(12, 12, 60, 1.2, 1.2, 2);
         let store = SnapshotStore::new(engine_for(&g));
@@ -326,5 +599,199 @@ mod tests {
         }
         assert_eq!(store.epoch(), 1, "failed reload must not publish");
         upd.stop();
+    }
+
+    // --- regression: the three watch-path bugs this PR fixes ---
+
+    #[test]
+    fn truncated_delta_log_no_longer_panics_on_forced_reload() {
+        let tmp = TempDir::new("serve-updater-trunc").unwrap();
+        let log = tmp.path().join("deltas.txt");
+        std::fs::write(&log, "+ 0 0\n").unwrap();
+        let g = gen::zipf(10, 10, 40, 1.2, 1.2, 4);
+        let mut source = SnapshotSource::DeltaLog {
+            state: IncrementalState::new(&g, ForestKind::Wing, IncrementalConfig::default()),
+            path: log,
+            batch: 4,
+            threads: 1,
+        };
+        // pretend a longer incarnation of the log had already been
+        // consumed, then the file was truncated/rotated under us —
+        // this used to slice `ops[5..]` out of a 1-op vec and panic
+        let mut seen = IndexSeen::Ops {
+            consumed: 5,
+            last_error: None,
+        };
+        let rotated = Registry::global().counter("server.log_rotated");
+        let before = rotated.get();
+        let out = refresh(&mut source, &mut seen, true).unwrap();
+        assert!(out.is_some(), "forced reload publishes after re-sync");
+        assert!(rotated.get() > before, "rotation is a counted event");
+        match &seen {
+            IndexSeen::Ops { consumed, .. } => assert_eq!(*consumed, 1),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn garbled_delta_log_is_counted_not_silently_swallowed() {
+        let tmp = TempDir::new("serve-updater-garbled").unwrap();
+        let log = tmp.path().join("deltas.txt");
+        std::fs::write(&log, "+ 0 0\nthis is not a delta\n").unwrap();
+        let g = gen::zipf(10, 10, 40, 1.2, 1.2, 4);
+        let mut source = SnapshotSource::DeltaLog {
+            state: IncrementalState::new(&g, ForestKind::Wing, IncrementalConfig::default()),
+            path: log,
+            batch: 4,
+            threads: 1,
+        };
+        let mut seen = IndexSeen::Ops {
+            consumed: 0,
+            last_error: None,
+        };
+        let errors = Registry::global().counter("server.reload_errors");
+        let before = errors.get();
+        assert!(refresh(&mut source, &mut seen, false).unwrap().is_none());
+        let first = match &seen {
+            IndexSeen::Ops { last_error, .. } => {
+                last_error.clone().expect("error recorded for rate-limiting")
+            }
+            _ => unreachable!(),
+        };
+        assert!(errors.get() >= before + 1, "garbled log increments the counter");
+        // same error again: still Ok(None), error string unchanged (the
+        // count is rate-limited per distinct message)
+        assert!(refresh(&mut source, &mut seen, false).unwrap().is_none());
+        match &seen {
+            IndexSeen::Ops { last_error, .. } => {
+                assert_eq!(last_error.as_deref(), Some(first.as_str()))
+            }
+            _ => unreachable!(),
+        }
+        // forced reload surfaces it as a hard error
+        assert!(refresh(&mut source, &mut seen, true).is_err());
+    }
+
+    #[test]
+    fn note_reload_error_rate_limits_per_distinct_error() {
+        // a test-only counter name keeps this deterministic under
+        // parallel tests (nothing else touches it)
+        let c = Registry::global().counter("test.updater.note_rate_limit");
+        let mut last = None;
+        note_reload_error(&c, "boom", &mut last);
+        assert_eq!(c.get(), 1);
+        note_reload_error(&c, "boom", &mut last);
+        assert_eq!(c.get(), 1, "repeat of the same error is not re-counted");
+        note_reload_error(&c, "other", &mut last);
+        assert_eq!(c.get(), 2, "a distinct error is counted");
+        note_reload_error(&c, "boom", &mut last);
+        assert_eq!(c.get(), 3, "alternating errors are each distinct");
+    }
+
+    #[test]
+    fn fingerprint_detects_same_length_rewrites() {
+        let tmp = TempDir::new("serve-updater-fp").unwrap();
+        let p = tmp.path().join("f.bin");
+        std::fs::write(&p, b"aaaa").unwrap();
+        let f1 = fingerprint(&p).unwrap();
+        std::fs::write(&p, b"aaab").unwrap();
+        let f2 = fingerprint(&p).unwrap();
+        assert_eq!(f1.0, f2.0, "lengths agree by construction");
+        assert_ne!(
+            f1.2, f2.2,
+            "content checksum distinguishes same-length rewrites even when mtime does not"
+        );
+    }
+
+    // --- the WAL source ---
+
+    #[test]
+    fn wal_source_tails_batches_and_survives_torn_tail_and_rotation() {
+        let tmp = TempDir::new("serve-updater-wal").unwrap();
+        let log = tmp.path().join("g.wal");
+        let g = gen::zipf(16, 14, 80, 1.2, 1.2, 3);
+        let mut w = wal::Writer::create(&log).unwrap();
+        let state = IncrementalState::new(&g, ForestKind::Wing, IncrementalConfig::default());
+        let start_offset = w.end_offset();
+        let mut source = SnapshotSource::Wal {
+            state,
+            path: log.clone(),
+            pool: Pool::new(PoolConfig {
+                max_batch: 4,
+                max_delay: Duration::ZERO, // drain whenever non-empty
+            }),
+            ctl: AdaptiveFallback::new(0.25),
+            threads: 1,
+            start_offset,
+            start_seq: 0,
+        };
+        let mut seen = IndexSeen::Wal {
+            offset: start_offset,
+            next_seq: 1,
+            last_error: None,
+        };
+        // empty log: nothing to publish
+        assert!(refresh(&mut source, &mut seen, false).unwrap().is_none());
+        // two records; one op is outside the universe and must be shed
+        // before it reaches the engine (which would assert)
+        w.append(&[DeltaOp::Insert(0, 0), DeltaOp::Insert(1, 13)]).unwrap();
+        w.append(&[DeltaOp::Insert(2, 11), DeltaOp::Insert(500, 1)]).unwrap();
+        let eng = refresh(&mut source, &mut seen, false)
+            .unwrap()
+            .expect("deadline-zero pool publishes");
+        let g2 = crate::graph::GraphBuilder::new()
+            .nu(g.nu())
+            .nv(g.nv())
+            .edges(g.edges())
+            .edges(&[(0, 0), (1, 13), (2, 11)])
+            .build();
+        assert_eq!(
+            crate::index::server::dispatch(&eng, "summary").body.unwrap(),
+            crate::index::server::dispatch(&engine_for(&g2), "summary").body.unwrap(),
+            "wal-maintained snapshot answers like a fresh build"
+        );
+        // offset committed: an immediate re-poll is a no-op
+        assert!(refresh(&mut source, &mut seen, false).unwrap().is_none());
+        // a torn append (crash mid-write) is ignored until completed
+        let mut f = std::fs::OpenOptions::new().append(true).open(&log).unwrap();
+        f.write_all(&[13, 0]).unwrap();
+        drop(f);
+        assert!(refresh(&mut source, &mut seen, false).unwrap().is_none());
+        match &seen {
+            IndexSeen::Wal { next_seq, .. } => assert_eq!(*next_seq, 3),
+            _ => unreachable!(),
+        }
+        // compaction rotates the file under the tailing reader: counted,
+        // offset resets, and subsequent polls stay healthy
+        let rotated = Registry::global().counter("server.log_rotated");
+        let before = rotated.get();
+        wal::compact(&log, 2).unwrap();
+        assert!(refresh(&mut source, &mut seen, false).unwrap().is_none());
+        assert!(rotated.get() > before, "wal rotation is a counted event");
+        match &seen {
+            IndexSeen::Wal { offset, .. } => assert_eq!(*offset, wal::HEADER_LEN),
+            _ => unreachable!(),
+        }
+        assert!(refresh(&mut source, &mut seen, false).unwrap().is_none());
+        // forced reload with nothing staged still republishes
+        assert!(refresh(&mut source, &mut seen, true).unwrap().is_some());
+    }
+
+    #[test]
+    fn wal_sink_validates_before_making_ops_durable() {
+        let tmp = TempDir::new("serve-walsink").unwrap();
+        let log = tmp.path().join("g.wal");
+        let w = wal::Writer::create(&log).unwrap();
+        let sink = WalSink::new(w, 10, 10);
+        assert_eq!(sink.universe(), (10, 10));
+        let err = sink
+            .submit(&[DeltaOp::Insert(1, 1), DeltaOp::Insert(100, 0)])
+            .unwrap_err();
+        assert!(err.to_string().contains("outside universe"), "{err}");
+        let seq = sink.submit(&[DeltaOp::Insert(1, 2)]).unwrap();
+        assert_eq!(seq, 1, "rejected batch burned no sequence number");
+        let tail = wal::replay(&log).unwrap();
+        assert_eq!(tail.records.len(), 1, "rejected batch never hit the disk");
+        assert_eq!(tail.records[0].ops, vec![DeltaOp::Insert(1, 2)]);
     }
 }

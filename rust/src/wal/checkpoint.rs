@@ -1,0 +1,216 @@
+//! Graph checkpoints anchoring WAL replay.
+//!
+//! A checkpoint is the durable companion of [`super::compact`]: it
+//! captures the full edge set of the maintained graph *in its original
+//! orientation* together with the sequence number of the last WAL
+//! record folded into it. Recovery is then
+//! `checkpoint + replay(records with seq > checkpoint.seq)`, which the
+//! differential tests pin to be byte-identical in θ to a from-scratch
+//! decompose. The orientation matters: `IncrementalState::new` performs
+//! its own peel-side transposition for tip-V, so the checkpoint always
+//! stores what the *caller* sees — the same (nu, nv, edges) the input
+//! TSV had.
+//!
+//! Layout (little-endian throughout, mirroring `index::codec`):
+//!
+//! ```text
+//! header  40 bytes: magic "PBNGCKP1", version u32, kind u8, pad ×3,
+//!         seq u64, nu u64, nv u64
+//! hdrsum  fnv64(header) u64
+//! edges   one codec-style section: len u64 | len bytes of (u,v) u32
+//!         pairs | fnv64(bytes) u64
+//! ```
+
+use crate::graph::{BipartiteGraph, GraphBuilder};
+use crate::index::codec::fnv64;
+use crate::index::ForestKind;
+use anyhow::{bail, ensure, Context, Result};
+use std::fs::File;
+use std::io::Write as _;
+use std::path::Path;
+
+pub const MAGIC: &[u8; 8] = b"PBNGCKP1";
+pub const VERSION: u32 = 1;
+const HEADER_LEN: usize = 40;
+
+/// A recovery anchor: the graph state after applying every WAL record
+/// with sequence number ≤ `seq`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Checkpoint {
+    pub kind: ForestKind,
+    pub seq: u64,
+    pub nu: usize,
+    pub nv: usize,
+    /// Original-orientation edge list, sorted for determinism.
+    pub edges: Vec<(u32, u32)>,
+}
+
+impl Checkpoint {
+    /// Capture `g` (already in original orientation) at WAL position `seq`.
+    pub fn from_graph(g: &BipartiteGraph, kind: ForestKind, seq: u64) -> Checkpoint {
+        let mut edges = g.edges().to_vec();
+        edges.sort_unstable();
+        Checkpoint {
+            kind,
+            seq,
+            nu: g.nu(),
+            nv: g.nv(),
+            edges,
+        }
+    }
+
+    /// Rebuild the checkpointed graph.
+    pub fn graph(&self) -> BipartiteGraph {
+        GraphBuilder::new()
+            .nu(self.nu)
+            .nv(self.nv)
+            .edges(&self.edges)
+            .build()
+    }
+
+    /// Atomically persist to `path` (temp-file + rename, like the
+    /// index codec): a crash mid-save leaves the previous checkpoint
+    /// intact.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut hdr = [0u8; HEADER_LEN];
+        hdr[..8].copy_from_slice(MAGIC);
+        hdr[8..12].copy_from_slice(&VERSION.to_le_bytes());
+        hdr[12] = self.kind.tag();
+        // bytes 13..16 pad (zero)
+        hdr[16..24].copy_from_slice(&self.seq.to_le_bytes());
+        hdr[24..32].copy_from_slice(&(self.nu as u64).to_le_bytes());
+        hdr[32..40].copy_from_slice(&(self.nv as u64).to_le_bytes());
+
+        let mut body = Vec::with_capacity(self.edges.len() * 8);
+        for &(u, v) in &self.edges {
+            body.extend_from_slice(&u.to_le_bytes());
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+
+        let mut name = path
+            .file_name()
+            .map(|n| n.to_os_string())
+            .unwrap_or_else(|| "ckpt".into());
+        name.push(".tmp");
+        let tmp = path.with_file_name(name);
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("create {}", tmp.display()))?;
+            f.write_all(&hdr)?;
+            f.write_all(&fnv64(&hdr).to_le_bytes())?;
+            f.write_all(&(body.len() as u64).to_le_bytes())?;
+            f.write_all(&body)?;
+            f.write_all(&fnv64(&body).to_le_bytes())?;
+            f.sync_data()?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename checkpoint into {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load and fully validate a checkpoint written by [`Checkpoint::save`].
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read checkpoint {}", path.display()))?;
+        ensure!(
+            bytes.len() >= HEADER_LEN + 8 + 8 + 8,
+            "checkpoint too short ({} bytes)",
+            bytes.len()
+        );
+        let hdr = &bytes[..HEADER_LEN];
+        ensure!(&hdr[..8] == MAGIC, "bad checkpoint magic (not a pbng checkpoint)");
+        let ver = u32::from_le_bytes(hdr[8..12].try_into().expect("sized slice"));
+        ensure!(ver == VERSION, "unsupported checkpoint version {ver}");
+        let Some(kind) = ForestKind::from_tag(hdr[12]) else {
+            bail!("unknown forest kind tag {}", hdr[12]);
+        };
+        let seq = u64::from_le_bytes(hdr[16..24].try_into().expect("sized slice"));
+        let nu = u64::from_le_bytes(hdr[24..32].try_into().expect("sized slice")) as usize;
+        let nv = u64::from_le_bytes(hdr[32..40].try_into().expect("sized slice")) as usize;
+        let hdrsum = u64::from_le_bytes(
+            bytes[HEADER_LEN..HEADER_LEN + 8]
+                .try_into()
+                .expect("sized slice"),
+        );
+        ensure!(fnv64(hdr) == hdrsum, "checkpoint header checksum mismatch");
+
+        let mut pos = HEADER_LEN + 8;
+        let body_len = u64::from_le_bytes(
+            bytes[pos..pos + 8].try_into().expect("sized slice"),
+        ) as usize;
+        pos += 8;
+        ensure!(
+            body_len % 8 == 0 && bytes.len() == pos + body_len + 8,
+            "checkpoint edge section length {body_len} disagrees with file size {}",
+            bytes.len()
+        );
+        let body = &bytes[pos..pos + body_len];
+        let bodysum = u64::from_le_bytes(
+            bytes[pos + body_len..pos + body_len + 8]
+                .try_into()
+                .expect("sized slice"),
+        );
+        ensure!(fnv64(body) == bodysum, "checkpoint edge checksum mismatch");
+
+        let mut edges = Vec::with_capacity(body_len / 8);
+        for pair in body.chunks_exact(8) {
+            let u = u32::from_le_bytes(pair[..4].try_into().expect("sized slice"));
+            let v = u32::from_le_bytes(pair[4..].try_into().expect("sized slice"));
+            ensure!(
+                (u as usize) < nu && (v as usize) < nv,
+                "checkpoint edge ({u}, {v}) outside universe {nu}x{nv}"
+            );
+            edges.push((u, v));
+        }
+        Ok(Checkpoint {
+            kind,
+            seq,
+            nu,
+            nv,
+            edges,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::testkit::TempDir;
+
+    #[test]
+    fn checkpoint_roundtrips_for_all_kinds() {
+        let dir = TempDir::new("ckpt-roundtrip").unwrap();
+        let g = gen::erdos(40, 44, 180, 7);
+        for kind in [ForestKind::Wing, ForestKind::TipU, ForestKind::TipV] {
+            let p = dir.file(&format!("ck-{}.bin", kind.tag()));
+            let ck = Checkpoint::from_graph(&g, kind, 17);
+            ck.save(&p).unwrap();
+            let back = Checkpoint::load(&p).unwrap();
+            assert_eq!(back, ck);
+            let rg = back.graph();
+            assert_eq!((rg.nu(), rg.nv(), rg.m()), (g.nu(), g.nv(), g.m()));
+            let mut want = g.edges().to_vec();
+            want.sort_unstable();
+            assert_eq!(rg.edges(), &want[..]);
+        }
+    }
+
+    #[test]
+    fn corruption_and_foreign_files_are_rejected() {
+        let dir = TempDir::new("ckpt-corrupt").unwrap();
+        let g = gen::erdos(10, 10, 25, 3);
+        let p = dir.file("ck.bin");
+        Checkpoint::from_graph(&g, ForestKind::Wing, 5).save(&p).unwrap();
+
+        let mut bytes = std::fs::read(&p).unwrap();
+        let flip = bytes.len() - 12; // inside the edge body
+        bytes[flip] ^= 0x10;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+
+        std::fs::write(&p, b"not a checkpoint at all, sorry........").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+}

@@ -1,0 +1,607 @@
+//! Durable write-ahead delta log: the storage half of the streaming
+//! ingestion pipeline (the staging half is [`crate::ingest`]).
+//!
+//! The text delta files consumed by `pbng update` / `serve --watch` are
+//! fine as one-shot inputs but unusable as a durability substrate: they
+//! must be re-parsed whole on every poll, a torn write is
+//! indistinguishable from a garbled line, and nothing ties "what was
+//! applied" to "what is on disk". This module replaces them with an
+//! append-only binary record log following the framing idioms of
+//! [`crate::index::codec`] (little-endian integers, length-prefixed
+//! payloads, FNV-1a 64 checksums):
+//!
+//! ```text
+//! header   24 bytes: magic "PBNGWAL1", version u32, reserved u32,
+//!          fnv64(first 16 bytes)
+//! record   len: u32 | payload: len bytes | fnv64(payload): u64
+//! payload  seq: u64 | count: u32 | count × 9-byte DeltaOp wire forms
+//! ```
+//!
+//! Sequence numbers are strictly contiguous (`seq + 1` per record), so
+//! a reader can tell replayed history, fresh records, and lost records
+//! apart. The error taxonomy is the contract the serving layer builds
+//! on:
+//!
+//! * **Torn tail** — the final frame extends past end-of-file (a crash
+//!   mid-append, or a concurrent writer caught mid-frame). Tolerated:
+//!   [`read_from`] stops at the last complete record and reports the
+//!   dangling bytes; [`Writer::open`] truncates them (truncate-on-
+//!   replay), which is safe because [`Writer::append`] only
+//!   acknowledges a record after `fsync`.
+//! * **Mid-log corruption** — a complete frame whose checksum fails, an
+//!   implausible length prefix, a bad op tag, or a sequence gap.
+//!   Rejected loudly ([`WalError::Corrupt`]): replaying past damage
+//!   would silently diverge the maintained θ.
+//! * **Rotation** — the file shrank below the reader's resume offset
+//!   (an external `wal compact` or replacement).
+//!   [`WalError::Rotated`] tells tailing readers to restart from the
+//!   head and skip already-applied sequence numbers.
+//!
+//! One deliberate trade-off: a frame claiming to extend past EOF is
+//! classified as *torn*, not corrupt. A bit-flipped length prefix could
+//! therefore masquerade as a torn tail and truncate valid later
+//! records — but only if the flipped length still lands under
+//! [`MAX_RECORD_BYTES`] *and* inside the remaining file; flips past the
+//! bound are caught as corruption. Sequence contiguity at the next open
+//! catches the remaining cases.
+
+pub mod checkpoint;
+
+use crate::graph::dynamic::DeltaOp;
+use crate::index::codec::fnv64;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write as _};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 8] = b"PBNGWAL1";
+pub const VERSION: u32 = 1;
+/// File offset of the first record (magic + version + reserved + hdrsum).
+pub const HEADER_LEN: u64 = 24;
+/// Upper bound on one record's payload. Lengths beyond it are rejected
+/// as corruption rather than interpreted as a (file-sized) torn tail.
+pub const MAX_RECORD_BYTES: usize = 64 << 20;
+
+/// Fixed per-record overhead: length prefix + seq + count + checksum.
+const FRAME_OVERHEAD: usize = 4 + 8;
+const PAYLOAD_MIN: usize = 12;
+
+/// One decoded log record: a monotonic sequence number and its op batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Record {
+    pub seq: u64,
+    pub ops: Vec<DeltaOp>,
+}
+
+/// Result of reading the log from an offset: every complete record, the
+/// offset just past the last one (the next tail position), and how many
+/// dangling torn-tail bytes were ignored after it.
+#[derive(Clone, Debug, Default)]
+pub struct Tail {
+    pub records: Vec<Record>,
+    pub end_offset: u64,
+    pub torn_bytes: u64,
+}
+
+/// Why a log read failed — the serving layer reacts differently to each
+/// variant (see module docs).
+#[derive(Debug)]
+pub enum WalError {
+    /// File shorter than the reader's resume offset: rotated/compacted.
+    Rotated { offset: u64, len: u64 },
+    /// Structural damage before the tail record; never auto-repaired.
+    Corrupt { at: u64, what: String },
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for WalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WalError::Rotated { offset, len } => write!(
+                f,
+                "wal rotated: resume offset {offset} past file length {len}"
+            ),
+            WalError::Corrupt { at, what } => {
+                write!(f, "wal corrupt at offset {at}: {what}")
+            }
+            WalError::Io(e) => write!(f, "wal io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WalError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WalError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for WalError {
+    fn from(e: std::io::Error) -> WalError {
+        WalError::Io(e)
+    }
+}
+
+fn header_bytes() -> [u8; HEADER_LEN as usize] {
+    let mut h = [0u8; HEADER_LEN as usize];
+    h[..8].copy_from_slice(MAGIC);
+    h[8..12].copy_from_slice(&VERSION.to_le_bytes());
+    // bytes 12..16 reserved (zero)
+    let sum = fnv64(&h[..16]);
+    h[16..24].copy_from_slice(&sum.to_le_bytes());
+    h
+}
+
+fn check_header(h: &[u8]) -> Result<(), WalError> {
+    let bad = |what: &str| WalError::Corrupt { at: 0, what: what.to_string() };
+    if h.len() < HEADER_LEN as usize {
+        return Err(bad("short header"));
+    }
+    if &h[..8] != MAGIC {
+        return Err(bad("bad magic (not a pbng wal)"));
+    }
+    let ver = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+    if ver != VERSION {
+        return Err(bad(&format!("unsupported wal version {ver}")));
+    }
+    let sum = u64::from_le_bytes(h[16..24].try_into().expect("sized slice"));
+    if fnv64(&h[..16]) != sum {
+        return Err(bad("header checksum mismatch"));
+    }
+    Ok(())
+}
+
+/// Encode one complete record frame (length prefix through checksum).
+fn encode_frame(seq: u64, ops: &[DeltaOp]) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(PAYLOAD_MIN + ops.len() * DeltaOp::WIRE_LEN);
+    payload.extend_from_slice(&seq.to_le_bytes());
+    payload.extend_from_slice(&(ops.len() as u32).to_le_bytes());
+    for &op in ops {
+        op.encode_into(&mut payload);
+    }
+    let mut frame = Vec::with_capacity(payload.len() + FRAME_OVERHEAD);
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    frame.extend_from_slice(&fnv64(&payload).to_le_bytes());
+    frame
+}
+
+fn decode_payload(payload: &[u8]) -> Result<Record, String> {
+    if payload.len() < PAYLOAD_MIN {
+        return Err(format!("payload too short ({} bytes)", payload.len()));
+    }
+    let seq = u64::from_le_bytes(payload[..8].try_into().expect("sized slice"));
+    let count =
+        u32::from_le_bytes(payload[8..12].try_into().expect("sized slice")) as usize;
+    if payload.len() != PAYLOAD_MIN + count * DeltaOp::WIRE_LEN {
+        return Err(format!(
+            "op count {count} disagrees with payload length {}",
+            payload.len()
+        ));
+    }
+    let mut ops = Vec::with_capacity(count);
+    for chunk in payload[PAYLOAD_MIN..].chunks_exact(DeltaOp::WIRE_LEN) {
+        ops.push(DeltaOp::decode(chunk).map_err(|e| e.to_string())?);
+    }
+    Ok(Record { seq, ops })
+}
+
+/// Parse complete record frames out of `buf` (whose first byte sits at
+/// file offset `base`), enforcing checksums and intra-read sequence
+/// contiguity. An incomplete final frame becomes `torn_bytes`.
+fn parse_records(buf: &[u8], base: u64) -> Result<Tail, WalError> {
+    let mut records: Vec<Record> = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        let rem = buf.len() - pos;
+        if rem == 0 {
+            break;
+        }
+        if rem < 4 {
+            // not even a full length prefix: torn
+            break;
+        }
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().expect("sized slice"))
+            as usize;
+        if !(PAYLOAD_MIN..=MAX_RECORD_BYTES).contains(&len) {
+            return Err(WalError::Corrupt {
+                at: base + pos as u64,
+                what: format!("implausible record length {len}"),
+            });
+        }
+        if rem < 4 + len + 8 {
+            // the frame claims bytes past EOF: torn tail
+            break;
+        }
+        let payload = &buf[pos + 4..pos + 4 + len];
+        let sum = u64::from_le_bytes(
+            buf[pos + 4 + len..pos + 4 + len + 8]
+                .try_into()
+                .expect("sized slice"),
+        );
+        if fnv64(payload) != sum {
+            return Err(WalError::Corrupt {
+                at: base + pos as u64,
+                what: "record checksum mismatch".to_string(),
+            });
+        }
+        let rec = decode_payload(payload).map_err(|what| WalError::Corrupt {
+            at: base + pos as u64,
+            what,
+        })?;
+        if let Some(last) = records.last() {
+            if rec.seq != last.seq + 1 {
+                return Err(WalError::Corrupt {
+                    at: base + pos as u64,
+                    what: format!("sequence gap: {} after {}", rec.seq, last.seq),
+                });
+            }
+        }
+        records.push(rec);
+        pos += 4 + len + 8;
+    }
+    Ok(Tail {
+        records,
+        end_offset: base + pos as u64,
+        torn_bytes: (buf.len() - pos) as u64,
+    })
+}
+
+/// Read every complete record at or after byte `offset` (which must be
+/// a record boundary from a previous [`Tail::end_offset`], or `0` /
+/// [`HEADER_LEN`] for the whole log). Tolerates a torn tail; rejects
+/// mid-log corruption; reports [`WalError::Rotated`] when the file is
+/// shorter than `offset`.
+pub fn read_from(path: &Path, offset: u64) -> Result<Tail, WalError> {
+    let mut f = File::open(path)?;
+    let file_len = f.metadata()?.len();
+    let start = if offset <= HEADER_LEN {
+        let mut hdr = [0u8; HEADER_LEN as usize];
+        if file_len < HEADER_LEN {
+            return Err(WalError::Corrupt {
+                at: 0,
+                what: format!("short header ({file_len} bytes)"),
+            });
+        }
+        f.read_exact(&mut hdr)?;
+        check_header(&hdr)?;
+        HEADER_LEN
+    } else {
+        if offset > file_len {
+            return Err(WalError::Rotated {
+                offset,
+                len: file_len,
+            });
+        }
+        f.seek(SeekFrom::Start(offset))?;
+        offset
+    };
+    let mut buf = Vec::with_capacity((file_len.saturating_sub(start)) as usize);
+    f.read_to_end(&mut buf)?;
+    parse_records(&buf, start)
+}
+
+/// Replay the whole log (header validation + every record).
+pub fn replay(path: &Path) -> Result<Tail, WalError> {
+    read_from(path, 0)
+}
+
+/// What [`compact`] did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompactStats {
+    pub kept: usize,
+    pub dropped: usize,
+}
+
+/// Rewrite the log keeping only records with `seq > keep_after`
+/// (everything at or below is covered by a checkpoint). Atomic:
+/// records are written to a sibling temp file which then replaces the
+/// log, so readers see either the old or the new file, never a partial
+/// rewrite — tailing readers observe the shrink as [`WalError::Rotated`].
+pub fn compact(path: &Path, keep_after: u64) -> Result<CompactStats, WalError> {
+    let tail = replay(path)?;
+    let mut name = path
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_else(|| "wal".into());
+    name.push(".compact-tmp");
+    let tmp = path.with_file_name(name);
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(&header_bytes())?;
+        for rec in tail.records.iter().filter(|r| r.seq > keep_after) {
+            f.write_all(&encode_frame(rec.seq, &rec.ops))?;
+        }
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    let kept = tail.records.iter().filter(|r| r.seq > keep_after).count();
+    Ok(CompactStats {
+        kept,
+        dropped: tail.records.len() - kept,
+    })
+}
+
+/// Append handle. Every [`Writer::append`] is flushed and `fsync`ed
+/// before the sequence number is returned, so an acknowledged record is
+/// durable — the invariant that makes truncate-on-replay safe.
+pub struct Writer {
+    file: File,
+    end: u64,
+    next_seq: u64,
+}
+
+impl Writer {
+    /// Create (or truncate) a fresh log at `path`.
+    pub fn create(path: &Path) -> Result<Writer, WalError> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        file.write_all(&header_bytes())?;
+        file.sync_data()?;
+        Ok(Writer {
+            file,
+            end: HEADER_LEN,
+            next_seq: 1,
+        })
+    }
+
+    /// Open an existing log: validate it end to end, truncate a torn
+    /// tail, and position for appending. Returns the writer plus the
+    /// full replay [`Tail`] (so recovery does not scan twice).
+    pub fn open(path: &Path) -> Result<(Writer, Tail), WalError> {
+        let tail = replay(path)?;
+        let mut file = OpenOptions::new().read(true).write(true).open(path)?;
+        if tail.torn_bytes > 0 {
+            file.set_len(tail.end_offset)?;
+            file.sync_data()?;
+        }
+        file.seek(SeekFrom::Start(tail.end_offset))?;
+        let next_seq = tail.records.last().map_or(1, |r| r.seq + 1);
+        Ok((
+            Writer {
+                file,
+                end: tail.end_offset,
+                next_seq,
+            },
+            tail,
+        ))
+    }
+
+    /// [`Writer::open`] when the file exists, else [`Writer::create`].
+    pub fn open_or_create(path: &Path) -> Result<(Writer, Tail), WalError> {
+        if path.exists() {
+            Writer::open(path)
+        } else {
+            Ok((Writer::create(path)?, Tail::default()))
+        }
+    }
+
+    /// Durably append one record; returns its sequence number only
+    /// after the bytes are synced to disk.
+    pub fn append(&mut self, ops: &[DeltaOp]) -> Result<u64, WalError> {
+        if ops.len() * DeltaOp::WIRE_LEN + PAYLOAD_MIN > MAX_RECORD_BYTES {
+            return Err(WalError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("record of {} ops exceeds the 64 MiB bound", ops.len()),
+            )));
+        }
+        let seq = self.next_seq;
+        let frame = encode_frame(seq, ops);
+        self.file.write_all(&frame)?;
+        self.file.sync_data()?;
+        self.end += frame.len() as u64;
+        self.next_seq += 1;
+        Ok(seq)
+    }
+
+    /// Byte offset just past the last durable record.
+    pub fn end_offset(&self) -> u64 {
+        self.end
+    }
+
+    /// Sequence number the next [`Writer::append`] will use.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Raise the next sequence number to at least `n` — recovery calls
+    /// this after loading a checkpoint whose records were compacted
+    /// away, so fresh appends continue the global numbering instead of
+    /// reusing burned sequence numbers.
+    pub fn ensure_next_seq(&mut self, n: u64) {
+        self.next_seq = self.next_seq.max(n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::TempDir;
+
+    fn ops(tag: u32) -> Vec<DeltaOp> {
+        vec![
+            DeltaOp::Insert(tag, 0),
+            DeltaOp::Remove(tag, 1),
+            DeltaOp::Insert(tag + 1, 2),
+        ]
+    }
+
+    #[test]
+    fn append_replay_roundtrip_with_offset_tailing() {
+        let dir = TempDir::new("wal-roundtrip").unwrap();
+        let p = dir.file("a.wal");
+        let mut w = Writer::create(&p).unwrap();
+        assert_eq!(w.append(&ops(0)).unwrap(), 1);
+        let mid = w.end_offset();
+        assert_eq!(w.append(&ops(10)).unwrap(), 2);
+        assert_eq!(w.append(&[]).unwrap(), 3); // empty batches are legal
+        let tail = replay(&p).unwrap();
+        assert_eq!(tail.torn_bytes, 0);
+        assert_eq!(tail.end_offset, w.end_offset());
+        assert_eq!(
+            tail.records,
+            vec![
+                Record { seq: 1, ops: ops(0) },
+                Record { seq: 2, ops: ops(10) },
+                Record { seq: 3, ops: vec![] },
+            ]
+        );
+        // tailing from a recorded boundary skips the decoded prefix
+        let rest = read_from(&p, mid).unwrap();
+        assert_eq!(rest.records.len(), 2);
+        assert_eq!(rest.records[0].seq, 2);
+        assert_eq!(rest.end_offset, tail.end_offset);
+        // tailing from the very end yields nothing
+        let none = read_from(&p, tail.end_offset).unwrap();
+        assert!(none.records.is_empty());
+    }
+
+    #[test]
+    fn torn_tail_is_tolerated_and_truncated_on_open() {
+        let dir = TempDir::new("wal-torn").unwrap();
+        let p = dir.file("a.wal");
+        let mut w = Writer::create(&p).unwrap();
+        w.append(&ops(0)).unwrap();
+        w.append(&ops(5)).unwrap();
+        let good_end = w.end_offset();
+        drop(w);
+        // simulate a crash mid-append: a full length prefix + partial payload
+        let mut frame = encode_frame(3, &ops(9));
+        frame.truncate(frame.len() / 2);
+        let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+        f.write_all(&frame).unwrap();
+        drop(f);
+        // readers stop at the last complete record
+        let tail = replay(&p).unwrap();
+        assert_eq!(tail.records.len(), 2);
+        assert_eq!(tail.end_offset, good_end);
+        assert!(tail.torn_bytes > 0);
+        // open truncates the torn bytes and appends continue the numbering
+        let (mut w, tail) = Writer::open(&p).unwrap();
+        assert!(tail.torn_bytes > 0);
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), good_end);
+        assert_eq!(w.next_seq(), 3);
+        w.append(&ops(9)).unwrap();
+        let again = replay(&p).unwrap();
+        assert_eq!(again.records.len(), 3);
+        assert_eq!(again.torn_bytes, 0);
+        assert_eq!(again.records[2], Record { seq: 3, ops: ops(9) });
+    }
+
+    #[test]
+    fn midlog_corruption_is_rejected_loudly() {
+        let dir = TempDir::new("wal-corrupt").unwrap();
+        let p = dir.file("a.wal");
+        let mut w = Writer::create(&p).unwrap();
+        w.append(&ops(0)).unwrap();
+        w.append(&ops(5)).unwrap();
+        drop(w);
+        // flip one payload byte of the *first* record
+        let mut bytes = std::fs::read(&p).unwrap();
+        let at = HEADER_LEN as usize + 4 + 13;
+        bytes[at] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = replay(&p).unwrap_err();
+        assert!(
+            matches!(&err, WalError::Corrupt { what, .. } if what.contains("checksum")),
+            "{err}"
+        );
+        // open refuses too — corruption is never auto-truncated
+        assert!(Writer::open(&p).is_err());
+    }
+
+    #[test]
+    fn implausible_length_prefix_is_corruption_not_torn_tail() {
+        let dir = TempDir::new("wal-badlen").unwrap();
+        let p = dir.file("a.wal");
+        let mut w = Writer::create(&p).unwrap();
+        w.append(&ops(0)).unwrap();
+        drop(w);
+        let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+        f.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        f.write_all(&[0u8; 32]).unwrap();
+        drop(f);
+        let err = replay(&p).unwrap_err();
+        assert!(
+            matches!(&err, WalError::Corrupt { what, .. } if what.contains("length")),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn sequence_gap_is_corruption() {
+        let dir = TempDir::new("wal-gap").unwrap();
+        let p = dir.file("a.wal");
+        let mut w = Writer::create(&p).unwrap();
+        w.append(&ops(0)).unwrap();
+        drop(w);
+        let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+        f.write_all(&encode_frame(5, &ops(1))).unwrap();
+        drop(f);
+        let err = replay(&p).unwrap_err();
+        assert!(
+            matches!(&err, WalError::Corrupt { what, .. } if what.contains("sequence gap")),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn rotation_is_detected_from_a_stale_offset() {
+        let dir = TempDir::new("wal-rotate").unwrap();
+        let p = dir.file("a.wal");
+        let mut w = Writer::create(&p).unwrap();
+        for _ in 0..3 {
+            w.append(&ops(2)).unwrap();
+        }
+        let end = w.end_offset();
+        drop(w);
+        let st = compact(&p, 2).unwrap();
+        assert_eq!(st, CompactStats { kept: 1, dropped: 2 });
+        // a tailing reader holding the old end offset sees the shrink
+        let err = read_from(&p, end).unwrap_err();
+        assert!(matches!(err, WalError::Rotated { .. }), "{err}");
+        // the surviving record keeps its original sequence number
+        let tail = replay(&p).unwrap();
+        assert_eq!(tail.records.len(), 1);
+        assert_eq!(tail.records[0].seq, 3);
+        // and appends resume the numbering after open
+        let (mut w, _) = Writer::open(&p).unwrap();
+        assert_eq!(w.append(&ops(7)).unwrap(), 4);
+    }
+
+    #[test]
+    fn open_or_create_and_ensure_next_seq() {
+        let dir = TempDir::new("wal-ckseq").unwrap();
+        let p = dir.file("a.wal");
+        let (mut w, tail) = Writer::open_or_create(&p).unwrap();
+        assert!(tail.records.is_empty());
+        // a checkpoint at seq 9 with a fully compacted log: appends must
+        // continue at 10, not restart at 1
+        w.ensure_next_seq(10);
+        assert_eq!(w.append(&ops(0)).unwrap(), 10);
+        let (w2, tail2) = Writer::open_or_create(&p).unwrap();
+        assert_eq!(tail2.records.len(), 1);
+        assert_eq!(w2.next_seq(), 11);
+    }
+
+    #[test]
+    fn non_wal_files_are_rejected() {
+        let dir = TempDir::new("wal-notawal").unwrap();
+        let p = dir.file("a.wal");
+        std::fs::write(&p, b"definitely not a wal header....").unwrap();
+        assert!(matches!(
+            replay(&p).unwrap_err(),
+            WalError::Corrupt { .. }
+        ));
+        std::fs::write(&p, b"short").unwrap();
+        assert!(matches!(
+            replay(&p).unwrap_err(),
+            WalError::Corrupt { .. }
+        ));
+    }
+}

@@ -183,7 +183,7 @@ fn hot_swap_keeps_in_flight_sessions_on_their_pinned_epoch() {
 
 #[test]
 fn reload_verb_publishes_a_new_epoch_from_the_index_file() {
-    let tmp = TempDir::new("serve-reload-e2e");
+    let tmp = TempDir::new("serve-reload-e2e").unwrap();
     let path = tmp.path().join("g.idx");
     let ga = graph_for(44);
     let gb = graph_for(45);

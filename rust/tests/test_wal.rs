@@ -1,0 +1,250 @@
+//! Durability integration: crash recovery from the last checkpoint plus
+//! WAL replay must rebuild byte-identical θ — across forest kinds,
+//! replay batch sizes, and thread counts — and must keep holding after
+//! a torn tail record (crash mid-append) and after compaction rotates
+//! the log out from under a stale reader offset. The serving layer's
+//! `summary` answer over a recovered state is compared against the
+//! same answer over the never-crashed state.
+
+use pbng::engine::incremental::{IncrementalConfig, IncrementalState};
+use pbng::engine::EngineConfig;
+use pbng::graph::dynamic::{DeltaBatch, DeltaOp, DynGraph};
+use pbng::graph::gen;
+use pbng::index::ForestKind;
+use pbng::testkit::{Rng, TempDir};
+use pbng::wal::checkpoint::Checkpoint;
+use pbng::wal::{self, Writer};
+
+const ROUNDS: usize = 6;
+const OPS_PER_ROUND: usize = 18;
+
+fn base_graph() -> pbng::graph::BipartiteGraph {
+    gen::zipf(26, 22, 150, 1.2, 1.2, 11)
+}
+
+/// Deterministic mixed stream over `g`'s universe: alternating random
+/// inserts and removals of original edges (duplicates and no-ops
+/// allowed — the log records intent, set semantics dedupe on apply).
+fn stream(g: &pbng::graph::BipartiteGraph, seed: u64) -> Vec<Vec<DeltaOp>> {
+    let mut rng = Rng::new(seed);
+    let es = g.edges().to_vec();
+    (0..ROUNDS)
+        .map(|_| {
+            (0..OPS_PER_ROUND)
+                .map(|k| {
+                    if k % 2 == 0 || es.is_empty() {
+                        DeltaOp::Insert(
+                            rng.usize_below(g.nu()) as u32,
+                            rng.usize_below(g.nv()) as u32,
+                        )
+                    } else {
+                        let (u, v) = es[rng.usize_below(es.len())];
+                        DeltaOp::Remove(u, v)
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn cfg(threads: usize) -> IncrementalConfig {
+    IncrementalConfig {
+        engine: EngineConfig {
+            p: 8,
+            threads,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Ground truth: the whole stream applied round by round from the base
+/// graph, no crash, no checkpoint.
+fn full_state(kind: ForestKind, rounds: &[Vec<DeltaOp>], threads: usize) -> IncrementalState {
+    let g = base_graph();
+    let mut st = IncrementalState::new(&g, kind, cfg(threads));
+    for r in rounds {
+        st.apply(&DeltaBatch::new(r.clone()));
+    }
+    st
+}
+
+/// Write the stream as one WAL record per round (seq 1..=ROUNDS) and a
+/// checkpoint capturing the graph after `ckpt_rounds` rounds.
+fn write_history(
+    dir: &TempDir,
+    kind: ForestKind,
+    rounds: &[Vec<DeltaOp>],
+    ckpt_rounds: usize,
+) -> (std::path::PathBuf, std::path::PathBuf) {
+    let log = dir.file("stream.wal");
+    let ckpt = dir.file("stream.ckpt");
+    let mut w = Writer::create(&log).unwrap();
+    for r in rounds {
+        w.append(r).unwrap();
+    }
+    drop(w);
+    let g = base_graph();
+    let mut dg = DynGraph::from_graph(&g);
+    for r in &rounds[..ckpt_rounds] {
+        dg.apply_batch(&DeltaBatch::new(r.clone()));
+    }
+    Checkpoint::from_graph(&dg.snapshot(), kind, ckpt_rounds as u64)
+        .save(&ckpt)
+        .unwrap();
+    (log, ckpt)
+}
+
+/// Recover exactly the way `pbng serve --wal` does: load the
+/// checkpoint, replay every record with `seq > checkpoint.seq` in log
+/// order, re-chunked into `batch`-sized apply batches.
+fn recover(
+    log: &std::path::Path,
+    ckpt: &std::path::Path,
+    kind: ForestKind,
+    batch: usize,
+    threads: usize,
+) -> IncrementalState {
+    let ck = Checkpoint::load(ckpt).unwrap();
+    assert_eq!(ck.kind, kind);
+    let mut st = IncrementalState::new(&ck.graph(), kind, cfg(threads));
+    let tail = wal::replay(log).unwrap();
+    let mut next = ck.seq + 1;
+    let pending: Vec<DeltaOp> = tail
+        .records
+        .iter()
+        .filter(|r| r.seq > ck.seq)
+        .flat_map(|r| {
+            assert_eq!(r.seq, next, "sequence gap during recovery");
+            next += 1;
+            r.ops.iter().copied()
+        })
+        .collect();
+    for chunk in pending.chunks(batch.max(1)) {
+        st.apply(&DeltaBatch::new(chunk.to_vec()));
+    }
+    st
+}
+
+fn assert_states_identical(full: &IncrementalState, rec: &IncrementalState, label: &str) {
+    assert_eq!(
+        full.graph().edges(),
+        rec.graph().edges(),
+        "{label}: recovered edge set diverged"
+    );
+    assert_eq!(full.theta(), rec.theta(), "{label}: recovered θ diverged");
+}
+
+/// The tentpole property: checkpoint + replay is byte-identical to the
+/// never-crashed state for every (kind × batch × threads) cell.
+#[test]
+fn recovery_rebuilds_identical_theta_across_kinds_batches_and_threads() {
+    for kind in [ForestKind::Wing, ForestKind::TipU] {
+        let g = base_graph();
+        let rounds = stream(&g, 0xA5A5);
+        let dir = TempDir::new("wal-recovery").unwrap();
+        let (log, ckpt) = write_history(&dir, kind, &rounds, ROUNDS / 2);
+        for threads in [1usize, 8] {
+            let full = full_state(kind, &rounds, threads);
+            for batch in [1usize, 7, 64] {
+                let rec = recover(&log, &ckpt, kind, batch, threads);
+                let label = format!("{} batch={batch} threads={threads}", kind.name());
+                assert_states_identical(&full, &rec, &label);
+            }
+        }
+    }
+}
+
+/// A crash mid-append leaves a torn final frame; opening the log for
+/// writing truncates it, and recovery equals the history up to the last
+/// record that was fully durable.
+#[test]
+fn torn_tail_recovers_to_the_last_durable_record() {
+    let kind = ForestKind::Wing;
+    let g = base_graph();
+    let rounds = stream(&g, 0x0BAD);
+    let dir = TempDir::new("wal-torn").unwrap();
+    let (log, ckpt) = write_history(&dir, kind, &rounds, 2);
+    // simulate `kill -9` halfway through appending round 7: a length
+    // prefix promising more bytes than were flushed
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&log).unwrap();
+        f.write_all(&[200, 0, 0, 0, 1, 2, 3]).unwrap();
+    }
+    let tail = wal::replay(&log).unwrap();
+    assert_eq!(tail.records.len(), ROUNDS, "torn frame must not hide real records");
+    assert!(tail.torn_bytes > 0);
+    // a writer reopening the log truncates the torn bytes and resumes
+    let (mut w, _) = Writer::open(&log).unwrap();
+    assert_eq!(w.next_seq(), ROUNDS as u64 + 1);
+    // recovery sees exactly the durable prefix
+    let full = full_state(kind, &rounds, 1);
+    let rec = recover(&log, &ckpt, kind, 7, 1);
+    assert_states_identical(&full, &rec, "torn tail");
+    // and the log keeps working: one more durable round extends both
+    let extra = vec![DeltaOp::Insert(0, 0), DeltaOp::Insert(1, 1)];
+    assert_eq!(w.append(&extra).unwrap(), ROUNDS as u64 + 1);
+    drop(w);
+    let mut full2 = full_state(kind, &rounds, 1);
+    full2.apply(&DeltaBatch::new(extra));
+    let rec2 = recover(&log, &ckpt, kind, 64, 1);
+    assert_states_identical(&full2, &rec2, "torn tail + new append");
+}
+
+/// Compaction folds the prefix into a fresh checkpoint and drops those
+/// records; recovery from the (checkpoint, compacted log) pair still
+/// equals the never-crashed state, and a reader holding a pre-compaction
+/// byte offset gets a loud `Rotated` error instead of garbage.
+#[test]
+fn compaction_preserves_recovery_and_rotation_is_loud() {
+    let kind = ForestKind::Wing;
+    let g = base_graph();
+    let rounds = stream(&g, 0xF01D);
+    let dir = TempDir::new("wal-compact").unwrap();
+    let keep_after = 4u64;
+    let (log, ckpt) = write_history(&dir, kind, &rounds, keep_after as usize);
+    let old_end = wal::replay(&log).unwrap().end_offset;
+
+    let st = wal::compact(&log, keep_after).unwrap();
+    assert_eq!(st.kept, ROUNDS - keep_after as usize);
+    assert_eq!(st.dropped as u64, keep_after);
+    // surviving records keep their original sequence numbers
+    let tail = wal::replay(&log).unwrap();
+    assert_eq!(
+        tail.records.iter().map(|r| r.seq).collect::<Vec<_>>(),
+        (keep_after + 1..=ROUNDS as u64).collect::<Vec<_>>()
+    );
+
+    let full = full_state(kind, &rounds, 1);
+    let rec = recover(&log, &ckpt, kind, 7, 1);
+    assert_states_identical(&full, &rec, "post-compaction");
+
+    // a tail reader still holding the pre-compaction end offset must be
+    // told the log rotated, not handed mid-record bytes
+    match wal::read_from(&log, old_end) {
+        Err(wal::WalError::Rotated { .. }) => {}
+        other => panic!("expected Rotated from a stale offset, got {other:?}"),
+    }
+}
+
+/// Serving-layer differential: the `summary` answer over a recovered
+/// engine is byte-identical to the answer over the never-crashed one.
+#[test]
+fn recovered_engine_serves_identical_summaries() {
+    use pbng::serve::updater::engine_from_state;
+    use pbng::serve::{one_shot, ProtoVersion};
+    for kind in [ForestKind::Wing, ForestKind::TipU] {
+        let g = base_graph();
+        let rounds = stream(&g, 0x5E17);
+        let dir = TempDir::new("wal-serve-diff").unwrap();
+        let (log, ckpt) = write_history(&dir, kind, &rounds, 3);
+        let full = full_state(kind, &rounds, 2);
+        let rec = recover(&log, &ckpt, kind, 16, 2);
+        for cmd in ["summary", "top 3"] {
+            let want = one_shot(engine_from_state(&full, 2), ProtoVersion::V2, cmd);
+            let got = one_shot(engine_from_state(&rec, 2), ProtoVersion::V2, cmd);
+            assert_eq!(want, got, "{} `{cmd}` diverged after recovery", kind.name());
+        }
+    }
+}
